@@ -1,0 +1,46 @@
+//! Artifact micro-probe (§Perf tooling): compile ONE HLO artifact on the
+//! deployment PJRT runtime and time its execution — used to sweep tile
+//! shapes against the runtime that actually serves them (jax's bundled
+//! XLA and the deployment xla_extension can differ wildly; see
+//! EXPERIMENTS.md §Perf).
+//!
+//!     cargo run --release --example artifact_probe -- <file.hlo.txt> B M D [reps]
+
+use falkon::runtime::exe::{literal_from_f32, literal_scalar, Exe};
+use falkon::util::timer::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    anyhow::ensure!(args.len() >= 4, "usage: artifact_probe <hlo> B M D [reps]");
+    let path = std::path::PathBuf::from(&args[0]);
+    let (b, m, d): (usize, usize, usize) =
+        (args[1].parse()?, args[2].parse()?, args[3].parse()?);
+    let reps: usize = args.get(4).map(|s| s.parse()).transpose()?.unwrap_or(5);
+
+    let t = Timer::start();
+    let exe = Exe::compile_file(&path, "probe")?;
+    println!("compile: {:.2}s", t.elapsed_s());
+
+    let x = literal_from_f32(&vec![0.1; b * d], &[b, d])?;
+    let c = literal_from_f32(&vec![0.2; m * d], &[m, d])?;
+    let u = literal_from_f32(&vec![0.3; m], &[m])?;
+    let v = literal_from_f32(&vec![0.0; b], &[b])?;
+    let mask = literal_from_f32(&vec![1.0; b], &[b])?;
+    let p = literal_scalar(1.0);
+    let argv = [&x, &c, &u, &v, &mask, &p];
+
+    let _ = exe.call1_f32(&argv)?; // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Timer::start();
+        let _ = exe.call1_f32(&argv)?;
+        best = best.min(t.elapsed_s());
+    }
+    let evals = (b * m * 2) as f64;
+    println!(
+        "execute: {:.2}ms  ({:.1} GFLOP/s)",
+        best * 1e3,
+        evals * (2 * d + 6) as f64 / best / 1e9
+    );
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Serving example: train a FALKON model, stand up the dynamic-batching
+//! prediction server (the L3 request path: rust + compiled artifacts,
+//! no python), fire a multi-client request storm, and report
+//! latency/throughput plus batching efficiency.
+//!
+//!     cargo run --release --example serve_predictions
+
+use falkon::data::{synth, ZScore};
+use falkon::falkon::{fit, FalkonConfig};
+use falkon::runtime::Engine;
+use falkon::serve::{ServeConfig, Server};
+use falkon::util::rng::Rng;
+use falkon::util::timer::Timer;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // train a small model on the SUSY analogue
+    let mut rng = Rng::new(4);
+    let data = synth::susy(&mut rng, 10_000);
+    let (mut train, mut test) = data.split(0.2, &mut rng);
+    ZScore::normalize(&mut train, &mut test);
+    let engine_name = if Engine::xla_default().is_ok() { "xla" } else { "rust" };
+    let engine = Engine::by_name(engine_name, 1)?;
+    let config = FalkonConfig {
+        sigma: 4.0,
+        lam: 1e-6,
+        m: 512,
+        t: 15,
+        seed: 1,
+        ..Default::default()
+    };
+    println!("training on {} rows ({} engine)…", train.n(), engine.name());
+    let model = fit(&engine, &train.x, &train.y, &config)?;
+    let d = model.centers.cols;
+    drop(engine); // the server thread builds its own
+
+    // serve under a storm of concurrent clients
+    let server = Server::start(
+        model,
+        ServeConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            engine: engine_name.into(),
+        },
+    )?;
+    let clients = 8;
+    let per_client = 400;
+    println!("firing {clients} clients × {per_client} requests…");
+    let timer = Timer::start();
+    let latencies: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let h = server.handle();
+                let rows = &test.x;
+                s.spawn(move || {
+                    let mut lats = Vec::with_capacity(per_client);
+                    for i in 0..per_client {
+                        let row = rows.row((c * per_client + i) % rows.rows).to_vec();
+                        let t = Timer::start();
+                        h.predict(row).unwrap();
+                        lats.push(t.elapsed_s());
+                    }
+                    lats
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let wall = timer.elapsed_s();
+    let stats = server.stop();
+
+    let mut lats = latencies;
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| lats[((lats.len() as f64 - 1.0) * q) as usize] * 1e3;
+    let total = (clients * per_client) as f64;
+    println!(
+        "\nthroughput: {:.0} req/s over {:.2}s  (d={d})",
+        total / wall,
+        wall
+    );
+    println!(
+        "latency ms: p50={:.2}  p90={:.2}  p99={:.2}  max={:.2}",
+        pct(0.5),
+        pct(0.9),
+        pct(0.99),
+        pct(1.0)
+    );
+    println!(
+        "batching: {} batches, mean batch size {:.1}",
+        stats.batches, stats.mean_batch
+    );
+    anyhow::ensure!(stats.requests == clients as u64 * per_client as u64);
+    anyhow::ensure!(
+        stats.mean_batch > 1.5,
+        "dynamic batching should coalesce concurrent clients (got {:.2})",
+        stats.mean_batch
+    );
+    println!("\nOK: dynamic batching coalesced the request storm.");
+    Ok(())
+}

@@ -1,0 +1,153 @@
+"""AOT pipeline: lower every manifest entry to HLO *text* under artifacts/.
+
+Run once at build time (``make artifacts``); the rust runtime then loads
+``artifacts/manifest.json``, compiles the HLO it needs lazily via PJRT,
+and executes it on the training / request path. Python is never imported
+at runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Every function is lowered with ``return_tuple=True`` — the rust side
+unwraps the tuple (``to_tuple1`` / ``to_tuple2``).
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts
+    python -m compile.aot --filter knm_matvec_gaussian   # subset rebuild
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import manifest, model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape(*dims) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(dims, F32)
+
+
+def signature(e: dict) -> tuple[list, list[str], list[str]]:
+    """(input ShapeDtypeStructs, input names, output names) for an entry.
+
+    This fixes the argument order contract with the rust runtime — change
+    it only together with rust/src/runtime/executable.rs.
+    """
+    b, m, d = e["b"], e["m"], e["d"]
+    if e["op"] == "knm_matvec":
+        return (
+            [_shape(b, d), _shape(m, d), _shape(m), _shape(b), _shape(b), _shape()],
+            ["x", "c", "u", "v", "mask", "param"],
+            ["w"],
+        )
+    if e["op"] == "kernel_block":
+        return ([_shape(b, d), _shape(m, d), _shape()], ["x", "c", "param"], ["kr"])
+    if e["op"] == "kmm":
+        return ([_shape(m, d), _shape()], ["c", "param"], ["kmm"])
+    if e["op"] == "precond":
+        return ([_shape(m, m), _shape(), _shape()], ["kmm", "lam", "eps"], ["t", "a"])
+    raise ValueError(f"unknown op {e['op']!r}")
+
+
+def fn_for(e: dict):
+    """The jax function implementing an entry (returns a tuple)."""
+    kern, impl = e["kern"], e["impl"]
+    if e["op"] == "knm_matvec":
+        return lambda x, c, u, v, mask, p: (
+            model.knm_matvec(kern, impl, x, c, u, v, mask, p),
+        )
+    if e["op"] == "kernel_block":
+        return lambda x, c, p: (model.kernel_block(kern, impl, x, c, p),)
+    if e["op"] == "kmm":
+        return lambda c, p: (model.kmm(kern, c, p),)
+    if e["op"] == "precond":
+        return lambda k, lam, eps: model.precond(k, lam, eps)
+    raise ValueError(f"unknown op {e['op']!r}")
+
+
+def lower_entry(e: dict, out_dir: str) -> dict:
+    """Lower one entry, write ``<name>.hlo.txt``, return its manifest row."""
+    shapes, in_names, out_names = signature(e)
+    # keep_unused: the linear kernel ignores `param`; without this jax
+    # prunes the parameter and the HLO signature no longer matches the
+    # rust-side calling contract.
+    lowered = jax.jit(fn_for(e), keep_unused=True).lower(*shapes)
+    text = to_hlo_text(lowered)
+    fname = manifest.name(e) + ".hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    row = dict(e)
+    row["file"] = fname
+    row["inputs"] = [
+        dict(name=n, shape=list(s.shape)) for n, s in zip(in_names, shapes)
+    ]
+    row["outputs"] = out_names
+    return row
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--filter", default="", help="only entries whose name contains this")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    rows = []
+    entries = [e for e in manifest.entries() if args.filter in manifest.name(e)]
+    t0 = time.time()
+    for i, e in enumerate(entries):
+        t1 = time.time()
+        rows.append(lower_entry(e, args.out_dir))
+        if not args.quiet:
+            print(
+                f"[{i + 1}/{len(entries)}] {manifest.name(e)}"
+                f" ({time.time() - t1:.2f}s)",
+                file=sys.stderr,
+            )
+    if args.filter:
+        # partial rebuild: merge into the existing manifest instead of
+        # clobbering it with only the filtered subset
+        mpath = os.path.join(args.out_dir, "manifest.json")
+        if os.path.exists(mpath):
+            with open(mpath) as f:
+                old = {r["file"]: r for r in json.load(f).get("entries", [])}
+            old.update({r["file"]: r for r in rows})
+            rows = sorted(old.values(), key=lambda r: r["file"])
+    meta = dict(
+        version=1,
+        block=manifest.BLOCK,
+        test_block=manifest.TEST_BLOCK,
+        entries=rows,
+    )
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(
+        f"wrote {len(rows)} artifacts + manifest.json to {args.out_dir}"
+        f" in {time.time() - t0:.1f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

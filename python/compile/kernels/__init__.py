@@ -1,0 +1,2 @@
+# L1: Pallas kernels for the FALKON compute hot-spot + pure-jnp oracle.
+from . import block, matvec, ref, tiles  # noqa: F401

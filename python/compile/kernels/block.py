@@ -1,0 +1,49 @@
+"""Pallas kernel: materialize one kernel block Kr = K(X_block, C).
+
+Used by prediction (Kr @ alpha happens on the rust side or in the predict
+op) and by the approximate-leverage-score sketch. The FALKON CG hot path
+does NOT use this op — it uses the fused matvec (matvec.py) that never
+writes Kr to HBM.
+
+Grid: (B/TB, M/TM); each step computes one (TB, TM) tile in VMEM from the
+(TB, D) row slab and (TM, D) center slab and writes it to its output slot.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiles
+
+
+def _kernel(kern):
+    def body(x_ref, c_ref, p_ref, o_ref):
+        o_ref[...] = tiles.tile_kernel(kern, x_ref[...], c_ref[...], p_ref[0, 0])
+
+    return body
+
+
+def kernel_block(kern: str, x, c, param):
+    """K(x, c) -> (B, M) via a tiled Pallas grid (interpret mode).
+
+    param is a scalar (traced); it is reshaped to (1, 1) and broadcast to
+    every grid step.
+    """
+    b, d = x.shape
+    m, _ = c.shape
+    tb, tm = tiles.pick_tiles(kern, b, m)
+    p = jnp.asarray(param, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel(kern),
+        grid=(b // tb, m // tm),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tm, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, tm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=True,
+    )(x, c, p)

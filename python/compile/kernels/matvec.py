@@ -1,0 +1,115 @@
+"""Pallas kernels: the FALKON fused Nyström matvec (the compute hot-spot).
+
+The paper's Alg. 1 processes K_nM in row blocks so the full matrix is
+never materialized:
+
+    w = Kr^T (mask * (Kr u + v)),   Kr = K(X_block, C)
+
+We express this as two Pallas grids over the SAME tile schedule, computing
+each (TB, TM) tile of Kr on the fly in VMEM both times — Kr never touches
+HBM, which is exactly the paper's O(M^2)-working-memory trick translated
+from "GPU block buffer" to "VMEM tile + BlockSpec HBM<->VMEM schedule":
+
+  stage 1 (kr_matvec):    y = Kr @ u + v      grid (B/TB, M/TM), j inner,
+                                              accumulates into the (TB,)
+                                              output slab revisited per i
+  stage 2 (kr_matvec_t):  w = Kr^T @ y        grid (M/TM, B/TB), i inner,
+                                              accumulates into (TM,) slabs
+
+The mask multiply between the stages is a (B,)-element op done in plain
+jnp (it fuses into the surrounding XLA graph).
+
+Accumulation across grid steps relies on Pallas's sequential-grid
+revisiting semantics (the output block index map ignores the inner grid
+dimension), the standard TPU reduction pattern.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiles
+
+
+def _mv_kernel(kern):
+    """y_tile(i) accumulates Kr(i, j) @ u(j) over j; initialized to v(i)."""
+
+    def body(x_ref, c_ref, u_ref, v_ref, p_ref, o_ref):
+        j = pl.program_id(1)
+
+        @pl.when(j == 0)
+        def _init():
+            o_ref[...] = v_ref[...]
+
+        kr = tiles.tile_kernel(kern, x_ref[...], c_ref[...], p_ref[0, 0])
+        o_ref[...] += kr @ u_ref[...]
+
+    return body
+
+
+def _mvt_kernel(kern):
+    """w_tile(j) accumulates Kr(i, j)^T @ y(i) over i; initialized to 0."""
+
+    def body(x_ref, c_ref, y_ref, p_ref, o_ref):
+        i = pl.program_id(1)
+
+        @pl.when(i == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        kr = tiles.tile_kernel(kern, x_ref[...], c_ref[...], p_ref[0, 0])
+        o_ref[...] += kr.T @ y_ref[...]
+
+    return body
+
+
+def kr_matvec(kern: str, x, c, u, v, param):
+    """y = K(x, c) @ u + v -> (B,)."""
+    b, d = x.shape
+    m, _ = c.shape
+    tb, tm = tiles.pick_tiles(kern, b, m)
+    p = jnp.asarray(param, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _mv_kernel(kern),
+        grid=(b // tb, m // tm),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tm, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tm,), lambda i, j: (j,)),
+            pl.BlockSpec((tb,), lambda i, j: (i,)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(x, c, u, v, p)
+
+
+def kr_matvec_t(kern: str, x, c, y, param):
+    """w = K(x, c)^T @ y -> (M,)."""
+    b, d = x.shape
+    m, _ = c.shape
+    tb, tm = tiles.pick_tiles(kern, b, m)
+    p = jnp.asarray(param, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _mvt_kernel(kern),
+        grid=(m // tm, b // tb),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda j, i: (i, 0)),
+            pl.BlockSpec((tm, d), lambda j, i: (j, 0)),
+            pl.BlockSpec((tb,), lambda j, i: (i,)),
+            pl.BlockSpec((1, 1), lambda j, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(x, c, y, p)
+
+
+def knm_matvec(kern: str, x, c, u, v, mask, param):
+    """Fused FALKON block op: w = Kr^T (mask * (Kr u + v)) -> (M,)."""
+    y = kr_matvec(kern, x, c, u, v, param)
+    y = mask * y
+    return kr_matvec_t(kern, x, c, y, param)

@@ -1,0 +1,154 @@
+"""Pure-jnp oracle for the L1 Pallas kernels.
+
+Everything here is the *definition* of correct behaviour: the Pallas
+kernels in ``block.py`` / ``matvec.py`` and the L2 ops in ``model.py``
+are tested (pytest + hypothesis) against these functions.
+
+Kernel functions follow the paper's conventions:
+
+- gaussian:  K(x, c) = exp(-||x - c||^2 / (2 sigma^2))        (Sect. 5)
+- laplacian: K(x, c) = exp(-||x - c||_1 / sigma)
+- linear:    K(x, c) = <x, c>                                  (YELP, Sect. 5)
+
+``param`` is the kernel hyperparameter (sigma for gaussian/laplacian,
+ignored for linear — pass 1.0).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+KERNELS = ("gaussian", "laplacian", "linear")
+
+
+def chol_lower(a: jnp.ndarray) -> jnp.ndarray:
+    """Lower-Cholesky factor as *plain HLO ops* (left-looking column
+    algorithm in a fori_loop).
+
+    ``jnp.linalg.cholesky`` lowers on CPU to a LAPACK typed-FFI
+    custom-call which the deployment XLA (xla_extension 0.5.1) rejects;
+    this formulation lowers to dot/select/dynamic-update ops only, so the
+    precond artifact stays loadable everywhere. O(M³) like LAPACK, one
+    extra O(M²) matvec per column.
+    """
+    m = a.shape[0]
+    idx = jnp.arange(m)
+
+    def body(j, l):
+        # column j from columns < j: c = A[:, j] - L @ L[j, :]
+        row = l[j, :]
+        c = lax.dynamic_slice_in_dim(a, j, 1, axis=1)[:, 0] - l @ row
+        piv = jnp.sqrt(jnp.maximum(c[j], 0.0))
+        col = jnp.where(idx >= j, c / piv, 0.0)
+        return l.at[:, j].set(col)
+
+    return lax.fori_loop(0, m, body, jnp.zeros_like(a))
+
+
+def _inv_lower(l: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of a lower-triangular matrix by recursive 2x2 blocking —
+    pure matmuls/concats (no TriangularSolve custom-call), O(p³)."""
+    p = l.shape[0]
+    if p == 1:
+        return 1.0 / l
+    h = p // 2
+    a, b, c = l[:h, :h], l[h:, :h], l[h:, h:]
+    ai, ci = _inv_lower(a), _inv_lower(c)
+    top = jnp.concatenate([ai, jnp.zeros((h, p - h), l.dtype)], axis=1)
+    bot = jnp.concatenate([-ci @ (b @ ai), ci], axis=1)
+    return jnp.concatenate([top, bot], axis=0)
+
+
+def chol_lower_fast(a: jnp.ndarray, panel: int = 64) -> jnp.ndarray:
+    """Right-looking *blocked* Cholesky: the per-column fori_loop of
+    ``chol_lower`` only runs inside panel×panel diagonal blocks; the panel
+    column solve uses the matmul-only triangular inverse and the trailing
+    update is one GEMM per panel.
+
+    §Perf finding: 11x faster than the column loop on jax 0.8's bundled
+    XLA — but ~250x SLOWER on the deployment runtime (xla_extension
+    0.5.1 mis-optimizes the unrolled panel graph), so the precond
+    artifact uses ``chol_lower``; this variant is kept (and tested) for
+    newer runtimes. Measure on the runtime you ship. See EXPERIMENTS.md.
+
+    Requires ``panel | M`` (all compiled artifact sizes are powers of
+    two); falls back to ``chol_lower`` otherwise.
+    """
+    m = a.shape[0]
+    if m <= panel or m % panel != 0:
+        return chol_lower(a)
+    out = jnp.zeros_like(a)
+    trail = a
+    for pb in range(m // panel):
+        j0 = pb * panel
+        apan = trail[j0:, j0 : j0 + panel]
+        l11 = chol_lower(apan[:panel, :])
+        x = apan[panel:, :] @ _inv_lower(l11).T
+        out = out.at[j0:, j0 : j0 + panel].set(jnp.concatenate([l11, x], axis=0))
+        if j0 + panel < m:
+            upd = trail[j0 + panel :, j0 + panel :] - x @ x.T
+            trail = trail.at[j0 + panel :, j0 + panel :].set(upd)
+    return out
+
+
+def sq_dists(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise squared euclidean distances, (B, D) x (M, D) -> (B, M).
+
+    Uses the expansion ||x||^2 + ||c||^2 - 2 x.c so the dominant cost is a
+    matmul (the same structure the Pallas kernel feeds to the MXU).
+    """
+    xx = jnp.sum(x * x, axis=-1, keepdims=True)          # (B, 1)
+    cc = jnp.sum(c * c, axis=-1, keepdims=True).T        # (1, M)
+    cross = x @ c.T                                      # (B, M)
+    return jnp.maximum(xx + cc - 2.0 * cross, 0.0)
+
+
+def l1_dists(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise L1 distances, (B, D) x (M, D) -> (B, M)."""
+    return jnp.sum(jnp.abs(x[:, None, :] - c[None, :, :]), axis=-1)
+
+
+def kernel_matrix(kern: str, x: jnp.ndarray, c: jnp.ndarray, param) -> jnp.ndarray:
+    """Dense kernel block K(x_i, c_j) -> (B, M). The oracle for all ops."""
+    if kern == "gaussian":
+        return jnp.exp(-sq_dists(x, c) / (2.0 * param * param))
+    if kern == "laplacian":
+        return jnp.exp(-l1_dists(x, c) / param)
+    if kern == "linear":
+        return x @ c.T
+    raise ValueError(f"unknown kernel {kern!r}")
+
+
+def knm_matvec(kern, x, c, u, v, mask, param):
+    """The FALKON hot-path op for one row block (Alg. 1's KnM_times_vector):
+
+        w = Kr^T (mask * (Kr u + v)),   Kr = K(x, c)
+
+    mask zeroes padded rows so blocked+padded execution is exact.
+    """
+    kr = kernel_matrix(kern, x, c, param)
+    y = mask * (kr @ u + v)
+    return kr.T @ y
+
+
+def kmm(kern, c, param):
+    """Center-center kernel matrix K_MM."""
+    return kernel_matrix(kern, c, c, param)
+
+
+def precond(kmm_mat: jnp.ndarray, lam, eps):
+    """Preconditioner factors (Eq. 13 / Alg. 1), both upper-triangular:
+
+        T = chol(K_MM + eps*M*I)   with K_MM + eps*M*I = T^T T
+        A = chol(T T^T / M + lam*I) with  .            = A^T A
+
+    Returned as *upper* factors to match MATLAB ``chol`` so the rust
+    triangular solves mirror Alg. 1 line by line.
+    """
+    m = kmm_mat.shape[0]
+    kj = kmm_mat + eps * m * jnp.eye(m, dtype=kmm_mat.dtype)
+    t_up = chol_lower(kj).T                              # upper: K = T^T T
+    a_in = t_up @ t_up.T / m + lam * jnp.eye(m, dtype=kmm_mat.dtype)
+    a_up = chol_lower(a_in).T                            # upper: . = A^T A
+    return t_up, a_up

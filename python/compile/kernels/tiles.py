@@ -1,0 +1,74 @@
+"""Shared tile-level math for the Pallas kernels.
+
+A "tile" is the (TB, TM) piece of a kernel block that lives in VMEM while
+the grid walks the (B/TB, M/TM) schedule. The tile computation is written
+so the dominant flops are a single (TB, D) x (D, TM) matmul, i.e. the part
+the MXU executes on real TPU hardware; the rest is cheap element-wise tail
+on the VPU.
+
+TPU adaptation notes (DESIGN.md section "Hardware adaptation"):
+
+- gaussian/linear tiles use the matmul expansion, MXU-friendly;
+- laplacian needs |x - c| summed over D, which has no matmul form; its
+  tile materializes a (TB, TM, D) broadcast, so laplacian uses smaller
+  tiles (TILES["laplacian"]) to stay within a VMEM-like budget.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: default (TB, TM) tile shapes per kernel; must divide the block shapes.
+#: (TB=1024, TM=256) won the §Perf sweep on the CPU deployment target:
+#: 2.1x over (256, 256) at D=512 and never worse elsewhere (the full row
+#: block per grid step amortizes the ||x||² recompute across center
+#: tiles). VMEM at the largest compiled D stays ~3.7 MiB — see
+#: EXPERIMENTS.md §Perf.
+TILES = {
+    "gaussian": (1024, 256),
+    "linear": (1024, 256),
+    "laplacian": (64, 64),
+}
+
+
+def pick_tiles(kern: str, b: int, m: int) -> tuple[int, int]:
+    """Largest default tile that divides (b, m); falls back to the full
+    extent for small/test shapes."""
+    tb0, tm0 = TILES[kern]
+
+    def fit(n, t0):
+        t = min(n, t0)
+        while n % t != 0:
+            t -= 1
+        return t
+
+    return fit(b, tb0), fit(m, tm0)
+
+
+def tile_kernel(kern: str, x, c, param):
+    """Kernel tile K(x, c) for x:(TB, D), c:(TM, D) -> (TB, TM).
+
+    Mirrors ref.kernel_matrix but written for a VMEM-resident tile.
+    """
+    if kern == "gaussian":
+        xx = jnp.sum(x * x, axis=-1, keepdims=True)          # (TB, 1)
+        cc = jnp.sum(c * c, axis=-1, keepdims=True).T        # (1, TM)
+        cross = jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+        sq = jnp.maximum(xx + cc - 2.0 * cross, 0.0)
+        return jnp.exp(-sq / (2.0 * param * param))
+    if kern == "laplacian":
+        d1 = jnp.sum(jnp.abs(x[:, None, :] - c[None, :, :]), axis=-1)
+        return jnp.exp(-d1 / param)
+    if kern == "linear":
+        return jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    raise ValueError(f"unknown kernel {kern!r}")
+
+
+def vmem_bytes(kern: str, b: int, m: int, d: int) -> int:
+    """Estimated VMEM working set (bytes, f32) for one grid step — used by
+    the perf analysis in DESIGN.md / EXPERIMENTS.md, not at runtime."""
+    tb, tm = pick_tiles(kern, b, m)
+    base = (tb * d) + (tm * d) + (tb * tm) + tb + tm         # x, c, tile, vecs
+    if kern == "laplacian":
+        base += tb * tm * d                                   # broadcast diff
+    return 4 * base

@@ -1,0 +1,69 @@
+"""The artifact manifest: which (op, kernel, impl, shape) variants are
+AOT-compiled by ``aot.py`` and therefore available to the rust runtime.
+
+HLO has static shapes, so every variant the coordinator may execute must
+be listed here. The runtime pads rows (masked, exact) and feature columns
+(zero padding, exact for gaussian/laplacian/linear) but requires an exact
+match on M — see DESIGN.md "Artifact contract".
+
+Entries are plain dicts so they serialize straight into
+``artifacts/manifest.json`` for the rust side.
+"""
+
+from __future__ import annotations
+
+#: hot-path row block size. One value keeps the artifact set small; the
+#: coordinator streams any n through blocks of this many rows.
+BLOCK = 1024
+
+#: tiny shapes compiled alongside the defaults so `cargo test` integration
+#: tests stay fast.
+TEST_BLOCK = 64
+
+#: Nystrom-center counts available to the runtime (exact match required).
+MS = (32, 256, 512, 1024, 2048)
+
+#: padded feature widths (runtime picks the smallest >= dataset d).
+DS = (8, 32, 128, 512)
+
+#: which (kernel, D) combinations are compiled. Laplacian tiles blow up
+#: as (TB, TM, D) (see kernels/tiles.py) so it is restricted to small D.
+KERNEL_DS = {
+    "gaussian": (8, 32, 128, 512),
+    "linear": (8, 32, 128, 512),
+    "laplacian": (8, 32),
+}
+
+IMPLS = ("pallas", "jnp")
+
+
+def _bs_for(m: int) -> tuple[int, ...]:
+    # tiny Ms exist only for the integration-test artifact set
+    return (TEST_BLOCK,) if m == 32 else (TEST_BLOCK, BLOCK)
+
+
+def entries() -> list[dict]:
+    """Full default manifest (list of artifact descriptors)."""
+    out: list[dict] = []
+    for kern, ds in KERNEL_DS.items():
+        for m in MS:
+            for d in ds:
+                for b in _bs_for(m):
+                    for impl in IMPLS:
+                        out.append(dict(op="knm_matvec", kern=kern, impl=impl,
+                                        b=b, m=m, d=d))
+                        out.append(dict(op="kernel_block", kern=kern, impl=impl,
+                                        b=b, m=m, d=d))
+                out.append(dict(op="kmm", kern=kern, impl="jnp", b=0, m=m, d=d))
+    for m in MS:
+        out.append(dict(op="precond", kern="", impl="jnp", b=0, m=m, d=0))
+    return out
+
+
+def name(e: dict) -> str:
+    """Canonical artifact file stem for an entry."""
+    if e["op"] == "precond":
+        return f"precond_m{e['m']}"
+    if e["op"] == "kmm":
+        return f"kmm_{e['kern']}_m{e['m']}_d{e['d']}"
+    return f"{e['op']}_{e['kern']}_{e['impl']}_b{e['b']}_m{e['m']}_d{e['d']}"

@@ -1,0 +1,82 @@
+"""L2: the FALKON compute graph, composed from the L1 kernels.
+
+Each public function here is one AOT artifact entry point: a pure jax
+function over statically-shaped f32 arrays, lowered once by ``aot.py`` to
+HLO text and executed from the rust coordinator via PJRT. Python never
+runs on the training/request path.
+
+Two implementations are exposed for the data-touching ops:
+
+- ``impl="pallas"`` — the paper-faithful tiled kernels (kernels/matvec.py,
+  kernels/block.py) that compute Kr tiles on the fly in VMEM;
+- ``impl="jnp"``    — the same math as plain XLA ops (kernels/ref.py),
+  letting XLA's own fusion handle the block. Numerically cross-checked in
+  pytest; the runtime can select either, and EXPERIMENTS.md section "Perf"
+  compares them on the CPU deployment target.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import matvec as _mv
+from .kernels import block as _bl
+from .kernels import ref as _ref
+
+IMPLS = ("pallas", "jnp")
+
+
+def knm_matvec(kern: str, impl: str, x, c, u, v, mask, param):
+    """w = Kr^T (mask * (Kr u + v)) for one row block — the CG hot path.
+
+    Signature (all f32): x:(B,D) c:(M,D) u:(M,) v:(B,) mask:(B,) param:()
+    -> w:(M,)
+    """
+    if impl == "pallas":
+        return _mv.knm_matvec(kern, x, c, u, v, mask, param)
+    if impl == "jnp":
+        return _ref.knm_matvec(kern, x, c, u, v, mask, param)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def kernel_block(kern: str, impl: str, x, c, param):
+    """Kr = K(x, c) -> (B, M). Prediction / leverage-score sketch op."""
+    if impl == "pallas":
+        return _bl.kernel_block(kern, x, c, param)
+    if impl == "jnp":
+        return _ref.kernel_matrix(kern, x, c, param)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def predict_block(kern: str, impl: str, x, c, alpha, param):
+    """f(x_i) = sum_j alpha_j K(x_i, c_j) for one row block -> (B,)."""
+    kr = kernel_block(kern, impl, x, c, param)
+    return kr @ alpha
+
+
+def kmm(kern: str, c, param):
+    """K_MM over the Nystrom centers (preconditioner input) -> (M, M)."""
+    return _ref.kernel_matrix(kern, c, c, param)
+
+
+def precond(kmm_mat, lam, eps):
+    """Preconditioner factorization (Eq. 13): upper-triangular (T, A).
+
+        T = chol(K_MM + eps*M*I),  A = chol(T T^T / M + lam*I)
+
+    Cost 4/3 M^3 flops, once per fit; XLA Cholesky. lam and eps are
+    runtime scalars so one artifact serves every regularization setting.
+    """
+    return _ref.precond(kmm_mat, lam, eps)
+
+
+def dense_falkon_system(kern: str, x, c, y, lam, param):
+    """Small-scale oracle: materialize H = K_nM^T K_nM + lam*n*K_MM and
+    z = K_nM^T y (Eq. 8). Only used by tests to validate the blocked CG
+    path end-to-end — never lowered for the runtime at scale."""
+    n = x.shape[0]
+    knm = _ref.kernel_matrix(kern, x, c, param)
+    kmm_mat = _ref.kernel_matrix(kern, c, c, param)
+    h = knm.T @ knm + lam * n * kmm_mat
+    z = knm.T @ y
+    return h, z

@@ -1,0 +1,218 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes and kernel parameters; numpy fixtures pin a few
+exact regression values so a silent oracle change is caught too.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import block, matvec, ref, tiles
+
+KERNELS = ref.KERNELS
+
+
+def mk(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# oracle self-checks (pin the math itself)
+# ---------------------------------------------------------------------------
+
+
+def test_gaussian_oracle_values():
+    x = np.array([[0.0, 0.0], [3.0, 4.0]], np.float32)
+    c = np.array([[0.0, 0.0]], np.float32)
+    k = np.asarray(ref.kernel_matrix("gaussian", jnp.asarray(x), jnp.asarray(c), 1.0))
+    # ||(3,4)||^2 = 25 -> exp(-12.5)
+    np.testing.assert_allclose(k[:, 0], [1.0, np.exp(-12.5)], rtol=1e-6)
+
+
+def test_laplacian_oracle_values():
+    x = np.array([[1.0, -2.0]], np.float32)
+    c = np.array([[0.0, 0.0], [1.0, -2.0]], np.float32)
+    k = np.asarray(ref.kernel_matrix("laplacian", jnp.asarray(x), jnp.asarray(c), 2.0))
+    np.testing.assert_allclose(k[0], [np.exp(-3.0 / 2.0), 1.0], rtol=1e-6)
+
+
+def test_linear_oracle_is_gram():
+    rng = np.random.default_rng(1)
+    x, c = mk(rng, 5, 3), mk(rng, 4, 3)
+    k = np.asarray(ref.kernel_matrix("linear", jnp.asarray(x), jnp.asarray(c), 1.0))
+    np.testing.assert_allclose(k, x @ c.T, rtol=1e-6)
+
+
+def test_gaussian_diag_is_one():
+    rng = np.random.default_rng(2)
+    c = mk(rng, 6, 4)
+    k = np.asarray(ref.kmm("gaussian", jnp.asarray(c), 0.7))
+    np.testing.assert_allclose(np.diag(k), np.ones(6), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(k, k.T, rtol=1e-5, atol=1e-6)
+
+
+def test_sq_dists_non_negative_and_exact():
+    rng = np.random.default_rng(3)
+    x, c = mk(rng, 7, 5), mk(rng, 9, 5)
+    d = np.asarray(ref.sq_dists(jnp.asarray(x), jnp.asarray(c)))
+    brute = ((x[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+    assert (d >= 0).all()
+    np.testing.assert_allclose(d, brute, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pallas vs oracle — hypothesis shape/param sweep
+# ---------------------------------------------------------------------------
+
+shape_strategy = st.tuples(
+    st.sampled_from([1, 2, 3, 5, 8, 64, 96]),       # B
+    st.sampled_from([1, 2, 4, 8, 32, 48]),          # M
+    st.sampled_from([1, 2, 3, 8, 17]),              # D
+)
+
+
+@pytest.mark.parametrize("kern", KERNELS)
+@settings(max_examples=12, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1),
+       param=st.sampled_from([0.5, 1.0, 2.0, 6.0]))
+def test_kernel_block_matches_oracle(kern, shape, seed, param):
+    b, m, d = shape
+    rng = np.random.default_rng(seed)
+    x, c = mk(rng, b, d), mk(rng, m, d)
+    got = np.asarray(block.kernel_block(kern, x, c, param))
+    want = np.asarray(ref.kernel_matrix(kern, jnp.asarray(x), jnp.asarray(c), param))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("kern", KERNELS)
+@settings(max_examples=12, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1),
+       param=st.sampled_from([0.5, 1.0, 3.0]))
+def test_knm_matvec_matches_oracle(kern, shape, seed, param):
+    b, m, d = shape
+    rng = np.random.default_rng(seed)
+    x, c = mk(rng, b, d), mk(rng, m, d)
+    u, v = mk(rng, m), mk(rng, b)
+    mask = (rng.random(b) > 0.3).astype(np.float32)
+    got = np.asarray(matvec.knm_matvec(kern, x, c, u, v, mask, param))
+    want = np.asarray(ref.knm_matvec(kern, jnp.asarray(x), jnp.asarray(c), u, v, mask, param))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("kern", KERNELS)
+def test_matvec_stages_separately(kern):
+    rng = np.random.default_rng(7)
+    b, m, d = 96, 48, 8
+    x, c, u, v = mk(rng, b, d), mk(rng, m, d), mk(rng, m), mk(rng, b)
+    kr = np.asarray(ref.kernel_matrix(kern, jnp.asarray(x), jnp.asarray(c), 1.3))
+    y = np.asarray(matvec.kr_matvec(kern, x, c, u, v, 1.3))
+    np.testing.assert_allclose(y, kr @ u + v, rtol=2e-4, atol=2e-4)
+    w = np.asarray(matvec.kr_matvec_t(kern, x, c, y, 1.3))
+    np.testing.assert_allclose(w, kr.T @ y, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# padding exactness — the runtime's artifact contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kern", KERNELS)
+def test_row_padding_with_mask_is_exact(kern):
+    """Padding rows with garbage + mask=0 must give the unpadded answer."""
+    rng = np.random.default_rng(11)
+    b, bpad, m, d = 40, 64, 32, 8
+    x, c, u = mk(rng, b, d), mk(rng, m, d), mk(rng, m)
+    v = mk(rng, b)
+    xp = np.concatenate([x, 99.0 * np.ones((bpad - b, d), np.float32)])
+    vp = np.concatenate([v, 55.0 * np.ones(bpad - b, np.float32)])
+    mask = np.concatenate([np.ones(b, np.float32), np.zeros(bpad - b, np.float32)])
+    got = np.asarray(matvec.knm_matvec(kern, xp, c, u, vp, mask, 1.5))
+    want = np.asarray(
+        ref.knm_matvec(kern, jnp.asarray(x), jnp.asarray(c), u, v,
+                       np.ones(b, np.float32), 1.5)
+    )
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("kern", KERNELS)
+def test_feature_zero_padding_is_exact(kern):
+    """Zero-padding feature columns must not change any kernel value."""
+    rng = np.random.default_rng(12)
+    b, m, d, dpad = 16, 8, 5, 12
+    x, c = mk(rng, b, d), mk(rng, m, d)
+    xp = np.concatenate([x, np.zeros((b, dpad - d), np.float32)], axis=1)
+    cp = np.concatenate([c, np.zeros((m, dpad - d), np.float32)], axis=1)
+    a = np.asarray(ref.kernel_matrix(kern, jnp.asarray(xp), jnp.asarray(cp), 2.0))
+    bref = np.asarray(ref.kernel_matrix(kern, jnp.asarray(x), jnp.asarray(c), 2.0))
+    np.testing.assert_allclose(a, bref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tiles helpers
+# ---------------------------------------------------------------------------
+
+
+def test_pick_tiles_divides():
+    for kern in KERNELS:
+        for b in (1, 7, 64, 96, 1024):
+            for m in (1, 3, 32, 256, 2048):
+                tb, tm = tiles.pick_tiles(kern, b, m)
+                assert b % tb == 0 and m % tm == 0
+                assert 1 <= tb <= b and 1 <= tm <= m
+
+
+def test_vmem_budget_default_tiles():
+    # default gaussian tile at the largest compiled D stays under 16 MiB
+    assert tiles.vmem_bytes("gaussian", 1024, 2048, 512) <= 16 * 2**20
+    assert tiles.vmem_bytes("laplacian", 1024, 2048, 32) <= 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# pure-HLO cholesky (used by the precond artifact — ref.chol_lower)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.sampled_from([1, 2, 5, 16, 33]), seed=st.integers(0, 2**31 - 1))
+def test_chol_lower_matches_numpy(m, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, m))
+    spd = (a @ a.T + m * np.eye(m)).astype(np.float32)
+    l = np.asarray(ref.chol_lower(jnp.asarray(spd)))
+    # lower triangular, positive diagonal, reconstructs
+    np.testing.assert_allclose(l, np.tril(l))
+    assert (np.diag(l) > 0).all()
+    np.testing.assert_allclose(l @ l.T, spd, rtol=5e-4, atol=5e-4)
+    want = np.linalg.cholesky(spd.astype(np.float64))
+    np.testing.assert_allclose(l, want, rtol=5e-3, atol=5e-3)
+
+
+def test_chol_lower_lowers_without_custom_calls():
+    """The whole point of chol_lower: the precond artifact must contain no
+    custom-call (LAPACK FFI) ops, or the deployment XLA rejects it."""
+    import jax
+    from compile import aot
+
+    e = dict(op="precond", kern="", impl="jnp", b=0, m=32, d=0)
+    shapes, _, _ = aot.signature(e)
+    lowered = jax.jit(aot.fn_for(e), keep_unused=True).lower(*shapes)
+    text = aot.to_hlo_text(lowered)
+    assert "custom-call" not in text, "precond HLO contains a custom-call"
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.sampled_from([16, 64, 128, 192]), seed=st.integers(0, 2**31 - 1))
+def test_chol_lower_fast_matches_reference(m, seed):
+    """The blocked (§Perf) factorization must agree with the column-wise
+    reference — including the non-divisible fallback path (m=192 uses
+    panel 64 evenly; m=16 takes the fallback)."""
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, m))
+    spd = (a @ a.T + m * np.eye(m)).astype(np.float32)
+    fast = np.asarray(ref.chol_lower_fast(jnp.asarray(spd)))
+    slow = np.asarray(ref.chol_lower(jnp.asarray(spd)))
+    np.testing.assert_allclose(fast, slow, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(fast @ fast.T, spd, rtol=5e-4, atol=5e-4)

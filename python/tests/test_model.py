@@ -1,0 +1,237 @@
+"""L2 correctness: model ops, preconditioner factorization, and a full
+numpy FALKON reference run (Alg. 1/2) validating that the preconditioned
+CG on the blocked ops converges to the exact Nystrom estimator — the same
+contract the rust coordinator implements.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def mk(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# precond factorization
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.sampled_from([2, 3, 8, 24]), seed=st.integers(0, 2**31 - 1),
+       lam=st.sampled_from([1e-6, 1e-3, 0.1]))
+def test_precond_factors(m, seed, lam):
+    rng = np.random.default_rng(seed)
+    c = mk(rng, m, 4)
+    kmm = np.asarray(ref.kernel_matrix("gaussian", jnp.asarray(c), jnp.asarray(c), 1.0))
+    eps = 1e-6
+    t, a = model.precond(jnp.asarray(kmm), lam, eps)
+    t, a = np.asarray(t, np.float64), np.asarray(a, np.float64)
+    # upper triangular
+    assert np.allclose(t, np.triu(t))
+    assert np.allclose(a, np.triu(a))
+    # T^T T = KMM + eps*M*I
+    np.testing.assert_allclose(t.T @ t, kmm + eps * m * np.eye(m), rtol=1e-3, atol=1e-4)
+    # A^T A = T T^T / M + lam I
+    np.testing.assert_allclose(a.T @ a, t @ t.T / m + lam * np.eye(m), rtol=1e-3, atol=1e-4)
+
+
+def test_precond_rank_deficient_kmm():
+    """Duplicate centers make K_MM singular; the eps*M jitter must keep the
+    factorization finite (Alg. 1's `eps*M*eye(M)` guard)."""
+    rng = np.random.default_rng(5)
+    c = mk(rng, 4, 3)
+    c = np.concatenate([c, c[:2]])  # exact duplicates -> singular KMM
+    kmm = np.asarray(ref.kernel_matrix("gaussian", jnp.asarray(c), jnp.asarray(c), 1.0))
+    t, a = model.precond(jnp.asarray(kmm), 1e-4, 1e-5)
+    assert np.isfinite(np.asarray(t)).all()
+    assert np.isfinite(np.asarray(a)).all()
+
+
+# ---------------------------------------------------------------------------
+# model op dispatch (impl x kernel parity)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kern", ref.KERNELS)
+def test_impls_agree(kern):
+    rng = np.random.default_rng(9)
+    b, m, d = 64, 32, 8
+    x, c, u, v = mk(rng, b, d), mk(rng, m, d), mk(rng, m), mk(rng, b)
+    mask = np.ones(b, np.float32)
+    w_p = np.asarray(model.knm_matvec(kern, "pallas", x, c, u, v, mask, 1.2))
+    w_j = np.asarray(model.knm_matvec(kern, "jnp", x, c, u, v, mask, 1.2))
+    np.testing.assert_allclose(w_p, w_j, rtol=2e-4, atol=2e-4)
+    k_p = np.asarray(model.kernel_block(kern, "pallas", x, c, 1.2))
+    k_j = np.asarray(model.kernel_block(kern, "jnp", x, c, 1.2))
+    np.testing.assert_allclose(k_p, k_j, rtol=3e-5, atol=3e-5)
+
+
+def test_predict_block():
+    rng = np.random.default_rng(10)
+    b, m, d = 64, 32, 8
+    x, c, alpha = mk(rng, b, d), mk(rng, m, d), mk(rng, m)
+    got = np.asarray(model.predict_block("gaussian", "pallas", x, c, alpha, 2.0))
+    kr = np.asarray(ref.kernel_matrix("gaussian", jnp.asarray(x), jnp.asarray(c), 2.0))
+    np.testing.assert_allclose(got, kr @ alpha, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# full-algorithm reference: preconditioned CG == exact Nystrom (Lemma 5)
+# ---------------------------------------------------------------------------
+
+
+def falkon_numpy(kern, x, c, y, lam, param, t_iters, blocks=4):
+    """Alg. 2 in numpy float64, built on the blocked op contract.
+
+    This is the oracle the rust coordinator is tested against (the same
+    sequence of artifact calls, orchestrated here in numpy).
+    """
+    n, m = x.shape[0], c.shape[0]
+    kmm = np.asarray(ref.kernel_matrix(kern, jnp.asarray(c), jnp.asarray(c), param), np.float64)
+    tt = np.linalg.cholesky(kmm + 1e-10 * m * np.eye(m)).T          # upper
+    aa = np.linalg.cholesky(tt @ tt.T / m + lam * np.eye(m)).T      # upper
+
+    from scipy.linalg import solve_triangular as tri
+
+    def knm_mv(u, v):
+        """sum over blocks of Kr^T (Kr u + v) — blocked like the runtime."""
+        w = np.zeros(m)
+        for s in range(0, n, (n + blocks - 1) // blocks):
+            e = min(n, s + (n + blocks - 1) // blocks)
+            kr = np.asarray(
+                ref.kernel_matrix(kern, jnp.asarray(x[s:e]), jnp.asarray(c), param),
+                np.float64,
+            )
+            w += kr.T @ (kr @ u + v[s:e])
+        return w
+
+    def bhb(u):
+        au = tri(aa, u, lower=False)
+        tau = tri(tt, au, lower=False)
+        w = knm_mv(tau, np.zeros(n)) / n
+        return tri(aa.T, tri(tt.T, w, lower=True) + lam * au, lower=True)
+
+    r = tri(aa.T, tri(tt.T, knm_mv(np.zeros(m), y / n), lower=True), lower=True)
+
+    # conjgrad (Alg. 2)
+    beta = np.zeros(m)
+    p, rr = r.copy(), r.copy()
+    rsold = rr @ rr
+    for _ in range(t_iters):
+        ap = bhb(p)
+        alpha = rsold / (p @ ap)
+        beta += alpha * p
+        rr -= alpha * ap
+        rsnew = rr @ rr
+        p = rr + (rsnew / rsold) * p
+        rsold = rsnew
+    return tri(tt, tri(aa, beta, lower=False), lower=False)
+
+
+def nystrom_exact(kern, x, c, y, lam, param):
+    """Direct solve of Eq. 8 (float64)."""
+    n = x.shape[0]
+    knm = np.asarray(ref.kernel_matrix(kern, jnp.asarray(x), jnp.asarray(c), param), np.float64)
+    kmm = np.asarray(ref.kernel_matrix(kern, jnp.asarray(c), jnp.asarray(c), param), np.float64)
+    h = knm.T @ knm + lam * n * kmm + 1e-12 * np.eye(c.shape[0])
+    return np.linalg.solve(h, knm.T @ y)
+
+
+@pytest.mark.parametrize("kern,param,m,d", [("gaussian", 1.5, 40, 6), ("linear", 1.0, 6, 8)])
+def test_falkon_converges_to_exact_nystrom(kern, param, m, d):
+    """Lemma 5: FALKON with enough CG iterations equals the exact Nystrom
+    estimator; with the preconditioner it takes only a handful.
+
+    For the linear kernel K_MM = C C^T has rank <= d, so m <= d keeps the
+    Nystrom system well-posed (the rank-deficient path is exercised by
+    test_precond_rank_deficient_kmm)."""
+    scipy = pytest.importorskip("scipy")  # noqa: F841
+    rng = np.random.default_rng(21)
+    n = 400
+    x = rng.normal(size=(n, d))
+    c = x[rng.choice(n, m, replace=False)]
+    w0 = rng.normal(size=d)
+    y = np.tanh(x @ w0) + 0.1 * rng.normal(size=n)
+    lam = 1e-4
+
+    alpha_exact = nystrom_exact(kern, x.astype(np.float32), c.astype(np.float32),
+                                y, lam, param)
+    alpha_falkon = falkon_numpy(kern, x.astype(np.float32), c.astype(np.float32),
+                                y, lam, param, t_iters=20)
+    # compare in prediction space (coefficients can be ill-conditioned)
+    kt = np.asarray(ref.kernel_matrix(kern, jnp.asarray(x[:50].astype(np.float32)),
+                                      jnp.asarray(c.astype(np.float32)), param), np.float64)
+    np.testing.assert_allclose(kt @ alpha_falkon, kt @ alpha_exact, rtol=1e-4, atol=1e-5)
+
+
+def test_preconditioner_speeds_up_cg():
+    """The paper's core claim in miniature: iterations-to-tolerance with
+    the FALKON preconditioner are far fewer than plain CG on Eq. 8.
+
+    Thm. 2 requires M >~ 1/lam for cond(B^T H B) = O(1); the paper's
+    regime is lam = 1/sqrt(n), M ~ sqrt(n) log n — used here."""
+    pytest.importorskip("scipy")
+    rng = np.random.default_rng(31)
+    n, m, d = 500, 50, 4
+    x = rng.normal(size=(n, d))
+    c = x[rng.choice(n, m, replace=False)]
+    y = np.sin(x[:, 0]) + 0.05 * rng.normal(size=n)
+    lam, param = 1.0 / np.sqrt(n), 1.0
+
+    knm = np.asarray(ref.kernel_matrix("gaussian", jnp.asarray(x.astype(np.float32)),
+                                       jnp.asarray(c.astype(np.float32)), param), np.float64)
+    kmm = np.asarray(ref.kernel_matrix("gaussian", jnp.asarray(c.astype(np.float32)),
+                                       jnp.asarray(c.astype(np.float32)), param), np.float64)
+    h = knm.T @ knm + lam * n * kmm
+    alpha_star = np.linalg.solve(h + 1e-12 * np.eye(m), knm.T @ y)
+    target = knm @ alpha_star
+
+    def cg_iters_plain():
+        b = knm.T @ y
+        beta = np.zeros(m); r = b.copy(); p = r.copy(); rs = r @ r
+        for it in range(1, 1001):
+            ap = h @ p
+            a = rs / (p @ ap)
+            beta += a * p; r -= a * ap
+            rsn = r @ r
+            if np.linalg.norm(knm @ beta - target) / np.linalg.norm(target) < 1e-3:
+                return it
+            p = r + (rsn / rs) * p; rs = rsn
+        return 1001
+
+    # FALKON preconditioned CG, counting iterations to the same tolerance
+    from scipy.linalg import solve_triangular as tri
+    tt = np.linalg.cholesky(kmm + 1e-10 * m * np.eye(m)).T
+    aa = np.linalg.cholesky(tt @ tt.T / m + lam * np.eye(m)).T
+
+    def bhb(u):
+        au = tri(aa, u, lower=False); tau = tri(tt, au, lower=False)
+        w = knm.T @ (knm @ tau) / n
+        return tri(aa.T, tri(tt.T, w, lower=True) + lam * au, lower=True)
+
+    def alpha_of(beta):
+        return tri(tt, tri(aa, beta, lower=False), lower=False)
+
+    rr = tri(aa.T, tri(tt.T, knm.T @ (y / n), lower=True), lower=True)
+    beta = np.zeros(m); p = rr.copy(); rs = rr @ rr
+    falkon_iters = 1001
+    for it in range(1, 1001):
+        ap = bhb(p)
+        a = rs / (p @ ap)
+        beta += a * p; rr -= a * ap
+        rsn = rr @ rr
+        if np.linalg.norm(knm @ alpha_of(beta) - target) / np.linalg.norm(target) < 1e-3:
+            falkon_iters = it
+            break
+        p = rr + (rsn / rs) * p; rs = rsn
+
+    plain = cg_iters_plain()
+    assert falkon_iters <= 15, f"preconditioned CG took {falkon_iters} iters"
+    assert falkon_iters * 3 <= plain, (falkon_iters, plain)

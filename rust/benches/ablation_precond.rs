@@ -1,0 +1,171 @@
+//! **A1 (Thm. 2 / Sect. 3)** — what the preconditioner does to the
+//! condition number and to iterations-to-convergence.
+//!
+//! For a sweep of (λ, M) this bench materializes the preconditioned
+//! operator W = BᵀHB column-by-column, measures its extreme eigenvalues
+//! (power iteration on W and on σmax·I − W), and counts CG iterations to
+//! a fixed residual tolerance with and without the preconditioner.
+//!
+//! Paper targets: cond(W) = O(1) (≤ ~17, ν ≥ 1/2) once M ≳ 1/λ, giving
+//! O(log n) iterations, while the plain system's condition number (and
+//! its iteration count) explodes as λ shrinks.
+
+mod common;
+
+use falkon::bench::{BenchArgs, Table};
+use falkon::data::synth;
+use falkon::falkon::{conjgrad, prepare, CgOptions, FalkonConfig};
+use falkon::kernels::Kernel;
+use falkon::linalg::gemm;
+use falkon::linalg::mat::Mat;
+use falkon::util::rng::Rng;
+
+/// Extreme eigenvalues of a dense symmetric PSD matrix via power
+/// iteration (λmax) and shifted power iteration (λmin).
+fn eig_extremes(w: &Mat, rng: &mut Rng) -> (f64, f64) {
+    let m = w.rows;
+    let power = |mat: &dyn Fn(&[f64]) -> Vec<f64>, rng: &mut Rng| -> f64 {
+        let mut v = rng.normals(m);
+        let mut lam = 0.0;
+        for _ in 0..200 {
+            let nrm = falkon::linalg::vec_ops::norm2(&v).max(1e-300);
+            for x in &mut v {
+                *x /= nrm;
+            }
+            let wv = mat(&v);
+            lam = falkon::linalg::vec_ops::dot(&v, &wv);
+            v = wv;
+        }
+        lam
+    };
+    let lmax = power(&|v| gemm::matvec(w, v), rng);
+    // λmin(W) = lmax_shift − λmax(lmax·I − W)
+    let shifted = power(
+        &|v| {
+            let wv = gemm::matvec(w, v);
+            v.iter().zip(&wv).map(|(a, b)| lmax * a - b).collect()
+        },
+        rng,
+    );
+    (lmax, (lmax - shifted).max(1e-12))
+}
+
+fn materialize<'p, 'a>(apply: impl Fn(&[f64]) -> Vec<f64>, m: usize) -> Mat {
+    let mut w = Mat::zeros(m, m);
+    for j in 0..m {
+        let mut e = vec![0.0; m];
+        e[j] = 1.0;
+        let col = apply(&e);
+        for i in 0..m {
+            w[(i, j)] = col[i];
+        }
+    }
+    w
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::from_env();
+    let engine = common::bench_engine();
+    // keep n above the largest M in the sweep even in smoke mode
+    let n = common::scale(&args, 8_000).max(2_200);
+    let mut rng = Rng::new(41);
+    let data = synth::smooth_regression(&mut rng, n, 5, 0.05);
+    let nf = data.x.rows as f64;
+
+    let mut table = Table::new(
+        "Ablation A1: preconditioning vs condition number (Thm. 2)",
+        &[
+            "λ",
+            "M",
+            "M·λ",
+            "cond(W) precond",
+            "cond plain",
+            "iters precond",
+            "iters plain",
+        ],
+    );
+
+    let lams = [1.0 / nf.sqrt(), 1e-3, 1e-4];
+    let ms = [256usize, 512, 1024];
+    for &lam in &lams {
+        for &m in &ms {
+            let cfg = FalkonConfig {
+                kernel: Kernel::Gaussian,
+                sigma: 1.5,
+                lam,
+                m,
+                t: 1,
+                seed: 9,
+                eps: 1e-12,
+                ..Default::default()
+            };
+            let state = prepare(&engine, &data.x, &cfg)?;
+            let bhb = state.bhb();
+            // preconditioned operator
+            let w = materialize(|v| bhb.apply(v).unwrap(), m);
+            let (wmax, wmin) = eig_extremes(&w, &mut rng);
+            let cond_w = wmax / wmin;
+            // plain operator H/n (same spectrum shape as H)
+            let kmm = engine.kmm(Kernel::Gaussian, &state.sel.c, 1.5)?;
+            let plain = |v: &[f64]| {
+                let mut hv = state.plan.apply(v, None).unwrap();
+                let kv = gemm::matvec(&kmm, v);
+                for j in 0..m {
+                    hv[j] = hv[j] / nf + lam * kv[j];
+                }
+                hv
+            };
+            let h = materialize(plain, m);
+            let (hmax, hmin) = eig_extremes(&h, &mut rng);
+            let cond_h = hmax / hmin;
+
+            // iterations to residual 1e-8 on the shared rhs
+            let y = &data.y;
+            let r_pre = bhb.rhs(y)?;
+            let pre = conjgrad(
+                |p| bhb.apply(p),
+                &r_pre,
+                CgOptions {
+                    t_max: 1500,
+                    tol: 1e-8,
+                },
+                None,
+            )?;
+            let zeros = vec![0.0; m];
+            let yn: Vec<f64> = y.iter().map(|v| v / nf).collect();
+            let z = state.plan.apply(&zeros, Some(&yn))?;
+            let pl = conjgrad(
+                |p| Ok(plain(p)),
+                &z,
+                CgOptions {
+                    t_max: 1500,
+                    tol: 1e-8,
+                },
+                None,
+            )?;
+            let iters_str = |r: &falkon::falkon::CgResult| {
+                if r.converged {
+                    format!("{}", r.iters)
+                } else {
+                    format!(">{}", r.iters)
+                }
+            };
+            table.row(&[
+                format!("{lam:.1e}"),
+                format!("{m}"),
+                format!("{:.1}", m as f64 * lam),
+                format!("{cond_w:.1}"),
+                format!("{cond_h:.2e}"),
+                iters_str(&pre),
+                iters_str(&pl),
+            ]);
+            // Thm. 2 regime check: M >= ~1/λ ⇒ cond(W) small
+            if m as f64 * lam >= 5.0 {
+                assert!(cond_w < 17.0, "λ={lam} M={m}: cond(W)={cond_w}");
+            }
+        }
+    }
+    table.print();
+    println!("\npaper target: cond(W) ≤ ~17 (ν ≥ 1/2) once M ≳ 1/λ; plain-system condition number and iterations explode as λ → 0 while FALKON's stay O(1)/O(log n).");
+    Ok(())
+}

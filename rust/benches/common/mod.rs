@@ -1,0 +1,27 @@
+//! Shared helpers for the bench targets (harness = false).
+#![allow(dead_code)] // each bench uses a subset of these helpers
+
+use falkon::bench::BenchArgs;
+use falkon::runtime::Engine;
+
+/// Engine for benches: XLA artifacts when built, rust otherwise (the
+/// tables note which engine ran).
+pub fn bench_engine() -> Engine {
+    match Engine::xla_default() {
+        Ok(e) => e,
+        Err(err) => {
+            eprintln!("[bench] artifacts unavailable ({err}); using rust engine");
+            Engine::rust()
+        }
+    }
+}
+
+/// Smoke mode shrinks problem sizes so `cargo bench` can be validated
+/// quickly: `FALKON_BENCH_SMOKE=1 cargo bench` or `-- --smoke`.
+pub fn scale(args: &BenchArgs, full: usize) -> usize {
+    if args.flag("--smoke") {
+        (full / 8).max(600)
+    } else {
+        full
+    }
+}

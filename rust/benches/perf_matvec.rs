@@ -1,0 +1,95 @@
+//! **P1 (§Perf)** — hot-path throughput of the blocked Nyström matvec
+//! (the op that dominates every fit): engines × shapes, reporting time
+//! per apply, kernel evaluations/s and effective GFLOP/s, plus a fit
+//! phase breakdown. This is the measurement harness behind
+//! EXPERIMENTS.md §Perf.
+
+mod common;
+
+use falkon::bench::{fmt_secs, time_fn, BenchArgs, Table};
+use falkon::data::synth;
+use falkon::falkon::{fit, FalkonConfig};
+use falkon::kernels::Kernel;
+use falkon::linalg::mat::Mat;
+use falkon::runtime::{Engine, EngineOptions, Impl};
+use falkon::util::rng::Rng;
+
+/// ~flops per gaussian kernel evaluation with the matmul expansion:
+/// 2d (cross term) + ~6 tail ops.
+fn flops_per_eval(d: usize) -> f64 {
+    (2 * d + 6) as f64
+}
+
+fn engines() -> Vec<(String, Engine)> {
+    let mut out = Vec::new();
+    if let Ok(e) = Engine::xla(EngineOptions {
+        imp: Impl::Pallas,
+        workers: 1,
+    }) {
+        out.push(("xla/pallas".to_string(), e));
+    }
+    if let Ok(e) = Engine::xla(EngineOptions {
+        imp: Impl::Jnp,
+        workers: 1,
+    }) {
+        out.push(("xla/jnp".to_string(), e));
+    }
+    out.push(("rust".to_string(), Engine::rust()));
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::from_env();
+    let n = common::scale(&args, 32_768);
+    let reps = if args.flag("--smoke") { 2 } else { 5 };
+
+    let mut table = Table::new(
+        "P1: blocked Nyström matvec throughput (one BHB data pass)",
+        &["engine", "n", "M", "d", "t/apply", "Gevals/s", "GFLOP/s"],
+    );
+
+    for (d, m) in [(32usize, 512usize), (32, 2048), (128, 1024)] {
+        let mut rng = Rng::new(81);
+        let x = Mat::from_vec(n, d, rng.normals(n * d));
+        let c = x.select_rows(&rng.choose(n, m));
+        let u = rng.normals(m);
+        for (name, engine) in engines() {
+            let plan = engine.matvec_plan(Kernel::Gaussian, &x, &c, 1.0)?;
+            let evals = plan.kernel_evals_per_apply() as f64;
+            let stats = time_fn(1, reps, || {
+                let _ = plan.apply(&u, None).unwrap();
+            });
+            table.row(&[
+                name.clone(),
+                format!("{n}"),
+                format!("{m}"),
+                format!("{d}"),
+                fmt_secs(stats.median),
+                format!("{:.2}", evals / stats.median / 1e9),
+                format!("{:.1}", evals * flops_per_eval(d) / stats.median / 1e9),
+            ]);
+        }
+    }
+    table.print();
+
+    // fit phase breakdown on the default path
+    let engine = common::bench_engine();
+    let mut rng = Rng::new(82);
+    let data = synth::smooth_regression(&mut rng, n, 10, 0.1);
+    let cfg = FalkonConfig {
+        kernel: Kernel::Gaussian,
+        sigma: 2.0,
+        lam: 1.0 / (n as f64).sqrt(),
+        m: 1024,
+        t: 15,
+        seed: 1,
+        ..Default::default()
+    };
+    let model = fit(&engine, &data.x, &data.y, &cfg)?;
+    println!(
+        "\nfit phase breakdown ({} engine, n={n}, M=1024, t=15):\n{}",
+        engine.name(),
+        model.phases.report()
+    );
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! **Table 1** — empirical train-time complexity.
+//!
+//! The paper's Table 1 is analytic (train time n√n for FALKON vs n² for
+//! Nyström-direct-style methods vs n³ for exact KRR). This bench measures
+//! wall-clock fit time across n on the same workload and fits log-log
+//! slopes; the reproduction target is the *exponent ordering and rough
+//! values*, not absolute seconds:
+//!
+//!   FALKON          ≈ n^1.5   (M = √n·log n, t fixed ≈ log n)
+//!   Nyström direct  ≈ n^2     (M = √n·log n ⇒ nM² = n²·log²n)
+//!   exact KRR       ≈ n^3     (measured on small n only)
+
+mod common;
+
+use falkon::baselines::{krr, nystrom_direct};
+use falkon::bench::{fmt_secs, loglog_slope, BenchArgs, Table};
+use falkon::data::synth;
+use falkon::falkon::{fit, FalkonConfig};
+use falkon::kernels::Kernel;
+use falkon::metrics;
+use falkon::util::rng::Rng;
+use falkon::util::timer::Timer;
+
+/// round M to the nearest compiled artifact size
+fn artifact_m(target: usize) -> usize {
+    *[256usize, 512, 1024, 2048]
+        .iter()
+        .min_by_key(|&&m| m.abs_diff(target))
+        .unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::from_env();
+    let smoke = args.flag("--smoke");
+    let engine = common::bench_engine();
+    let ns: Vec<usize> = if smoke {
+        vec![1000, 2000, 4000]
+    } else {
+        vec![2000, 4000, 8000, 16000, 32000, 64000]
+    };
+    let krr_cap = if smoke { 1000 } else { 4000 };
+    let d = 10;
+    let sigma = 2.0;
+
+    let mut table = Table::new(
+        "Table 1 (empirical): train time vs n",
+        &["n", "M", "FALKON", "mse", "Nyström direct", "mse", "KRR", "mse"],
+    );
+    let (mut t_falkon, mut t_nys, mut t_krr) = (vec![], vec![], vec![]);
+    let (mut n_f, mut n_n, mut n_k) = (vec![], vec![], vec![]);
+
+    for &n in &ns {
+        let mut rng = Rng::new(100 + n as u64);
+        let data = synth::smooth_regression(&mut rng, n + n / 4, d, 0.1);
+        let (train, test) = data.split(0.2, &mut rng);
+        let nf = train.n() as f64;
+        let lam = 1.0 / nf.sqrt();
+        let m = artifact_m((nf.sqrt() * nf.ln()) as usize);
+        let cfg = FalkonConfig {
+            kernel: Kernel::Gaussian,
+            sigma,
+            lam,
+            m,
+            t: (0.5 * nf.ln()).ceil() as usize + 3,
+            seed: 1,
+            ..Default::default()
+        };
+
+        let timer = Timer::start();
+        let fm = fit(&engine, &train.x, &train.y, &cfg)?;
+        let falkon_s = timer.elapsed_s();
+        let fmse = metrics::mse(&fm.predict(&engine, &test.x)?, &test.y);
+        t_falkon.push(falkon_s);
+        n_f.push(nf);
+
+        let timer = Timer::start();
+        let nm = nystrom_direct::fit(
+            &engine, &train.x, &train.y, Kernel::Gaussian, sigma, lam, m, &mut Rng::new(1),
+        )?;
+        let nys_s = timer.elapsed_s();
+        let nmse = metrics::mse(&nm.predict(&engine, &test.x)?, &test.y);
+        t_nys.push(nys_s);
+        n_n.push(nf);
+
+        let (krr_cell, krr_mse_cell) = if train.n() <= krr_cap {
+            let timer = Timer::start();
+            let km = krr::fit(&train.x, &train.y, Kernel::Gaussian, sigma, lam)?;
+            let s = timer.elapsed_s();
+            let kmse = metrics::mse(&km.predict(&test.x), &test.y);
+            t_krr.push(s);
+            n_k.push(nf);
+            (fmt_secs(s), format!("{kmse:.4}"))
+        } else {
+            ("-".into(), "-".into())
+        };
+
+        table.row(&[
+            format!("{}", train.n()),
+            format!("{m}"),
+            fmt_secs(falkon_s),
+            format!("{fmse:.4}"),
+            fmt_secs(nys_s),
+            format!("{nmse:.4}"),
+            krr_cell,
+            krr_mse_cell,
+        ]);
+    }
+    table.print();
+
+    let sf = loglog_slope(&n_f, &t_falkon);
+    let sn = loglog_slope(&n_n, &t_nys);
+    println!("\nlog-log slopes (paper: FALKON n^1.5, Nyström-direct n^2, KRR n^3):");
+    println!("  FALKON          : n^{sf:.2}");
+    println!("  Nyström direct  : n^{sn:.2}");
+    if n_k.len() >= 2 {
+        println!("  exact KRR       : n^{:.2}", loglog_slope(&n_k, &t_krr));
+    }
+    println!(
+        "\ncrossover: FALKON/Nyström time ratio at n={}: {:.2}x (should grow with n)",
+        n_f.last().unwrap(),
+        t_nys.last().unwrap() / t_falkon.last().unwrap()
+    );
+    if !smoke {
+        assert!(sf < sn, "FALKON slope {sf:.2} must be below Nyström-direct {sn:.2}");
+    }
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! **Table 2** — the regression/multiclass datasets (MillionSongs, YELP,
+//! TIMIT) on their synthetic analogues at laptop scale. Reproduction
+//! target: the row *shape* — FALKON matches the direct Nyström solver's
+//! accuracy (the stand-in for the converged comparators in the paper's
+//! table) at a fraction of the time, on all three workload types
+//! (dense gaussian regression, sparse linear regression, one-vs-all
+//! multiclass).
+
+mod common;
+
+use falkon::baselines::nystrom_direct;
+use falkon::bench::{fmt_secs, BenchArgs, Table};
+use falkon::data::{synth, ZScore};
+use falkon::falkon::{fit, fit_multiclass, FalkonConfig};
+use falkon::kernels::Kernel;
+use falkon::metrics;
+use falkon::util::rng::Rng;
+use falkon::util::timer::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::from_env();
+    let engine = common::bench_engine();
+    let mut table = Table::new(
+        "Table 2 (analogues): MillionSongs / YELP / TIMIT",
+        &["dataset", "algorithm", "n", "metric", "value", "time"],
+    );
+
+    // -- MillionSongs analogue: gaussian regression, σ=6, λ=1e-6 ---------
+    {
+        let n = common::scale(&args, 30_000);
+        let mut rng = Rng::new(21);
+        let data = synth::songs(&mut rng, n);
+        let (mut train, mut test) = data.split(0.2, &mut rng);
+        ZScore::normalize(&mut train, &mut test);
+        let cfg = FalkonConfig {
+            kernel: Kernel::Gaussian,
+            sigma: 6.0,
+            lam: 1e-6,
+            m: 1024,
+            t: 20,
+            seed: 2,
+            ..Default::default()
+        };
+        let timer = Timer::start();
+        let fm = fit(&engine, &train.x, &train.y, &cfg)?;
+        let fs = timer.elapsed_s();
+        let fp = fm.predict(&engine, &test.x)?;
+        table.row(&[
+            "songs".into(),
+            "FALKON".into(),
+            format!("{}", train.n()),
+            "MSE / rel.err".into(),
+            format!(
+                "{:.4} / {:.3e}",
+                metrics::mse(&fp, &test.y),
+                metrics::relative_error(&fp, &test.y)
+            ),
+            fmt_secs(fs),
+        ]);
+        let timer = Timer::start();
+        let nm = nystrom_direct::fit(
+            &engine, &train.x, &train.y, Kernel::Gaussian, 6.0, 1e-6, 1024, &mut Rng::new(2),
+        )?;
+        let ns = timer.elapsed_s();
+        let np = nm.predict(&engine, &test.x)?;
+        table.row(&[
+            "songs".into(),
+            "Nyström direct".into(),
+            format!("{}", train.n()),
+            "MSE / rel.err".into(),
+            format!(
+                "{:.4} / {:.3e}",
+                metrics::mse(&np, &test.y),
+                metrics::relative_error(&np, &test.y)
+            ),
+            fmt_secs(ns),
+        ]);
+        let (f_mse, n_mse) = (metrics::mse(&fp, &test.y), metrics::mse(&np, &test.y));
+        assert!(
+            f_mse <= 1.05 * n_mse,
+            "songs: FALKON {f_mse} vs direct {n_mse}"
+        );
+    }
+
+    // -- YELP analogue: linear kernel on sparse binary features ----------
+    {
+        let n = common::scale(&args, 20_000);
+        let mut rng = Rng::new(22);
+        let data = synth::yelp(&mut rng, n);
+        // paper: YELP features are NOT z-scored
+        let (train, test) = data.split(0.2, &mut rng);
+        let cfg = FalkonConfig {
+            kernel: Kernel::Linear,
+            sigma: 1.0,
+            lam: 1e-6,
+            m: 1024,
+            t: 20,
+            seed: 3,
+            ..Default::default()
+        };
+        let timer = Timer::start();
+        let fm = fit(&engine, &train.x, &train.y, &cfg)?;
+        let fs = timer.elapsed_s();
+        let fp = fm.predict(&engine, &test.x)?;
+        table.row(&[
+            "yelp".into(),
+            "FALKON (linear)".into(),
+            format!("{}", train.n()),
+            "RMSE".into(),
+            format!("{:.4}", metrics::rmse(&fp, &test.y)),
+            fmt_secs(fs),
+        ]);
+        // sanity: beats predicting the mean
+        let var = falkon::linalg::vec_ops::variance(&test.y);
+        assert!(metrics::mse(&fp, &test.y) < 0.5 * var);
+    }
+
+    // -- TIMIT analogue: 8-class one-vs-all, d=440 ----------------------
+    {
+        let n = common::scale(&args, 12_000);
+        let mut rng = Rng::new(23);
+        let data = synth::timit(&mut rng, n);
+        let (mut train, mut test) = data.split(0.2, &mut rng);
+        ZScore::normalize(&mut train, &mut test);
+        let cfg = FalkonConfig {
+            kernel: Kernel::Gaussian,
+            sigma: 15.0,
+            lam: 1e-9,
+            m: 1024,
+            t: 15,
+            seed: 4,
+            ..Default::default()
+        };
+        let timer = Timer::start();
+        let fm = fit_multiclass(&engine, &train, &cfg)?;
+        let fs = timer.elapsed_s();
+        let pred = fm.predict_class(&engine, &test.x)?;
+        let labels = test.labels.as_ref().unwrap();
+        let cerr =
+            pred.iter().zip(labels).filter(|(a, b)| a != b).count() as f64 / pred.len() as f64;
+        table.row(&[
+            "timit".into(),
+            "FALKON (8-class)".into(),
+            format!("{}", train.n()),
+            "c-err".into(),
+            format!("{:.2}%", 100.0 * cerr),
+            fmt_secs(fs),
+        ]);
+        // far better than the 87.5% chance error
+        assert!(cerr < 0.55, "timit c-err {cerr}");
+    }
+
+    table.print();
+    println!("\npaper Table 2 reference: FALKON MSE 80.10 / rel 4.51e-3 (songs), RMSE 0.833 (YELP), c-err 32.3% (TIMIT) — absolute values differ on synthetic analogues; the reproduction target is FALKON ≥ direct-solver accuracy at lower time.");
+    Ok(())
+}

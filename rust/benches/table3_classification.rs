@@ -1,0 +1,128 @@
+//! **Table 3** — the classification datasets (SUSY, HIGGS, IMAGENET) on
+//! their synthetic analogues. Reproduction target: the row shape — FALKON
+//! reaches the accuracy of the converged Nyström solver (the stand-in for
+//! the table's cluster-scale comparators) in a fraction of the time, and
+//! reports the paper's metrics (c-err, AUC).
+
+mod common;
+
+use falkon::baselines::nystrom_direct;
+use falkon::bench::{fmt_secs, BenchArgs, Table};
+use falkon::data::{synth, ZScore};
+use falkon::falkon::{fit, fit_multiclass, FalkonConfig};
+use falkon::kernels::Kernel;
+use falkon::metrics;
+use falkon::util::rng::Rng;
+use falkon::util::timer::Timer;
+
+fn binary_rows(
+    engine: &falkon::runtime::Engine,
+    table: &mut Table,
+    name: &str,
+    n: usize,
+    sigma: f64,
+    lam: f64,
+    m: usize,
+) -> anyhow::Result<()> {
+    let mut rng = Rng::new(31);
+    let data = synth::by_name(name, &mut rng, n).unwrap();
+    let (mut train, mut test) = data.split(0.2, &mut rng);
+    ZScore::normalize(&mut train, &mut test);
+
+    let cfg = FalkonConfig {
+        kernel: Kernel::Gaussian,
+        sigma,
+        lam,
+        m,
+        t: 20,
+        seed: 6,
+        ..Default::default()
+    };
+    let timer = Timer::start();
+    let fm = fit(engine, &train.x, &train.y, &cfg)?;
+    let fs = timer.elapsed_s();
+    let fp = fm.predict(engine, &test.x)?;
+    let (f_cerr, f_auc) = (metrics::binary_error(&fp, &test.y), metrics::auc(&fp, &test.y));
+    table.row(&[
+        name.into(),
+        "FALKON".into(),
+        format!("{}", train.n()),
+        format!("{:.2}%", 100.0 * f_cerr),
+        format!("{f_auc:.4}"),
+        fmt_secs(fs),
+    ]);
+
+    let timer = Timer::start();
+    let nm = nystrom_direct::fit(
+        engine, &train.x, &train.y, Kernel::Gaussian, sigma, lam, m, &mut Rng::new(6),
+    )?;
+    let ns = timer.elapsed_s();
+    let np = nm.predict(engine, &test.x)?;
+    let n_auc = metrics::auc(&np, &test.y);
+    table.row(&[
+        name.into(),
+        "Nyström direct".into(),
+        format!("{}", train.n()),
+        format!("{:.2}%", 100.0 * metrics::binary_error(&np, &test.y)),
+        format!("{n_auc:.4}"),
+        fmt_secs(ns),
+    ]);
+    assert!(
+        f_auc >= n_auc - 0.005,
+        "{name}: FALKON AUC {f_auc} below direct {n_auc}"
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::from_env();
+    let engine = common::bench_engine();
+    let mut table = Table::new(
+        "Table 3 (analogues): SUSY / HIGGS / IMAGENET",
+        &["dataset", "algorithm", "n", "c-err", "AUC", "time"],
+    );
+
+    // paper: SUSY σ=4 λ=1e-6 M=1e4; HIGGS λ=1e-8 M=1e5 (M scaled down
+    // with our n; σ in z-scored units)
+    binary_rows(&engine, &mut table, "susy", common::scale(&args, 40_000), 4.0, 1e-6, 1024)?;
+    binary_rows(&engine, &mut table, "higgs", common::scale(&args, 40_000), 5.0, 1e-8, 2048)?;
+
+    // IMAGENET analogue: 16-class one-vs-all over CNN-feature-like inputs
+    {
+        let n = common::scale(&args, 16_000);
+        let mut rng = Rng::new(32);
+        let data = synth::imagenet(&mut rng, n);
+        // paper: IMAGENET features are not z-scored
+        let (train, test) = data.split(0.2, &mut rng);
+        // raw (un-z-scored) distances are ~spread·√(2d) ≈ 224; σ ≈ half
+        let cfg = FalkonConfig {
+            kernel: Kernel::Gaussian,
+            sigma: 110.0,
+            lam: 1e-9,
+            m: 1024,
+            t: 15,
+            seed: 7,
+            ..Default::default()
+        };
+        let timer = Timer::start();
+        let fm = fit_multiclass(&engine, &train, &cfg)?;
+        let fs = timer.elapsed_s();
+        let pred = fm.predict_class(&engine, &test.x)?;
+        let labels = test.labels.as_ref().unwrap();
+        let cerr =
+            pred.iter().zip(labels).filter(|(a, b)| a != b).count() as f64 / pred.len() as f64;
+        table.row(&[
+            "imagenet".into(),
+            "FALKON (16-class)".into(),
+            format!("{}", train.n()),
+            format!("{:.2}%", 100.0 * cerr),
+            "-".into(),
+            fmt_secs(fs),
+        ]);
+        assert!(cerr < 0.45, "imagenet c-err {cerr} (chance 0.9375)");
+    }
+
+    table.print();
+    println!("\npaper Table 3 reference: c-err 19.6% AUC 0.877 (SUSY), AUC 0.833 (HIGGS), c-err 20.7% (IMAGENET) — synthetic analogues reproduce the row shape (FALKON ≈ converged-solver accuracy, less time), not the absolute values.");
+    Ok(())
+}

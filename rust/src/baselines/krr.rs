@@ -1,0 +1,78 @@
+//! Exact kernel ridge regression (Eq. 4-5): `(K_nn + λnI) α = y` by direct
+//! Cholesky. O(n²) memory, O(n³) time — the statistical gold standard and
+//! the scaling upper bound in Table 1.
+
+use crate::kernels::{self, Kernel};
+use crate::linalg::chol;
+use crate::linalg::mat::Mat;
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct KrrModel {
+    pub kernel: Kernel,
+    pub sigma: f64,
+    pub lam: f64,
+    /// training inputs — KRR needs all of them at test time (Table 1's
+    /// O(n) test-time column)
+    pub x: Mat,
+    pub alpha: Vec<f64>,
+}
+
+pub fn fit(x: &Mat, y: &[f64], kernel: Kernel, sigma: f64, lam: f64) -> Result<KrrModel> {
+    anyhow::ensure!(x.rows == y.len());
+    let n = x.rows;
+    let mut k = kernels::kernel_block(kernel, x, x, sigma);
+    k.add_diag(lam * n as f64 + 1e-12);
+    let alpha = chol::solve_spd(&k, y).context("KRR solve")?;
+    Ok(KrrModel {
+        kernel,
+        sigma,
+        lam,
+        x: x.clone(),
+        alpha,
+    })
+}
+
+impl KrrModel {
+    pub fn predict(&self, x: &Mat) -> Vec<f64> {
+        kernels::predict(self.kernel, x, &self.x, &self.alpha, self.sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::metrics;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn interpolates_with_tiny_lambda() {
+        let mut rng = Rng::new(1);
+        let data = synth::smooth_regression(&mut rng, 120, 3, 0.0);
+        let m = fit(&data.x, &data.y, Kernel::Gaussian, 1.0, 1e-10).unwrap();
+        let preds = m.predict(&data.x);
+        assert!(metrics::mse(&preds, &data.y) < 1e-6);
+    }
+
+    #[test]
+    fn regularization_shrinks_predictions() {
+        let mut rng = Rng::new(2);
+        let data = synth::smooth_regression(&mut rng, 100, 3, 0.1);
+        let loose = fit(&data.x, &data.y, Kernel::Gaussian, 1.0, 1e-8).unwrap();
+        let tight = fit(&data.x, &data.y, Kernel::Gaussian, 1.0, 10.0).unwrap();
+        let norm = |v: &[f64]| crate::linalg::vec_ops::norm2(v);
+        assert!(norm(&tight.predict(&data.x)) < 0.5 * norm(&loose.predict(&data.x)));
+    }
+
+    #[test]
+    fn generalizes_on_smooth_target() {
+        let mut rng = Rng::new(3);
+        let data = synth::smooth_regression(&mut rng, 500, 4, 0.05);
+        let (train, test) = data.split(0.3, &mut rng);
+        let m = fit(&train.x, &train.y, Kernel::Gaussian, 2.0, 1e-6).unwrap();
+        let err = metrics::mse(&m.predict(&test.x), &test.y);
+        let var = crate::linalg::vec_ops::variance(&test.y);
+        assert!(err < 0.3 * var, "{err} vs {var}");
+    }
+}

@@ -1,0 +1,14 @@
+//! Comparator algorithms from the paper's Table 1, implemented on the same
+//! substrates so the scaling/accuracy benches measure algorithms, not
+//! implementation quality:
+//!
+//! - [`krr`] — exact kernel ridge regression, direct O(n³) solve;
+//! - [`nystrom_direct`] — basic Nyström (Eq. 8), direct O(nM² + M³) solve;
+//! - [`nystrom_gd`] — Nyström + early-stopped gradient descent
+//!   (NYTRO-style [23]);
+//! - [`nystrom_cg`] — Nyström + *un-preconditioned* CG: the ablation that
+//!   isolates the paper's preconditioner contribution.
+pub mod krr;
+pub mod nystrom_cg;
+pub mod nystrom_direct;
+pub mod nystrom_gd;

@@ -1,0 +1,200 @@
+//! Basic Nyström with a direct solver (Eq. 8): form
+//! `H = K_nMᵀK_nM + λn·K_MM` in M×M blocks and solve by Cholesky.
+//! O(nM²) time, O(M²) memory — the "Nyström, random features [7-9]" row of
+//! Table 1. FALKON's claim is matching its accuracy at O(nMt) with t≈log n.
+
+use crate::kernels::Kernel;
+use crate::linalg::chol;
+use crate::linalg::mat::Mat;
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct NystromModel {
+    pub kernel: Kernel,
+    pub sigma: f64,
+    pub lam: f64,
+    pub centers: Mat,
+    pub alpha: Vec<f64>,
+    /// mean of the training targets, added back at predict time (same
+    /// intercept handling as the FALKON estimator, for fair comparison)
+    pub y_offset: f64,
+}
+
+/// Fit with uniformly sampled centers. Kernel blocks stream through the
+/// engine so the XLA artifacts serve this baseline too.
+pub fn fit(
+    engine: &Engine,
+    x: &Mat,
+    y: &[f64],
+    kernel: Kernel,
+    sigma: f64,
+    lam: f64,
+    m: usize,
+    rng: &mut Rng,
+) -> Result<NystromModel> {
+    let idx = rng.choose(x.rows, m.min(x.rows));
+    let centers = x.select_rows(&idx);
+    fit_with_centers(engine, x, y, kernel, sigma, lam, centers)
+}
+
+pub fn fit_with_centers(
+    engine: &Engine,
+    x: &Mat,
+    y: &[f64],
+    kernel: Kernel,
+    sigma: f64,
+    lam: f64,
+    centers: Mat,
+) -> Result<NystromModel> {
+    anyhow::ensure!(x.rows == y.len());
+    let y_offset = crate::linalg::vec_ops::mean(y);
+    let y: Vec<f64> = y.iter().map(|v| v - y_offset).collect();
+    let y = &y[..];
+    let (n, m) = (x.rows, centers.rows);
+    // stream blocks: H += KrᵀKr, z += Krᵀ y_b
+    let mut h = Mat::zeros(m, m);
+    let mut z = vec![0.0f64; m];
+    let block = 2048usize;
+    let mut start = 0;
+    while start < n {
+        let end = (start + block).min(n);
+        let xb = x.slice_rows(start, end);
+        let kr = engine.kernel_block(kernel, &xb, &centers, sigma)?;
+        for i in 0..kr.rows {
+            let row = kr.row(i);
+            let yi = y[start + i];
+            for a in 0..m {
+                let ra = row[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                let hrow = h.row_mut(a);
+                for b in a..m {
+                    hrow[b] += ra * row[b];
+                }
+                z[a] += ra * yi;
+            }
+        }
+        start = end;
+    }
+    for a in 0..m {
+        for b in 0..a {
+            h[(a, b)] = h[(b, a)];
+        }
+    }
+    let kmm = engine.kmm(kernel, &centers, sigma)?;
+    for a in 0..m {
+        for b in 0..m {
+            h[(a, b)] += lam * n as f64 * kmm[(a, b)];
+        }
+    }
+    // jitter for rank-deficient K_MM (e.g. linear kernel with M > d)
+    let mut jit = 1e-10 * (1.0 + h[(0, 0)].abs());
+    let alpha = loop {
+        let mut hj = h.clone();
+        hj.add_diag(jit);
+        match chol::solve_spd(&hj, &z) {
+            Ok(a) => break a,
+            Err(_) if jit < 1e3 => jit *= 100.0,
+            Err(e) => return Err(e).context("Nyström direct solve"),
+        }
+    };
+    Ok(NystromModel {
+        kernel,
+        sigma,
+        lam,
+        centers,
+        alpha,
+        y_offset,
+    })
+}
+
+impl NystromModel {
+    pub fn predict(&self, engine: &Engine, x: &Mat) -> Result<Vec<f64>> {
+        let mut p = engine.predict(self.kernel, x, &self.centers, &self.alpha, self.sigma)?;
+        if self.y_offset != 0.0 {
+            for v in &mut p {
+                *v += self.y_offset;
+            }
+        }
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::kernels;
+    use super::*;
+    use crate::data::synth;
+    use crate::metrics;
+
+    #[test]
+    fn matches_dense_construction() {
+        let mut rng = Rng::new(1);
+        let mut data = synth::smooth_regression(&mut rng, 250, 3, 0.05);
+        // zero-mean targets: the dense reference below is uncentered
+        let ybar = crate::linalg::vec_ops::mean(&data.y);
+        for v in &mut data.y {
+            *v -= ybar;
+        }
+        let eng = Engine::rust();
+        let model = fit(
+            &eng,
+            &data.x,
+            &data.y,
+            Kernel::Gaussian,
+            1.5,
+            1e-4,
+            30,
+            &mut Rng::new(5),
+        )
+        .unwrap();
+        // dense reference
+        let mut rng2 = Rng::new(5);
+        let idx = rng2.choose(250, 30);
+        let c = data.x.select_rows(&idx);
+        let knm = kernels::kernel_block(Kernel::Gaussian, &data.x, &c, 1.5);
+        let kmm = kernels::kmm(Kernel::Gaussian, &c, 1.5);
+        let mut h = crate::linalg::gemm::matmul(&knm.t(), &knm);
+        for a in 0..30 {
+            for b in 0..30 {
+                h[(a, b)] += 1e-4 * 250.0 * kmm[(a, b)];
+            }
+        }
+        h.add_diag(1e-10 * (1.0 + h[(0, 0)].abs()));
+        let z = crate::linalg::gemm::matvec_t(&knm, &data.y);
+        let alpha = chol::solve_spd(&h, &z).unwrap();
+        let rel = crate::linalg::vec_ops::rel_diff(&model.alpha, &alpha);
+        assert!(rel < 1e-8, "rel {rel}");
+    }
+
+    #[test]
+    fn learns() {
+        let mut rng = Rng::new(2);
+        let data = synth::smooth_regression(&mut rng, 700, 4, 0.05);
+        let (train, test) = data.split(0.25, &mut rng);
+        let eng = Engine::rust();
+        let model = fit(
+            &eng, &train.x, &train.y, Kernel::Gaussian, 2.0, 1e-5, 120, &mut rng,
+        )
+        .unwrap();
+        let err = metrics::mse(&model.predict(&eng, &test.x).unwrap(), &test.y);
+        let var = crate::linalg::vec_ops::variance(&test.y);
+        assert!(err < 0.35 * var, "{err} vs {var}");
+    }
+
+    #[test]
+    fn rank_deficient_linear_kernel_survives() {
+        // linear kernel, M > d -> singular H; jitter path must handle it
+        let mut rng = Rng::new(3);
+        let data = synth::smooth_regression(&mut rng, 200, 3, 0.05);
+        let eng = Engine::rust();
+        let model = fit(
+            &eng, &data.x, &data.y, Kernel::Linear, 1.0, 1e-6, 40, &mut rng,
+        )
+        .unwrap();
+        assert!(model.alpha.iter().all(|a| a.is_finite()));
+    }
+}

@@ -1,0 +1,197 @@
+//! Nyström + gradient descent with early stopping (NYTRO-style [23]) — the
+//! "Nyström + iterative [23, 24]" row of Table 1. Uses the same blocked
+//! matvec plan as FALKON but *no preconditioner*: the paper's point is
+//! that this needs t ≈ O(√n) iterations where FALKON needs O(log n).
+//!
+//! Iteration (Eq. 6 restricted to the Nyström space):
+//!   α ← α − (τ/n)·[K_nMᵀ(K_nM α − y) + λn·K_MM α]
+
+use crate::kernels::Kernel;
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct GdModel {
+    pub kernel: Kernel,
+    pub sigma: f64,
+    pub lam: f64,
+    pub centers: Mat,
+    pub alpha: Vec<f64>,
+    pub iters: usize,
+}
+
+/// Power-iteration estimate of the largest eigenvalue of the (normalized)
+/// Nyström Hessian — sets a stable step size τ = 1/L.
+fn estimate_lipschitz(
+    plan: &crate::runtime::MatvecPlan<'_>,
+    kmm: &Mat,
+    lam: f64,
+    rng: &mut Rng,
+) -> Result<f64> {
+    let m = kmm.rows;
+    let n = plan.n() as f64;
+    let mut v: Vec<f64> = rng.normals(m);
+    let mut lmax = 1.0;
+    for _ in 0..12 {
+        let norm = crate::linalg::vec_ops::norm2(&v).max(1e-300);
+        for x in &mut v {
+            *x /= norm;
+        }
+        let mut hv = plan.apply(&v, None)?;
+        let kv = gemm::matvec(kmm, &v);
+        for j in 0..m {
+            hv[j] = hv[j] / n + lam * kv[j];
+        }
+        lmax = crate::linalg::vec_ops::dot(&v, &hv).abs().max(1e-300);
+        v = hv;
+    }
+    Ok(lmax)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn fit(
+    engine: &Engine,
+    x: &Mat,
+    y: &[f64],
+    kernel: Kernel,
+    sigma: f64,
+    lam: f64,
+    m: usize,
+    t: usize,
+    rng: &mut Rng,
+) -> Result<GdModel> {
+    fit_with_callback(engine, x, y, kernel, sigma, lam, m, t, rng, None)
+}
+
+/// `on_iter(k, α)` traces iterates for the convergence-comparison benches.
+#[allow(clippy::too_many_arguments)]
+pub fn fit_with_callback(
+    engine: &Engine,
+    x: &Mat,
+    y: &[f64],
+    kernel: Kernel,
+    sigma: f64,
+    lam: f64,
+    m: usize,
+    t: usize,
+    rng: &mut Rng,
+    mut on_iter: Option<&mut dyn FnMut(usize, &[f64])>,
+) -> Result<GdModel> {
+    anyhow::ensure!(x.rows == y.len());
+    let n = x.rows;
+    let idx = rng.choose(n, m.min(n));
+    let centers = x.select_rows(&idx);
+    let kmm = engine.kmm(kernel, &centers, sigma)?;
+    let plan = engine.matvec_plan(kernel, x, &centers, sigma)?;
+    let mm = centers.rows;
+
+    let lip = estimate_lipschitz(&plan, &kmm, lam, rng)?;
+    let tau = 1.0 / lip;
+
+    // gradient of (1/2n)||K_nM α − y||² + (λ/2) αᵀK_MM α:
+    //   g = (1/n)·K_nMᵀ(K_nM α − y) + λ·K_MM α
+    let neg_y: Vec<f64> = y.iter().map(|v| -v).collect();
+    let mut alpha = vec![0.0f64; mm];
+    for k in 1..=t {
+        let mut g = plan.apply(&alpha, Some(&neg_y))?; // K_nMᵀ(K_nM α − y)
+        let kv = gemm::matvec(&kmm, &alpha);
+        for j in 0..mm {
+            g[j] = g[j] / n as f64 + lam * kv[j];
+        }
+        for j in 0..mm {
+            alpha[j] -= tau * g[j];
+        }
+        if let Some(cb) = on_iter.as_deref_mut() {
+            cb(k, &alpha);
+        }
+    }
+    Ok(GdModel {
+        kernel,
+        sigma,
+        lam,
+        centers,
+        alpha,
+        iters: t,
+    })
+}
+
+impl GdModel {
+    pub fn predict(&self, engine: &Engine, x: &Mat) -> Result<Vec<f64>> {
+        engine.predict(self.kernel, x, &self.centers, &self.alpha, self.sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::metrics;
+
+    #[test]
+    fn descends_towards_nystrom_solution() {
+        let mut rng = Rng::new(1);
+        let mut data = synth::smooth_regression(&mut rng, 400, 3, 0.05);
+        // zero-mean targets: GD here is uncentered, direct centers
+        let ybar = crate::linalg::vec_ops::mean(&data.y);
+        for v in &mut data.y {
+            *v -= ybar;
+        }
+        let eng = Engine::rust();
+        // reference: direct Nyström with the same centers (same rng stream)
+        // well-conditioned regime (lam = 1/sqrt(n)) so plain GD converges
+        // within a sane iteration budget; the ill-conditioned contrast is
+        // exactly what ablation_precond measures
+        let lam = 0.05;
+        let direct = crate::baselines::nystrom_direct::fit(
+            &eng,
+            &data.x,
+            &data.y,
+            Kernel::Gaussian,
+            1.5,
+            lam,
+            40,
+            &mut Rng::new(9),
+        )
+        .unwrap();
+        let gd = fit(
+            &eng,
+            &data.x,
+            &data.y,
+            Kernel::Gaussian,
+            1.5,
+            lam,
+            40,
+            600,
+            &mut Rng::new(9),
+        )
+        .unwrap();
+        assert_eq!(gd.centers.data, direct.centers.data);
+        let pd = direct.predict(&eng, &data.x).unwrap();
+        let pg = gd.predict(&eng, &data.x).unwrap();
+        let rel = crate::linalg::vec_ops::rel_diff(&pg, &pd);
+        assert!(rel < 0.05, "rel {rel}");
+    }
+
+    #[test]
+    fn more_iterations_reduce_training_error() {
+        let mut rng = Rng::new(2);
+        let data = synth::smooth_regression(&mut rng, 300, 3, 0.05);
+        let eng = Engine::rust();
+        let short = fit(
+            &eng, &data.x, &data.y, Kernel::Gaussian, 1.5, 1e-4, 30, 5,
+            &mut Rng::new(3),
+        )
+        .unwrap();
+        let long = fit(
+            &eng, &data.x, &data.y, Kernel::Gaussian, 1.5, 1e-4, 30, 200,
+            &mut Rng::new(3),
+        )
+        .unwrap();
+        let e_short = metrics::mse(&short.predict(&eng, &data.x).unwrap(), &data.y);
+        let e_long = metrics::mse(&long.predict(&eng, &data.x).unwrap(), &data.y);
+        assert!(e_long < e_short, "{e_long} vs {e_short}");
+    }
+}

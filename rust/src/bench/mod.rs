@@ -1,0 +1,193 @@
+//! Micro-benchmark + experiment-report harness (substrate — `criterion` is
+//! unavailable offline; see DESIGN.md §3). Used by every `rust/benches/*`
+//! target: timing with warmup and repeats, simple stats, aligned table
+//! printing that mirrors the paper's table layout, and log-log slope
+//! fitting for the complexity experiments.
+
+use crate::util::timer::Timer;
+
+/// Timing statistics over repeats (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub reps: usize,
+}
+
+/// Time `f` with `warmup` unmeasured runs and `reps` measured runs.
+pub fn time_fn(warmup: usize, reps: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps.max(1));
+    for _ in 0..reps.max(1) {
+        let t = Timer::start();
+        f();
+        times.push(t.elapsed_s());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Stats {
+        median: times[times.len() / 2],
+        min: times[0],
+        max: *times.last().unwrap(),
+        mean: times.iter().sum::<f64>() / times.len() as f64,
+        reps: times.len(),
+    }
+}
+
+/// Least-squares slope of log(y) vs log(x) — the empirical complexity
+/// exponent for Table 1 (`time ~ n^slope`).
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let lx: Vec<f64> = xs.iter().map(|v| v.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|v| v.ln()).collect();
+    let mx = lx.iter().sum::<f64>() / lx.len() as f64;
+    let my = ly.iter().sum::<f64>() / ly.len() as f64;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..lx.len() {
+        num += (lx[i] - mx) * (ly[i] - my);
+        den += (lx[i] - mx) * (lx[i] - mx);
+    }
+    num / den
+}
+
+/// Fixed-width table printer matching the paper's row layout.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", cell, w = widths[c]));
+            }
+            s.trim_end().to_string() + "\n"
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push_str(&format!(
+            "{}\n",
+            "-".repeat(widths.iter().sum::<usize>() + 2 * ncol)
+        ));
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+/// Format seconds human-readably for table cells.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.0}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s < 100.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}m", s / 60.0)
+    }
+}
+
+/// Parse simple `--key value` / `--flag` bench arguments (smoke-mode etc.).
+pub struct BenchArgs {
+    args: Vec<String>,
+}
+
+impl BenchArgs {
+    pub fn from_env() -> BenchArgs {
+        BenchArgs {
+            args: std::env::args().collect(),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.args.iter().any(|a| a == name)
+            || std::env::var("FALKON_BENCH_SMOKE").is_ok() && name == "--smoke"
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.args
+            .iter()
+            .position(|a| a == name)
+            .and_then(|i| self.args.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures() {
+        let s = time_fn(1, 3, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(s.median >= 0.0015, "{s:?}");
+        assert_eq!(s.reps, 3);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn slope_recovers_exponents() {
+        let xs = [1e3, 2e3, 4e3, 8e3];
+        let quad: Vec<f64> = xs.iter().map(|x| 3.0 * x * x).collect();
+        assert!((loglog_slope(&xs, &quad) - 2.0).abs() < 1e-9);
+        let n15: Vec<f64> = xs.iter().map(|x| 0.5 * x.powf(1.5)).collect();
+        assert!((loglog_slope(&xs, &n15) - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new("demo", &["algo", "time"]);
+        t.row(&["FALKON".into(), "55s".into()]);
+        t.row(&["KRR".into(), "10m".into()]);
+        let s = t.to_string();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("FALKON"));
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-5).ends_with("µs"));
+        assert!(fmt_secs(0.05).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+        assert!(fmt_secs(600.0).ends_with('m'));
+    }
+}

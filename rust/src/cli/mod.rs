@@ -1,0 +1,226 @@
+//! Declarative CLI argument parser (substrate — `clap` is unavailable
+//! offline; see DESIGN.md §3). Supports `--key value`, `--flag`, typed
+//! accessors with defaults, required keys, and generated `--help` text.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_switch: bool,
+}
+
+/// A parser for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command {
+            name,
+            about,
+            flags: Vec::new(),
+        }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_switch: false,
+        });
+        self
+    }
+
+    /// required `--name <value>`.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: None,
+            is_switch: false,
+        });
+        self
+    }
+
+    /// boolean `--name` switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(String::new()),
+            is_switch: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for f in &self.flags {
+            let arg = if f.is_switch {
+                format!("--{}", f.name)
+            } else {
+                format!("--{} <v>", f.name)
+            };
+            let def = match (&f.default, f.is_switch) {
+                (Some(d), false) if !d.is_empty() => format!(" [default: {d}]"),
+                (None, _) => " [required]".to_string(),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  {arg:<24} {}{def}\n", f.help));
+        }
+        s
+    }
+
+    /// Parse raw args (after the subcommand name).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected argument {a:?}\n\n{}", self.usage());
+            };
+            let spec = self
+                .flags
+                .iter()
+                .find(|f| f.name == name)
+                .ok_or_else(|| anyhow!("unknown flag --{name}\n\n{}", self.usage()))?;
+            if spec.is_switch {
+                values.insert(name.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                let v = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("--{name} needs a value"))?;
+                values.insert(name.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        for f in &self.flags {
+            if !values.contains_key(f.name) {
+                match &f.default {
+                    Some(d) => {
+                        if !f.is_switch {
+                            values.insert(f.name.to_string(), d.clone());
+                        }
+                    }
+                    None => bail!("missing required --{}\n\n{}", f.name, self.usage()),
+                }
+            }
+        }
+        Ok(Parsed { values })
+    }
+}
+
+/// Parsed flag values with typed accessors.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+}
+
+impl Parsed {
+    pub fn str(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        self.str(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        self.str(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        self.str(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "fit a model")
+            .opt("m", "1024", "centers")
+            .opt("sigma", "1.0", "width")
+            .req("dataset", "which dataset")
+            .switch("verbose", "log more")
+    }
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = cmd()
+            .parse(&args(&["--dataset", "susy", "--m", "256"]))
+            .unwrap();
+        assert_eq!(p.usize("m").unwrap(), 256);
+        assert_eq!(p.f64("sigma").unwrap(), 1.0);
+        assert_eq!(p.str("dataset"), "susy");
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn switch_parses() {
+        let p = cmd()
+            .parse(&args(&["--dataset", "x", "--verbose"]))
+            .unwrap();
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let e = cmd().parse(&args(&["--m", "5"])).unwrap_err().to_string();
+        assert!(e.contains("--dataset"), "{e}");
+    }
+
+    #[test]
+    fn unknown_flag_errors_with_usage() {
+        let e = cmd()
+            .parse(&args(&["--dataset", "x", "--bogus", "1"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown flag"), "{e}");
+        assert!(e.contains("options:"), "{e}");
+    }
+
+    #[test]
+    fn value_flag_without_value_errors() {
+        let e = cmd().parse(&args(&["--dataset"])).unwrap_err().to_string();
+        assert!(e.contains("needs a value"), "{e}");
+    }
+
+    #[test]
+    fn usage_mentions_all_flags() {
+        let u = cmd().usage();
+        for f in ["--m", "--sigma", "--dataset", "--verbose"] {
+            assert!(u.contains(f), "{u}");
+        }
+    }
+}

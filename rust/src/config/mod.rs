@@ -1,0 +1,171 @@
+//! Experiment configuration: a JSON-serializable description of one
+//! training run (dataset, hyperparameters, engine) used by the launcher
+//! (`falkon train --config …`) and recorded into every experiment report
+//! so runs are reproducible.
+
+use crate::falkon::{Centers, FalkonConfig};
+use crate::kernels::Kernel;
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// dataset name (synthetic analogue) or a path (libsvm/csv)
+    pub dataset: String,
+    /// rows to generate for synthetic datasets
+    pub n: usize,
+    pub test_frac: f64,
+    pub normalize: bool,
+    pub falkon: FalkonConfig,
+    /// "xla" | "xla-jnp" | "rust"
+    pub engine: String,
+    pub workers: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: "susy".into(),
+            n: 20_000,
+            test_frac: 0.2,
+            normalize: true,
+            falkon: FalkonConfig::default(),
+            engine: "xla".into(),
+            workers: 1,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn to_json(&self) -> Value {
+        let f = &self.falkon;
+        let centers = match &f.centers {
+            Centers::Uniform => Value::str("uniform"),
+            Centers::ApproxLeverage { sketch } => Value::obj(vec![
+                ("method", Value::str("leverage")),
+                ("sketch", Value::num(*sketch as f64)),
+            ]),
+        };
+        Value::obj(vec![
+            ("dataset", Value::str(self.dataset.clone())),
+            ("n", Value::num(self.n as f64)),
+            ("test_frac", Value::num(self.test_frac)),
+            ("normalize", Value::Bool(self.normalize)),
+            ("engine", Value::str(self.engine.clone())),
+            ("workers", Value::num(self.workers as f64)),
+            ("kernel", Value::str(f.kernel.name())),
+            ("sigma", Value::num(f.sigma)),
+            ("lam", Value::num(f.lam)),
+            ("m", Value::num(f.m as f64)),
+            ("t", Value::num(f.t as f64)),
+            ("eps", Value::num(f.eps)),
+            ("tol", Value::num(f.tol)),
+            ("seed", Value::num(f.seed as f64)),
+            ("centers", centers),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        let get_num = |k: &str, d: f64| v.get(k).as_f64().unwrap_or(d);
+        if let Some(s) = v.get("dataset").as_str() {
+            cfg.dataset = s.to_string();
+        }
+        cfg.n = v.get("n").as_usize().unwrap_or(cfg.n);
+        cfg.test_frac = get_num("test_frac", cfg.test_frac);
+        cfg.normalize = v.get("normalize").as_bool().unwrap_or(cfg.normalize);
+        if let Some(s) = v.get("engine").as_str() {
+            cfg.engine = s.to_string();
+        }
+        cfg.workers = v.get("workers").as_usize().unwrap_or(1);
+        let f = &mut cfg.falkon;
+        if let Some(k) = v.get("kernel").as_str() {
+            f.kernel = Kernel::parse(k).ok_or_else(|| anyhow!("unknown kernel {k}"))?;
+        }
+        f.sigma = get_num("sigma", f.sigma);
+        f.lam = get_num("lam", f.lam);
+        f.m = v.get("m").as_usize().unwrap_or(f.m);
+        f.t = v.get("t").as_usize().unwrap_or(f.t);
+        f.eps = get_num("eps", f.eps);
+        f.tol = get_num("tol", f.tol);
+        f.seed = v.get("seed").as_f64().unwrap_or(0.0) as u64;
+        match v.get("centers") {
+            Value::Str(s) if s == "uniform" => f.centers = Centers::Uniform,
+            Value::Obj(_) => {
+                let c = v.get("centers");
+                if c.get("method").as_str() == Some("leverage") {
+                    f.centers = Centers::ApproxLeverage {
+                        sketch: c.get("sketch").as_usize().unwrap_or(f.m),
+                    };
+                }
+            }
+            _ => {}
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let v = json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        ExperimentConfig::from_json(&v)
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_default() {
+        let cfg = ExperimentConfig::default();
+        let v = cfg.to_json();
+        let back = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(back.dataset, cfg.dataset);
+        assert_eq!(back.falkon.m, cfg.falkon.m);
+        assert_eq!(back.falkon.lam, cfg.falkon.lam);
+        assert!(matches!(back.falkon.centers, Centers::Uniform));
+    }
+
+    #[test]
+    fn roundtrip_leverage() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.falkon.centers = Centers::ApproxLeverage { sketch: 512 };
+        cfg.falkon.kernel = Kernel::Linear;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert!(matches!(
+            back.falkon.centers,
+            Centers::ApproxLeverage { sketch: 512 }
+        ));
+        assert_eq!(back.falkon.kernel, Kernel::Linear);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let v = json::parse(r#"{"dataset": "higgs", "m": 256}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.dataset, "higgs");
+        assert_eq!(cfg.falkon.m, 256);
+        assert_eq!(cfg.falkon.t, FalkonConfig::default().t);
+    }
+
+    #[test]
+    fn rejects_bad_kernel() {
+        let v = json::parse(r#"{"kernel": "polynomial"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let cfg = ExperimentConfig::default();
+        let path = std::env::temp_dir().join("falkon_cfg_test.json");
+        cfg.save(path.to_str().unwrap()).unwrap();
+        let back = ExperimentConfig::load(path.to_str().unwrap()).unwrap();
+        assert_eq!(back.n, cfg.n);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,111 @@
+//! Numeric CSV reader (label-in-first-column convention, as distributed
+//! for MillionSongs/HIGGS/SUSY) — the second path for swapping real data
+//! in for the synthetic analogues.
+
+use super::dataset::Dataset;
+use crate::linalg::mat::Mat;
+use std::io::BufRead;
+
+#[derive(Debug)]
+pub struct CsvError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for CsvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "csv error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for CsvError {}
+
+/// Parse rows of comma-separated floats. `has_header` skips line 1.
+/// Returns (labels, features) with the first column as the label.
+pub fn read(r: impl BufRead, has_header: bool) -> Result<(Vec<f64>, Mat), CsvError> {
+    let mut y = Vec::new();
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut width = None;
+    for (lineno, line) in r.lines().enumerate() {
+        if has_header && lineno == 0 {
+            continue;
+        }
+        let line = line.map_err(|e| CsvError {
+            line: lineno + 1,
+            msg: e.to_string(),
+        })?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut vals = Vec::new();
+        for tok in line.split(',') {
+            vals.push(tok.trim().parse::<f64>().map_err(|e| CsvError {
+                line: lineno + 1,
+                msg: format!("bad number {tok:?}: {e}"),
+            })?);
+        }
+        if vals.len() < 2 {
+            return Err(CsvError {
+                line: lineno + 1,
+                msg: "need label + at least one feature".into(),
+            });
+        }
+        match width {
+            None => width = Some(vals.len()),
+            Some(w) if w != vals.len() => {
+                return Err(CsvError {
+                    line: lineno + 1,
+                    msg: format!("ragged row: {} cols, expected {w}", vals.len()),
+                })
+            }
+            _ => {}
+        }
+        y.push(vals[0]);
+        rows.push(vals[1..].to_vec());
+    }
+    Ok((y, Mat::from_rows(&rows)))
+}
+
+pub fn load_regression(path: &str, has_header: bool) -> anyhow::Result<Dataset> {
+    let f = std::fs::File::open(path)?;
+    let (y, x) = read(std::io::BufReader::new(f), has_header)?;
+    Ok(Dataset::new_regression(path, x, y))
+}
+
+pub fn load_binary(path: &str, has_header: bool) -> anyhow::Result<Dataset> {
+    let f = std::fs::File::open(path)?;
+    let (y, x) = read(std::io::BufReader::new(f), has_header)?;
+    let y = y
+        .into_iter()
+        .map(|v| if v > 0.0 { 1.0 } else { -1.0 })
+        .collect();
+    Ok(Dataset::new_binary(path, x, y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_rows() {
+        let (y, x) = read(Cursor::new("1.0,2.0,3.0\n-1.0,4.0,5.0\n"), false).unwrap();
+        assert_eq!(y, vec![1.0, -1.0]);
+        assert_eq!((x.rows, x.cols), (2, 2));
+        assert_eq!(x[(1, 1)], 5.0);
+    }
+
+    #[test]
+    fn skips_header() {
+        let (y, _) = read(Cursor::new("label,f1\n2.5,1.0\n"), true).unwrap();
+        assert_eq!(y, vec![2.5]);
+    }
+
+    #[test]
+    fn rejects_ragged_and_garbage() {
+        assert!(read(Cursor::new("1,2\n1,2,3\n"), false).is_err());
+        assert!(read(Cursor::new("1,abc\n"), false).is_err());
+        assert!(read(Cursor::new("1\n"), false).is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! Dataset container + preprocessing (z-score normalization, splits) —
+//! mirrors the paper's protocol: "For datasets which do not have a fixed
+//! test set, we set apart 20% of the data for testing. For all datasets,
+//! but YELP and IMAGENET, we normalize the features by their z-score."
+
+use crate::linalg::mat::Mat;
+use crate::util::rng::Rng;
+
+/// Supervised dataset. `y` always holds the regression target or the
+/// ±1 binary label; for multiclass tasks `labels` additionally holds the
+/// class index per row (one-vs-all training reads `label_targets`).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Mat,
+    pub y: Vec<f64>,
+    pub labels: Option<Vec<usize>>,
+    pub n_classes: usize,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new_regression(name: &str, x: Mat, y: Vec<f64>) -> Self {
+        assert_eq!(x.rows, y.len());
+        Dataset {
+            x,
+            y,
+            labels: None,
+            n_classes: 0,
+            name: name.to_string(),
+        }
+    }
+
+    pub fn new_binary(name: &str, x: Mat, y: Vec<f64>) -> Self {
+        assert!(y.iter().all(|v| *v == 1.0 || *v == -1.0));
+        Self {
+            n_classes: 2,
+            ..Dataset::new_regression(name, x, y)
+        }
+    }
+
+    pub fn new_multiclass(name: &str, x: Mat, labels: Vec<usize>, n_classes: usize) -> Self {
+        assert_eq!(x.rows, labels.len());
+        assert!(labels.iter().all(|&l| l < n_classes));
+        let y = labels.iter().map(|&l| l as f64).collect();
+        Dataset {
+            x,
+            y,
+            labels: Some(labels),
+            n_classes,
+            name: name.to_string(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+
+    pub fn is_multiclass(&self) -> bool {
+        self.labels.is_some()
+    }
+
+    /// ±1 targets for the one-vs-all subproblem of class k.
+    pub fn label_targets(&self, k: usize) -> Vec<f64> {
+        let labels = self.labels.as_ref().expect("not a multiclass dataset");
+        labels
+            .iter()
+            .map(|&l| if l == k { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.select_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+            labels: self
+                .labels
+                .as_ref()
+                .map(|l| idx.iter().map(|&i| l[i]).collect()),
+            n_classes: self.n_classes,
+            name: self.name.clone(),
+        }
+    }
+
+    /// Shuffled train/test split; `test_frac` in (0, 1).
+    pub fn split(&self, test_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        assert!(test_frac > 0.0 && test_frac < 1.0);
+        let n = self.n();
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let n_test = ((n as f64) * test_frac).round().max(1.0) as usize;
+        let (test_idx, train_idx) = idx.split_at(n_test);
+        (self.select(train_idx), self.select(test_idx))
+    }
+}
+
+/// Per-feature affine normalizer fit on training data, applied to both
+/// splits (z-score).
+#[derive(Debug, Clone)]
+pub struct ZScore {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl ZScore {
+    pub fn fit(x: &Mat) -> ZScore {
+        let d = x.cols;
+        let n = x.rows.max(1) as f64;
+        let mut mean = vec![0.0; d];
+        for i in 0..x.rows {
+            for (m, v) in mean.iter_mut().zip(x.row(i)) {
+                *m += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut var = vec![0.0; d];
+        for i in 0..x.rows {
+            for j in 0..d {
+                let c = x[(i, j)] - mean[j];
+                var[j] += c * c;
+            }
+        }
+        let std = var
+            .into_iter()
+            .map(|v| (v / n).sqrt().max(1e-12))
+            .collect();
+        ZScore { mean, std }
+    }
+
+    pub fn apply(&self, x: &Mat) -> Mat {
+        let mut out = x.clone();
+        for i in 0..out.rows {
+            let row = out.row_mut(i);
+            for j in 0..row.len() {
+                row[j] = (row[j] - self.mean[j]) / self.std[j];
+            }
+        }
+        out
+    }
+
+    /// Fit on train, transform both in place.
+    pub fn normalize(train: &mut Dataset, test: &mut Dataset) -> ZScore {
+        let z = ZScore::fit(&train.x);
+        train.x = z.apply(&train.x);
+        test.x = z.apply(&test.x);
+        z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let x = Mat::from_rows(&[
+            vec![1.0, 10.0],
+            vec![2.0, 20.0],
+            vec![3.0, 30.0],
+            vec![4.0, 40.0],
+            vec![5.0, 50.0],
+        ]);
+        Dataset::new_regression("toy", x, vec![1.0, 2.0, 3.0, 4.0, 5.0])
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = toy();
+        let mut rng = Rng::new(1);
+        let (tr, te) = d.split(0.4, &mut rng);
+        assert_eq!(tr.n() + te.n(), 5);
+        assert_eq!(te.n(), 2);
+        // y stays aligned with x (row payload check: y == x[:,0])
+        for ds in [&tr, &te] {
+            for i in 0..ds.n() {
+                assert_eq!(ds.y[i], ds.x[(i, 0)]);
+            }
+        }
+    }
+
+    #[test]
+    fn zscore_unit_moments() {
+        let d = toy();
+        let z = ZScore::fit(&d.x);
+        let nx = z.apply(&d.x);
+        for j in 0..2 {
+            let col: Vec<f64> = (0..nx.rows).map(|i| nx[(i, j)]).collect();
+            let m = crate::linalg::vec_ops::mean(&col);
+            let v = crate::linalg::vec_ops::variance(&col);
+            assert!(m.abs() < 1e-12);
+            assert!((v - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zscore_applies_train_stats_to_test() {
+        let mut tr = toy();
+        let mut te = toy();
+        te.x.scale(2.0);
+        let z = ZScore::normalize(&mut tr, &mut te);
+        // test was scaled by 2 -> normalized test col mean is nonzero
+        assert!(z.mean[0] > 0.0);
+        assert!(te.x[(0, 0)] != tr.x[(0, 0)]);
+    }
+
+    #[test]
+    fn multiclass_targets() {
+        let x = Mat::from_rows(&[vec![0.0], vec![1.0], vec![2.0]]);
+        let d = Dataset::new_multiclass("mc", x, vec![0, 1, 2], 3);
+        assert_eq!(d.label_targets(1), vec![-1.0, 1.0, -1.0]);
+        assert!(d.is_multiclass());
+    }
+
+    #[test]
+    #[should_panic]
+    fn binary_requires_pm1() {
+        let x = Mat::from_rows(&[vec![0.0]]);
+        Dataset::new_binary("bad", x, vec![0.5]);
+    }
+}

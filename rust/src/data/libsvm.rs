@@ -1,0 +1,157 @@
+//! LIBSVM-format reader, so the real SUSY / HIGGS / YELP-style datasets can
+//! replace the synthetic analogues when available:
+//!
+//! ```text
+//! <label> <index>:<value> <index>:<value> ...
+//! ```
+//!
+//! Indices are 1-based (standard); the feature dimension is the max index
+//! seen unless `dim` pins it.
+
+use super::dataset::Dataset;
+use crate::linalg::mat::Mat;
+use std::io::BufRead;
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "libsvm parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse from any reader. `dim = Some(d)` pins the feature count (features
+/// beyond it error); `None` infers it from the data.
+pub fn read(r: impl BufRead, dim: Option<usize>) -> Result<(Mat, Vec<f64>), ParseError> {
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut ys = Vec::new();
+    let mut max_idx = 0usize;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line.map_err(|e| ParseError {
+            line: lineno + 1,
+            msg: e.to_string(),
+        })?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .map_err(|e| ParseError {
+                line: lineno + 1,
+                msg: format!("bad label: {e}"),
+            })?;
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (i, v) = tok.split_once(':').ok_or_else(|| ParseError {
+                line: lineno + 1,
+                msg: format!("expected index:value, got {tok:?}"),
+            })?;
+            let i: usize = i.parse().map_err(|e| ParseError {
+                line: lineno + 1,
+                msg: format!("bad index: {e}"),
+            })?;
+            let v: f64 = v.parse().map_err(|e| ParseError {
+                line: lineno + 1,
+                msg: format!("bad value: {e}"),
+            })?;
+            if i == 0 {
+                return Err(ParseError {
+                    line: lineno + 1,
+                    msg: "libsvm indices are 1-based".into(),
+                });
+            }
+            max_idx = max_idx.max(i);
+            feats.push((i - 1, v));
+        }
+        ys.push(label);
+        rows.push(feats);
+    }
+    let d = match dim {
+        Some(d) => {
+            if max_idx > d {
+                return Err(ParseError {
+                    line: 0,
+                    msg: format!("feature index {max_idx} exceeds pinned dim {d}"),
+                });
+            }
+            d
+        }
+        None => max_idx,
+    };
+    let mut x = Mat::zeros(rows.len(), d);
+    for (i, feats) in rows.iter().enumerate() {
+        for &(j, v) in feats {
+            x[(i, j)] = v;
+        }
+    }
+    Ok((x, ys))
+}
+
+/// Load a regression dataset from a libsvm file.
+pub fn load_regression(path: &str, dim: Option<usize>) -> anyhow::Result<Dataset> {
+    let f = std::fs::File::open(path)?;
+    let (x, y) = read(std::io::BufReader::new(f), dim)?;
+    Ok(Dataset::new_regression(path, x, y))
+}
+
+/// Load a ±1 binary classification dataset (0/1 labels are remapped).
+pub fn load_binary(path: &str, dim: Option<usize>) -> anyhow::Result<Dataset> {
+    let f = std::fs::File::open(path)?;
+    let (x, y) = read(std::io::BufReader::new(f), dim)?;
+    let y = y
+        .into_iter()
+        .map(|v| if v > 0.0 { 1.0 } else { -1.0 })
+        .collect();
+    Ok(Dataset::new_binary(path, x, y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_basic() {
+        let src = "1 1:0.5 3:2.0\n-1 2:1.5\n";
+        let (x, y) = read(Cursor::new(src), None).unwrap();
+        assert_eq!((x.rows, x.cols), (2, 3));
+        assert_eq!(y, vec![1.0, -1.0]);
+        assert_eq!(x[(0, 0)], 0.5);
+        assert_eq!(x[(0, 2)], 2.0);
+        assert_eq!(x[(1, 1)], 1.5);
+        assert_eq!(x[(1, 0)], 0.0);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let src = "# header\n\n1 1:1.0 # trailing\n";
+        let (x, y) = read(Cursor::new(src), None).unwrap();
+        assert_eq!(x.rows, 1);
+        assert_eq!(y, vec![1.0]);
+    }
+
+    #[test]
+    fn pinned_dim() {
+        let (x, _) = read(Cursor::new("0 1:1\n"), Some(5)).unwrap();
+        assert_eq!(x.cols, 5);
+        assert!(read(Cursor::new("0 9:1\n"), Some(5)).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(read(Cursor::new("abc 1:1\n"), None).is_err());
+        assert!(read(Cursor::new("1 nocolon\n"), None).is_err());
+        assert!(read(Cursor::new("1 0:1\n"), None).is_err()); // 0-based index
+        assert!(read(Cursor::new("1 2:xyz\n"), None).is_err());
+    }
+}

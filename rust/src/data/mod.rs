@@ -1,0 +1,8 @@
+//! Data pipeline: dataset container + normalization, synthetic analogues
+//! of the paper's evaluation datasets, and loaders for real data.
+pub mod csv;
+pub mod dataset;
+pub mod libsvm;
+pub mod synth;
+
+pub use dataset::{Dataset, ZScore};

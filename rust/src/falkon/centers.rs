@@ -1,0 +1,182 @@
+//! Nyström center selection — Sect. A of the paper: uniform sampling and
+//! approximate-leverage-score sampling with the Def. 2 reweighting matrix D.
+
+use crate::linalg::mat::Mat;
+use crate::runtime::Engine;
+use crate::util::rng::{CategoricalSampler, Rng};
+use anyhow::Result;
+
+/// Center-selection strategy.
+#[derive(Debug, Clone)]
+pub enum Centers {
+    /// Uniform subsampling of the training set (Thm. 3 regime).
+    Uniform,
+    /// Approximate leverage scores (Def. 1 / Thm. 4-5 regime): a uniform
+    /// pilot sketch of `sketch` columns estimates the ridge leverage
+    /// scores at level `lam`, then centers are drawn ∝ l̂_i(λ).
+    ApproxLeverage { sketch: usize },
+}
+
+/// Selected centers plus the Def. 2 diagonal reweighting (None ⇔ identity).
+#[derive(Debug, Clone)]
+pub struct SelectedCenters {
+    pub c: Mat,
+    pub indices: Vec<usize>,
+    /// D_jj = 1/sqrt(n p_j) for leverage-score sampling (Def. 2)
+    pub d_weights: Option<Vec<f64>>,
+    /// the estimated leverage scores (diagnostics / benches)
+    pub scores: Option<Vec<f64>>,
+}
+
+impl Centers {
+    pub fn select(
+        &self,
+        engine: &Engine,
+        x: &Mat,
+        kern: crate::kernels::Kernel,
+        sigma: f64,
+        lam: f64,
+        m: usize,
+        rng: &mut Rng,
+    ) -> Result<SelectedCenters> {
+        match self {
+            Centers::Uniform => {
+                let indices = rng.choose(x.rows, m.min(x.rows));
+                Ok(SelectedCenters {
+                    c: x.select_rows(&indices),
+                    indices,
+                    d_weights: None,
+                    scores: None,
+                })
+            }
+            Centers::ApproxLeverage { sketch } => {
+                let scores =
+                    super::lscores::approx_leverage_scores(engine, x, kern, sigma, lam, *sketch, rng)?;
+                let (indices, d_weights) = sample_by_scores(&scores, m, x.rows, rng);
+                Ok(SelectedCenters {
+                    c: x.select_rows(&indices),
+                    indices,
+                    d_weights: Some(d_weights),
+                    scores: Some(scores),
+                })
+            }
+        }
+    }
+}
+
+/// Draw `m` *distinct* indices with probability ∝ score and compute the
+/// Def. 2 weights D_jj = 1/sqrt(n p_j).
+///
+/// The paper's Alg. 2 samples with replacement and collapses duplicates
+/// (so the realized M is random); we sample without replacement to keep M
+/// exact — required by the static-shape artifact contract — which is the
+/// standard practical variant (documented in DESIGN.md §3).
+pub fn sample_by_scores(
+    scores: &[f64],
+    m: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> (Vec<usize>, Vec<f64>) {
+    assert_eq!(scores.len(), n);
+    let m = m.min(n);
+    let total: f64 = scores.iter().sum();
+    let probs: Vec<f64> = scores.iter().map(|s| (s / total).max(1e-300)).collect();
+
+    let mut taken = vec![false; n];
+    let mut indices = Vec::with_capacity(m);
+    // successive weighted draws, skipping already-chosen indices
+    let sampler = CategoricalSampler::new(&probs);
+    let mut guard = 0usize;
+    while indices.len() < m {
+        let i = sampler.draw(rng);
+        if !taken[i] {
+            taken[i] = true;
+            indices.push(i);
+        }
+        guard += 1;
+        if guard > 50 * m + 1000 {
+            // heavy-tailed scores: fill the remainder uniformly from the
+            // untaken set to terminate deterministically
+            for i in 0..n {
+                if indices.len() >= m {
+                    break;
+                }
+                if !taken[i] {
+                    taken[i] = true;
+                    indices.push(i);
+                }
+            }
+        }
+    }
+    let d_weights = indices
+        .iter()
+        .map(|&i| 1.0 / (n as f64 * probs[i]).sqrt())
+        .collect();
+    (indices, d_weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Kernel;
+
+    #[test]
+    fn uniform_selects_m_distinct_rows() {
+        let mut rng = Rng::new(1);
+        let x = Mat::from_vec(50, 3, rng.normals(150));
+        let eng = Engine::rust();
+        let sel = Centers::Uniform
+            .select(&eng, &x, Kernel::Gaussian, 1.0, 1e-3, 10, &mut rng)
+            .unwrap();
+        assert_eq!(sel.c.rows, 10);
+        assert!(sel.d_weights.is_none());
+        let mut idx = sel.indices.clone();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 10);
+        // selected rows really come from x
+        for (k, &i) in sel.indices.iter().enumerate() {
+            assert_eq!(sel.c.row(k), x.row(i));
+        }
+    }
+
+    #[test]
+    fn score_sampling_prefers_high_scores() {
+        let mut rng = Rng::new(2);
+        let n = 200;
+        let mut scores = vec![0.01; n];
+        for s in scores.iter_mut().take(20) {
+            *s = 10.0;
+        }
+        let mut hits = 0;
+        for _ in 0..50 {
+            let (idx, _) = sample_by_scores(&scores, 10, n, &mut rng);
+            hits += idx.iter().filter(|&&i| i < 20).count();
+        }
+        // high-score block should dominate selections
+        assert!(hits > 350, "hits {hits}");
+    }
+
+    #[test]
+    fn score_sampling_exact_m_and_weights() {
+        let mut rng = Rng::new(3);
+        let scores: Vec<f64> = (1..=40).map(|i| i as f64).collect();
+        let (idx, w) = sample_by_scores(&scores, 15, 40, &mut rng);
+        assert_eq!(idx.len(), 15);
+        assert_eq!(w.len(), 15);
+        let total: f64 = scores.iter().sum();
+        for (k, &i) in idx.iter().enumerate() {
+            let p = scores[i] / total;
+            assert!((w[k] - 1.0 / (40.0 * p).sqrt()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn degenerate_scores_still_terminate() {
+        let mut rng = Rng::new(4);
+        let mut scores = vec![0.0; 30];
+        scores[0] = 1.0; // all mass on one index
+        let (idx, _) = sample_by_scores(&scores, 5, 30, &mut rng);
+        assert_eq!(idx.len(), 5);
+    }
+}

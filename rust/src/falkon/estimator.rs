@@ -1,0 +1,514 @@
+//! The FALKON estimator — the paper's Alg. 1/2 as a fit/predict API on top
+//! of the engine: center selection → K_MM → preconditioner → blocked
+//! preconditioned CG → Nyström coefficients.
+//!
+//! Multiclass problems (TIMIT/IMAGENET style) are trained one-vs-all with
+//! the expensive per-fit state (centers, preconditioner, prepared matvec
+//! plan) shared across the K subproblems — only the right-hand side and CG
+//! run differ per class.
+
+use crate::data::Dataset;
+use crate::kernels::Kernel;
+use crate::linalg::mat::Mat;
+use crate::runtime::{Bhb, Engine, MatvecPlan};
+use crate::util::rng::Rng;
+use crate::util::timer::{Phases, Timer};
+use anyhow::{Context, Result};
+
+use super::centers::{Centers, SelectedCenters};
+use super::cg::{conjgrad, CgOptions};
+
+/// Which preconditioner factorization to use (Sect. A of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrecondKind {
+    /// Cholesky of K_MM + εMI (Alg. 1 / Example 1; the fast default)
+    #[default]
+    Chol,
+    /// rank-revealing eigendecomposition (Example 2) — handles exactly
+    /// singular K_MM without jitter; coordinator-side f64, O(M³)
+    Eig,
+}
+
+/// Hyperparameters for one FALKON fit (paper notation).
+#[derive(Debug, Clone)]
+pub struct FalkonConfig {
+    pub kernel: Kernel,
+    /// kernel width σ (ignored by the linear kernel)
+    pub sigma: f64,
+    /// ridge parameter λ
+    pub lam: f64,
+    /// number of Nyström centers M
+    pub m: usize,
+    /// CG iterations t (the paper's log n regime: ~10-20)
+    pub t: usize,
+    /// center-selection strategy
+    pub centers: Centers,
+    /// jitter scale for chol(K_MM + eps·M·I)
+    pub eps: f64,
+    /// optional early-exit tolerance on the CG residual (0 = fixed t)
+    pub tol: f64,
+    /// preconditioner factorization route
+    pub precond: PrecondKind,
+    /// subtract mean(y) before solving and add it back at predict time
+    /// (recommended for regression with offset targets; the expansion has
+    /// no intercept term)
+    pub center_y: bool,
+    pub seed: u64,
+}
+
+impl Default for FalkonConfig {
+    fn default() -> Self {
+        FalkonConfig {
+            kernel: Kernel::Gaussian,
+            sigma: 1.0,
+            lam: 1e-6,
+            m: 1024,
+            t: 20,
+            centers: Centers::Uniform,
+            eps: 1e-7,
+            tol: 0.0,
+            precond: PrecondKind::default(),
+            center_y: true,
+            seed: 0,
+        }
+    }
+}
+
+impl FalkonConfig {
+    /// The paper's Thm. 3 defaults for a given n: λ = 1/√n,
+    /// M = √n·log n (capped at n), t ≈ log n + 5.
+    pub fn theoretical(n: usize) -> FalkonConfig {
+        let nf = n as f64;
+        FalkonConfig {
+            lam: 1.0 / nf.sqrt(),
+            m: ((nf.sqrt() * nf.ln()).ceil() as usize).min(n),
+            t: (0.5 * nf.ln()).ceil() as usize + 5,
+            ..Default::default()
+        }
+    }
+}
+
+/// A fitted model: Nyström coefficients over the selected centers.
+#[derive(Debug, Clone)]
+pub struct FalkonModel {
+    pub config: FalkonConfig,
+    pub centers: Mat,
+    pub alpha: Vec<f64>,
+    /// target mean removed before the solve and added back at predict
+    /// time — the kernel expansion has no intercept, so offset targets
+    /// (e.g. MillionSongs years) would otherwise be shrunk toward 0 and
+    /// cost f32 precision in the artifacts
+    pub y_offset: f64,
+    /// per-phase wall-clock of the fit
+    pub phases: Phases,
+    pub cg_iters: usize,
+    pub cg_residuals: Vec<f64>,
+}
+
+impl FalkonModel {
+    /// Predict f(x_i) = y_offset + Σ_j α_j K(x_i, c_j) for each row of x.
+    pub fn predict(&self, engine: &Engine, x: &Mat) -> Result<Vec<f64>> {
+        let mut p = engine.predict(
+            self.config.kernel,
+            x,
+            &self.centers,
+            &self.alpha,
+            self.config.sigma,
+        )?;
+        if self.y_offset != 0.0 {
+            for v in &mut p {
+                *v += self.y_offset;
+            }
+        }
+        Ok(p)
+    }
+}
+
+/// Multiclass model: one-vs-all coefficient vectors over shared centers.
+#[derive(Debug, Clone)]
+pub struct FalkonMulticlass {
+    pub config: FalkonConfig,
+    pub centers: Mat,
+    pub alphas: Vec<Vec<f64>>,
+    pub phases: Phases,
+}
+
+impl FalkonMulticlass {
+    /// Per-class scores; scores[k][i] = f_k(x_i).
+    pub fn scores(&self, engine: &Engine, x: &Mat) -> Result<Vec<Vec<f64>>> {
+        self.alphas
+            .iter()
+            .map(|a| engine.predict(self.config.kernel, x, &self.centers, a, self.config.sigma))
+            .collect()
+    }
+
+    /// Argmax class prediction per row.
+    pub fn predict_class(&self, engine: &Engine, x: &Mat) -> Result<Vec<usize>> {
+        let scores = self.scores(engine, x)?;
+        let n = x.rows;
+        Ok((0..n)
+            .map(|i| {
+                (0..scores.len())
+                    .max_by(|&a, &b| scores[a][i].partial_cmp(&scores[b][i]).unwrap())
+                    .unwrap()
+            })
+            .collect())
+    }
+}
+
+/// Per-fit shared state (exposed so benches can probe the operator).
+pub struct FitState<'e> {
+    pub sel: SelectedCenters,
+    pub t_factor: Mat,
+    pub a_factor: Mat,
+    /// partial isometry from the eig preconditioner (None = chol path)
+    pub q_factor: Option<Mat>,
+    pub plan: MatvecPlan<'e>,
+    pub phases: Phases,
+    pub config: FalkonConfig,
+}
+
+impl<'e> FitState<'e> {
+    pub fn bhb(&self) -> Bhb<'_, 'e> {
+        Bhb {
+            plan: &self.plan,
+            t: &self.t_factor,
+            a: &self.a_factor,
+            lam: self.config.lam,
+            d: self.sel.d_weights.as_deref(),
+            q: self.q_factor.as_ref(),
+        }
+    }
+}
+
+/// Build everything up to (but not including) the CG solve: centers,
+/// K_MM (+ D weighting), preconditioner factors, prepared matvec plan.
+pub fn prepare<'e>(
+    engine: &'e Engine,
+    x: &'e Mat,
+    config: &FalkonConfig,
+) -> Result<FitState<'e>> {
+    let mut phases = Phases::new();
+    let mut rng = Rng::new(config.seed);
+
+    let sel = phases.time("centers", || {
+        config.centers.select(
+            engine,
+            x,
+            config.kernel,
+            config.sigma,
+            config.lam,
+            config.m,
+            &mut rng,
+        )
+    })?;
+
+    let (t_factor, a_factor, q_factor) =
+        phases.time("precond", || -> Result<(Mat, Mat, Option<Mat>)> {
+            let mut kmm = engine.kmm(config.kernel, &sel.c, config.sigma)?;
+            if let Some(d) = &sel.d_weights {
+                // K_MM -> D K_MM D (Def. 3)
+                for i in 0..kmm.rows {
+                    for j in 0..kmm.cols {
+                        kmm[(i, j)] *= d[i] * d[j];
+                    }
+                }
+            }
+            match config.precond {
+                PrecondKind::Chol => {
+                    let (t, a) = engine.precond(&kmm, config.lam, config.eps)?;
+                    Ok((t, a, None))
+                }
+                PrecondKind::Eig => {
+                    let (t, a, q) = super::precond::precond_eig(&kmm, config.lam, config.eps)?;
+                    Ok((t, a, Some(q)))
+                }
+            }
+        })?;
+
+    let plan = phases.time("plan", || {
+        engine.matvec_plan(config.kernel, x, &sel.c, config.sigma)
+    })?;
+
+    Ok(FitState {
+        sel,
+        t_factor,
+        a_factor,
+        q_factor,
+        plan,
+        phases,
+        config: config.clone(),
+    })
+}
+
+/// Solve one right-hand side on a prepared state. `on_iter` (if given)
+/// receives (iteration, α at that iteration) — used by convergence
+/// studies; computing α per iteration costs two O(M²) solves.
+pub fn solve(
+    state: &mut FitState<'_>,
+    y: &[f64],
+    mut on_iter: Option<&mut dyn FnMut(usize, &[f64])>,
+) -> Result<(Vec<f64>, usize, Vec<f64>)> {
+    let config = state.config.clone();
+    let bhb = Bhb {
+        plan: &state.plan,
+        t: &state.t_factor,
+        a: &state.a_factor,
+        lam: config.lam,
+        d: state.sel.d_weights.as_deref(),
+        q: state.q_factor.as_ref(),
+    };
+    let timer = Timer::start();
+    let bhb = &bhb;
+    let r = bhb.rhs(y).context("building rhs")?;
+    let mut alpha_cb = on_iter.as_deref_mut().map(|cb| {
+        move |k: usize, beta: &[f64]| {
+            let alpha = bhb.beta_to_alpha(beta);
+            cb(k, &alpha);
+        }
+    });
+    let mut cb_dyn: Option<&mut dyn FnMut(usize, &[f64])> = match alpha_cb.as_mut() {
+        Some(f) => Some(f),
+        None => None,
+    };
+    let cg = conjgrad(
+        |p| bhb.apply(p),
+        &r,
+        CgOptions {
+            t_max: config.t,
+            tol: config.tol,
+        },
+        cb_dyn.take(),
+    )?;
+    let alpha = bhb.beta_to_alpha(&cg.beta);
+    state.phases.add("cg", timer.elapsed_s());
+    Ok((alpha, cg.iters, cg.residuals))
+}
+
+/// Fit FALKON on a regression / binary (-1, +1) problem.
+pub fn fit(engine: &Engine, x: &Mat, y: &[f64], config: &FalkonConfig) -> Result<FalkonModel> {
+    fit_with_callback(engine, x, y, config, None)
+}
+
+/// Fit with a per-CG-iteration callback receiving (iter, α). Note the
+/// callback's α solves the *centered* problem (targets y − mean(y));
+/// manual predictions from it must add `FalkonModel::y_offset` back.
+pub fn fit_with_callback(
+    engine: &Engine,
+    x: &Mat,
+    y: &[f64],
+    config: &FalkonConfig,
+    on_iter: Option<&mut dyn FnMut(usize, &[f64])>,
+) -> Result<FalkonModel> {
+    anyhow::ensure!(x.rows == y.len(), "x rows {} != y len {}", x.rows, y.len());
+    let mut state = prepare(engine, x, config)?;
+    let y_offset = if config.center_y {
+        crate::linalg::vec_ops::mean(y)
+    } else {
+        0.0
+    };
+    let yc: Vec<f64> = y.iter().map(|v| v - y_offset).collect();
+    let (alpha, cg_iters, cg_residuals) = solve(&mut state, &yc, on_iter)?;
+    Ok(FalkonModel {
+        config: config.clone(),
+        centers: state.sel.c,
+        alpha,
+        y_offset,
+        phases: state.phases,
+        cg_iters,
+        cg_residuals,
+    })
+}
+
+/// One-vs-all multiclass fit sharing centers/preconditioner/plan.
+pub fn fit_multiclass(
+    engine: &Engine,
+    data: &Dataset,
+    config: &FalkonConfig,
+) -> Result<FalkonMulticlass> {
+    anyhow::ensure!(data.is_multiclass(), "dataset is not multiclass");
+    let mut state = prepare(engine, &data.x, config)?;
+    let mut alphas = Vec::with_capacity(data.n_classes);
+    for k in 0..data.n_classes {
+        let yk = data.label_targets(k);
+        let (alpha, _, _) = solve(&mut state, &yk, None)?;
+        alphas.push(alpha);
+    }
+    Ok(FalkonMulticlass {
+        config: config.clone(),
+        centers: state.sel.c,
+        alphas,
+        phases: state.phases,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::metrics;
+
+    fn small_config(m: usize, t: usize) -> FalkonConfig {
+        FalkonConfig {
+            sigma: 2.0,
+            lam: 1e-4,
+            m,
+            t,
+            seed: 7,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn learns_smooth_regression() {
+        let mut rng = Rng::new(1);
+        let data = synth::smooth_regression(&mut rng, 800, 4, 0.05);
+        let (train, test) = data.split(0.25, &mut rng);
+        let eng = Engine::rust();
+        let model = fit(&eng, &train.x, &train.y, &small_config(120, 15)).unwrap();
+        let preds = model.predict(&eng, &test.x).unwrap();
+        let err = metrics::mse(&preds, &test.y);
+        let var = crate::linalg::vec_ops::variance(&test.y);
+        assert!(err < 0.35 * var, "mse {err} vs var {var}");
+    }
+
+    #[test]
+    fn converges_to_exact_nystrom_solution() {
+        // Lemma 5: FALKON → exact Nyström estimator as t grows.
+        let mut rng = Rng::new(2);
+        let data = synth::smooth_regression(&mut rng, 300, 3, 0.05);
+        let eng = Engine::rust();
+        let cfg = FalkonConfig {
+            sigma: 1.5,
+            lam: 1e-3,
+            m: 40,
+            t: 60,
+            seed: 3,
+            eps: 1e-12, // f64 engine: keep the jitter's O(epsM/lam) bias tiny
+            center_y: false, // reference below solves the uncentered system
+            ..Default::default()
+        };
+        let model = fit(&eng, &data.x, &data.y, &cfg).unwrap();
+
+        // exact Nyström (Eq. 8) with the same centers
+        let mut rng2 = Rng::new(3);
+        let idx = rng2.choose(data.x.rows, 40);
+        let c = data.x.select_rows(&idx);
+        assert_eq!(c.data, model.centers.data, "same seed -> same centers");
+        let knm = crate::kernels::kernel_block(Kernel::Gaussian, &data.x, &c, 1.5);
+        let kmm = crate::kernels::kmm(Kernel::Gaussian, &c, 1.5);
+        let mut h = crate::linalg::gemm::matmul(&knm.t(), &knm);
+        for i in 0..40 {
+            for j in 0..40 {
+                h[(i, j)] += cfg.lam * data.x.rows as f64 * kmm[(i, j)];
+            }
+        }
+        h.add_diag(1e-10);
+        let z = crate::linalg::gemm::matvec_t(&knm, &data.y);
+        let alpha_exact = crate::linalg::chol::solve_spd(&h, &z).unwrap();
+        // compare in prediction space
+        let p1 = crate::kernels::predict(Kernel::Gaussian, &data.x, &c, &model.alpha, 1.5);
+        let p2 = crate::kernels::predict(Kernel::Gaussian, &data.x, &c, &alpha_exact, 1.5);
+        let rel = crate::linalg::vec_ops::rel_diff(&p1, &p2);
+        assert!(rel < 1e-5, "rel {rel}");
+    }
+
+    #[test]
+    fn early_stopping_tolerance() {
+        let mut rng = Rng::new(4);
+        let data = synth::smooth_regression(&mut rng, 400, 3, 0.05);
+        let eng = Engine::rust();
+        let mut cfg = small_config(60, 200);
+        cfg.lam = 1.0 / (400f64).sqrt(); // preconditioned regime
+        cfg.tol = 1e-8;
+        let model = fit(&eng, &data.x, &data.y, &cfg).unwrap();
+        assert!(model.cg_iters < 60, "cg took {}", model.cg_iters);
+    }
+
+    #[test]
+    fn callback_traces_iterations() {
+        let mut rng = Rng::new(5);
+        let data = synth::smooth_regression(&mut rng, 200, 3, 0.05);
+        let eng = Engine::rust();
+        let mut iters = Vec::new();
+        let mut cb = |k: usize, alpha: &[f64]| {
+            assert_eq!(alpha.len(), 30);
+            iters.push(k);
+        };
+        let cfg = small_config(30, 7);
+        fit_with_callback(&eng, &data.x, &data.y, &cfg, Some(&mut cb)).unwrap();
+        assert_eq!(iters, (1..=7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn multiclass_shares_centers() {
+        // separable 5-class problem in d=10 — exercises the shared
+        // centers/precond/plan machinery (the timit/imagenet analogues'
+        // difficulty is asserted at scale in the table benches)
+        let mut rng = Rng::new(6);
+        let k = 5;
+        let n = 900;
+        let d = 10;
+        let mut x = crate::linalg::mat::Mat::zeros(n, d);
+        let mut labels = vec![0usize; n];
+        let centers = crate::linalg::mat::Mat::from_vec(k, d, rng.normals(k * d));
+        for i in 0..n {
+            let c = rng.below(k);
+            labels[i] = c;
+            for j in 0..d {
+                x[(i, j)] = 3.0 * centers[(c, j)] + 0.8 * rng.normal();
+            }
+        }
+        let data = crate::data::Dataset::new_multiclass("mc", x, labels, k);
+        let (train, test) = data.split(0.25, &mut rng);
+        let eng = Engine::rust();
+        let cfg = FalkonConfig {
+            sigma: 4.0,
+            lam: 1e-5,
+            m: 80,
+            t: 12,
+            seed: 8,
+            ..Default::default()
+        };
+        let model = fit_multiclass(&eng, &train, &cfg).unwrap();
+        assert_eq!(model.alphas.len(), k);
+        let pred = model.predict_class(&eng, &test.x).unwrap();
+        let labels = test.labels.as_ref().unwrap();
+        let err = pred
+            .iter()
+            .zip(labels)
+            .filter(|(p, l)| p != l)
+            .count() as f64
+            / pred.len() as f64;
+        assert!(err < 0.05, "c-err {err} on separable classes");
+    }
+
+    #[test]
+    fn leverage_scores_path_runs() {
+        let mut rng = Rng::new(7);
+        let data = synth::low_effective_dim(&mut rng, 500, 10, 3);
+        let eng = Engine::rust();
+        let cfg = FalkonConfig {
+            sigma: 1.0,
+            lam: 1e-3,
+            m: 50,
+            t: 15,
+            centers: Centers::ApproxLeverage { sketch: 64 },
+            seed: 9,
+            ..Default::default()
+        };
+        let model = fit(&eng, &data.x, &data.y, &cfg).unwrap();
+        let preds = model.predict(&eng, &data.x).unwrap();
+        let err = metrics::mse(&preds, &data.y);
+        let var = crate::linalg::vec_ops::variance(&data.y);
+        assert!(err < 0.5 * var, "mse {err} var {var}");
+    }
+
+    #[test]
+    fn theoretical_config_scales() {
+        let c = FalkonConfig::theoretical(10_000);
+        assert!((c.lam - 0.01).abs() < 1e-12);
+        assert!(c.m >= 900 && c.m <= 1000, "{}", c.m);
+        assert!(c.t >= 9 && c.t <= 11);
+    }
+}

@@ -1,0 +1,17 @@
+//! The FALKON algorithm (the paper's contribution): Nyström center
+//! selection (uniform + approximate leverage scores), the Nyström-based
+//! preconditioner, and conjugate gradient over the blocked kernel matvec.
+pub mod centers;
+pub mod cg;
+pub mod estimator;
+pub mod lscores;
+pub mod model_io;
+pub mod precond;
+pub mod tune;
+
+pub use centers::{Centers, SelectedCenters};
+pub use cg::{conjgrad, CgOptions, CgResult};
+pub use estimator::{
+    fit, fit_multiclass, fit_with_callback, prepare, solve, FalkonConfig, FalkonModel,
+    FalkonMulticlass, FitState, PrecondKind,
+};

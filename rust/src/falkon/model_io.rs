@@ -1,0 +1,115 @@
+//! Fitted-model persistence (JSON): the launcher's `train --out` writes a
+//! model file; `predict` / `serve` load it. Self-contained — centers and
+//! coefficients are embedded so serving needs no training data.
+
+use super::estimator::{FalkonConfig, FalkonModel};
+use crate::kernels::Kernel;
+use crate::linalg::mat::Mat;
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, Result};
+
+fn vec_to_json(v: &[f64]) -> Value {
+    Value::Arr(v.iter().map(|&x| Value::Num(x)).collect())
+}
+
+fn vec_from_json(v: &Value, what: &str) -> Result<Vec<f64>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("{what}: expected array"))?
+        .iter()
+        .map(|x| x.as_f64().ok_or_else(|| anyhow!("{what}: expected number")))
+        .collect()
+}
+
+pub fn model_to_json(m: &FalkonModel) -> Value {
+    Value::obj(vec![
+        ("format", Value::str("falkon-model")),
+        ("version", Value::num(1.0)),
+        ("kernel", Value::str(m.config.kernel.name())),
+        ("sigma", Value::num(m.config.sigma)),
+        ("lam", Value::num(m.config.lam)),
+        ("m", Value::num(m.centers.rows as f64)),
+        ("d", Value::num(m.centers.cols as f64)),
+        ("y_offset", Value::num(m.y_offset)),
+        ("centers", vec_to_json(&m.centers.data)),
+        ("alpha", vec_to_json(&m.alpha)),
+    ])
+}
+
+pub fn model_from_json(v: &Value) -> Result<FalkonModel> {
+    if v.get("format").as_str() != Some("falkon-model") {
+        return Err(anyhow!("not a falkon model file"));
+    }
+    let kern = v
+        .get("kernel")
+        .as_str()
+        .and_then(Kernel::parse)
+        .ok_or_else(|| anyhow!("bad kernel"))?;
+    let m = v.get("m").as_usize().ok_or_else(|| anyhow!("bad m"))?;
+    let d = v.get("d").as_usize().ok_or_else(|| anyhow!("bad d"))?;
+    let centers = Mat::from_vec(m, d, vec_from_json(v.get("centers"), "centers")?);
+    let alpha = vec_from_json(v.get("alpha"), "alpha")?;
+    anyhow::ensure!(alpha.len() == m, "alpha/centers mismatch");
+    let config = FalkonConfig {
+        kernel: kern,
+        sigma: v.get("sigma").as_f64().unwrap_or(1.0),
+        lam: v.get("lam").as_f64().unwrap_or(0.0),
+        m,
+        ..Default::default()
+    };
+    Ok(FalkonModel {
+        config,
+        centers,
+        alpha,
+        y_offset: v.get("y_offset").as_f64().unwrap_or(0.0),
+        phases: Default::default(),
+        cg_iters: 0,
+        cg_residuals: Vec::new(),
+    })
+}
+
+pub fn save(m: &FalkonModel, path: &str) -> Result<()> {
+    std::fs::write(path, model_to_json(m).to_string_pretty())?;
+    Ok(())
+}
+
+pub fn load(path: &str) -> Result<FalkonModel> {
+    let text = std::fs::read_to_string(path)?;
+    let v = json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+    model_from_json(&v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::runtime::Engine;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_preserves_predictions() {
+        let mut rng = Rng::new(1);
+        let data = synth::smooth_regression(&mut rng, 200, 3, 0.05);
+        let eng = Engine::rust();
+        let cfg = FalkonConfig {
+            sigma: 1.5,
+            lam: 1e-4,
+            m: 24,
+            t: 10,
+            ..Default::default()
+        };
+        let model = crate::falkon::fit(&eng, &data.x, &data.y, &cfg).unwrap();
+        let path = std::env::temp_dir().join("falkon_model_test.json");
+        save(&model, path.to_str().unwrap()).unwrap();
+        let back = load(path.to_str().unwrap()).unwrap();
+        let p1 = model.predict(&eng, &data.x).unwrap();
+        let p2 = back.predict(&eng, &data.x).unwrap();
+        assert_eq!(p1, p2);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let v = json::parse(r#"{"format": "other"}"#).unwrap();
+        assert!(model_from_json(&v).is_err());
+    }
+}

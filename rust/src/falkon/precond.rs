@@ -1,0 +1,152 @@
+//! The Example 2 preconditioner (appendix A): rank-revealing
+//! eigendecomposition of D·K_MM·D instead of Cholesky, handling exactly
+//! singular K_MM (duplicate centers, linear kernel with M > d) without
+//! jitter.
+//!
+//! With D·K_MM·D = V diag(λ) Vᵀ and rank q (λ_i > tol·λ_1):
+//!
+//! ```text
+//! Q = V[:, :q]               (M×q partial isometry)
+//! T = diag(√λ_1 … √λ_q)      (q×q)
+//! A = chol(TTᵀ/M + λI) = diag(√(λ_i/M + λ))
+//! ```
+//!
+//! satisfying Def. 3: Q·TᵀT·Qᵀ = D·K_MM·D, AᵀA = TTᵀ/M + λI.
+//! Runs on the coordinator in f64 (once per fit, O(M³)).
+
+use crate::linalg::eig::sym_eig;
+use crate::linalg::mat::Mat;
+use anyhow::{ensure, Result};
+
+/// Build (T, A, Q) per Example 2. `rank_tol` (the config's `eps` is
+/// reused) discards eigenvalues below `rank_tol·M·λ_max`.
+pub fn precond_eig(kmm: &Mat, lam: f64, rank_tol: f64) -> Result<(Mat, Mat, Mat)> {
+    ensure!(kmm.rows == kmm.cols, "K_MM not square");
+    let m = kmm.rows;
+    let e = sym_eig(kmm);
+    let lmax = e.values.first().copied().unwrap_or(0.0).max(1e-300);
+    let cut = rank_tol.max(1e-14) * m as f64 * lmax;
+    let q_rank = e.values.iter().take_while(|&&v| v > cut).count().max(1);
+
+    let mut t = Mat::zeros(q_rank, q_rank);
+    let mut a = Mat::zeros(q_rank, q_rank);
+    for i in 0..q_rank {
+        let li = e.values[i].max(0.0);
+        t[(i, i)] = li.sqrt();
+        a[(i, i)] = (li / m as f64 + lam).sqrt();
+    }
+    let mut q = Mat::zeros(m, q_rank);
+    for i in 0..m {
+        for j in 0..q_rank {
+            q[(i, j)] = e.vectors[(i, j)];
+        }
+    }
+    Ok((t, a, q))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::falkon::{fit, FalkonConfig, PrecondKind};
+    use crate::kernels::{self, Kernel};
+    use crate::linalg::gemm::matmul;
+    use crate::metrics;
+    use crate::runtime::Engine;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn factors_satisfy_def3() {
+        let mut rng = Rng::new(1);
+        let c = Mat::from_vec(12, 4, rng.normals(48));
+        let kmm = kernels::kmm(Kernel::Gaussian, &c, 1.0);
+        let (t, a, q) = precond_eig(&kmm, 1e-3, 1e-12).unwrap();
+        // Q TᵀT Qᵀ = K_MM
+        let tt = matmul(&t.t(), &t);
+        let qt = matmul(&q, &tt);
+        let back = matmul(&qt, &q.t());
+        assert!(back.max_abs_diff(&kmm) < 1e-8, "{}", back.max_abs_diff(&kmm));
+        // QᵀQ = I
+        let qq = matmul(&q.t(), &q);
+        assert!(qq.max_abs_diff(&Mat::eye(q.cols)) < 1e-9);
+        // AᵀA = TTᵀ/M + λI
+        let mut want = matmul(&t, &t.t());
+        want.scale(1.0 / 12.0);
+        want.add_diag(1e-3);
+        assert!(matmul(&a.t(), &a).max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn truncates_singular_kmm() {
+        // linear kernel with M > d: rank(K_MM) <= d
+        let mut rng = Rng::new(2);
+        let c = Mat::from_vec(10, 3, rng.normals(30));
+        let kmm = kernels::kmm(Kernel::Linear, &c, 1.0);
+        let (t, _, q) = precond_eig(&kmm, 1e-3, 1e-10).unwrap();
+        assert!(t.rows <= 3, "rank {}", t.rows);
+        assert_eq!(q.cols, t.rows);
+    }
+
+    #[test]
+    fn eig_path_matches_chol_path_predictions() {
+        let mut rng = Rng::new(3);
+        let data = synth::smooth_regression(&mut rng, 400, 3, 0.05);
+        let eng = Engine::rust();
+        let base = FalkonConfig {
+            sigma: 1.5,
+            lam: 1e-3,
+            m: 40,
+            t: 40,
+            seed: 5,
+            eps: 1e-12,
+            ..Default::default()
+        };
+        let chol = fit(&eng, &data.x, &data.y, &base).unwrap();
+        let eig = fit(
+            &eng,
+            &data.x,
+            &data.y,
+            &FalkonConfig {
+                precond: PrecondKind::Eig,
+                ..base
+            },
+        )
+        .unwrap();
+        let p1 = chol.predict(&eng, &data.x).unwrap();
+        let p2 = eig.predict(&eng, &data.x).unwrap();
+        let rel = crate::linalg::vec_ops::rel_diff(&p2, &p1);
+        assert!(rel < 1e-6, "rel {rel}");
+    }
+
+    #[test]
+    fn eig_path_survives_duplicate_centers_linear_kernel() {
+        // rank-deficient K_MM end-to-end: linear kernel, M=30 >> d=4
+        let mut rng = Rng::new(4);
+        let n = 400;
+        let x = Mat::from_vec(n, 4, rng.normals(4 * n));
+        let w0 = [1.0, -2.0, 0.5, 3.0];
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                crate::linalg::vec_ops::dot(x.row(i), &w0) + 0.05 * rng.normal()
+            })
+            .collect();
+        let eng = Engine::rust();
+        let cfg = FalkonConfig {
+            kernel: Kernel::Linear,
+            sigma: 1.0,
+            lam: 1e-6,
+            m: 30,
+            t: 30,
+            seed: 6,
+            precond: PrecondKind::Eig,
+            // the target is exactly linear (zero intercept): centering
+            // would inject an unrepresentable constant into the span
+            center_y: false,
+            ..Default::default()
+        };
+        let model = fit(&eng, &x, &y, &cfg).unwrap();
+        let preds = model.predict(&eng, &x).unwrap();
+        let err = metrics::mse(&preds, &y);
+        assert!(err < 0.01, "mse {err}");
+    }
+}

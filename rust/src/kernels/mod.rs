@@ -1,0 +1,260 @@
+//! Pure-Rust kernel function evaluation — the reference implementation the
+//! XLA artifacts are cross-checked against, the compute engine of the
+//! fallback [`crate::runtime::RustBackend`], and the "kernel computed on
+//! the fly" baseline from the paper's Table 1 discussion.
+
+use crate::linalg::mat::Mat;
+
+/// Kernel families supported end-to-end (python oracle, Pallas kernels,
+/// artifacts and this module must stay in sync — tested both sides).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kernel {
+    /// K(x,c) = exp(-‖x-c‖² / 2σ²) — the paper's main kernel (Sect. 5).
+    Gaussian,
+    /// K(x,c) = exp(-‖x-c‖₁ / σ).
+    Laplacian,
+    /// K(x,c) = ⟨x,c⟩ — used for the YELP experiment.
+    Linear,
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Gaussian => "gaussian",
+            Kernel::Laplacian => "laplacian",
+            Kernel::Linear => "linear",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s {
+            "gaussian" | "rbf" => Some(Kernel::Gaussian),
+            "laplacian" => Some(Kernel::Laplacian),
+            "linear" => Some(Kernel::Linear),
+            _ => None,
+        }
+    }
+
+    /// Upper bound κ² on K(x,x) (paper's boundedness assumption). For the
+    /// linear kernel it depends on the data, so None.
+    pub fn kappa_sq(self) -> Option<f64> {
+        match self {
+            Kernel::Gaussian | Kernel::Laplacian => Some(1.0),
+            Kernel::Linear => None,
+        }
+    }
+
+    /// Evaluate K(x, c) for two points.
+    #[inline]
+    pub fn eval(self, x: &[f64], c: &[f64], param: f64) -> f64 {
+        debug_assert_eq!(x.len(), c.len());
+        match self {
+            Kernel::Gaussian => {
+                let mut sq = 0.0;
+                for i in 0..x.len() {
+                    let d = x[i] - c[i];
+                    sq += d * d;
+                }
+                (-sq / (2.0 * param * param)).exp()
+            }
+            Kernel::Laplacian => {
+                let mut l1 = 0.0;
+                for i in 0..x.len() {
+                    l1 += (x[i] - c[i]).abs();
+                }
+                (-l1 / param).exp()
+            }
+            Kernel::Linear => {
+                let mut d = 0.0;
+                for i in 0..x.len() {
+                    d += x[i] * c[i];
+                }
+                d
+            }
+        }
+    }
+}
+
+/// Dense kernel block K(X, C) -> (X.rows × C.rows).
+///
+/// For the Gaussian kernel this uses the ‖x‖²+‖c‖²−2x·c expansion so the
+/// inner loop is a dot product (same structure as the Pallas tile).
+pub fn kernel_block(kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Mat {
+    assert_eq!(x.cols, c.cols, "feature dims differ");
+    let mut out = Mat::zeros(x.rows, c.rows);
+    match kern {
+        Kernel::Gaussian => {
+            let xn: Vec<f64> = (0..x.rows)
+                .map(|i| x.row(i).iter().map(|v| v * v).sum())
+                .collect();
+            let cn: Vec<f64> = (0..c.rows)
+                .map(|j| c.row(j).iter().map(|v| v * v).sum())
+                .collect();
+            let inv = 1.0 / (2.0 * param * param);
+            for i in 0..x.rows {
+                let xr = x.row(i);
+                let orow = out.row_mut(i);
+                for j in 0..c.rows {
+                    let dot = crate::linalg::vec_ops::dot(xr, c.row(j));
+                    let sq = (xn[i] + cn[j] - 2.0 * dot).max(0.0);
+                    orow[j] = (-sq * inv).exp();
+                }
+            }
+        }
+        _ => {
+            for i in 0..x.rows {
+                let xr = x.row(i);
+                let orow = out.row_mut(i);
+                for j in 0..c.rows {
+                    orow[j] = kern.eval(xr, c.row(j), param);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// K_MM over the centers.
+pub fn kmm(kern: Kernel, c: &Mat, param: f64) -> Mat {
+    kernel_block(kern, c, c, param)
+}
+
+/// The FALKON block op w = Krᵀ(mask ⊙ (Kr·u + v)) computed on the fly
+/// without materializing Kr (row-at-a-time) — mirrors the artifact
+/// semantics exactly, including the mask contract.
+pub fn knm_matvec(
+    kern: Kernel,
+    x: &Mat,
+    c: &Mat,
+    u: &[f64],
+    v: &[f64],
+    mask: Option<&[f64]>,
+    param: f64,
+) -> Vec<f64> {
+    assert_eq!(u.len(), c.rows);
+    assert_eq!(v.len(), x.rows);
+    let mut w = vec![0.0; c.rows];
+    let mut krow = vec![0.0; c.rows];
+    for i in 0..x.rows {
+        let mi = mask.map(|m| m[i]).unwrap_or(1.0);
+        if mi == 0.0 {
+            continue;
+        }
+        let xr = x.row(i);
+        for j in 0..c.rows {
+            krow[j] = kern.eval(xr, c.row(j), param);
+        }
+        let yi = mi * (crate::linalg::vec_ops::dot(&krow, u) + v[i]);
+        crate::linalg::vec_ops::axpy(yi, &krow, &mut w);
+    }
+    w
+}
+
+/// Predictions f(x_i) = Σ_j α_j K(x_i, c_j) for a block of rows.
+pub fn predict(kern: Kernel, x: &Mat, c: &Mat, alpha: &[f64], param: f64) -> Vec<f64> {
+    assert_eq!(alpha.len(), c.rows);
+    let mut out = vec![0.0; x.rows];
+    for i in 0..x.rows {
+        let xr = x.row(i);
+        let mut acc = 0.0;
+        for j in 0..c.rows {
+            acc += alpha[j] * kern.eval(xr, c.row(j), param);
+        }
+        out[i] = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::check;
+
+    #[test]
+    fn gaussian_values() {
+        let k = Kernel::Gaussian;
+        assert!((k.eval(&[0.0, 0.0], &[0.0, 0.0], 1.0) - 1.0).abs() < 1e-15);
+        // ||(3,4)||² = 25 -> exp(-12.5)
+        assert!((k.eval(&[3.0, 4.0], &[0.0, 0.0], 1.0) - (-12.5f64).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn laplacian_values() {
+        let k = Kernel::Laplacian;
+        assert!((k.eval(&[1.0, -2.0], &[0.0, 0.0], 2.0) - (-1.5f64).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn linear_is_dot() {
+        assert_eq!(Kernel::Linear.eval(&[1.0, 2.0], &[3.0, 4.0], 9.9), 11.0);
+    }
+
+    #[test]
+    fn parse_names() {
+        for k in [Kernel::Gaussian, Kernel::Laplacian, Kernel::Linear] {
+            assert_eq!(Kernel::parse(k.name()), Some(k));
+        }
+        assert_eq!(Kernel::parse("rbf"), Some(Kernel::Gaussian));
+        assert_eq!(Kernel::parse("poly"), None);
+    }
+
+    #[test]
+    fn block_matches_pointwise() {
+        check("kernel_block = eval per entry", 15, |g| {
+            let (b, m, d) = (g.usize_in(1, 8), g.usize_in(1, 8), g.usize_in(1, 6));
+            let x = Mat::from_vec(b, d, g.normal_vec(b * d));
+            let c = Mat::from_vec(m, d, g.normal_vec(m * d));
+            let p = g.f64_in(0.5, 3.0);
+            for kern in [Kernel::Gaussian, Kernel::Laplacian, Kernel::Linear] {
+                let blk = kernel_block(kern, &x, &c, p);
+                for i in 0..b {
+                    for j in 0..m {
+                        let e = kern.eval(x.row(i), c.row(j), p);
+                        assert!((blk[(i, j)] - e).abs() < 1e-10);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        check("knm_matvec = dense Krᵀ(mask(Kr u + v))", 15, |g| {
+            let (b, m, d) = (g.usize_in(1, 10), g.usize_in(1, 10), g.usize_in(1, 5));
+            let x = Mat::from_vec(b, d, g.normal_vec(b * d));
+            let c = Mat::from_vec(m, d, g.normal_vec(m * d));
+            let u = g.normal_vec(m);
+            let v = g.normal_vec(b);
+            let mask: Vec<f64> = (0..b).map(|_| if g.bool() { 1.0 } else { 0.0 }).collect();
+            let p = 1.3;
+            let kern = *g.pick(&[Kernel::Gaussian, Kernel::Laplacian, Kernel::Linear]);
+            let w = knm_matvec(kern, &x, &c, &u, &v, Some(&mask), p);
+
+            let kr = kernel_block(kern, &x, &c, p);
+            let mut y = crate::linalg::gemm::matvec(&kr, &u);
+            for i in 0..b {
+                y[i] = mask[i] * (y[i] + v[i]);
+            }
+            let want = crate::linalg::gemm::matvec_t(&kr, &y);
+            for j in 0..m {
+                assert!((w[j] - want[j]).abs() < 1e-9, "{} vs {}", w[j], want[j]);
+            }
+        });
+    }
+
+    #[test]
+    fn predict_matches_block() {
+        check("predict = Kr·α", 10, |g| {
+            let (b, m, d) = (g.usize_in(1, 8), g.usize_in(1, 8), g.usize_in(1, 4));
+            let x = Mat::from_vec(b, d, g.normal_vec(b * d));
+            let c = Mat::from_vec(m, d, g.normal_vec(m * d));
+            let alpha = g.normal_vec(m);
+            let got = predict(Kernel::Gaussian, &x, &c, &alpha, 1.0);
+            let kr = kernel_block(Kernel::Gaussian, &x, &c, 1.0);
+            let want = crate::linalg::gemm::matvec(&kr, &alpha);
+            for i in 0..b {
+                assert!((got[i] - want[i]).abs() < 1e-10);
+            }
+        });
+    }
+}

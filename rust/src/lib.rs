@@ -1,0 +1,25 @@
+//! # FALKON — An Optimal Large Scale Kernel Method
+//!
+//! Production reproduction of Rudi, Carratino & Rosasco (NIPS 2017) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L1/L2 (build time)**: Pallas kernels and the FALKON compute graph
+//!   live in `python/compile/`, AOT-lowered to HLO text artifacts.
+//! - **L3 (this crate)**: the coordinator — data pipeline, Nyström center
+//!   selection, preconditioned conjugate gradient over blocked XLA
+//!   matvecs, baselines, benchmarks and the CLI launcher. Python never
+//!   runs at request time.
+//!
+//! Start with [`falkon::FalkonEstimator`] or `examples/quickstart.rs`.
+pub mod data;
+pub mod kernels;
+pub mod linalg;
+pub mod metrics;
+pub mod util;
+pub mod runtime;
+pub mod falkon;
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod serve;

@@ -1,0 +1,168 @@
+//! Cholesky factorization (upper-triangular convention, matching MATLAB's
+//! `chol` and therefore Alg. 1/2 of the paper line-for-line).
+//!
+//! The runtime normally gets its factors from the `precond` XLA artifact;
+//! this implementation backs (a) the pure-Rust fallback backend, (b) the
+//! exact-KRR / Nyström-direct baselines, and (c) cross-checks in tests.
+
+use super::mat::Mat;
+
+#[derive(Debug)]
+pub enum CholError {
+    NotSquare,
+    /// leading minor index that failed positivity
+    NotPositiveDefinite(usize),
+}
+
+impl std::fmt::Display for CholError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CholError::NotSquare => write!(f, "cholesky: matrix not square"),
+            CholError::NotPositiveDefinite(i) => {
+                write!(f, "cholesky: not positive definite at pivot {i}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CholError {}
+
+/// Upper-triangular R with RᵀR = A. A must be symmetric positive definite.
+pub fn cholesky_upper(a: &Mat) -> Result<Mat, CholError> {
+    if a.rows != a.cols {
+        return Err(CholError::NotSquare);
+    }
+    let n = a.rows;
+    let mut r = Mat::zeros(n, n);
+    for i in 0..n {
+        // diagonal pivot
+        let mut s = a[(i, i)];
+        for k in 0..i {
+            s -= r[(k, i)] * r[(k, i)];
+        }
+        if s <= 0.0 || !s.is_finite() {
+            return Err(CholError::NotPositiveDefinite(i));
+        }
+        let rii = s.sqrt();
+        r[(i, i)] = rii;
+        // row i of R (columns j > i)
+        for j in (i + 1)..n {
+            let mut s = a[(i, j)];
+            for k in 0..i {
+                s -= r[(k, i)] * r[(k, j)];
+            }
+            r[(i, j)] = s / rii;
+        }
+    }
+    Ok(r)
+}
+
+/// Solve A x = b for symmetric positive definite A via Cholesky.
+pub fn solve_spd(a: &Mat, b: &[f64]) -> Result<Vec<f64>, CholError> {
+    let r = cholesky_upper(a)?;
+    // A = RᵀR  =>  solve Rᵀ y = b (forward), then R x = y (backward)
+    let y = super::tri::solve_lower_t(&r, b);
+    Ok(super::tri::solve_upper(&r, &y))
+}
+
+/// Solve A X = B column-wise for SPD A.
+pub fn solve_spd_mat(a: &Mat, b: &Mat) -> Result<Mat, CholError> {
+    let r = cholesky_upper(a)?;
+    let mut out = Mat::zeros(b.rows, b.cols);
+    let mut col = vec![0.0; b.rows];
+    for j in 0..b.cols {
+        for i in 0..b.rows {
+            col[i] = b[(i, j)];
+        }
+        let y = super::tri::solve_lower_t(&r, &col);
+        let x = super::tri::solve_upper(&r, &y);
+        for i in 0..b.rows {
+            out[(i, j)] = x[i];
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{gram_t, matmul, matvec};
+    use crate::util::ptest::check;
+
+    fn random_spd(g: &mut crate::util::ptest::Gen, n: usize) -> Mat {
+        // AᵀA + n·I is SPD
+        let a = Mat::from_vec(n, n, g.normal_vec(n * n));
+        let mut s = gram_t(&a);
+        s.add_diag(n as f64);
+        s
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        check("RᵀR = A", 25, |g| {
+            let n = g.usize_in(1, 12);
+            let a = random_spd(g, n);
+            let r = cholesky_upper(&a).unwrap();
+            // upper triangular?
+            for i in 0..n {
+                for j in 0..i {
+                    assert_eq!(r[(i, j)], 0.0);
+                }
+            }
+            let back = matmul(&r.t(), &r);
+            assert!(back.max_abs_diff(&a) < 1e-8 * (n as f64));
+        });
+    }
+
+    #[test]
+    fn known_factor() {
+        let a = Mat::from_rows(&[vec![4.0, 2.0], vec![2.0, 3.0]]);
+        let r = cholesky_upper(&a).unwrap();
+        assert!((r[(0, 0)] - 2.0).abs() < 1e-12);
+        assert!((r[(0, 1)] - 1.0).abs() < 1e-12);
+        assert!((r[(1, 1)] - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(matches!(
+            cholesky_upper(&a),
+            Err(CholError::NotPositiveDefinite(1))
+        ));
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(matches!(
+            cholesky_upper(&Mat::zeros(2, 3)),
+            Err(CholError::NotSquare)
+        ));
+    }
+
+    #[test]
+    fn solve_spd_matches_direct() {
+        check("A·solve(A,b) = b", 25, |g| {
+            let n = g.usize_in(1, 10);
+            let a = random_spd(g, n);
+            let b = g.normal_vec(n);
+            let x = solve_spd(&a, &b).unwrap();
+            let back = matvec(&a, &x);
+            for i in 0..n {
+                assert!((back[i] - b[i]).abs() < 1e-7, "{} vs {}", back[i], b[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn solve_spd_mat_matches_vector_solves() {
+        check("matrix rhs solve", 10, |g| {
+            let n = g.usize_in(1, 8);
+            let a = random_spd(g, n);
+            let b = Mat::from_vec(n, 3, g.normal_vec(n * 3));
+            let x = solve_spd_mat(&a, &b).unwrap();
+            let back = matmul(&a, &x);
+            assert!(back.max_abs_diff(&b) < 1e-7);
+        });
+    }
+}

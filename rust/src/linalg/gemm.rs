@@ -1,0 +1,143 @@
+//! Matrix products for the coordinator-side paths: baselines (exact KRR,
+//! Nyström direct), leverage-score sketches and the pure-Rust fallback
+//! backend. The i-k-j loop order keeps the inner loop contiguous in both
+//! operands, which the compiler vectorizes; that is enough to make the
+//! *XLA* path the bottleneck-of-interest, which is the point.
+
+use super::mat::Mat;
+
+/// C = A · B
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = b.row(k);
+            for j in 0..brow.len() {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// C = Aᵀ · A  (Gram matrix, exploits symmetry: only the upper triangle is
+/// computed then mirrored).
+pub fn gram_t(a: &Mat) -> Mat {
+    let n = a.cols;
+    let mut c = Mat::zeros(n, n);
+    for r in 0..a.rows {
+        let row = a.row(r);
+        for i in 0..n {
+            let ri = row[i];
+            if ri == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for j in i..n {
+                crow[j] += ri * row[j];
+            }
+        }
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            c[(j, i)] = c[(i, j)];
+        }
+    }
+    c
+}
+
+/// y = A · x
+pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols, x.len());
+    let mut y = vec![0.0; a.rows];
+    for i in 0..a.rows {
+        y[i] = super::vec_ops::dot(a.row(i), x);
+    }
+    y
+}
+
+/// y = Aᵀ · x
+pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows, x.len());
+    let mut y = vec![0.0; a.cols];
+    for i in 0..a.rows {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = a.row(i);
+        for j in 0..a.cols {
+            y[j] += xi * row[j];
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::check;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        check("A·I = A", 20, |g| {
+            let (r, c) = (g.usize_in(1, 8), g.usize_in(1, 8));
+            let a = Mat::from_vec(r, c, g.normal_vec(r * c));
+            assert!(matmul(&a, &Mat::eye(c)).max_abs_diff(&a) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        check("AᵀA = matmul(Aᵀ, A)", 20, |g| {
+            let (r, c) = (g.usize_in(1, 10), g.usize_in(1, 10));
+            let a = Mat::from_vec(r, c, g.normal_vec(r * c));
+            let g1 = gram_t(&a);
+            let g2 = matmul(&a.t(), &a);
+            assert!(g1.max_abs_diff(&g2) < 1e-10);
+        });
+    }
+
+    #[test]
+    fn matvec_agrees_with_matmul() {
+        check("A·x as column matmul", 20, |g| {
+            let (r, c) = (g.usize_in(1, 9), g.usize_in(1, 9));
+            let a = Mat::from_vec(r, c, g.normal_vec(r * c));
+            let x = g.normal_vec(c);
+            let y = matvec(&a, &x);
+            let xm = Mat::from_vec(c, 1, x.clone());
+            let ym = matmul(&a, &xm);
+            for i in 0..r {
+                assert!((y[i] - ym[(i, 0)]).abs() < 1e-10);
+            }
+        });
+    }
+
+    #[test]
+    fn matvec_t_is_transpose() {
+        check("Aᵀx = t(A)·x", 20, |g| {
+            let (r, c) = (g.usize_in(1, 9), g.usize_in(1, 9));
+            let a = Mat::from_vec(r, c, g.normal_vec(r * c));
+            let x = g.normal_vec(r);
+            let y1 = matvec_t(&a, &x);
+            let y2 = matvec(&a.t(), &x);
+            for i in 0..c {
+                assert!((y1[i] - y2[i]).abs() < 1e-10);
+            }
+        });
+    }
+}

@@ -1,0 +1,232 @@
+//! Dense row-major matrix over f64 — the coordinator-side linear-algebra
+//! container (preconditioner factors, leverage-score sketches, baselines).
+//!
+//! Heavy compute (kernel evaluations, the CG matvec) runs in the XLA
+//! artifacts; this type only carries M×M-scale state, so clarity wins over
+//! micro-optimization. The hot pieces (GEMM in baselines) live in gemm.rs.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a row-major f32 buffer (artifact outputs).
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_diag(&mut self, s: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self[(i, i)] += s;
+        }
+    }
+
+    pub fn add(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Select a subset of rows (center selection).
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Rows [start, end).
+    pub fn slice_rows(&self, start: usize, end: usize) -> Mat {
+        assert!(start <= end && end <= self.rows);
+        Mat {
+            rows: end - start,
+            cols: self.cols,
+            data: self.data[start * self.cols..end * self.cols].to_vec(),
+        }
+    }
+
+    /// Pad with zero columns up to `new_cols` (feature padding for the
+    /// artifact contract — exact for all supported kernels).
+    pub fn pad_cols(&self, new_cols: usize) -> Mat {
+        assert!(new_cols >= self.cols);
+        let mut out = Mat::zeros(self.rows, new_cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_rows() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m[(0, 1)], 2.0);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn transpose() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let t = m.t();
+        assert_eq!((t.rows, t.cols), (3, 2));
+        assert_eq!(t[(2, 1)], 6.0);
+    }
+
+    #[test]
+    fn select_and_slice() {
+        let m = Mat::from_rows(&[vec![1.0], vec![2.0], vec![3.0], vec![4.0]]);
+        assert_eq!(m.select_rows(&[3, 0]).data, vec![4.0, 1.0]);
+        assert_eq!(m.slice_rows(1, 3).data, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn pad_cols_zero_extends() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0]]);
+        let p = m.pad_cols(4);
+        assert_eq!(p.data, vec![1.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let m = Mat::from_rows(&[vec![1.5, -2.25]]);
+        let m2 = Mat::from_f32(1, 2, &m.to_f32());
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn eye_and_diag() {
+        let mut m = Mat::eye(3);
+        m.add_diag(2.0);
+        assert_eq!(m[(1, 1)], 3.0);
+        assert_eq!(m[(0, 1)], 0.0);
+    }
+}

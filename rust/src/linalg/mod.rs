@@ -1,0 +1,11 @@
+//! Coordinator-side dense linear algebra: the preconditioner application
+//! (triangular solves), Cholesky for baselines/fallback, GEMM/GEMV and
+//! vector kernels. Heavy data-touching compute runs in the XLA artifacts.
+pub mod chol;
+pub mod eig;
+pub mod gemm;
+pub mod mat;
+pub mod tri;
+pub mod vec_ops;
+
+pub use mat::Mat;

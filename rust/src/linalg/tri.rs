@@ -1,0 +1,149 @@
+//! Triangular solves against the *upper* Cholesky factors (T, A) from the
+//! preconditioner. The CG loop applies B = n^{-1/2} T⁻¹A⁻¹ and its
+//! transpose through these four solves — cost O(M²) each, negligible next
+//! to the O(nM) matvec, which is why they live on the Rust side instead of
+//! being an artifact.
+//!
+//! Conventions (R always upper-triangular):
+//!   solve_upper(R, b)    solves R x = b      (back substitution,  MATLAB `R\b`)
+//!   solve_lower_t(R, b)  solves Rᵀ x = b     (forward substitution, MATLAB `R'\b`)
+
+use super::mat::Mat;
+
+/// Solve R x = b with R upper-triangular (back substitution).
+pub fn solve_upper(r: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = r.rows;
+    assert_eq!(r.cols, n);
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        let row = r.row(i);
+        let mut s = x[i];
+        for j in (i + 1)..n {
+            s -= row[j] * x[j];
+        }
+        x[i] = s / row[i];
+    }
+    x
+}
+
+/// Solve Rᵀ x = b with R upper-triangular (forward substitution).
+pub fn solve_lower_t(r: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = r.rows;
+    assert_eq!(r.cols, n);
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in 0..n {
+        // Rᵀ[(i, j)] = R[(j, i)] for j < i — walk column i of R above the diag
+        let mut s = x[i];
+        for j in 0..i {
+            s -= r[(j, i)] * x[j];
+        }
+        x[i] = s / r[(i, i)];
+    }
+    x
+}
+
+/// In-place variants reusing a caller-provided buffer (the CG hot loop
+/// avoids per-iteration allocation with these).
+pub fn solve_upper_into(r: &Mat, b: &[f64], out: &mut [f64]) {
+    out.copy_from_slice(b);
+    let n = r.rows;
+    for i in (0..n).rev() {
+        let row = r.row(i);
+        let mut s = out[i];
+        for j in (i + 1)..n {
+            s -= row[j] * out[j];
+        }
+        out[i] = s / row[i];
+    }
+}
+
+pub fn solve_lower_t_into(r: &Mat, b: &[f64], out: &mut [f64]) {
+    out.copy_from_slice(b);
+    let n = r.rows;
+    for i in 0..n {
+        let mut s = out[i];
+        for j in 0..i {
+            s -= r[(j, i)] * out[j];
+        }
+        out[i] = s / r[(i, i)];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::chol::cholesky_upper;
+    use crate::linalg::gemm::{gram_t, matvec};
+    use crate::util::ptest::check;
+
+    #[test]
+    fn upper_solve_roundtrip() {
+        check("R·solve_upper(R,b) = b", 25, |g| {
+            let n = g.usize_in(1, 12);
+            let a = {
+                let m = Mat::from_vec(n, n, g.normal_vec(n * n));
+                let mut s = gram_t(&m);
+                s.add_diag(n as f64);
+                s
+            };
+            let r = cholesky_upper(&a).unwrap();
+            let b = g.normal_vec(n);
+            let x = solve_upper(&r, &b);
+            let back = matvec(&r, &x);
+            for i in 0..n {
+                assert!((back[i] - b[i]).abs() < 1e-8);
+            }
+        });
+    }
+
+    #[test]
+    fn lower_t_solve_roundtrip() {
+        check("Rᵀ·solve_lower_t(R,b) = b", 25, |g| {
+            let n = g.usize_in(1, 12);
+            let a = {
+                let m = Mat::from_vec(n, n, g.normal_vec(n * n));
+                let mut s = gram_t(&m);
+                s.add_diag(n as f64);
+                s
+            };
+            let r = cholesky_upper(&a).unwrap();
+            let b = g.normal_vec(n);
+            let x = solve_lower_t(&r, &b);
+            let back = matvec(&r.t(), &x);
+            for i in 0..n {
+                assert!((back[i] - b[i]).abs() < 1e-8);
+            }
+        });
+    }
+
+    #[test]
+    fn into_variants_match() {
+        check("in-place solves match allocating solves", 15, |g| {
+            let n = g.usize_in(1, 10);
+            let a = {
+                let m = Mat::from_vec(n, n, g.normal_vec(n * n));
+                let mut s = gram_t(&m);
+                s.add_diag(n as f64);
+                s
+            };
+            let r = cholesky_upper(&a).unwrap();
+            let b = g.normal_vec(n);
+            let mut buf = vec![0.0; n];
+            solve_upper_into(&r, &b, &mut buf);
+            assert_eq!(buf, solve_upper(&r, &b));
+            solve_lower_t_into(&r, &b, &mut buf);
+            assert_eq!(buf, solve_lower_t(&r, &b));
+        });
+    }
+
+    #[test]
+    fn known_2x2() {
+        // R = [[2, 1], [0, 3]]; R x = [4, 6] -> x = [1.5, 2] ... check: 2x+y=4, 3y=6 => y=2, x=1
+        let r = Mat::from_rows(&[vec![2.0, 1.0], vec![0.0, 3.0]]);
+        assert_eq!(solve_upper(&r, &[4.0, 6.0]), vec![1.0, 2.0]);
+        // Rᵀ x = [2, 7]: 2x=2 => x=1; x+3y=7 => y=2
+        assert_eq!(solve_lower_t(&r, &[2.0, 7.0]), vec![1.0, 2.0]);
+    }
+}

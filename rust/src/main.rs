@@ -1,0 +1,429 @@
+//! `falkon` — the launcher. Subcommands:
+//!
+//!   train     fit FALKON on a dataset (synthetic analogue or file)
+//!   predict   evaluate a saved model on a dataset
+//!   serve     run the batched prediction server against a request storm
+//!   lscores   estimate approximate leverage scores and print a summary
+//!   info      show the artifact registry / engine status
+//!
+//! Benchmarks (Tables 1-3 + ablations) live under `cargo bench`.
+
+use anyhow::{anyhow, bail, Result};
+use falkon::cli::Command;
+use falkon::config::ExperimentConfig;
+use falkon::data::{synth, Dataset, ZScore};
+use falkon::falkon::{fit, fit_multiclass, model_io, Centers, FalkonConfig};
+use falkon::kernels::Kernel;
+use falkon::metrics;
+use falkon::runtime::Engine;
+use falkon::util::rng::Rng;
+use falkon::util::timer::Timer;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        bail!(top_usage());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "predict" => cmd_predict(rest),
+        "serve" => cmd_serve(rest),
+        "lscores" => cmd_lscores(rest),
+        "tune" => cmd_tune(rest),
+        "info" => cmd_info(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", top_usage());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{}", top_usage()),
+    }
+}
+
+fn top_usage() -> String {
+    "falkon — An Optimal Large Scale Kernel Method (NIPS 2017), rust+JAX+Pallas\n\n\
+     usage: falkon <command> [--help]\n\n\
+     commands:\n\
+       train     fit FALKON on a dataset\n\
+       predict   evaluate a saved model\n\
+       serve     batched prediction server demo\n\
+       lscores   approximate leverage scores summary\n\
+       tune      grid-search sigma/lambda on a holdout\n\
+       info      artifact registry / engine status\n"
+        .to_string()
+}
+
+/// Load a dataset: synthetic analogue by name, or a file path
+/// (.libsvm/.svm or .csv).
+fn load_dataset(name: &str, n: usize, seed: u64) -> Result<Dataset> {
+    let mut rng = Rng::new(seed ^ 0xDA7A);
+    if let Some(d) = synth::by_name(name, &mut rng, n) {
+        return Ok(d);
+    }
+    if name.ends_with(".csv") {
+        return falkon::data::csv::load_regression(name, true);
+    }
+    if name.ends_with(".libsvm") || name.ends_with(".svm") || name.ends_with(".txt") {
+        return falkon::data::libsvm::load_regression(name, None);
+    }
+    bail!(
+        "unknown dataset {name:?} — synthetic: songs yelp timit susy higgs \
+         imagenet smooth, or a .csv/.libsvm path"
+    )
+}
+
+fn train_spec() -> Command {
+    Command::new("train", "fit FALKON and report test metrics")
+        .opt("dataset", "susy", "dataset name or file path")
+        .opt("n", "20000", "rows for synthetic datasets")
+        .opt("m", "1024", "Nyström centers M (must be compiled; see info)")
+        .opt("sigma", "4.0", "gaussian/laplacian width σ")
+        .opt("lam", "1e-6", "ridge λ")
+        .opt("t", "20", "CG iterations")
+        .opt("kernel", "gaussian", "gaussian | laplacian | linear")
+        .opt("engine", "xla", "xla | xla-jnp | rust")
+        .opt("centers", "uniform", "uniform | leverage")
+        .opt("sketch", "0", "leverage-score sketch size (0 = M)")
+        .opt("seed", "0", "rng seed")
+        .opt("workers", "1", "rust-engine worker threads")
+        .opt("config", "", "JSON config file (overrides all other flags)")
+        .opt("out", "", "save fitted model JSON here")
+        .switch("no-normalize", "skip z-score normalization")
+}
+
+fn config_from_flags(p: &falkon::cli::Parsed) -> Result<ExperimentConfig> {
+    if !p.str("config").is_empty() {
+        return ExperimentConfig::load(p.str("config"));
+    }
+    let sketch = p.usize("sketch")?;
+    let m = p.usize("m")?;
+    Ok(ExperimentConfig {
+        dataset: p.str("dataset").to_string(),
+        n: p.usize("n")?,
+        test_frac: 0.2,
+        normalize: !p.flag("no-normalize"),
+        engine: p.str("engine").to_string(),
+        workers: p.usize("workers")?,
+        falkon: FalkonConfig {
+            kernel: Kernel::parse(p.str("kernel"))
+                .ok_or_else(|| anyhow!("unknown kernel {}", p.str("kernel")))?,
+            sigma: p.f64("sigma")?,
+            lam: p.f64("lam")?,
+            m,
+            t: p.usize("t")?,
+            centers: match p.str("centers") {
+                "uniform" => Centers::Uniform,
+                "leverage" => Centers::ApproxLeverage {
+                    sketch: if sketch == 0 { m } else { sketch },
+                },
+                other => bail!("unknown centers {other:?}"),
+            },
+            seed: p.u64("seed")?,
+            ..Default::default()
+        },
+    })
+}
+
+fn prepare_data(cfg: &ExperimentConfig) -> Result<(Dataset, Dataset)> {
+    let data = load_dataset(&cfg.dataset, cfg.n, cfg.falkon.seed)?;
+    let mut rng = Rng::new(cfg.falkon.seed ^ 0x5917);
+    let (mut train, mut test) = data.split(cfg.test_frac, &mut rng);
+    // paper protocol: z-score except YELP (binary n-grams) and IMAGENET
+    if cfg.normalize && cfg.dataset != "yelp" && cfg.dataset != "imagenet" {
+        ZScore::normalize(&mut train, &mut test);
+    }
+    Ok((train, test))
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let p = train_spec().parse(args)?;
+    let cfg = config_from_flags(&p)?;
+    let engine = Engine::by_name(&cfg.engine, cfg.workers)?;
+    let (train, test) = prepare_data(&cfg)?;
+    println!(
+        "dataset={} n_train={} n_test={} d={} | engine={} kernel={:?} σ={} λ={:.2e} M={} t={}",
+        cfg.dataset,
+        train.n(),
+        test.n(),
+        train.d(),
+        engine.name(),
+        cfg.falkon.kernel,
+        cfg.falkon.sigma,
+        cfg.falkon.lam,
+        cfg.falkon.m,
+        cfg.falkon.t
+    );
+
+    let timer = Timer::start();
+    if train.is_multiclass() {
+        let model = fit_multiclass(&engine, &train, &cfg.falkon)?;
+        let fit_s = timer.elapsed_s();
+        let pred = model.predict_class(&engine, &test.x)?;
+        let labels = test.labels.as_ref().unwrap();
+        let cerr =
+            pred.iter().zip(labels).filter(|(a, b)| a != b).count() as f64 / pred.len() as f64;
+        println!("fit: {fit_s:.2}s\n{}", model.phases.report());
+        println!("c-err = {:.2}%", 100.0 * cerr);
+    } else {
+        let model = fit(&engine, &train.x, &train.y, &cfg.falkon)?;
+        let fit_s = timer.elapsed_s();
+        let preds = model.predict(&engine, &test.x)?;
+        println!("fit: {fit_s:.2}s (cg iters: {})", model.cg_iters);
+        println!("{}", model.phases.report());
+        if train.n_classes == 2 {
+            println!(
+                "c-err = {:.2}%  AUC = {:.4}",
+                100.0 * metrics::binary_error(&preds, &test.y),
+                metrics::auc(&preds, &test.y)
+            );
+        } else {
+            println!(
+                "MSE = {:.4}  RMSE = {:.4}  rel.err = {:.3e}",
+                metrics::mse(&preds, &test.y),
+                metrics::rmse(&preds, &test.y),
+                metrics::relative_error(&preds, &test.y)
+            );
+        }
+        if !p.str("out").is_empty() {
+            model_io::save(&model, p.str("out"))?;
+            println!("model saved to {}", p.str("out"));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &[String]) -> Result<()> {
+    let spec = Command::new("predict", "evaluate a saved model on a dataset")
+        .req("model", "model JSON from `train --out`")
+        .opt("dataset", "susy", "dataset name or file path")
+        .opt("n", "20000", "rows for synthetic datasets")
+        .opt("engine", "xla", "xla | xla-jnp | rust")
+        .opt("seed", "0", "rng seed (dataset generation + split)");
+    let p = spec.parse(args)?;
+    let model = model_io::load(p.str("model"))?;
+    let engine = Engine::by_name(p.str("engine"), 1)?;
+    let cfg = ExperimentConfig {
+        dataset: p.str("dataset").to_string(),
+        n: p.usize("n")?,
+        falkon: FalkonConfig {
+            seed: p.u64("seed")?,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let (_, test) = prepare_data(&cfg)?;
+    anyhow::ensure!(
+        test.d() == model.centers.cols,
+        "model d={} vs dataset d={}",
+        model.centers.cols,
+        test.d()
+    );
+    let (preds, secs) = falkon::util::timer::timed(|| model.predict(&engine, &test.x));
+    let preds = preds?;
+    println!(
+        "n={} in {:.3}s ({:.0} rows/s)",
+        test.n(),
+        secs,
+        test.n() as f64 / secs
+    );
+    println!(
+        "MSE = {:.4}  AUC = {:.4}",
+        metrics::mse(&preds, &test.y),
+        metrics::auc(&preds, &test.y)
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let spec = Command::new("serve", "batched prediction server demo")
+        .req("model", "model JSON from `train --out`")
+        .opt("requests", "2000", "number of synthetic requests")
+        .opt("clients", "8", "concurrent client threads")
+        .opt("max-batch", "64", "dynamic batch cap")
+        .opt("max-wait-ms", "2", "batch linger")
+        .opt("engine", "xla", "xla | xla-jnp | rust");
+    let p = spec.parse(args)?;
+    let model = model_io::load(p.str("model"))?;
+    let d = model.centers.cols;
+    let server = falkon::serve::Server::start(
+        model,
+        falkon::serve::ServeConfig {
+            max_batch: p.usize("max-batch")?,
+            max_wait: std::time::Duration::from_millis(p.u64("max-wait-ms")?),
+            engine: p.str("engine").to_string(),
+        },
+    )?;
+    let total = p.usize("requests")?;
+    let clients = p.usize("clients")?.max(1);
+    let timer = Timer::start();
+    let lat_all: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let h = server.handle();
+                s.spawn(move || {
+                    let mut rng = Rng::new(c as u64 + 100);
+                    let mut lats = Vec::new();
+                    for _ in 0..total / clients {
+                        let x = rng.normals(d);
+                        let t = Timer::start();
+                        h.predict(x).unwrap();
+                        lats.push(t.elapsed_s());
+                    }
+                    lats
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let wall = timer.elapsed_s();
+    let stats = server.stop();
+    let mut lats = lat_all;
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| lats[((lats.len() as f64 - 1.0) * q) as usize] * 1e3;
+    println!(
+        "served {} requests in {:.2}s  ({:.0} req/s)  batches={} mean_batch={:.1}",
+        stats.requests,
+        wall,
+        stats.requests as f64 / wall,
+        stats.batches,
+        stats.mean_batch
+    );
+    println!(
+        "latency ms: p50={:.2} p90={:.2} p99={:.2}",
+        pct(0.5),
+        pct(0.9),
+        pct(0.99)
+    );
+    Ok(())
+}
+
+fn cmd_lscores(args: &[String]) -> Result<()> {
+    let spec = Command::new("lscores", "approximate leverage scores summary")
+        .opt("dataset", "smooth", "dataset name or path")
+        .opt("n", "2000", "rows")
+        .opt("lam", "1e-3", "level λ")
+        .opt("sigma", "1.0", "kernel width")
+        .opt("sketch", "256", "pilot sketch size")
+        .opt("engine", "rust", "xla | rust")
+        .opt("seed", "0", "rng seed");
+    let p = spec.parse(args)?;
+    let data = load_dataset(p.str("dataset"), p.usize("n")?, p.u64("seed")?)?;
+    let engine = Engine::by_name(p.str("engine"), 1)?;
+    let mut rng = Rng::new(p.u64("seed")?);
+    let scores = falkon::falkon::lscores::approx_leverage_scores(
+        &engine,
+        &data.x,
+        Kernel::Gaussian,
+        p.f64("sigma")?,
+        p.f64("lam")?,
+        p.usize("sketch")?,
+        &mut rng,
+    )?;
+    let mut sorted = scores.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |f: f64| sorted[((sorted.len() as f64 - 1.0) * f) as usize];
+    println!(
+        "n={}  dof≈{:.1}  min={:.4} p50={:.4} p90={:.4} max={:.4}",
+        scores.len(),
+        scores.iter().sum::<f64>(),
+        q(0.0),
+        q(0.5),
+        q(0.9),
+        q(1.0)
+    );
+    Ok(())
+}
+
+fn cmd_tune(args: &[String]) -> Result<()> {
+    let spec = Command::new("tune", "grid-search σ/λ on a holdout split")
+        .opt("dataset", "susy", "dataset name or file path")
+        .opt("n", "10000", "rows for synthetic datasets")
+        .opt("m", "512", "Nyström centers M")
+        .opt("t", "15", "CG iterations")
+        .opt("sigmas", "1,2,4,8", "comma-separated σ grid")
+        .opt("lam-lo", "1e-8", "λ grid low end")
+        .opt("lam-hi", "1e-2", "λ grid high end")
+        .opt("lam-count", "4", "λ grid points (log-spaced)")
+        .opt("engine", "xla", "xla | xla-jnp | rust")
+        .opt("seed", "0", "rng seed");
+    let p = spec.parse(args)?;
+    let engine = Engine::by_name(p.str("engine"), 1)?;
+    let cfg = ExperimentConfig {
+        dataset: p.str("dataset").to_string(),
+        n: p.usize("n")?,
+        falkon: FalkonConfig {
+            m: p.usize("m")?,
+            t: p.usize("t")?,
+            seed: p.u64("seed")?,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let (train, valid) = prepare_data(&cfg)?;
+    anyhow::ensure!(!train.is_multiclass(), "tune supports regression/binary tasks");
+    let sigmas: Vec<f64> = p
+        .str("sigmas")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>())
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow!("--sigmas: {e}"))?;
+    let lams = falkon::falkon::tune::log_grid(
+        p.f64("lam-lo")?,
+        p.f64("lam-hi")?,
+        p.usize("lam-count")?.max(2),
+    );
+    let objective = if train.n_classes == 2 {
+        falkon::falkon::tune::Objective::BinaryError
+    } else {
+        falkon::falkon::tune::Objective::Mse
+    };
+    let res = falkon::falkon::tune::grid_search(
+        &engine, &train.x, &train.y, &valid.x, &valid.y, &cfg.falkon, &sigmas, &lams, objective,
+    )?;
+    println!("evaluated {} configs in {:.1}s:", res.trace.len(), res.secs);
+    for (s, l, v) in &res.trace {
+        println!("  σ={s:<8} λ={l:<10.2e} score={v:.5}");
+    }
+    println!("\nbest: σ={} λ={:.2e} score={:.5}", res.sigma, res.lam, res.score);
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let spec = Command::new("info", "artifact registry / engine status");
+    let _ = spec.parse(args)?;
+    match falkon::runtime::Registry::load_default() {
+        Ok(reg) => {
+            println!(
+                "artifacts: {} entries at {}",
+                reg.entries.len(),
+                reg.dir.display()
+            );
+            println!("row block: {} (test {})", reg.block, reg.test_block);
+            for kern in [Kernel::Gaussian, Kernel::Laplacian, Kernel::Linear] {
+                for d in [8usize, 32, 128, 512] {
+                    let ms = reg.usable_ms(kern, d);
+                    if !ms.is_empty() {
+                        println!("  {:<10} d≤{:<4} M ∈ {:?}", kern.name(), d, ms);
+                    }
+                }
+            }
+            match Engine::xla_default() {
+                Ok(_) => println!("PJRT CPU client: ok"),
+                Err(e) => println!("PJRT CPU client: FAILED ({e})"),
+            }
+        }
+        Err(e) => println!("no artifacts ({e}); rust engine only"),
+    }
+    Ok(())
+}

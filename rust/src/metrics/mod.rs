@@ -1,0 +1,147 @@
+//! Evaluation metrics matching the paper's Tables 2–3: MSE, RMSE, relative
+//! error (MillionSongs), classification error (TIMIT, IMAGENET, SUSY) and
+//! AUC (SUSY, HIGGS).
+
+/// Mean squared error.
+pub fn mse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    pred.iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    mse(pred, truth).sqrt()
+}
+
+/// The "relative error" used for MillionSongs in Table 2 (as in [4], [33]):
+/// normalized by the mean-squared magnitude of the targets.
+pub fn relative_error(pred: &[f64], truth: &[f64]) -> f64 {
+    let num = mse(pred, truth);
+    let den = truth.iter().map(|t| t * t).sum::<f64>() / truth.len() as f64;
+    num / den.max(1e-30)
+}
+
+/// Binary classification error with labels in {-1, +1} and a real-valued
+/// score (sign decision).
+pub fn binary_error(score: &[f64], label: &[f64]) -> f64 {
+    assert_eq!(score.len(), label.len());
+    assert!(!score.is_empty());
+    let wrong = score
+        .iter()
+        .zip(label)
+        .filter(|(s, l)| (s.is_sign_negative() && **l > 0.0) || (!s.is_sign_negative() && **l < 0.0))
+        .count();
+    wrong as f64 / score.len() as f64
+}
+
+/// Multiclass classification error from per-class scores (one-vs-all):
+/// `scores[k][i]` is class k's score for example i; `labels[i]` in 0..K.
+pub fn multiclass_error(scores: &[Vec<f64>], labels: &[usize]) -> f64 {
+    assert!(!scores.is_empty());
+    let n = labels.len();
+    let mut wrong = 0usize;
+    for i in 0..n {
+        let mut best = 0usize;
+        let mut best_s = f64::NEG_INFINITY;
+        for (k, sk) in scores.iter().enumerate() {
+            if sk[i] > best_s {
+                best_s = sk[i];
+                best = k;
+            }
+        }
+        if best != labels[i] {
+            wrong += 1;
+        }
+    }
+    wrong as f64 / n as f64
+}
+
+/// Area under the ROC curve via the rank statistic (ties get mid-ranks).
+/// Labels in {-1, +1} (or any sign convention: >0 is positive).
+pub fn auc(score: &[f64], label: &[f64]) -> f64 {
+    assert_eq!(score.len(), label.len());
+    let n = score.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| score[a].partial_cmp(&score[b]).unwrap());
+    // mid-rank assignment for tied scores
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && score[idx[j + 1]] == score[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    let npos = label.iter().filter(|l| **l > 0.0).count();
+    let nneg = n - npos;
+    if npos == 0 || nneg == 0 {
+        return 0.5;
+    }
+    let rank_sum: f64 = (0..n).filter(|&i| label[i] > 0.0).map(|i| ranks[i]).sum();
+    (rank_sum - (npos * (npos + 1)) as f64 / 2.0) / (npos * nneg) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_rmse() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 4.0]), 2.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relative_error_scales() {
+        let p = [11.0, 19.0];
+        let t = [10.0, 20.0];
+        let re = relative_error(&p, &t);
+        assert!((re - 1.0 / 250.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binary_error_counts_sign_mismatches() {
+        let s = [0.5, -0.5, 2.0, -3.0];
+        let l = [1.0, 1.0, -1.0, -1.0];
+        assert_eq!(binary_error(&s, &l), 0.5);
+    }
+
+    #[test]
+    fn multiclass_argmax() {
+        // 3 classes, 2 examples
+        let scores = vec![vec![0.9, 0.1], vec![0.0, 0.8], vec![0.5, 0.2]];
+        let labels = vec![0usize, 2];
+        assert_eq!(multiclass_error(&scores, &labels), 0.5); // ex1 -> class1, wrong
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let l = [1.0, 1.0, -1.0, -1.0];
+        assert_eq!(auc(&[4.0, 3.0, 2.0, 1.0], &l), 1.0);
+        assert_eq!(auc(&[1.0, 2.0, 3.0, 4.0], &l), 0.0);
+        // all tied -> 0.5
+        assert_eq!(auc(&[1.0, 1.0, 1.0, 1.0], &l), 0.5);
+    }
+
+    #[test]
+    fn auc_known_value() {
+        // scores: pos {0.8, 0.4}, neg {0.6, 0.2}: pairs won = (0.8>0.6)+(0.8>0.2)+(0.4>0.2)=3 of 4
+        let s = [0.8, 0.4, 0.6, 0.2];
+        let l = [1.0, 1.0, -1.0, -1.0];
+        assert_eq!(auc(&s, &l), 0.75);
+    }
+
+    #[test]
+    fn auc_degenerate_single_class() {
+        assert_eq!(auc(&[1.0, 2.0], &[1.0, 1.0]), 0.5);
+    }
+}

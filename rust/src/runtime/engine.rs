@@ -1,0 +1,816 @@
+//! The compute engine abstraction: every data-touching op the coordinator
+//! needs, served either by the AOT XLA artifacts (production path) or by
+//! the pure-Rust reference kernels (fallback / cross-check / "compute on
+//! the fly" baseline).
+//!
+//! The hot object is the [`MatvecPlan`]: built once per fit, it owns the
+//! per-block prepared inputs (row blocks padded + masked, uploaded as XLA
+//! literals exactly once) and then serves `w = Σ_blocks Krᵀ(mask(Kr u + v))`
+//! every CG iteration, optionally fanning blocks out across a worker pool.
+
+use crate::kernels::{self, Kernel};
+use crate::linalg::mat::Mat;
+use crate::linalg::{chol, tri};
+use crate::runtime::exe::{literal_from_f32, literal_scalar, literal_to_f32, Exe};
+use crate::runtime::spec::{Impl, Op, Registry};
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Engine configuration knobs that matter for perf experiments.
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    /// kernel-op implementation to request from the registry
+    pub imp: Impl,
+    /// worker threads for the blocked matvec. Effective on the Rust
+    /// engine; the XLA path stays single-threaded because the `xla`
+    /// crate's client handle is an `Rc` (per-thread) — XLA itself can
+    /// still use intra-op threads inside one executable.
+    pub workers: usize,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            imp: Impl::Pallas,
+            workers: 1,
+        }
+    }
+}
+
+/// Which compute path serves the ops.
+pub enum Engine {
+    /// AOT XLA artifacts via PJRT (production).
+    Xla {
+        registry: Rc<Registry>,
+        cache: RefCell<HashMap<String, Rc<Exe>>>,
+        opts: EngineOptions,
+    },
+    /// Pure-Rust f64 reference (no artifacts needed).
+    Rust { opts: EngineOptions },
+}
+
+impl Engine {
+    pub fn xla_default() -> Result<Engine> {
+        Engine::xla(EngineOptions::default())
+    }
+
+    pub fn xla(opts: EngineOptions) -> Result<Engine> {
+        Ok(Engine::Xla {
+            registry: Rc::new(Registry::load_default()?),
+            cache: RefCell::new(HashMap::new()),
+            opts,
+        })
+    }
+
+    pub fn xla_with_registry(registry: Registry, opts: EngineOptions) -> Engine {
+        Engine::Xla {
+            registry: Rc::new(registry),
+            cache: RefCell::new(HashMap::new()),
+            opts,
+        }
+    }
+
+    pub fn rust() -> Engine {
+        Engine::Rust {
+            opts: EngineOptions::default(),
+        }
+    }
+
+    pub fn rust_with(opts: EngineOptions) -> Engine {
+        Engine::Rust { opts }
+    }
+
+    /// Parse "xla", "xla-jnp", "rust" (CLI `--engine`).
+    pub fn by_name(name: &str, workers: usize) -> Result<Engine> {
+        let mut opts = EngineOptions {
+            workers,
+            ..Default::default()
+        };
+        match name {
+            "xla" | "xla-pallas" => Engine::xla(opts),
+            "xla-jnp" => {
+                opts.imp = Impl::Jnp;
+                Engine::xla(opts)
+            }
+            "rust" => Ok(Engine::rust_with(opts)),
+            other => Err(anyhow!("unknown engine {other:?} (xla, xla-jnp, rust)")),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Engine::Xla { opts, .. } => format!("xla/{}", opts.imp.name()),
+            Engine::Rust { .. } => "rust".into(),
+        }
+    }
+
+    pub fn opts(&self) -> &EngineOptions {
+        match self {
+            Engine::Xla { opts, .. } => opts,
+            Engine::Rust { opts } => opts,
+        }
+    }
+
+    pub fn registry(&self) -> Option<&Registry> {
+        match self {
+            Engine::Xla { registry, .. } => Some(registry),
+            Engine::Rust { .. } => None,
+        }
+    }
+
+    /// Artifact spec + compiled executable for a request.
+    fn compiled(
+        &self,
+        op: Op,
+        kern: Kernel,
+        m: usize,
+        d: usize,
+        n: usize,
+    ) -> Result<(Rc<Exe>, usize, usize)> {
+        let (registry, cache, opts) = match self {
+            Engine::Xla {
+                registry,
+                cache,
+                opts,
+            } => (registry, cache, opts),
+            Engine::Rust { .. } => unreachable!("compiled() on rust engine"),
+        };
+        let spec = match op {
+            Op::Precond => registry.find_precond(m)?,
+            // kmm artifacts exist only as jnp lowering
+            Op::Kmm => registry.find(op, kern, Impl::Jnp, m, d, n)?,
+            _ => registry.find(op, kern, opts.imp, m, d, n)?,
+        };
+        let key = spec.file.clone();
+        if let Some(e) = cache.borrow().get(&key) {
+            return Ok((e.clone(), spec.b, spec.d));
+        }
+        let exe = Rc::new(Exe::compile_file(&registry.path_of(spec), spec.name())?);
+        cache.borrow_mut().insert(key, exe.clone());
+        Ok((exe, spec.b, spec.d))
+    }
+
+    // ------------------------------------------------------------------
+    // K_MM and the preconditioner
+    // ------------------------------------------------------------------
+
+    /// K_MM over the centers.
+    pub fn kmm(&self, kern: Kernel, c: &Mat, param: f64) -> Result<Mat> {
+        match self {
+            Engine::Rust { .. } => Ok(kernels::kmm(kern, c, param)),
+            Engine::Xla { .. } => {
+                let m = c.rows;
+                let (exe, _, d_art) = self.compiled(Op::Kmm, kern, m, c.cols, m)?;
+                let c_pad = c.pad_cols(d_art);
+                let c_lit = literal_from_f32(&c_pad.to_f32(), &[m, d_art])?;
+                let p_lit = literal_scalar(param as f32);
+                let out = exe.call1_f32(&[&c_lit, &p_lit])?;
+                Ok(Mat::from_f32(m, m, &out))
+            }
+        }
+    }
+
+    /// Preconditioner factors (Eq. 13): upper-triangular (T, A) with
+    /// TᵀT = K_MM + eps·M·I and AᵀA = TTᵀ/M + λI.
+    ///
+    /// The XLA path runs in f32; if the factorization comes back
+    /// non-finite (ill-conditioned K_MM at f32), we escalate the jitter
+    /// and finally fall back to the f64 Rust factorization — a fit must
+    /// not die on a borderline K_MM.
+    pub fn precond(&self, kmm: &Mat, lam: f64, eps: f64) -> Result<(Mat, Mat)> {
+        let m = kmm.rows;
+        match self {
+            Engine::Rust { .. } => precond_rust(kmm, lam, eps),
+            Engine::Xla { .. } => {
+                let (exe, _, _) = self.compiled(Op::Precond, Kernel::Gaussian, m, 0, m)?;
+                let kmm_lit = literal_from_f32(&kmm.to_f32(), &[m, m])?;
+                let lam_lit = literal_scalar(lam as f32);
+                let mut eps_try = eps;
+                for _ in 0..3 {
+                    let eps_lit = literal_scalar(eps_try as f32);
+                    let outs = exe.call(&[&kmm_lit, &lam_lit, &eps_lit])?;
+                    anyhow::ensure!(outs.len() == 2, "precond returned {} outputs", outs.len());
+                    let t = Mat::from_f32(m, m, &literal_to_f32(&outs[0])?);
+                    let a = Mat::from_f32(m, m, &literal_to_f32(&outs[1])?);
+                    if t.is_finite() && a.is_finite() {
+                        return Ok((t, a));
+                    }
+                    eps_try *= 100.0;
+                }
+                // last resort: f64 factorization on the coordinator
+                precond_rust(kmm, lam, eps)
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // the blocked Nyström matvec (CG hot path)
+    // ------------------------------------------------------------------
+
+    /// Build the per-fit plan: rows of `x` split into artifact-sized
+    /// blocks, padded, masked and uploaded once.
+    pub fn matvec_plan<'a>(
+        &'a self,
+        kern: Kernel,
+        x: &'a Mat,
+        c: &Mat,
+        param: f64,
+    ) -> Result<MatvecPlan<'a>> {
+        anyhow::ensure!(x.cols == c.cols, "x/c feature dims differ");
+        let (n, m) = (x.rows, c.rows);
+        match self {
+            Engine::Rust { opts } => Ok(MatvecPlan::Rust(RustPlan {
+                x,
+                c: c.clone(),
+                kern,
+                param,
+                block: 1024,
+                n,
+                m,
+                workers: opts.workers,
+            })),
+            Engine::Xla { opts, .. } => {
+                let (exe, b_art, d_art) = self.compiled(Op::KnmMatvec, kern, m, x.cols, n)?;
+                let c_pad = c.pad_cols(d_art);
+                let c_lit = literal_from_f32(&c_pad.to_f32(), &[m, d_art])?;
+                let param_lit = literal_scalar(param as f32);
+                let zeros_v = literal_from_f32(&vec![0.0; b_art], &[b_art])?;
+                let mut blocks = Vec::new();
+                let mut start = 0;
+                while start < n {
+                    let rows = (n - start).min(b_art);
+                    let mut xbuf = vec![0.0f32; b_art * d_art];
+                    for i in 0..rows {
+                        for (j, &v) in x.row(start + i).iter().enumerate() {
+                            xbuf[i * d_art + j] = v as f32;
+                        }
+                    }
+                    let mut mask = vec![0.0f32; b_art];
+                    mask[..rows].fill(1.0);
+                    blocks.push(XlaBlock {
+                        x: literal_from_f32(&xbuf, &[b_art, d_art])?,
+                        mask: literal_from_f32(&mask, &[b_art])?,
+                        start,
+                        rows,
+                    });
+                    start += rows;
+                }
+                let _ = opts;
+                Ok(MatvecPlan::Xla(XlaPlan {
+                    exe,
+                    c_lit,
+                    param_lit,
+                    zeros_v,
+                    blocks,
+                    b_art,
+                    n,
+                    m,
+                }))
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // kernel blocks and prediction
+    // ------------------------------------------------------------------
+
+    /// Dense K(x, c) — used by the leverage-score sketch. Blocked on the
+    /// XLA path through the kernel_block artifact.
+    pub fn kernel_block(&self, kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Result<Mat> {
+        match self {
+            Engine::Rust { .. } => Ok(kernels::kernel_block(kern, x, c, param)),
+            Engine::Xla { .. } => {
+                let mut out = Mat::zeros(x.rows, c.rows);
+                self.for_kernel_blocks(kern, x, c, param, |start, rows, m, kr| {
+                    for i in 0..rows {
+                        for j in 0..m {
+                            out[(start + i, j)] = kr[i * m + j] as f64;
+                        }
+                    }
+                })?;
+                Ok(out)
+            }
+        }
+    }
+
+    /// Blocked prediction f(x_i) = Σ_j α_j K(x_i, c_j).
+    pub fn predict(
+        &self,
+        kern: Kernel,
+        x: &Mat,
+        c: &Mat,
+        alpha: &[f64],
+        param: f64,
+    ) -> Result<Vec<f64>> {
+        anyhow::ensure!(alpha.len() == c.rows, "alpha length");
+        match self {
+            Engine::Rust { .. } => Ok(kernels::predict(kern, x, c, alpha, param)),
+            Engine::Xla { .. } => {
+                let mut preds = vec![0.0f64; x.rows];
+                self.for_kernel_blocks(kern, x, c, param, |start, rows, m, kr| {
+                    for i in 0..rows {
+                        let mut acc = 0.0;
+                        for j in 0..m {
+                            acc += kr[i * m + j] as f64 * alpha[j];
+                        }
+                        preds[start + i] = acc;
+                    }
+                })?;
+                Ok(preds)
+            }
+        }
+    }
+
+    /// Shared streaming loop over kernel_block artifact calls.
+    fn for_kernel_blocks(
+        &self,
+        kern: Kernel,
+        x: &Mat,
+        c: &Mat,
+        param: f64,
+        mut sink: impl FnMut(usize, usize, usize, &[f32]),
+    ) -> Result<()> {
+        let (n, m) = (x.rows, c.rows);
+        let (exe, b_art, d_art) = self.compiled(Op::KernelBlock, kern, m, x.cols, n)?;
+        let c_pad = c.pad_cols(d_art);
+        let c_lit = literal_from_f32(&c_pad.to_f32(), &[m, d_art])?;
+        let p_lit = literal_scalar(param as f32);
+        let mut start = 0;
+        let mut xbuf = vec![0.0f32; b_art * d_art];
+        while start < n {
+            let rows = (n - start).min(b_art);
+            xbuf.fill(0.0);
+            for i in 0..rows {
+                for (j, &v) in x.row(start + i).iter().enumerate() {
+                    xbuf[i * d_art + j] = v as f32;
+                }
+            }
+            let x_lit = literal_from_f32(&xbuf, &[b_art, d_art])?;
+            let kr = exe.call1_f32(&[&x_lit, &c_lit, &p_lit])?;
+            sink(start, rows, m, &kr);
+            start += rows;
+        }
+        Ok(())
+    }
+}
+
+/// f64 preconditioner factorization with jitter escalation.
+fn precond_rust(kmm: &Mat, lam: f64, eps: f64) -> Result<(Mat, Mat)> {
+    let m = kmm.rows;
+    let mut eps_try = eps;
+    for _ in 0..6 {
+        let mut kj = kmm.clone();
+        kj.add_diag(eps_try * m as f64);
+        if let Ok(t) = chol::cholesky_upper(&kj) {
+            // A: chol(T Tᵀ / M + lam I)
+            let mut tta = crate::linalg::gemm::matmul(&t, &t.t());
+            tta.scale(1.0 / m as f64);
+            tta.add_diag(lam);
+            if let Ok(a) = chol::cholesky_upper(&tta) {
+                return Ok((t, a));
+            }
+        }
+        eps_try *= 100.0;
+    }
+    Err(anyhow!(
+        "preconditioner factorization failed for M={m} even with jitter"
+    ))
+}
+
+// ---------------------------------------------------------------------
+// plans
+// ---------------------------------------------------------------------
+
+struct XlaBlock {
+    x: xla::Literal,
+    mask: xla::Literal,
+    start: usize,
+    rows: usize,
+}
+
+pub struct XlaPlan {
+    exe: Rc<Exe>,
+    c_lit: xla::Literal,
+    param_lit: xla::Literal,
+    zeros_v: xla::Literal,
+    blocks: Vec<XlaBlock>,
+    b_art: usize,
+    n: usize,
+    m: usize,
+}
+
+pub struct RustPlan<'a> {
+    x: &'a Mat,
+    c: Mat,
+    kern: Kernel,
+    param: f64,
+    block: usize,
+    n: usize,
+    m: usize,
+    workers: usize,
+}
+
+/// The per-fit blocked matvec: `apply` computes
+/// `w = Σ_blocks Krᵀ(mask ⊙ (Kr·u + v_block))` (Alg. 1's
+/// KnM_times_vector). `v = None` means zeros (the CG iteration);
+/// `v = Some(y/n)` builds the right-hand side.
+pub enum MatvecPlan<'a> {
+    Xla(XlaPlan),
+    Rust(RustPlan<'a>),
+}
+
+impl<'a> MatvecPlan<'a> {
+    pub fn n(&self) -> usize {
+        match self {
+            MatvecPlan::Xla(p) => p.n,
+            MatvecPlan::Rust(p) => p.n,
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        match self {
+            MatvecPlan::Xla(p) => p.m,
+            MatvecPlan::Rust(p) => p.m,
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        match self {
+            MatvecPlan::Xla(p) => p.blocks.len(),
+            MatvecPlan::Rust(p) => p.n.div_ceil(p.block),
+        }
+    }
+
+    /// Kernel evaluations one `apply` performs (bench accounting; the XLA
+    /// path pays for padded rows too, and evaluates each block twice —
+    /// once per fused stage).
+    pub fn kernel_evals_per_apply(&self) -> usize {
+        match self {
+            MatvecPlan::Xla(p) => p.blocks.len() * p.b_art * p.m * 2,
+            MatvecPlan::Rust(p) => p.n * p.m,
+        }
+    }
+
+    pub fn apply(&self, u: &[f64], v: Option<&[f64]>) -> Result<Vec<f64>> {
+        match self {
+            MatvecPlan::Rust(p) => p.apply(u, v),
+            MatvecPlan::Xla(p) => p.apply(u, v),
+        }
+    }
+}
+
+impl XlaPlan {
+    fn apply(&self, u: &[f64], v: Option<&[f64]>) -> Result<Vec<f64>> {
+        anyhow::ensure!(u.len() == self.m, "u length {} != M {}", u.len(), self.m);
+        if let Some(v) = v {
+            anyhow::ensure!(v.len() == self.n, "v length {} != n {}", v.len(), self.n);
+        }
+        let u32v: Vec<f32> = u.iter().map(|&x| x as f32).collect();
+        let u_lit = literal_from_f32(&u32v, &[self.m])?;
+        let mut w = vec![0.0f64; self.m];
+        let mut vbuf = vec![0.0f32; self.b_art];
+        for blk in &self.blocks {
+            let v_lit;
+            let v_ref: &xla::Literal = match v {
+                None => &self.zeros_v,
+                Some(vfull) => {
+                    vbuf.fill(0.0);
+                    for i in 0..blk.rows {
+                        vbuf[i] = vfull[blk.start + i] as f32;
+                    }
+                    v_lit = literal_from_f32(&vbuf, &[self.b_art])?;
+                    &v_lit
+                }
+            };
+            let part = self
+                .exe
+                .call1_f32(&[
+                    &blk.x,
+                    &self.c_lit,
+                    &u_lit,
+                    v_ref,
+                    &blk.mask,
+                    &self.param_lit,
+                ])
+                .with_context(|| format!("block @{}", blk.start))?;
+            for j in 0..self.m {
+                w[j] += part[j] as f64;
+            }
+        }
+        Ok(w)
+    }
+}
+
+impl<'a> RustPlan<'a> {
+    fn apply(&self, u: &[f64], v: Option<&[f64]>) -> Result<Vec<f64>> {
+        anyhow::ensure!(u.len() == self.m, "u length");
+        let ranges: Vec<(usize, usize)> = (0..self.n)
+            .step_by(self.block)
+            .map(|s| (s, (s + self.block).min(self.n)))
+            .collect();
+        let workers = self.workers.max(1).min(ranges.len().max(1));
+        let run = |&(s, e): &(usize, usize)| -> Vec<f64> {
+            let xb = self.x.slice_rows(s, e);
+            let vb: Vec<f64> = match v {
+                Some(vf) => vf[s..e].to_vec(),
+                None => vec![0.0; e - s],
+            };
+            kernels::knm_matvec(self.kern, &xb, &self.c, u, &vb, None, self.param)
+        };
+        let mut w = vec![0.0f64; self.m];
+        if workers <= 1 {
+            for r in &ranges {
+                let part = run(r);
+                for j in 0..self.m {
+                    w[j] += part[j];
+                }
+            }
+        } else {
+            let partials: Vec<Vec<f64>> = std::thread::scope(|sc| {
+                let chunks: Vec<&[(usize, usize)]> =
+                    ranges.chunks(ranges.len().div_ceil(workers)).collect();
+                let handles: Vec<_> = chunks
+                    .into_iter()
+                    .map(|chunk| {
+                        sc.spawn(move || {
+                            let mut acc = vec![0.0f64; self.m];
+                            for r in chunk {
+                                let part = run(r);
+                                for j in 0..self.m {
+                                    acc[j] += part[j];
+                                }
+                            }
+                            acc
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for p in partials {
+                for j in 0..self.m {
+                    w[j] += p[j];
+                }
+            }
+        }
+        Ok(w)
+    }
+}
+
+/// Apply the preconditioned operator (Alg. 2's BHB, generalized per
+/// Def. 3 with the leverage-score reweighting D and the rank-deficient
+/// partial isometry Q from appendix A / Example 2):
+///
+///   BᵀHB u = Aᵀ\(Tᵀ\(Qᵀ·D·matvec(D·Q·(T\(A\u)), 0))/n + λ(A\u))
+///
+/// where Q·TᵀT·Qᵀ = D·K_MM·D (Q = I, TᵀT = D·K_MM·D + εMI on the
+/// full-rank Cholesky path) and AᵀA = TTᵀ/M + λI. With uniform sampling
+/// D = I (`d = None`) and Q = I (`q = None`) this is exactly Alg. 1/2.
+/// Shared by the estimator and the condition-number diagnostics.
+pub struct Bhb<'p, 'a> {
+    pub plan: &'p MatvecPlan<'a>,
+    /// q×q upper-triangular (diagonal on the eig path)
+    pub t: &'p Mat,
+    /// q×q upper-triangular (diagonal on the eig path)
+    pub a: &'p Mat,
+    pub lam: f64,
+    /// Def. 2 diagonal reweighting (leverage-score sampling); None = I
+    pub d: Option<&'p [f64]>,
+    /// M×q partial isometry from the rank-revealing preconditioner
+    /// (Example 2); None = identity (full-rank path)
+    pub q: Option<&'p Mat>,
+}
+
+impl<'p, 'a> Bhb<'p, 'a> {
+    fn dmul(&self, v: &mut [f64]) {
+        if let Some(d) = self.d {
+            for (x, w) in v.iter_mut().zip(d) {
+                *x *= w;
+            }
+        }
+    }
+
+    /// rank of the preconditioned system (q ≤ M)
+    pub fn rank(&self) -> usize {
+        self.t.rows
+    }
+
+    /// lift a q-vector to R^M through Q (no-op when Q = I)
+    fn q_lift(&self, v: &[f64]) -> Vec<f64> {
+        match self.q {
+            None => v.to_vec(),
+            Some(q) => crate::linalg::gemm::matvec(q, v),
+        }
+    }
+
+    /// project an M-vector to R^q through Qᵀ (no-op when Q = I)
+    fn q_proj(&self, v: &[f64]) -> Vec<f64> {
+        match self.q {
+            None => v.to_vec(),
+            Some(q) => crate::linalg::gemm::matvec_t(q, v),
+        }
+    }
+
+    pub fn apply(&self, u: &[f64]) -> Result<Vec<f64>> {
+        let n = self.plan.n() as f64;
+        let au = tri::solve_upper(self.a, u); // A\u
+        let tau = tri::solve_upper(self.t, &au); // T\(A\u)
+        let mut lifted = self.q_lift(&tau); // Q·
+        self.dmul(&mut lifted); // D·
+        let mut w = self.plan.apply(&lifted, None)?; // KnMᵀKnM ·
+        self.dmul(&mut w); // D·
+        let wq = self.q_proj(&w); // Qᵀ·
+        let mut inner = tri::solve_lower_t(self.t, &wq); // Tᵀ\ ·
+        for j in 0..inner.len() {
+            inner[j] = inner[j] / n + self.lam * au[j];
+        }
+        Ok(tri::solve_lower_t(self.a, &inner)) // Aᵀ\ ·
+    }
+
+    /// Right-hand side r = Aᵀ\(Tᵀ\(Qᵀ·D·KnMᵀ(y/n))).
+    pub fn rhs(&self, y: &[f64]) -> Result<Vec<f64>> {
+        let n = self.plan.n() as f64;
+        let yn: Vec<f64> = y.iter().map(|v| v / n).collect();
+        let zeros = vec![0.0; self.plan.m()];
+        let mut w = self.plan.apply(&zeros, Some(&yn))?;
+        self.dmul(&mut w);
+        let wq = self.q_proj(&w);
+        let ti = tri::solve_lower_t(self.t, &wq);
+        Ok(tri::solve_lower_t(self.a, &ti))
+    }
+
+    /// Map CG solution β back to Nyström coefficients α = D·Q·(T\(A\β)).
+    pub fn beta_to_alpha(&self, beta: &[f64]) -> Vec<f64> {
+        let ab = tri::solve_upper(self.a, beta);
+        let tb = tri::solve_upper(self.t, &ab);
+        let mut alpha = self.q_lift(&tb);
+        self.dmul(&mut alpha);
+        alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy(n: usize, d: usize, seed: u64) -> (Mat, Mat, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_vec(n, d, rng.normals(n * d));
+        let c = x.select_rows(&rng.choose(n, 8.min(n)));
+        let y = rng.normals(n);
+        (x, c, y)
+    }
+
+    #[test]
+    fn rust_plan_matches_dense() {
+        let (x, c, y) = toy(300, 5, 1);
+        let eng = Engine::rust();
+        let plan = eng.matvec_plan(Kernel::Gaussian, &x, &c, 1.0).unwrap();
+        let mut rng = Rng::new(2);
+        let u = rng.normals(c.rows);
+        let got = plan.apply(&u, Some(&y)).unwrap();
+
+        let kr = kernels::kernel_block(Kernel::Gaussian, &x, &c, 1.0);
+        let mut yv = crate::linalg::gemm::matvec(&kr, &u);
+        for i in 0..x.rows {
+            yv[i] += y[i];
+        }
+        let want = crate::linalg::gemm::matvec_t(&kr, &yv);
+        for j in 0..c.rows {
+            assert!((got[j] - want[j]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn rust_plan_parallel_matches_serial() {
+        let (x, c, _) = toy(2500, 4, 3);
+        let eng1 = Engine::rust();
+        let eng4 = Engine::rust_with(EngineOptions {
+            imp: Impl::Pallas,
+            workers: 4,
+        });
+        let mut rng = Rng::new(4);
+        let u = rng.normals(c.rows);
+        let p1 = eng1.matvec_plan(Kernel::Gaussian, &x, &c, 1.3).unwrap();
+        let p4 = eng4.matvec_plan(Kernel::Gaussian, &x, &c, 1.3).unwrap();
+        let w1 = p1.apply(&u, None).unwrap();
+        let w4 = p4.apply(&u, None).unwrap();
+        for j in 0..c.rows {
+            assert!((w1[j] - w4[j]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rust_precond_factors() {
+        let mut rng = Rng::new(5);
+        let c = Mat::from_vec(10, 3, rng.normals(30));
+        let kmm = kernels::kmm(Kernel::Gaussian, &c, 1.0);
+        let eng = Engine::rust();
+        let (t, a) = eng.precond(&kmm, 1e-3, 1e-10).unwrap();
+        // TᵀT ≈ KMM
+        let back = crate::linalg::gemm::matmul(&t.t(), &t);
+        assert!(back.max_abs_diff(&kmm) < 1e-6);
+        let mut tta = crate::linalg::gemm::matmul(&t, &t.t());
+        tta.scale(0.1);
+        tta.add_diag(1e-3);
+        let back_a = crate::linalg::gemm::matmul(&a.t(), &a);
+        assert!(back_a.max_abs_diff(&tta) < 1e-8);
+    }
+
+    #[test]
+    fn rust_precond_rank_deficient() {
+        // duplicated centers -> singular KMM; jitter must save it
+        let mut rng = Rng::new(6);
+        let base = Mat::from_vec(5, 3, rng.normals(15));
+        let mut rows: Vec<Vec<f64>> = (0..5).map(|i| base.row(i).to_vec()).collect();
+        rows.push(base.row(0).to_vec());
+        rows.push(base.row(1).to_vec());
+        let c = Mat::from_rows(&rows);
+        let kmm = kernels::kmm(Kernel::Gaussian, &c, 1.0);
+        let eng = Engine::rust();
+        let (t, a) = eng.precond(&kmm, 1e-4, 1e-12).unwrap();
+        assert!(t.is_finite() && a.is_finite());
+    }
+
+    #[test]
+    fn engine_by_name() {
+        assert!(Engine::by_name("rust", 1).is_ok());
+        assert!(Engine::by_name("bogus", 1).is_err());
+    }
+
+    #[test]
+    fn bhb_is_symmetric_positive() {
+        let (x, c, _) = toy(200, 4, 7);
+        let eng = Engine::rust();
+        let kmm = eng.kmm(Kernel::Gaussian, &c, 1.0).unwrap();
+        let lam = 1e-2;
+        let (t, a) = eng.precond(&kmm, lam, 1e-10).unwrap();
+        let plan = eng.matvec_plan(Kernel::Gaussian, &x, &c, 1.0).unwrap();
+        let bhb = Bhb {
+            plan: &plan,
+            t: &t,
+            a: &a,
+            lam,
+            d: None,
+            q: None,
+        };
+        let m = c.rows;
+        // materialize W and check symmetry + positive diagonal
+        let mut w = Mat::zeros(m, m);
+        for j in 0..m {
+            let mut e = vec![0.0; m];
+            e[j] = 1.0;
+            let col = bhb.apply(&e).unwrap();
+            for i in 0..m {
+                w[(i, j)] = col[i];
+            }
+        }
+        for i in 0..m {
+            assert!(w[(i, i)] > 0.0);
+            for j in 0..m {
+                assert!((w[(i, j)] - w[(j, i)]).abs() < 1e-7, "asym at {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn bhb_close_to_identity_in_falkon_regime() {
+        // Thm. 2: with M >~ 1/lam, W = I + E with ||E|| < 1.
+        let mut rng = Rng::new(8);
+        let n = 400;
+        let x = Mat::from_vec(n, 3, rng.normals(n * 3));
+        let c = x.select_rows(&rng.choose(n, 60));
+        let lam = 1.0 / (n as f64).sqrt();
+        let eng = Engine::rust();
+        let kmm = eng.kmm(Kernel::Gaussian, &c, 1.0).unwrap();
+        let (t, a) = eng.precond(&kmm, lam, 1e-10).unwrap();
+        let plan = eng.matvec_plan(Kernel::Gaussian, &x, &c, 1.0).unwrap();
+        let bhb = Bhb {
+            plan: &plan,
+            t: &t,
+            a: &a,
+            lam,
+            d: None,
+            q: None,
+        };
+        let m = c.rows;
+        let mut max_offdiag = 0.0f64;
+        let mut diag_dev = 0.0f64;
+        for j in 0..m {
+            let mut e = vec![0.0; m];
+            e[j] = 1.0;
+            let col = bhb.apply(&e).unwrap();
+            for i in 0..m {
+                if i == j {
+                    diag_dev = diag_dev.max((col[i] - 1.0).abs());
+                } else {
+                    max_offdiag = max_offdiag.max(col[i].abs());
+                }
+            }
+        }
+        assert!(diag_dev < 0.9, "diag deviation {diag_dev}");
+        assert!(max_offdiag < 0.9, "offdiag {max_offdiag}");
+    }
+}

@@ -1,0 +1,149 @@
+//! PJRT executable wrapper: HLO-text loading, literal marshalling, typed
+//! call helpers, and the (documented) `Send + Sync` wrapper that lets the
+//! worker pool share compiled executables.
+
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::path::Path;
+
+thread_local! {
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// Shared PJRT CPU client (one per thread — the `xla` crate's client is an
+/// `Rc` handle, so it must not cross threads; all PJRT work is dispatched
+/// from the thread that owns the engine. The Rust engine's worker pool is
+/// where multi-threading happens instead — see DESIGN.md §Perf).
+pub fn client() -> Result<xla::PjRtClient> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(
+                xla::PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e}"))?,
+            );
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}
+
+/// A compiled artifact (immutable once built; single-thread use).
+pub struct Exe {
+    inner: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Exe {
+    /// Load HLO text from a file and compile it on the shared CPU client.
+    pub fn compile_file(path: &Path, name: &str) -> Result<Exe> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client()?
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(Exe {
+            inner: exe,
+            name: name.to_string(),
+        })
+    }
+
+    /// Execute with literal inputs; returns the tuple elements of the
+    /// single output (jax lowers with return_tuple=True). Takes references
+    /// so prepared literals are reused across calls without copying.
+    pub fn call(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .inner
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching output of {}: {e}", self.name))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow!("untupling output of {}: {e}", self.name))
+    }
+
+    /// Execute expecting exactly one output array, returned as f32s.
+    pub fn call1_f32(&self, args: &[&xla::Literal]) -> Result<Vec<f32>> {
+        let mut outs = self.call(args)?;
+        if outs.len() != 1 {
+            return Err(anyhow!("{}: expected 1 output, got {}", self.name, outs.len()));
+        }
+        literal_to_f32(&outs.pop().unwrap()).context(self.name.clone())
+    }
+}
+
+/// f32 slice -> rank-N literal.
+pub fn literal_from_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal shape {dims:?} vs len {}", data.len());
+    let flat = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(flat);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    flat.reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape to {dims:?}: {e}"))
+}
+
+pub fn literal_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> Option<crate::runtime::spec::Registry> {
+        crate::runtime::spec::Registry::load_default().ok()
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_from_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(literal_to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(literal_from_f32(&[1.0], &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn compile_and_run_tiny_matvec() {
+        // Integration smoke: needs `make artifacts`.
+        let Some(reg) = artifacts_ready() else { return };
+        let spec = reg
+            .find(
+                crate::runtime::spec::Op::KnmMatvec,
+                crate::kernels::Kernel::Gaussian,
+                crate::runtime::spec::Impl::Pallas,
+                32,
+                8,
+                64,
+            )
+            .unwrap();
+        let exe = Exe::compile_file(&reg.path_of(spec), spec.name()).unwrap();
+        let (b, m, d) = (spec.b, spec.m, spec.d);
+        let x = literal_from_f32(&vec![0.1; b * d], &[b, d]).unwrap();
+        let c = literal_from_f32(&vec![0.2; m * d], &[m, d]).unwrap();
+        let u = literal_from_f32(&vec![0.0; m], &[m]).unwrap();
+        let v = literal_from_f32(&vec![1.0; b], &[b]).unwrap();
+        let mask = literal_from_f32(&vec![1.0; b], &[b]).unwrap();
+        let p = literal_scalar(1.0);
+        let w = exe.call1_f32(&[&x, &c, &u, &v, &mask, &p]).unwrap();
+        assert_eq!(w.len(), m);
+        // identical rows/centers: w_j = sum_i K(x_i, c_j) * 1, all equal & positive
+        assert!(w[0] > 0.0);
+        for j in 1..m {
+            assert!((w[j] - w[0]).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: artifact registry, compiled-executable cache, literal
+//! marshalling, and the [`Engine`]/[`MatvecPlan`] compute abstraction that
+//! the FALKON coordinator drives. Python never runs here — artifacts are
+//! HLO text produced once by `make artifacts`.
+pub mod engine;
+pub mod exe;
+pub mod spec;
+
+pub use engine::{Bhb, Engine, EngineOptions, MatvecPlan};
+pub use spec::{ArtifactSpec, Impl, Op, Registry};

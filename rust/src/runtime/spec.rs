@@ -1,0 +1,344 @@
+//! Artifact manifest: the rust-side mirror of `python/compile/manifest.py`.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every
+//! AOT-lowered HLO module (op, kernel, impl, static shapes, file). The
+//! registry here parses it and answers "which artifact serves this
+//! request?" under the padding rules of the artifact contract
+//! (DESIGN.md §2): rows padded+masked, features zero-padded up to the
+//! artifact D, M matched exactly.
+
+use crate::kernels::Kernel;
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which op an artifact implements (mirror of the python `op` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    KnmMatvec,
+    KernelBlock,
+    Kmm,
+    Precond,
+}
+
+impl Op {
+    pub fn parse(s: &str) -> Option<Op> {
+        match s {
+            "knm_matvec" => Some(Op::KnmMatvec),
+            "kernel_block" => Some(Op::KernelBlock),
+            "kmm" => Some(Op::Kmm),
+            "precond" => Some(Op::Precond),
+            _ => None,
+        }
+    }
+}
+
+/// Kernel-op implementation variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Impl {
+    /// tiled Pallas kernels (interpret-mode lowering) — the default
+    Pallas,
+    /// plain-XLA lowering of the same math
+    Jnp,
+}
+
+impl Impl {
+    pub fn parse(s: &str) -> Option<Impl> {
+        match s {
+            "pallas" => Some(Impl::Pallas),
+            "jnp" => Some(Impl::Jnp),
+            _ => None,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Impl::Pallas => "pallas",
+            Impl::Jnp => "jnp",
+        }
+    }
+}
+
+/// One artifact (one HLO file with static shapes).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub op: Op,
+    pub kern: Option<Kernel>,
+    pub imp: Impl,
+    pub b: usize,
+    pub m: usize,
+    pub d: usize,
+    pub file: String,
+}
+
+impl ArtifactSpec {
+    pub fn name(&self) -> &str {
+        self.file.trim_end_matches(".hlo.txt")
+    }
+}
+
+/// Parsed manifest + lookup logic.
+#[derive(Debug)]
+pub struct Registry {
+    pub dir: PathBuf,
+    pub block: usize,
+    pub test_block: usize,
+    pub entries: Vec<ArtifactSpec>,
+}
+
+/// Locate the artifacts directory: `$FALKON_ARTIFACTS`, then `./artifacts`,
+/// then `<crate root>/artifacts`.
+pub fn default_dir() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("FALKON_ARTIFACTS") {
+        return Ok(PathBuf::from(p));
+    }
+    for cand in ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")] {
+        let p = PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return Ok(p);
+        }
+    }
+    bail!(
+        "artifacts/manifest.json not found — run `make artifacts` \
+         (or set FALKON_ARTIFACTS)"
+    )
+}
+
+impl Registry {
+    pub fn load_default() -> Result<Registry> {
+        Registry::load(&default_dir()?)
+    }
+
+    pub fn load(dir: &Path) -> Result<Registry> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let block = v
+            .get("block")
+            .as_usize()
+            .ok_or_else(|| anyhow!("manifest missing 'block'"))?;
+        let test_block = v.get("test_block").as_usize().unwrap_or(block);
+        let mut entries = Vec::new();
+        for row in v
+            .get("entries")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?
+        {
+            entries.push(parse_entry(row)?);
+        }
+        Ok(Registry {
+            dir: dir.to_path_buf(),
+            block,
+            test_block,
+            entries,
+        })
+    }
+
+    /// All center counts available for an op/kernel pair, ascending.
+    pub fn available_ms(&self, op: Op, kern: Kernel) -> Vec<usize> {
+        let mut ms: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.op == op && e.kern == Some(kern))
+            .map(|e| e.m)
+            .collect();
+        ms.sort_unstable();
+        ms.dedup();
+        ms
+    }
+
+    /// Center counts usable end-to-end for a (kernel, d) pair — i.e. with
+    /// matvec, kernel_block, kmm and precond artifacts all present.
+    pub fn usable_ms(&self, kern: Kernel, d: usize) -> Vec<usize> {
+        let has = |op: Op, m: usize| {
+            self.entries.iter().any(|e| {
+                e.op == op
+                    && e.m == m
+                    && (op == Op::Precond || (e.kern == Some(kern) && e.d >= d))
+            })
+        };
+        let mut ms = self.available_ms(Op::KnmMatvec, kern);
+        ms.retain(|&m| has(Op::KernelBlock, m) && has(Op::Kmm, m) && has(Op::Precond, m));
+        ms
+    }
+
+    /// Pick the artifact for a data-touching op: exact (op, kern, impl, m),
+    /// smallest compiled d >= the dataset d, and the row-block size that
+    /// fits `n` best (the tiny test block when the whole problem fits it).
+    pub fn find(
+        &self,
+        op: Op,
+        kern: Kernel,
+        imp: Impl,
+        m: usize,
+        d: usize,
+        n: usize,
+    ) -> Result<&ArtifactSpec> {
+        let mut best: Option<&ArtifactSpec> = None;
+        for e in &self.entries {
+            if e.op != op || e.kern != Some(kern) || e.imp != imp || e.m != m || e.d < d {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    // prefer smaller padded d; then prefer block size
+                    // test_block iff n fits in it, else the full block
+                    let want_b = if n <= self.test_block {
+                        self.test_block
+                    } else {
+                        self.block
+                    };
+                    (e.d, (e.b != want_b) as u8) < (b.d, (b.b != want_b) as u8)
+                }
+            };
+            if better {
+                best = Some(e);
+            }
+        }
+        best.ok_or_else(|| {
+            anyhow!(
+                "no artifact for op={op:?} kern={} impl={} M={m} d>={d}; \
+                 available M for this op/kernel: {:?} — adjust the config to a \
+                 compiled M (python/compile/manifest.py) and rerun `make artifacts`",
+                kern.name(),
+                imp.name(),
+                self.available_ms(op, kern),
+            )
+        })
+    }
+
+    /// Pick the preconditioner artifact (shape keyed by M only).
+    pub fn find_precond(&self, m: usize) -> Result<&ArtifactSpec> {
+        self.entries
+            .iter()
+            .find(|e| e.op == Op::Precond && e.m == m)
+            .ok_or_else(|| {
+                let mut ms: Vec<usize> = self
+                    .entries
+                    .iter()
+                    .filter(|e| e.op == Op::Precond)
+                    .map(|e| e.m)
+                    .collect();
+                ms.sort_unstable();
+                anyhow!("no precond artifact for M={m}; available: {ms:?}")
+            })
+    }
+
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+fn parse_entry(row: &Value) -> Result<ArtifactSpec> {
+    let op_s = row
+        .get("op")
+        .as_str()
+        .ok_or_else(|| anyhow!("entry missing op"))?;
+    let op = Op::parse(op_s).ok_or_else(|| anyhow!("unknown op {op_s}"))?;
+    let kern = match row.get("kern").as_str() {
+        Some("") | None => None,
+        Some(k) => Some(Kernel::parse(k).ok_or_else(|| anyhow!("unknown kernel {k}"))?),
+    };
+    let imp = Impl::parse(row.get("impl").as_str().unwrap_or("jnp"))
+        .ok_or_else(|| anyhow!("unknown impl"))?;
+    Ok(ArtifactSpec {
+        op,
+        kern,
+        imp,
+        b: row.get("b").as_usize().unwrap_or(0),
+        m: row.get("m").as_usize().ok_or_else(|| anyhow!("missing m"))?,
+        d: row.get("d").as_usize().unwrap_or(0),
+        file: row
+            .get("file")
+            .as_str()
+            .ok_or_else(|| anyhow!("missing file"))?
+            .to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_registry() -> Registry {
+        let mk = |op, kern, imp, b, m, d| ArtifactSpec {
+            op,
+            kern,
+            imp,
+            b,
+            m,
+            d,
+            file: format!("{op:?}_{b}_{m}_{d}.hlo.txt"),
+        };
+        Registry {
+            dir: PathBuf::from("/nonexistent"),
+            block: 1024,
+            test_block: 64,
+            entries: vec![
+                mk(Op::KnmMatvec, Some(Kernel::Gaussian), Impl::Pallas, 64, 32, 8),
+                mk(Op::KnmMatvec, Some(Kernel::Gaussian), Impl::Pallas, 64, 256, 32),
+                mk(Op::KnmMatvec, Some(Kernel::Gaussian), Impl::Pallas, 1024, 256, 32),
+                mk(Op::KnmMatvec, Some(Kernel::Gaussian), Impl::Pallas, 1024, 256, 128),
+                mk(Op::KernelBlock, Some(Kernel::Gaussian), Impl::Pallas, 1024, 256, 32),
+                mk(Op::Kmm, Some(Kernel::Gaussian), Impl::Jnp, 0, 256, 32),
+                mk(Op::Precond, None, Impl::Jnp, 0, 256, 0),
+            ],
+        }
+    }
+
+    #[test]
+    fn find_prefers_smallest_d() {
+        let r = toy_registry();
+        let e = r
+            .find(Op::KnmMatvec, Kernel::Gaussian, Impl::Pallas, 256, 20, 5000)
+            .unwrap();
+        assert_eq!(e.d, 32);
+    }
+
+    #[test]
+    fn find_prefers_block_matching_n() {
+        let r = toy_registry();
+        let small = r
+            .find(Op::KnmMatvec, Kernel::Gaussian, Impl::Pallas, 256, 32, 50)
+            .unwrap();
+        assert_eq!(small.b, 64);
+        let big = r
+            .find(Op::KnmMatvec, Kernel::Gaussian, Impl::Pallas, 256, 32, 50_000)
+            .unwrap();
+        assert_eq!(big.b, 1024);
+    }
+
+    #[test]
+    fn find_errors_list_available_ms() {
+        let r = toy_registry();
+        let err = r
+            .find(Op::KnmMatvec, Kernel::Gaussian, Impl::Pallas, 999, 8, 100)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("M=999"), "{err}");
+        assert!(err.contains("256"), "{err}");
+    }
+
+    #[test]
+    fn usable_ms_requires_all_ops() {
+        let r = toy_registry();
+        assert_eq!(r.usable_ms(Kernel::Gaussian, 10), vec![256]);
+        // d too large for any kernel_block artifact
+        assert!(r.usable_ms(Kernel::Gaussian, 256).is_empty());
+    }
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        if let Ok(reg) = Registry::load_default() {
+            assert!(reg.entries.len() > 100);
+            assert_eq!(reg.block, 1024);
+            let ms = reg.usable_ms(Kernel::Gaussian, 90);
+            assert!(ms.contains(&1024), "{ms:?}");
+            // every referenced file exists
+            for e in reg.entries.iter().take(20) {
+                assert!(reg.path_of(e).exists(), "{}", e.file);
+            }
+        }
+    }
+}

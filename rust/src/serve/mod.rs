@@ -1,0 +1,273 @@
+//! Batched prediction server — the L3 serving path: a dedicated model
+//! thread owns the engine (PJRT handles are per-thread) and drains an
+//! mpsc queue with **dynamic batching**: it collects up to `max_batch`
+//! requests (waiting at most `max_wait` for stragglers), stacks them into
+//! one row-block, runs a single blocked predict, and fans the results
+//! back out. Clients hold a cheap, cloneable, `Send` [`Handle`].
+
+use crate::falkon::FalkonModel;
+use crate::linalg::mat::Mat;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// engine name ("xla", "xla-jnp", "rust") — constructed on the server
+    /// thread because PJRT clients are thread-local
+    pub engine: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            engine: "xla".into(),
+        }
+    }
+}
+
+struct Request {
+    features: Vec<f64>,
+    reply: Sender<Result<f64>>,
+}
+
+/// Client handle: send features, block on the prediction.
+#[derive(Clone)]
+pub struct Handle {
+    tx: Sender<Request>,
+    d: usize,
+}
+
+impl Handle {
+    pub fn predict(&self, features: Vec<f64>) -> Result<f64> {
+        if features.len() != self.d {
+            return Err(anyhow!(
+                "feature dim {} != model dim {}",
+                features.len(),
+                self.d
+            ));
+        }
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Request {
+                features,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("server stopped"))?;
+        reply_rx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+}
+
+/// Server statistics snapshot.
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    /// mean rows per executed batch
+    pub mean_batch: f64,
+}
+
+pub struct Server {
+    handle: Handle,
+    join: Option<std::thread::JoinHandle<ServeStats>>,
+    shutdown: Sender<()>,
+}
+
+impl Server {
+    /// Spawn the model thread and return (server, client handle).
+    pub fn start(model: FalkonModel, cfg: ServeConfig) -> Result<Server> {
+        let d = model.centers.cols;
+        let (tx, rx) = channel::<Request>();
+        let (stop_tx, stop_rx) = channel::<()>();
+        let join = std::thread::Builder::new()
+            .name("falkon-serve".into())
+            .spawn(move || serve_loop(model, cfg, rx, stop_rx))
+            .map_err(|e| anyhow!("spawning server: {e}"))?;
+        Ok(Server {
+            handle: Handle { tx, d },
+            join: Some(join),
+            shutdown: stop_tx,
+        })
+    }
+
+    pub fn handle(&self) -> Handle {
+        self.handle.clone()
+    }
+
+    /// Stop the server and collect stats.
+    pub fn stop(mut self) -> ServeStats {
+        let _ = self.shutdown.send(());
+        // drop our handle so the queue closes once clients are done
+        let join = self.join.take().unwrap();
+        drop(self.handle.tx.clone());
+        join.join().unwrap_or_default()
+    }
+}
+
+fn serve_loop(
+    model: FalkonModel,
+    cfg: ServeConfig,
+    rx: Receiver<Request>,
+    stop: Receiver<()>,
+) -> ServeStats {
+    // engine lives on this thread (PJRT client is thread-local)
+    let engine = match crate::runtime::Engine::by_name(&cfg.engine, 1) {
+        Ok(e) => e,
+        Err(err) => {
+            eprintln!("serve: engine init failed ({err}); falling back to rust engine");
+            crate::runtime::Engine::rust()
+        }
+    };
+    let d = model.centers.cols;
+    let mut stats = ServeStats::default();
+    let mut pending: Vec<Request> = Vec::new();
+
+    loop {
+        if stop.try_recv().is_ok() {
+            break;
+        }
+        // block for the first request of a batch
+        if pending.is_empty() {
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // then gather stragglers up to max_batch / max_wait
+        let deadline = Instant::now() + cfg.max_wait;
+        while pending.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+        }
+        // run the batch
+        let rows = pending.len();
+        let mut x = Mat::zeros(rows, d);
+        for (i, r) in pending.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(&r.features);
+        }
+        let preds = model.predict(&engine, &x);
+        match preds {
+            Ok(p) => {
+                for (i, r) in pending.drain(..).enumerate() {
+                    let _ = r.reply.send(Ok(p[i]));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for r in pending.drain(..) {
+                    let _ = r.reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+        stats.requests += rows as u64;
+        stats.batches += 1;
+    }
+    if stats.batches > 0 {
+        stats.mean_batch = stats.requests as f64 / stats.batches as f64;
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::falkon::FalkonConfig;
+    use crate::runtime::Engine;
+    use crate::util::rng::Rng;
+
+    fn tiny_model() -> (FalkonModel, Mat, Vec<f64>) {
+        let mut rng = Rng::new(1);
+        let data = synth::smooth_regression(&mut rng, 300, 4, 0.05);
+        let eng = Engine::rust();
+        let cfg = FalkonConfig {
+            sigma: 1.5,
+            lam: 1e-4,
+            m: 32,
+            t: 12,
+            ..Default::default()
+        };
+        let model = crate::falkon::fit(&eng, &data.x, &data.y, &cfg).unwrap();
+        (model, data.x, data.y)
+    }
+
+    #[test]
+    fn serves_correct_predictions() {
+        let (model, x, _) = tiny_model();
+        let eng = Engine::rust();
+        let want = model.predict(&eng, &x.slice_rows(0, 10)).unwrap();
+        let server = Server::start(
+            model,
+            ServeConfig {
+                engine: "rust".into(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = server.handle();
+        for i in 0..10 {
+            let got = h.predict(x.row(i).to_vec()).unwrap();
+            assert!((got - want[i]).abs() < 1e-12, "{got} vs {}", want[i]);
+        }
+        let stats = server.stop();
+        assert_eq!(stats.requests, 10);
+    }
+
+    #[test]
+    fn batches_concurrent_clients() {
+        let (model, x, _) = tiny_model();
+        let server = Server::start(
+            model,
+            ServeConfig {
+                engine: "rust".into(),
+                max_batch: 16,
+                max_wait: Duration::from_millis(10),
+            },
+        )
+        .unwrap();
+        let h = server.handle();
+        let results: Vec<f64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..32)
+                .map(|i| {
+                    let h = h.clone();
+                    let row = x.row(i % x.rows).to_vec();
+                    s.spawn(move || h.predict(row).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        assert_eq!(results.len(), 32);
+        let stats = server.stop();
+        assert_eq!(stats.requests, 32);
+        // dynamic batching must have coalesced at least some requests
+        assert!(stats.batches < 32, "batches {}", stats.batches);
+        assert!(stats.mean_batch > 1.0);
+    }
+
+    #[test]
+    fn rejects_wrong_dimension() {
+        let (model, _, _) = tiny_model();
+        let server = Server::start(
+            model,
+            ServeConfig {
+                engine: "rust".into(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = server.handle();
+        assert!(h.predict(vec![1.0, 2.0]).is_err());
+        server.stop();
+    }
+}

@@ -1,0 +1,6 @@
+//! Foundation substrates built from scratch for the offline environment
+//! (DESIGN.md §3): PRNG, JSON, timing, property-test harness.
+pub mod json;
+pub mod ptest;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,102 @@
+//! Tiny property-testing harness (substrate — `proptest` is unavailable in
+//! the offline environment; see DESIGN.md §3).
+//!
+//! `check` runs a property over many seeded random cases and reports the
+//! failing seed so a failure reproduces exactly:
+//!
+//! ```
+//! use falkon::util::ptest::{check, Gen};
+//! check("sum commutes", 100, |g| {
+//!     let (a, b) = (g.f64_in(-10.0, 10.0), g.f64_in(-10.0, 10.0));
+//!     assert!((a + b - (b + a)).abs() < 1e-12);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Per-case generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.rng.below(hi - lo)
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        self.rng.normals(n)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (with the case number and
+/// seed baked into the message) on the first failing case.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    check_seeded(name, cases, 0xFA1C0, prop)
+}
+
+pub fn check_seeded(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe,
+) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen {
+                rng: Rng::new(case_seed),
+                case,
+            };
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (seed {case_seed:#x}): {msg}\n\
+                 reproduce with check_seeded(\"{name}\", 1, {case_seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs is non-negative", 50, |g| {
+            let x = g.f64_in(-5.0, 5.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn gen_ranges() {
+        check("usize_in respects bounds", 100, |g| {
+            let x = g.usize_in(3, 10);
+            assert!((3..10).contains(&x));
+        });
+    }
+}

@@ -1,0 +1,273 @@
+//! Deterministic pseudo-random numbers (substrate — no `rand` crate in the
+//! offline environment; see DESIGN.md §3).
+//!
+//! The generator is xoshiro256++ seeded through SplitMix64, which is the
+//! standard, well-tested construction. Distributions cover exactly what the
+//! library needs: uniforms, gaussians (Box–Muller), integer ranges, shuffles,
+//! subset sampling and categorical sampling for leverage-score selection.
+
+/// xoshiro256++ PRNG with SplitMix64 seeding. Deterministic across runs and
+/// platforms for a given seed — every experiment records its seed.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second gaussian from Box–Muller
+    spare: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut st = seed;
+        let s = [
+            splitmix64(&mut st),
+            splitmix64(&mut st),
+            splitmix64(&mut st),
+            splitmix64(&mut st),
+        ];
+        Rng { s, spare: None }
+    }
+
+    /// Derive an independent stream (for per-worker RNGs).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n). Lemire multiplicative reduction.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        // u1 in (0,1] to avoid ln(0)
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * th.sin());
+        r * th.cos()
+    }
+
+    /// Vector of standard normals.
+    pub fn normals(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// k distinct indices drawn uniformly from [0, n) (partial Fisher–Yates).
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "choose({k}) from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// One draw from an unnormalized categorical distribution.
+    /// O(n); use [`CategoricalSampler`] for repeated draws.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut t = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+/// O(log n)-per-draw categorical sampler over fixed weights (cumulative
+/// binary search) — used for leverage-score center sampling where M draws
+/// are taken from an n-element distribution.
+pub struct CategoricalSampler {
+    cum: Vec<f64>,
+}
+
+impl CategoricalSampler {
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty());
+        let mut cum = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            assert!(w >= 0.0 && w.is_finite(), "bad weight {w}");
+            acc += w;
+            cum.push(acc);
+        }
+        assert!(acc > 0.0, "all-zero weights");
+        CategoricalSampler { cum }
+    }
+
+    pub fn total(&self) -> f64 {
+        *self.cum.last().unwrap()
+    }
+
+    pub fn draw(&self, rng: &mut Rng) -> usize {
+        let t = rng.f64() * self.total();
+        match self.cum.binary_search_by(|p| p.partial_cmp(&t).unwrap()) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+        .min(self.cum.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (mut a, mut b) = (Rng::new(1), Rng::new(2));
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_uniformish() {
+        let mut r = Rng::new(4);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn choose_distinct_and_in_range() {
+        let mut r = Rng::new(6);
+        let k = r.choose(100, 30);
+        assert_eq!(k.len(), 30);
+        let mut s = k.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 30);
+        assert!(k.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn choose_all() {
+        let mut r = Rng::new(8);
+        let mut k = r.choose(5, 5);
+        k.sort_unstable();
+        assert_eq!(k, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn categorical_sampler_matches_weights() {
+        let mut r = Rng::new(9);
+        let w = [1.0, 0.0, 3.0, 6.0];
+        let s = CategoricalSampler::new(&w);
+        let mut counts = [0usize; 4];
+        for _ in 0..100_000 {
+            counts[s.draw(&mut r)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!((counts[0] as f64 / 1e5 - 0.1).abs() < 0.01);
+        assert!((counts[3] as f64 / 1e5 - 0.6).abs() < 0.01);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(10);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(11);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

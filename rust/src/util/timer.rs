@@ -1,0 +1,121 @@
+//! Wall-clock timing helpers shared by the coordinator's metrics and the
+//! bench harness.
+
+use std::time::Instant;
+
+/// Simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_s())
+}
+
+/// Accumulates named time buckets — used to break the fit down into
+/// centers / precond / cg-matvec / cg-other for the §Perf analysis.
+#[derive(Debug, Default, Clone)]
+pub struct Phases {
+    entries: Vec<(String, f64)>,
+}
+
+impl Phases {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 += secs;
+        } else {
+            self.entries.push((name.to_string(), secs));
+        }
+    }
+
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, s) = timed(f);
+        self.add(name, s);
+        out
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (name, secs) in &self.entries {
+            s.push_str(&format!("{name:>16}: {secs:8.3}s\n"));
+        }
+        s.push_str(&format!("{:>16}: {:8.3}s\n", "total", self.total()));
+        s
+    }
+
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_s() >= 0.004);
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn phases_accumulate() {
+        let mut p = Phases::new();
+        p.add("a", 1.0);
+        p.add("a", 2.0);
+        p.add("b", 0.5);
+        assert_eq!(p.get("a"), 3.0);
+        assert_eq!(p.total(), 3.5);
+        assert!(p.report().contains("a"));
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 42);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}
