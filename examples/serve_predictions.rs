@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
             max_batch: 64,
             max_wait: Duration::from_millis(2),
             engine: engine_name.into(),
+            ..Default::default()
         },
     )?;
     let clients = 8;

@@ -1,17 +1,20 @@
 //! **P1 (§Perf)** — hot-path throughput of the blocked Nyström matvec
 //! (the op that dominates every fit): engines × shapes, reporting time
-//! per apply, kernel evaluations/s and effective GFLOP/s, plus a fit
-//! phase breakdown. This is the measurement harness behind
-//! EXPERIMENTS.md §Perf.
+//! per apply, kernel evaluations/s and effective GFLOP/s, a rust-engine
+//! worker sweep, and a fit phase breakdown. Emits the machine-readable
+//! `BENCH_matvec.json` (override with `--json <path>`) so the perf
+//! trajectory is tracked from PR to PR — this is the measurement harness
+//! behind EXPERIMENTS.md §Perf and the ≥3× apply acceptance gate.
 
 mod common;
 
-use falkon::bench::{fmt_secs, time_fn, BenchArgs, Table};
+use falkon::bench::{fmt_secs, time_fn, write_json, BenchArgs, Table};
 use falkon::data::synth;
 use falkon::falkon::{fit, FalkonConfig};
 use falkon::kernels::Kernel;
 use falkon::linalg::mat::Mat;
 use falkon::runtime::{Engine, EngineOptions, Impl};
+use falkon::util::json::Value;
 use falkon::util::rng::Rng;
 
 /// ~flops per gaussian kernel evaluation with the matmul expansion:
@@ -42,13 +45,16 @@ fn main() -> anyhow::Result<()> {
     let args = BenchArgs::from_env();
     let n = common::scale(&args, 32_768);
     let reps = if args.flag("--smoke") { 2 } else { 5 };
+    let json_path = args.get("--json").unwrap_or("BENCH_matvec.json").to_string();
 
     let mut table = Table::new(
         "P1: blocked Nyström matvec throughput (one BHB data pass)",
-        &["engine", "n", "M", "d", "t/apply", "Gevals/s", "GFLOP/s"],
+        &["engine", "n", "M", "d", "workers", "t/apply", "Gevals/s", "GFLOP/s"],
     );
+    let mut apply_records: Vec<Value> = Vec::new();
 
-    for (d, m) in [(32usize, 512usize), (32, 2048), (128, 1024)] {
+    // (10, 1024) is the acceptance shape: apply latency there gates PRs
+    for (d, m) in [(10usize, 1024usize), (32, 512), (32, 2048), (128, 1024)] {
         let mut rng = Rng::new(81);
         let x = Mat::from_vec(n, d, rng.normals(n * d));
         let c = x.select_rows(&rng.choose(n, m));
@@ -64,13 +70,86 @@ fn main() -> anyhow::Result<()> {
                 format!("{n}"),
                 format!("{m}"),
                 format!("{d}"),
+                "1".to_string(),
                 fmt_secs(stats.median),
                 format!("{:.2}", evals / stats.median / 1e9),
                 format!("{:.1}", evals * flops_per_eval(d) / stats.median / 1e9),
             ]);
+            apply_records.push(Value::obj(vec![
+                ("engine", Value::str(name.clone())),
+                ("kernel", Value::str("gaussian")),
+                ("n", Value::num(n as f64)),
+                ("m", Value::num(m as f64)),
+                ("d", Value::num(d as f64)),
+                ("workers", Value::num(1.0)),
+                ("apply", stats.to_json()),
+                ("evals_per_apply", Value::num(evals)),
+                ("evals_per_s", Value::num(evals / stats.median)),
+                (
+                    "gflops",
+                    Value::num(evals * flops_per_eval(d) / stats.median / 1e9),
+                ),
+            ]));
         }
     }
     table.print();
+
+    // rust-engine worker sweep on the acceptance shape (d=10, M=1024)
+    let mut sweep_records: Vec<Value> = Vec::new();
+    {
+        let (d, m) = (10usize, 1024usize.min(n / 2));
+        let mut rng = Rng::new(83);
+        let x = Mat::from_vec(n, d, rng.normals(n * d));
+        let c = x.select_rows(&rng.choose(n, m));
+        let u = rng.normals(m);
+        let mut wtable = Table::new(
+            "P1b: rust engine worker sweep (gaussian, d=10)",
+            &["workers", "t/apply", "Gevals/s", "speedup"],
+        );
+        let mut base = f64::NAN;
+        for workers in [1usize, 2, 4, 8] {
+            let eng = Engine::rust_with(EngineOptions {
+                imp: Impl::Pallas,
+                workers,
+            });
+            let plan = eng.matvec_plan(Kernel::Gaussian, &x, &c, 1.0)?;
+            let evals = plan.kernel_evals_per_apply() as f64;
+            let stats = time_fn(1, reps, || {
+                let _ = plan.apply(&u, None).unwrap();
+            });
+            if workers == 1 {
+                base = stats.median;
+            }
+            let speedup = base / stats.median;
+            wtable.row(&[
+                format!("{workers}"),
+                fmt_secs(stats.median),
+                format!("{:.2}", evals / stats.median / 1e9),
+                format!("{speedup:.2}x"),
+            ]);
+            sweep_records.push(Value::obj(vec![
+                ("workers", Value::num(workers as f64)),
+                ("n", Value::num(n as f64)),
+                ("m", Value::num(m as f64)),
+                ("d", Value::num(d as f64)),
+                ("apply", stats.to_json()),
+                ("evals_per_s", Value::num(evals / stats.median)),
+                ("speedup_vs_1", Value::num(speedup)),
+            ]));
+        }
+        wtable.print();
+    }
+
+    let report = Value::obj(vec![
+        ("schema", Value::str("falkon/bench_matvec/v2")),
+        ("n", Value::num(n as f64)),
+        ("reps", Value::num(reps as f64)),
+        ("smoke", Value::Bool(args.flag("--smoke"))),
+        ("apply", Value::arr(apply_records)),
+        ("workers_sweep", Value::arr(sweep_records)),
+    ]);
+    write_json(&json_path, &report)?;
+    println!("\nwrote {json_path}");
 
     // fit phase breakdown on the default path
     let engine = common::bench_engine();

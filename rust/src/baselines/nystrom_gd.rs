@@ -26,7 +26,7 @@ pub struct GdModel {
 /// Power-iteration estimate of the largest eigenvalue of the (normalized)
 /// Nyström Hessian — sets a stable step size τ = 1/L.
 fn estimate_lipschitz(
-    plan: &crate::runtime::MatvecPlan<'_>,
+    plan: &crate::runtime::MatvecPlan,
     kmm: &Mat,
     lam: f64,
     rng: &mut Rng,

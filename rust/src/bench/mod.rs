@@ -4,6 +4,7 @@
 //! printing that mirrors the paper's table layout, and log-log slope
 //! fitting for the complexity experiments.
 
+use crate::util::json::Value;
 use crate::util::timer::Timer;
 
 /// Timing statistics over repeats (seconds).
@@ -14,6 +15,26 @@ pub struct Stats {
     pub max: f64,
     pub mean: f64,
     pub reps: usize,
+}
+
+impl Stats {
+    /// Machine-readable form for the BENCH_*.json reports.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("median_s", Value::num(self.median)),
+            ("min_s", Value::num(self.min)),
+            ("max_s", Value::num(self.max)),
+            ("mean_s", Value::num(self.mean)),
+            ("reps", Value::num(self.reps as f64)),
+        ])
+    }
+}
+
+/// Write a machine-readable bench report (pretty-printed JSON). Reports
+/// like `BENCH_matvec.json` are the perf trajectory the repo tracks from
+/// PR to PR.
+pub fn write_json(path: &str, v: &Value) -> std::io::Result<()> {
+    std::fs::write(path, v.to_string_pretty())
 }
 
 /// Time `f` with `warmup` unmeasured runs and `reps` measured runs.
@@ -181,6 +202,32 @@ mod tests {
         let s = t.to_string();
         assert!(s.contains("== demo =="));
         assert!(s.contains("FALKON"));
+    }
+
+    #[test]
+    fn stats_json_roundtrips() {
+        let s = Stats {
+            median: 0.5,
+            min: 0.25,
+            max: 1.0,
+            mean: 0.55,
+            reps: 4,
+        };
+        let v = s.to_json();
+        assert_eq!(v.get("median_s").as_f64(), Some(0.5));
+        assert_eq!(v.get("reps").as_usize(), Some(4));
+        let back = crate::util::json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(back.get("min_s").as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn write_json_emits_parseable_file() {
+        let path = std::env::temp_dir().join("falkon_bench_json_test.json");
+        let v = Value::obj(vec![("a", Value::num(1.0))]);
+        write_json(path.to_str().unwrap(), &v).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(crate::util::json::parse(&text).unwrap(), v);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -1,6 +1,11 @@
 //! Conjugate gradient — Alg. 2's `conjgrad`, generic over the operator so
 //! the same loop drives the preconditioned FALKON system, the
 //! un-preconditioned ablation, and the baselines.
+//!
+//! All heavy per-iteration state lives inside the operator: the FALKON
+//! `apply` runs over a prepared [`crate::runtime::MatvecPlan`] whose row
+//! blocks, norms, Kr tile buffers and worker pool are built once per fit
+//! (DESIGN.md §Perf) — this loop only touches M-length vectors.
 
 use anyhow::Result;
 use crate::linalg::vec_ops::{axpy, dot, norm2, xpby};
@@ -67,12 +72,13 @@ pub fn conjgrad(
         axpy(a, &p, &mut beta);
         axpy(-a, &ap, &mut r);
         let rsnew = dot(&r, &r);
+        let r_norm = rsnew.sqrt();
         iters = k;
-        residuals.push(rsnew.sqrt());
+        residuals.push(r_norm);
         if let Some(cb) = on_iter.as_deref_mut() {
             cb(k, &beta);
         }
-        if opts.tol > 0.0 && rsnew.sqrt() / b_norm <= opts.tol {
+        if opts.tol > 0.0 && r_norm / b_norm <= opts.tol {
             converged = true;
             break;
         }

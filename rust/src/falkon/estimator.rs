@@ -156,20 +156,22 @@ impl FalkonMulticlass {
     }
 }
 
-/// Per-fit shared state (exposed so benches can probe the operator).
-pub struct FitState<'e> {
+/// Per-fit shared state (exposed so benches can probe the operator). The
+/// plan owns its sliced row blocks and worker pool, so the state no longer
+/// borrows the training matrix.
+pub struct FitState {
     pub sel: SelectedCenters,
     pub t_factor: Mat,
     pub a_factor: Mat,
     /// partial isometry from the eig preconditioner (None = chol path)
     pub q_factor: Option<Mat>,
-    pub plan: MatvecPlan<'e>,
+    pub plan: MatvecPlan,
     pub phases: Phases,
     pub config: FalkonConfig,
 }
 
-impl<'e> FitState<'e> {
-    pub fn bhb(&self) -> Bhb<'_, 'e> {
+impl FitState {
+    pub fn bhb(&self) -> Bhb<'_> {
         Bhb {
             plan: &self.plan,
             t: &self.t_factor,
@@ -183,11 +185,7 @@ impl<'e> FitState<'e> {
 
 /// Build everything up to (but not including) the CG solve: centers,
 /// K_MM (+ D weighting), preconditioner factors, prepared matvec plan.
-pub fn prepare<'e>(
-    engine: &'e Engine,
-    x: &'e Mat,
-    config: &FalkonConfig,
-) -> Result<FitState<'e>> {
+pub fn prepare(engine: &Engine, x: &Mat, config: &FalkonConfig) -> Result<FitState> {
     let mut phases = Phases::new();
     let mut rng = Rng::new(config.seed);
 
@@ -245,7 +243,7 @@ pub fn prepare<'e>(
 /// receives (iteration, α at that iteration) — used by convergence
 /// studies; computing α per iteration costs two O(M²) solves.
 pub fn solve(
-    state: &mut FitState<'_>,
+    state: &mut FitState,
     y: &[f64],
     mut on_iter: Option<&mut dyn FnMut(usize, &[f64])>,
 ) -> Result<(Vec<f64>, usize, Vec<f64>)> {

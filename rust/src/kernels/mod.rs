@@ -1,9 +1,26 @@
 //! Pure-Rust kernel function evaluation — the reference implementation the
 //! XLA artifacts are cross-checked against, the compute engine of the
-//! fallback [`crate::runtime::RustBackend`], and the "kernel computed on
-//! the fly" baseline from the paper's Table 1 discussion.
+//! fallback [`crate::runtime::Engine::Rust`] path, and the "kernel computed
+//! on the fly" baseline from the paper's Table 1 discussion.
+//!
+//! Two tiers live here (DESIGN.md §Perf):
+//!
+//! - **reference**: [`Kernel::eval`], [`kernel_block`], [`knm_matvec`],
+//!   [`predict`] — row-at-a-time, libm `exp`, deliberately simple. These
+//!   are the oracles the property tests pin everything else to.
+//! - **tiled hot path**: [`knm_matvec_blocked`], [`predict_blocked`] —
+//!   panel-of-rows tiles with the ‖x‖²+‖c‖²−2x·c norm expansion (the inner
+//!   loop is a 1×4 register tile of dot products, same structure as the
+//!   Pallas tile), a reusable Kr tile buffer ([`TileScratch`]) and the
+//!   vectorizable [`crate::linalg::vec_ops::fast_exp`]. The runtime's
+//!   `MatvecPlan` drives these every CG iteration.
 
 use crate::linalg::mat::Mat;
+use crate::linalg::vec_ops::{self, fast_exp};
+
+/// Row tile height of the fused matvec: one Kr panel is `TILE × M` f64s
+/// (1 MiB at M = 1024), sized to stay L2-resident across its two passes.
+pub const DEFAULT_TILE: usize = 128;
 
 /// Kernel families supported end-to-end (python oracle, Pallas kernels,
 /// artifacts and this module must stay in sync — tested both sides).
@@ -44,7 +61,7 @@ impl Kernel {
         }
     }
 
-    /// Evaluate K(x, c) for two points.
+    /// Evaluate K(x, c) for two points (reference path).
     #[inline]
     pub fn eval(self, x: &[f64], c: &[f64], param: f64) -> f64 {
         debug_assert_eq!(x.len(), c.len());
@@ -75,7 +92,18 @@ impl Kernel {
     }
 }
 
-/// Dense kernel block K(X, C) -> (X.rows × C.rows).
+/// Squared L2 norm of every row — precomputed once per plan/block so the
+/// Gaussian panels never recompute them inside the apply loop.
+pub fn row_sq_norms(x: &Mat) -> Vec<f64> {
+    (0..x.rows)
+        .map(|i| {
+            let r = x.row(i);
+            vec_ops::dot(r, r)
+        })
+        .collect()
+}
+
+/// Dense kernel block K(X, C) -> (X.rows × C.rows) — reference path.
 ///
 /// For the Gaussian kernel this uses the ‖x‖²+‖c‖²−2x·c expansion so the
 /// inner loop is a dot product (same structure as the Pallas tile).
@@ -84,18 +112,14 @@ pub fn kernel_block(kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Mat {
     let mut out = Mat::zeros(x.rows, c.rows);
     match kern {
         Kernel::Gaussian => {
-            let xn: Vec<f64> = (0..x.rows)
-                .map(|i| x.row(i).iter().map(|v| v * v).sum())
-                .collect();
-            let cn: Vec<f64> = (0..c.rows)
-                .map(|j| c.row(j).iter().map(|v| v * v).sum())
-                .collect();
+            let xn = row_sq_norms(x);
+            let cn = row_sq_norms(c);
             let inv = 1.0 / (2.0 * param * param);
             for i in 0..x.rows {
                 let xr = x.row(i);
                 let orow = out.row_mut(i);
                 for j in 0..c.rows {
-                    let dot = crate::linalg::vec_ops::dot(xr, c.row(j));
+                    let dot = vec_ops::dot(xr, c.row(j));
                     let sq = (xn[i] + cn[j] - 2.0 * dot).max(0.0);
                     orow[j] = (-sq * inv).exp();
                 }
@@ -120,8 +144,9 @@ pub fn kmm(kern: Kernel, c: &Mat, param: f64) -> Mat {
 }
 
 /// The FALKON block op w = Krᵀ(mask ⊙ (Kr·u + v)) computed on the fly
-/// without materializing Kr (row-at-a-time) — mirrors the artifact
-/// semantics exactly, including the mask contract.
+/// without materializing Kr (row-at-a-time) — the **reference** the tiled
+/// [`knm_matvec_blocked`] is property-tested against, including the mask
+/// contract (masked rows are skipped entirely, not multiplied by zero).
 pub fn knm_matvec(
     kern: Kernel,
     x: &Mat,
@@ -144,13 +169,14 @@ pub fn knm_matvec(
         for j in 0..c.rows {
             krow[j] = kern.eval(xr, c.row(j), param);
         }
-        let yi = mi * (crate::linalg::vec_ops::dot(&krow, u) + v[i]);
-        crate::linalg::vec_ops::axpy(yi, &krow, &mut w);
+        let yi = mi * (vec_ops::dot(&krow, u) + v[i]);
+        vec_ops::axpy(yi, &krow, &mut w);
     }
     w
 }
 
-/// Predictions f(x_i) = Σ_j α_j K(x_i, c_j) for a block of rows.
+/// Predictions f(x_i) = Σ_j α_j K(x_i, c_j) for a block of rows —
+/// **reference** path for [`predict_blocked`].
 pub fn predict(kern: Kernel, x: &Mat, c: &Mat, alpha: &[f64], param: f64) -> Vec<f64> {
     assert_eq!(alpha.len(), c.rows);
     let mut out = vec![0.0; x.rows];
@@ -165,10 +191,307 @@ pub fn predict(kern: Kernel, x: &Mat, c: &Mat, alpha: &[f64], param: f64) -> Vec
     out
 }
 
+// ---------------------------------------------------------------------
+// tiled hot path
+// ---------------------------------------------------------------------
+
+/// Reusable per-thread buffers for the tiled kernels: one Kr tile
+/// (`tile × M`) plus the fused intermediate y (`tile`). Built once per
+/// plan/worker; the apply loop performs no X-block heap allocation.
+pub struct TileScratch {
+    tile: usize,
+    kr: Vec<f64>,
+    y: Vec<f64>,
+}
+
+impl TileScratch {
+    pub fn new(tile: usize, m: usize) -> TileScratch {
+        let tile = tile.max(1);
+        TileScratch {
+            tile,
+            kr: vec![0.0; tile * m],
+            y: vec![0.0; tile],
+        }
+    }
+
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Grow the Kr buffer if a caller re-uses the scratch with a larger M.
+    fn ensure(&mut self, m: usize) {
+        if self.kr.len() < self.tile * m {
+            self.kr.resize(self.tile * m, 0.0);
+        }
+    }
+}
+
+/// Fill `kr[0 .. rows*M]` with K(X_panel, C). `xb` is the row-major
+/// `rows × d` panel, `xn`/`cn` the precomputed squared row norms (only
+/// read by the Gaussian kernel). The Gaussian/linear inner loop is a 1×4
+/// register tile of dot products over four center rows; the exponentials
+/// run in a separate branch-free pass over the finished row so LLVM can
+/// vectorize them (`fast_exp`).
+fn kernel_panel(
+    kern: Kernel,
+    xb: &[f64],
+    d: usize,
+    rows: usize,
+    xn: &[f64],
+    c: &Mat,
+    cn: &[f64],
+    param: f64,
+    kr: &mut [f64],
+) {
+    let m = c.rows;
+    debug_assert_eq!(xb.len(), rows * d);
+    debug_assert_eq!(c.cols, d);
+    debug_assert!(kr.len() >= rows * m);
+    match kern {
+        Kernel::Gaussian => {
+            debug_assert_eq!(xn.len(), rows);
+            debug_assert_eq!(cn.len(), m);
+            let inv = 1.0 / (2.0 * param * param);
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let xni = xn[i];
+                let out = &mut kr[i * m..(i + 1) * m];
+                let mut j = 0;
+                while j + 4 <= m {
+                    let c0 = c.row(j);
+                    let c1 = c.row(j + 1);
+                    let c2 = c.row(j + 2);
+                    let c3 = c.row(j + 3);
+                    let (mut a0, mut a1, mut a2, mut a3) = (0.0, 0.0, 0.0, 0.0);
+                    for k in 0..d {
+                        let xv = xr[k];
+                        a0 += xv * c0[k];
+                        a1 += xv * c1[k];
+                        a2 += xv * c2[k];
+                        a3 += xv * c3[k];
+                    }
+                    out[j] = (xni + cn[j] - 2.0 * a0).max(0.0);
+                    out[j + 1] = (xni + cn[j + 1] - 2.0 * a1).max(0.0);
+                    out[j + 2] = (xni + cn[j + 2] - 2.0 * a2).max(0.0);
+                    out[j + 3] = (xni + cn[j + 3] - 2.0 * a3).max(0.0);
+                    j += 4;
+                }
+                while j < m {
+                    let dotv = vec_ops::dot(xr, c.row(j));
+                    out[j] = (xni + cn[j] - 2.0 * dotv).max(0.0);
+                    j += 1;
+                }
+                for v in out.iter_mut() {
+                    *v = fast_exp(-*v * inv);
+                }
+            }
+        }
+        Kernel::Laplacian => {
+            let inv = 1.0 / param;
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let out = &mut kr[i * m..(i + 1) * m];
+                for j in 0..m {
+                    let cr = c.row(j);
+                    let mut l1 = 0.0;
+                    for k in 0..d {
+                        l1 += (xr[k] - cr[k]).abs();
+                    }
+                    out[j] = -l1 * inv;
+                }
+                for v in out.iter_mut() {
+                    *v = fast_exp(*v);
+                }
+            }
+        }
+        Kernel::Linear => {
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let out = &mut kr[i * m..(i + 1) * m];
+                let mut j = 0;
+                while j + 4 <= m {
+                    let c0 = c.row(j);
+                    let c1 = c.row(j + 1);
+                    let c2 = c.row(j + 2);
+                    let c3 = c.row(j + 3);
+                    let (mut a0, mut a1, mut a2, mut a3) = (0.0, 0.0, 0.0, 0.0);
+                    for k in 0..d {
+                        let xv = xr[k];
+                        a0 += xv * c0[k];
+                        a1 += xv * c1[k];
+                        a2 += xv * c2[k];
+                        a3 += xv * c3[k];
+                    }
+                    out[j] = a0;
+                    out[j + 1] = a1;
+                    out[j + 2] = a2;
+                    out[j + 3] = a3;
+                    j += 4;
+                }
+                while j < m {
+                    out[j] = vec_ops::dot(xr, c.row(j));
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Tiled/fused w += Krᵀ(mask ⊙ (Kr·u + v)) over the rows of `x`.
+///
+/// Accumulates into `w` (callers zero it; the plan sums several blocks
+/// into one output). `xn`/`cn` are precomputed squared row norms of
+/// `x`/`c`. `v`/`mask` are indexed by local row (same length as `x.rows`).
+/// Rows whose fused weight y_i is exactly zero — in particular every
+/// masked row — are skipped in the accumulation pass, matching the
+/// reference mask contract. No heap allocation happens here: the Kr tile
+/// and y live in `scratch`.
+#[allow(clippy::too_many_arguments)]
+pub fn knm_matvec_blocked(
+    kern: Kernel,
+    x: &Mat,
+    c: &Mat,
+    xn: &[f64],
+    cn: &[f64],
+    u: &[f64],
+    v: Option<&[f64]>,
+    mask: Option<&[f64]>,
+    param: f64,
+    scratch: &mut TileScratch,
+    w: &mut [f64],
+) {
+    let (n, m, d) = (x.rows, c.rows, x.cols);
+    assert_eq!(c.cols, d, "feature dims differ");
+    assert_eq!(u.len(), m);
+    assert_eq!(w.len(), m);
+    assert_eq!(xn.len(), n);
+    assert_eq!(cn.len(), m);
+    if let Some(v) = v {
+        assert_eq!(v.len(), n);
+    }
+    if let Some(mk) = mask {
+        assert_eq!(mk.len(), n);
+    }
+    scratch.ensure(m);
+    let tile = scratch.tile;
+    let mut s = 0;
+    while s < n {
+        let rows = (n - s).min(tile);
+        let kr = &mut scratch.kr[..rows * m];
+        let xb = &x.data[s * d..(s + rows) * d];
+        kernel_panel(kern, xb, d, rows, &xn[s..s + rows], c, cn, param, kr);
+        // fused stage 1: y = mask ⊙ (Kr·u + v)
+        for i in 0..rows {
+            let gi = s + i;
+            let mi = mask.map(|mk| mk[gi]).unwrap_or(1.0);
+            if mi == 0.0 {
+                scratch.y[i] = 0.0;
+                continue;
+            }
+            let dotu = vec_ops::dot(&kr[i * m..(i + 1) * m], u);
+            let vi = v.map(|vf| vf[gi]).unwrap_or(0.0);
+            scratch.y[i] = mi * (dotu + vi);
+        }
+        // fused stage 2: w += Krᵀ·y (masked / zero-weight rows skipped)
+        for i in 0..rows {
+            let yi = scratch.y[i];
+            if yi != 0.0 {
+                vec_ops::axpy(yi, &kr[i * m..(i + 1) * m], w);
+            }
+        }
+        s += rows;
+    }
+}
+
+/// Tiled predictions f(x_i) = Σ_j α_j K(x_i, c_j): one kernel panel per
+/// row tile, then a dot against α — the serving analogue of
+/// [`knm_matvec_blocked`].
+pub fn predict_blocked(kern: Kernel, x: &Mat, c: &Mat, alpha: &[f64], param: f64) -> Vec<f64> {
+    predict_blocked_par(kern, x, c, alpha, param, 1)
+}
+
+/// [`predict_blocked`] with the rows fanned out across `workers` scoped
+/// threads, each with its own tile scratch. Small inputs (fewer rows than
+/// one tile per worker) fall back to the serial path, so per-row results
+/// are bitwise identical to the serial tiling regardless of `workers`.
+pub fn predict_blocked_par(
+    kern: Kernel,
+    x: &Mat,
+    c: &Mat,
+    alpha: &[f64],
+    param: f64,
+    workers: usize,
+) -> Vec<f64> {
+    let (n, m) = (x.rows, c.rows);
+    assert_eq!(c.cols, x.cols, "feature dims differ");
+    assert_eq!(alpha.len(), m);
+    let cn = row_sq_norms(c);
+    let mut out = vec![0.0; n];
+    let workers = workers.max(1).min(n.div_ceil(DEFAULT_TILE).max(1));
+    if workers <= 1 {
+        predict_range(kern, x, c, &cn, alpha, param, 0, n, &mut out);
+    } else {
+        let chunk = n.div_ceil(workers);
+        std::thread::scope(|sc| {
+            for (ci, o) in out.chunks_mut(chunk).enumerate() {
+                let cnr = cn.as_slice();
+                sc.spawn(move || {
+                    let start = ci * chunk;
+                    predict_range(kern, x, c, cnr, alpha, param, start, start + o.len(), o);
+                });
+            }
+        });
+    }
+    out
+}
+
+/// Serial tiled predict over rows [start, end) of `x`, writing into `out`
+/// (length `end - start`). The Kr tile is sized to the range, so small
+/// serving batches don't allocate a full `DEFAULT_TILE × M` buffer.
+#[allow(clippy::too_many_arguments)]
+fn predict_range(
+    kern: Kernel,
+    x: &Mat,
+    c: &Mat,
+    cn: &[f64],
+    alpha: &[f64],
+    param: f64,
+    start: usize,
+    end: usize,
+    out: &mut [f64],
+) {
+    let (m, d) = (c.rows, x.cols);
+    debug_assert_eq!(out.len(), end - start);
+    if start == end {
+        return;
+    }
+    let mut scratch = TileScratch::new(DEFAULT_TILE.min(end - start), m);
+    let xn: Vec<f64> = (start..end)
+        .map(|i| {
+            let r = x.row(i);
+            vec_ops::dot(r, r)
+        })
+        .collect();
+    let mut s = start;
+    while s < end {
+        let rows = (end - s).min(scratch.tile);
+        let kr = &mut scratch.kr[..rows * m];
+        let xb = &x.data[s * d..(s + rows) * d];
+        let xnr = &xn[s - start..s - start + rows];
+        kernel_panel(kern, xb, d, rows, xnr, c, cn, param, kr);
+        for i in 0..rows {
+            out[s - start + i] = vec_ops::dot(&kr[i * m..(i + 1) * m], alpha);
+        }
+        s += rows;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::ptest::check;
+
+    const KERNELS: [Kernel; 3] = [Kernel::Gaussian, Kernel::Laplacian, Kernel::Linear];
 
     #[test]
     fn gaussian_values() {
@@ -191,7 +514,7 @@ mod tests {
 
     #[test]
     fn parse_names() {
-        for k in [Kernel::Gaussian, Kernel::Laplacian, Kernel::Linear] {
+        for k in KERNELS {
             assert_eq!(Kernel::parse(k.name()), Some(k));
         }
         assert_eq!(Kernel::parse("rbf"), Some(Kernel::Gaussian));
@@ -205,7 +528,7 @@ mod tests {
             let x = Mat::from_vec(b, d, g.normal_vec(b * d));
             let c = Mat::from_vec(m, d, g.normal_vec(m * d));
             let p = g.f64_in(0.5, 3.0);
-            for kern in [Kernel::Gaussian, Kernel::Laplacian, Kernel::Linear] {
+            for kern in KERNELS {
                 let blk = kernel_block(kern, &x, &c, p);
                 for i in 0..b {
                     for j in 0..m {
@@ -227,7 +550,7 @@ mod tests {
             let v = g.normal_vec(b);
             let mask: Vec<f64> = (0..b).map(|_| if g.bool() { 1.0 } else { 0.0 }).collect();
             let p = 1.3;
-            let kern = *g.pick(&[Kernel::Gaussian, Kernel::Laplacian, Kernel::Linear]);
+            let kern = *g.pick(&KERNELS);
             let w = knm_matvec(kern, &x, &c, &u, &v, Some(&mask), p);
 
             let kr = kernel_block(kern, &x, &c, p);
@@ -256,5 +579,154 @@ mod tests {
                 assert!((got[i] - want[i]).abs() < 1e-10);
             }
         });
+    }
+
+    // -- tiled-vs-reference property tests (the acceptance contract) ------
+
+    /// Run the tiled matvec with an explicit tile size so tiny problems
+    /// still produce ragged final tiles.
+    fn run_blocked(
+        kern: Kernel,
+        x: &Mat,
+        c: &Mat,
+        u: &[f64],
+        v: Option<&[f64]>,
+        mask: Option<&[f64]>,
+        p: f64,
+        tile: usize,
+    ) -> Vec<f64> {
+        let xn = row_sq_norms(x);
+        let cn = row_sq_norms(c);
+        let mut scratch = TileScratch::new(tile, c.rows);
+        let mut w = vec![0.0; c.rows];
+        knm_matvec_blocked(kern, x, c, &xn, &cn, u, v, mask, p, &mut scratch, &mut w);
+        w
+    }
+
+    #[test]
+    fn blocked_matvec_matches_reference_all_kernels() {
+        check("knm_matvec_blocked = knm_matvec", 30, |g| {
+            let (b, m, d) = (g.usize_in(1, 20), g.usize_in(1, 14), g.usize_in(1, 7));
+            let x = Mat::from_vec(b, d, g.normal_vec(b * d));
+            let c = Mat::from_vec(m, d, g.normal_vec(m * d));
+            let u = g.normal_vec(m);
+            let v = g.normal_vec(b);
+            let p = g.f64_in(0.5, 3.0);
+            for kern in KERNELS {
+                let want = knm_matvec(kern, &x, &c, &u, &v, None, p);
+                // tiles of 1, a ragged middle size, and larger-than-n
+                for tile in [1usize, 3, 64] {
+                    let got = run_blocked(kern, &x, &c, &u, Some(&v), None, p, tile);
+                    let diff = vec_ops::max_abs_diff(&got, &want);
+                    assert!(diff < 1e-10, "{kern:?} tile={tile} diff={diff}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn blocked_matvec_honors_mask_contract() {
+        check("blocked matvec mask contract", 20, |g| {
+            let (b, m, d) = (g.usize_in(2, 16), g.usize_in(1, 10), g.usize_in(1, 5));
+            let x = Mat::from_vec(b, d, g.normal_vec(b * d));
+            let c = Mat::from_vec(m, d, g.normal_vec(m * d));
+            let u = g.normal_vec(m);
+            let v = g.normal_vec(b);
+            let mask: Vec<f64> = (0..b).map(|_| if g.bool() { 1.0 } else { 0.0 }).collect();
+            let p = 1.1;
+            let kern = *g.pick(&KERNELS);
+            let want = knm_matvec(kern, &x, &c, &u, &v, Some(&mask), p);
+            let got = run_blocked(kern, &x, &c, &u, Some(&v), Some(&mask), p, 4);
+            let diff = vec_ops::max_abs_diff(&got, &want);
+            assert!(diff < 1e-10, "{kern:?} diff={diff}");
+            // and the v = None path (the CG iteration shape)
+            let zeros = vec![0.0; b];
+            let want0 = knm_matvec(kern, &x, &c, &u, &zeros, Some(&mask), p);
+            let got0 = run_blocked(kern, &x, &c, &u, None, Some(&mask), p, 4);
+            assert!(vec_ops::max_abs_diff(&got0, &want0) < 1e-10);
+        });
+    }
+
+    #[test]
+    fn blocked_matvec_ragged_final_tile() {
+        // n and M deliberately not multiples of the tile / unroll widths
+        let mut rng = crate::util::rng::Rng::new(23);
+        let (b, m, d) = (101, 37, 9);
+        let x = Mat::from_vec(b, d, rng.normals(b * d));
+        let c = Mat::from_vec(m, d, rng.normals(m * d));
+        let u = rng.normals(m);
+        let v = rng.normals(b);
+        for kern in KERNELS {
+            let want = knm_matvec(kern, &x, &c, &u, &v, None, 1.7);
+            for tile in [7, 25, 101, 128] {
+                let got = run_blocked(kern, &x, &c, &u, Some(&v), None, 1.7, tile);
+                let diff = vec_ops::max_abs_diff(&got, &want);
+                assert!(diff < 1e-10, "{kern:?} tile={tile} diff={diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_predict_matches_reference() {
+        check("predict_blocked = predict", 25, |g| {
+            let (b, m, d) = (g.usize_in(1, 24), g.usize_in(1, 12), g.usize_in(1, 6));
+            let x = Mat::from_vec(b, d, g.normal_vec(b * d));
+            let c = Mat::from_vec(m, d, g.normal_vec(m * d));
+            let alpha = g.normal_vec(m);
+            let p = g.f64_in(0.5, 3.0);
+            for kern in KERNELS {
+                let want = predict(kern, &x, &c, &alpha, p);
+                let got = predict_blocked(kern, &x, &c, &alpha, p);
+                let diff = vec_ops::max_abs_diff(&got, &want);
+                assert!(diff < 1e-10, "{kern:?} diff={diff}");
+            }
+        });
+    }
+
+    #[test]
+    fn blocked_predict_crosses_default_tile() {
+        // more rows than DEFAULT_TILE so the shipped tile size itself is hit
+        let mut rng = crate::util::rng::Rng::new(29);
+        let (b, m, d) = (DEFAULT_TILE + 61, 19, 6);
+        let x = Mat::from_vec(b, d, rng.normals(b * d));
+        let c = Mat::from_vec(m, d, rng.normals(m * d));
+        let alpha = rng.normals(m);
+        for kern in KERNELS {
+            let want = predict(kern, &x, &c, &alpha, 1.3);
+            let got = predict_blocked(kern, &x, &c, &alpha, 1.3);
+            assert!(vec_ops::max_abs_diff(&got, &want) < 1e-10, "{kern:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_predict_matches_serial() {
+        // big enough that the row chunks actually fan out (n > tile*workers)
+        let mut rng = crate::util::rng::Rng::new(37);
+        let (b, m, d) = (3 * DEFAULT_TILE + 11, 23, 5);
+        let x = Mat::from_vec(b, d, rng.normals(b * d));
+        let c = Mat::from_vec(m, d, rng.normals(m * d));
+        let alpha = rng.normals(m);
+        for kern in KERNELS {
+            let serial = predict_blocked(kern, &x, &c, &alpha, 1.2);
+            for workers in [2, 3, 8] {
+                let par = predict_blocked_par(kern, &x, &c, &alpha, 1.2, workers);
+                assert_eq!(par, serial, "{kern:?} workers={workers} must be bitwise equal");
+            }
+        }
+        // and against the row-at-a-time reference
+        let want = predict(Kernel::Gaussian, &x, &c, &alpha, 1.2);
+        let got = predict_blocked_par(Kernel::Gaussian, &x, &c, &alpha, 1.2, 4);
+        assert!(vec_ops::max_abs_diff(&got, &want) < 1e-10);
+    }
+
+    #[test]
+    fn row_sq_norms_match_eval() {
+        let mut rng = crate::util::rng::Rng::new(31);
+        let x = Mat::from_vec(5, 4, rng.normals(20));
+        let n = row_sq_norms(&x);
+        for i in 0..5 {
+            let want: f64 = x.row(i).iter().map(|v| v * v).sum();
+            assert!((n[i] - want).abs() < 1e-12);
+        }
     }
 }

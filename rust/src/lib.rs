@@ -11,6 +11,18 @@
 //!   runs at request time.
 //!
 //! Start with [`falkon::FalkonEstimator`] or `examples/quickstart.rs`.
+
+// The `xla` feature gates the PJRT engine on the `xla` crate (xla-rs),
+// which the offline build environment cannot fetch. This guard turns the
+// otherwise-confusing "unresolved import `xla`" cascade into one clear
+// instruction (tools that sweep `--all-features` hit it too).
+#[cfg(feature = "xla")]
+compile_error!(
+    "the `xla` feature needs the `xla` crate: add it under [dependencies] \
+     in rust/Cargo.toml (see the [features] comment there) and delete this \
+     guard in src/lib.rs"
+);
+
 pub mod data;
 pub mod kernels;
 pub mod linalg;

@@ -1,22 +1,67 @@
 //! Matrix products for the coordinator-side paths: baselines (exact KRR,
-//! Nyström direct), leverage-score sketches and the pure-Rust fallback
-//! backend. The i-k-j loop order keeps the inner loop contiguous in both
-//! operands, which the compiler vectorizes; that is enough to make the
-//! *XLA* path the bottleneck-of-interest, which is the point.
+//! Nyström direct), leverage-score sketches, the M×M preconditioner
+//! algebra in `falkon/precond.rs`, and the pure-Rust fallback backend.
+//!
+//! `matmul`/`gram_t` are cache-blocked (k/j panels sized so the streamed
+//! operand stays in L2 while the output panel is revisited) with branch-free
+//! inner loops the compiler vectorizes. The original streaming
+//! implementations are retained as `matmul_ref`/`gram_t_ref` — the oracles
+//! the blocked paths are property-tested against (DESIGN.md §Perf).
 
 use super::mat::Mat;
 
-/// C = A · B
+/// k-panel height: a KC×cols slice of B is revisited across all rows of A.
+const KC: usize = 128;
+/// j-panel width: bounds the C/B row segment touched by one inner loop.
+const JC: usize = 512;
+/// i-panel height for `gram_t`: rows of C kept hot while A streams by.
+const IC: usize = 128;
+
+/// C = A · B (cache-blocked).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    matmul_blocked(a, b, KC, JC)
+}
+
+/// Blocked i-k-j product with explicit panel sizes — exposed to the
+/// property tests so tiny matrices still exercise ragged panel edges.
+pub(crate) fn matmul_blocked(a: &Mat, b: &Mat, kc: usize, jc: usize) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (kc, jc) = (kc.max(1), jc.max(1));
+    let mut c = Mat::zeros(a.rows, b.cols);
+    let ncols = b.cols;
+    let mut kk = 0;
+    while kk < a.cols {
+        let kend = (kk + kc).min(a.cols);
+        let mut jj = 0;
+        while jj < ncols {
+            let jend = (jj + jc).min(ncols);
+            for i in 0..a.rows {
+                let arow = a.row(i);
+                let crow = &mut c.row_mut(i)[jj..jend];
+                for k in kk..kend {
+                    let aik = arow[k];
+                    let brow = &b.row(k)[jj..jend];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+            jj = jend;
+        }
+        kk = kend;
+    }
+    c
+}
+
+/// Reference C = A · B — the seed's streaming i-k-j loop, kept as the
+/// oracle for the blocked path's property tests.
+pub fn matmul_ref(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows, "matmul {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
     let mut c = Mat::zeros(a.rows, b.cols);
     for i in 0..a.rows {
         let arow = a.row(i);
         let crow = c.row_mut(i);
         for (k, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
-            }
             let brow = b.row(k);
             for j in 0..brow.len() {
                 crow[j] += aik * brow[j];
@@ -26,18 +71,48 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// C = Aᵀ · A  (Gram matrix, exploits symmetry: only the upper triangle is
-/// computed then mirrored).
+/// C = Aᵀ · A  (Gram matrix; cache-blocked over output row panels,
+/// exploits symmetry: only the upper triangle is computed then mirrored).
 pub fn gram_t(a: &Mat) -> Mat {
+    gram_t_blocked(a, IC)
+}
+
+pub(crate) fn gram_t_blocked(a: &Mat, ic: usize) -> Mat {
+    let n = a.cols;
+    let ic = ic.max(1);
+    let mut c = Mat::zeros(n, n);
+    let mut ii = 0;
+    while ii < n {
+        let iend = (ii + ic).min(n);
+        for r in 0..a.rows {
+            let row = a.row(r);
+            for i in ii..iend {
+                let ri = row[i];
+                let crow = &mut c.row_mut(i)[i..];
+                let rtail = &row[i..];
+                for (cv, &rv) in crow.iter_mut().zip(rtail) {
+                    *cv += ri * rv;
+                }
+            }
+        }
+        ii = iend;
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            c[(j, i)] = c[(i, j)];
+        }
+    }
+    c
+}
+
+/// Reference Gram matrix (the seed's single-pass rank-1 loop).
+pub fn gram_t_ref(a: &Mat) -> Mat {
     let n = a.cols;
     let mut c = Mat::zeros(n, n);
     for r in 0..a.rows {
         let row = a.row(r);
         for i in 0..n {
             let ri = row[i];
-            if ri == 0.0 {
-                continue;
-            }
             let crow = c.row_mut(i);
             for j in i..n {
                 crow[j] += ri * row[j];
@@ -62,15 +137,13 @@ pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
     y
 }
 
-/// y = Aᵀ · x
+/// y = Aᵀ · x (branch-free: the old `x_i == 0` skip stalled the dense case
+/// that dominates here).
 pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.rows, x.len());
     let mut y = vec![0.0; a.cols];
     for i in 0..a.rows {
         let xi = x[i];
-        if xi == 0.0 {
-            continue;
-        }
         let row = a.row(i);
         for j in 0..a.cols {
             y[j] += xi * row[j];
@@ -102,6 +175,34 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matmul_matches_reference_ragged_panels() {
+        // tiny panel sizes force ragged k/j edges the default constants
+        // never hit at test scale
+        check("blocked matmul = reference", 25, |g| {
+            let (r, k, c) = (g.usize_in(1, 12), g.usize_in(1, 12), g.usize_in(1, 12));
+            let a = Mat::from_vec(r, k, g.normal_vec(r * k));
+            let b = Mat::from_vec(k, c, g.normal_vec(k * c));
+            let want = matmul_ref(&a, &b);
+            for (kc, jc) in [(1, 1), (3, 2), (4, 5), (7, 3), (64, 64)] {
+                let got = matmul_blocked(&a, &b, kc, jc);
+                assert!(got.max_abs_diff(&want) < 1e-10, "kc={kc} jc={jc}");
+            }
+        });
+    }
+
+    #[test]
+    fn blocked_matmul_crosses_default_panels() {
+        // one deterministic case bigger than KC/JC so the shipped constants
+        // themselves are exercised
+        let mut rng = crate::util::rng::Rng::new(17);
+        let (r, k, c) = (20, 150, 530);
+        let a = Mat::from_vec(r, k, rng.normals(r * k));
+        let b = Mat::from_vec(k, c, rng.normals(k * c));
+        let want = matmul_ref(&a, &b);
+        assert!(matmul(&a, &b).max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
     fn gram_matches_matmul() {
         check("AᵀA = matmul(Aᵀ, A)", 20, |g| {
             let (r, c) = (g.usize_in(1, 10), g.usize_in(1, 10));
@@ -110,6 +211,26 @@ mod tests {
             let g2 = matmul(&a.t(), &a);
             assert!(g1.max_abs_diff(&g2) < 1e-10);
         });
+    }
+
+    #[test]
+    fn blocked_gram_matches_reference_ragged_panels() {
+        check("blocked gram = reference", 25, |g| {
+            let (r, c) = (g.usize_in(1, 14), g.usize_in(1, 14));
+            let a = Mat::from_vec(r, c, g.normal_vec(r * c));
+            let want = gram_t_ref(&a);
+            for ic in [1, 2, 3, 5, 64] {
+                assert!(gram_t_blocked(&a, ic).max_abs_diff(&want) < 1e-10, "ic={ic}");
+            }
+        });
+    }
+
+    #[test]
+    fn gram_crosses_default_panel() {
+        let mut rng = crate::util::rng::Rng::new(18);
+        let (r, c) = (40, 150);
+        let a = Mat::from_vec(r, c, rng.normals(r * c));
+        assert!(gram_t(&a).max_abs_diff(&gram_t_ref(&a)) < 1e-9);
     }
 
     #[test]

@@ -1,15 +1,31 @@
-//! Vector kernels for the CG loop and metrics: dot, axpy, norms. These run
-//! on M-length vectors inside the coordinator, so they are written as
-//! straightforward loops the compiler auto-vectorizes.
+//! Vector kernels for the CG loop, the tiled kernel panels and metrics:
+//! dot, axpy, norms, and a branch-free `fast_exp`. `dot` is the inner loop
+//! of every kernel panel, so it is written with four independent
+//! accumulators (the compiler turns each into a SIMD lane group); the rest
+//! run on M-length vectors inside the coordinator and stay simple.
 
+/// Four-accumulator dot product. The independent partial sums break the
+/// loop-carried dependence so LLVM vectorizes and pipelines it; summation
+/// order differs from the naive loop by O(n·eps), which every caller's
+/// tolerance already absorbs.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0;
-    for i in 0..a.len() {
-        acc += a[i] * b[i];
+    let n = a.len();
+    let quads = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for q in 0..quads {
+        let k = 4 * q;
+        s0 += a[k] * b[k];
+        s1 += a[k + 1] * b[k + 1];
+        s2 += a[k + 2] * b[k + 2];
+        s3 += a[k + 3] * b[k + 3];
     }
-    acc
+    let mut s = (s0 + s2) + (s1 + s3);
+    for k in 4 * quads..n {
+        s += a[k] * b[k];
+    }
+    s
 }
 
 /// y += alpha * x
@@ -40,6 +56,53 @@ pub fn scale(alpha: f64, x: &mut [f64]) {
 #[inline]
 pub fn norm2(x: &[f64]) -> f64 {
     dot(x, x).sqrt()
+}
+
+/// Branch-free exp for the tiled kernel panels (DESIGN.md §Perf).
+///
+/// libm's `exp` is an opaque call, so a panel of kernel values cannot be
+/// SIMD-vectorized through it; this routine is straight-line arithmetic
+/// (clamp, floor-based range reduction, degree-12 Horner, exponent-bit
+/// scaling), which LLVM auto-vectorizes across a row of the Kr tile.
+///
+/// Accuracy: |rel err| < ~5e-15 on [-708, 708] — far inside the 1e-10
+/// agreement budget the property tests enforce against the libm-based
+/// reference kernels. Inputs below -708 return 0 (the true value is
+/// denormal there, < 1e-307); inputs above 708 are clamped (callers in
+/// this crate only ever pass x ≤ 0).
+#[inline]
+pub fn fast_exp(x: f64) -> f64 {
+    const LOG2E: f64 = std::f64::consts::LOG2_E;
+    // ln(2) split hi/lo so `x - k*ln2` keeps full precision
+    const LN2_HI: f64 = 6.931471803691238165e-1;
+    const LN2_LO: f64 = 1.908214929270587700e-10;
+    let clamped = x.clamp(-709.0, 708.0);
+    // k = round(x / ln 2) via floor (floor lowers to a single SIMD op)
+    let kf = (clamped * LOG2E + 0.5).floor();
+    let r = (clamped - kf * LN2_HI) - kf * LN2_LO; // |r| <= ~0.3466
+    // exp(r) by degree-12 Taylor/Horner: truncation < 2e-16 relative
+    let p = 1.0
+        + r * (1.0
+            + r * (0.5
+                + r * (1.0 / 6.0
+                    + r * (1.0 / 24.0
+                        + r * (1.0 / 120.0
+                            + r * (1.0 / 720.0
+                                + r * (1.0 / 5040.0
+                                    + r * (1.0 / 40320.0
+                                        + r * (1.0 / 362880.0
+                                            + r * (1.0 / 3628800.0
+                                                + r * (1.0 / 39916800.0
+                                                    + r * (1.0 / 479001600.0))))))))))));
+    // 2^k assembled directly in the exponent field (k in [-1022, 1022])
+    let scale = f64::from_bits(((1023i64 + kf as i64) as u64) << 52);
+    let out = p * scale;
+    // true underflow: exp(x) < 2^-1022 for x < -708.39; report exact 0
+    if x < -709.0 {
+        0.0
+    } else {
+        out
+    }
 }
 
 pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
@@ -79,6 +142,7 @@ pub fn variance(x: &[f64]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::ptest::check;
 
     #[test]
     fn dot_axpy() {
@@ -87,6 +151,17 @@ mod tests {
         assert_eq!(dot(&a, &b), 32.0);
         axpy(2.0, &a, &mut b);
         assert_eq!(b, [6.0, 9.0, 12.0]);
+    }
+
+    #[test]
+    fn dot_matches_naive_all_lengths() {
+        check("unrolled dot = naive dot", 30, |g| {
+            let n = g.usize_in(1, 40);
+            let a = g.normal_vec(n);
+            let b = g.normal_vec(n);
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-12, "n={n}");
+        });
     }
 
     #[test]
@@ -102,6 +177,35 @@ mod tests {
         assert_eq!(norm2(&[3.0, 4.0]), 5.0);
         assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
         assert!(rel_diff(&[1.0, 0.0], &[1.0, 0.0]) < 1e-15);
+    }
+
+    #[test]
+    fn fast_exp_matches_libm() {
+        check("fast_exp ≈ exp", 60, |g| {
+            let x = g.f64_in(-45.0, 4.0);
+            let want = x.exp();
+            let got = fast_exp(x);
+            let rel = (got - want).abs() / want.max(1e-300);
+            assert!(rel < 1e-13, "x={x}: {got} vs {want} (rel {rel})");
+        });
+    }
+
+    #[test]
+    fn fast_exp_edge_cases() {
+        assert_eq!(fast_exp(0.0), 1.0);
+        assert!((fast_exp(1.0) - std::f64::consts::E).abs() < 1e-14);
+        // deep negative tail: exact or denormal-level agreement
+        assert_eq!(fast_exp(-1000.0), 0.0);
+        assert_eq!(fast_exp(-710.0), 0.0);
+        let near = fast_exp(-700.0);
+        let want = (-700.0f64).exp();
+        assert!((near - want).abs() / want < 1e-12, "{near} vs {want}");
+        // the kernel range [-40, 0] must be essentially exact
+        for i in 0..400 {
+            let x = -0.1 * i as f64;
+            let (got, want) = (fast_exp(x), x.exp());
+            assert!((got - want).abs() < 1e-13 * want.max(1e-30) + 1e-300, "x={x}");
+        }
     }
 
     #[test]

@@ -209,10 +209,11 @@ fn cmd_predict(args: &[String]) -> Result<()> {
         .opt("dataset", "susy", "dataset name or file path")
         .opt("n", "20000", "rows for synthetic datasets")
         .opt("engine", "xla", "xla | xla-jnp | rust")
+        .opt("workers", "1", "rust-engine worker threads")
         .opt("seed", "0", "rng seed (dataset generation + split)");
     let p = spec.parse(args)?;
     let model = model_io::load(p.str("model"))?;
-    let engine = Engine::by_name(p.str("engine"), 1)?;
+    let engine = Engine::by_name(p.str("engine"), p.usize("workers")?)?;
     let cfg = ExperimentConfig {
         dataset: p.str("dataset").to_string(),
         n: p.usize("n")?,
@@ -252,7 +253,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("clients", "8", "concurrent client threads")
         .opt("max-batch", "64", "dynamic batch cap")
         .opt("max-wait-ms", "2", "batch linger")
-        .opt("engine", "xla", "xla | xla-jnp | rust");
+        .opt("engine", "xla", "xla | xla-jnp | rust")
+        .opt("workers", "1", "rust-engine worker threads");
     let p = spec.parse(args)?;
     let model = model_io::load(p.str("model"))?;
     let d = model.centers.cols;
@@ -262,6 +264,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             max_batch: p.usize("max-batch")?,
             max_wait: std::time::Duration::from_millis(p.u64("max-wait-ms")?),
             engine: p.str("engine").to_string(),
+            workers: p.usize("workers")?,
         },
     )?;
     let total = p.usize("requests")?;

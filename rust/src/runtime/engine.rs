@@ -1,22 +1,44 @@
 //! The compute engine abstraction: every data-touching op the coordinator
-//! needs, served either by the AOT XLA artifacts (production path) or by
-//! the pure-Rust reference kernels (fallback / cross-check / "compute on
-//! the fly" baseline).
+//! needs, served either by the AOT XLA artifacts (production path, behind
+//! the `xla` cargo feature) or by the pure-Rust kernels (fallback /
+//! cross-check / "compute on the fly" baseline).
 //!
 //! The hot object is the [`MatvecPlan`]: built once per fit, it owns the
-//! per-block prepared inputs (row blocks padded + masked, uploaded as XLA
-//! literals exactly once) and then serves `w = Σ_blocks Krᵀ(mask(Kr u + v))`
-//! every CG iteration, optionally fanning blocks out across a worker pool.
+//! per-block prepared inputs and then serves
+//! `w = Σ_blocks Krᵀ(mask(Kr u + v))` every CG iteration:
+//!
+//! - **XLA**: row blocks padded + masked and uploaded as literals exactly
+//!   once; staging buffers for `u`/`v` are reused across applies.
+//! - **Rust**: row blocks sliced and their squared row norms precomputed at
+//!   *plan construction* (the seed re-sliced the whole dataset on every CG
+//!   iteration), served by the tiled kernels with per-thread reusable Kr
+//!   tile buffers, and fanned out over a **persistent channel-fed worker
+//!   pool** spawned once per plan — a 20-iteration fit spawns threads once,
+//!   not 20×. See DESIGN.md §Perf.
 
 use crate::kernels::{self, Kernel};
 use crate::linalg::mat::Mat;
 use crate::linalg::{chol, tri};
+#[cfg(feature = "xla")]
 use crate::runtime::exe::{literal_from_f32, literal_scalar, literal_to_f32, Exe};
-use crate::runtime::spec::{Impl, Op, Registry};
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "xla")]
+use crate::runtime::spec::Op;
+use crate::runtime::spec::{Impl, Registry};
+#[cfg(feature = "xla")]
+use anyhow::Context;
+use anyhow::{anyhow, Result};
 use std::cell::RefCell;
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
+#[cfg(feature = "xla")]
 use std::rc::Rc;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Rows per Rust-engine block — the unit of work distribution across the
+/// worker pool (the cache-level tiling inside a block is finer; see
+/// [`kernels::DEFAULT_TILE`]).
+const ROW_BLOCK: usize = 1024;
 
 /// Engine configuration knobs that matter for perf experiments.
 #[derive(Debug, Clone)]
@@ -41,14 +63,15 @@ impl Default for EngineOptions {
 
 /// Which compute path serves the ops.
 pub enum Engine {
+    /// Pure-Rust f64 tiled kernels (no artifacts needed).
+    Rust { opts: EngineOptions },
     /// AOT XLA artifacts via PJRT (production).
+    #[cfg(feature = "xla")]
     Xla {
         registry: Rc<Registry>,
         cache: RefCell<HashMap<String, Rc<Exe>>>,
         opts: EngineOptions,
     },
-    /// Pure-Rust f64 reference (no artifacts needed).
-    Rust { opts: EngineOptions },
 }
 
 impl Engine {
@@ -56,6 +79,7 @@ impl Engine {
         Engine::xla(EngineOptions::default())
     }
 
+    #[cfg(feature = "xla")]
     pub fn xla(opts: EngineOptions) -> Result<Engine> {
         Ok(Engine::Xla {
             registry: Rc::new(Registry::load_default()?),
@@ -64,6 +88,16 @@ impl Engine {
         })
     }
 
+    #[cfg(not(feature = "xla"))]
+    pub fn xla(opts: EngineOptions) -> Result<Engine> {
+        let _ = opts;
+        Err(anyhow!(
+            "built without the `xla` cargo feature (no PJRT runtime); \
+             use the rust engine"
+        ))
+    }
+
+    #[cfg(feature = "xla")]
     pub fn xla_with_registry(registry: Registry, opts: EngineOptions) -> Engine {
         Engine::Xla {
             registry: Rc::new(registry),
@@ -101,26 +135,30 @@ impl Engine {
 
     pub fn name(&self) -> String {
         match self {
-            Engine::Xla { opts, .. } => format!("xla/{}", opts.imp.name()),
             Engine::Rust { .. } => "rust".into(),
+            #[cfg(feature = "xla")]
+            Engine::Xla { opts, .. } => format!("xla/{}", opts.imp.name()),
         }
     }
 
     pub fn opts(&self) -> &EngineOptions {
         match self {
-            Engine::Xla { opts, .. } => opts,
             Engine::Rust { opts } => opts,
+            #[cfg(feature = "xla")]
+            Engine::Xla { opts, .. } => opts,
         }
     }
 
     pub fn registry(&self) -> Option<&Registry> {
         match self {
-            Engine::Xla { registry, .. } => Some(registry),
             Engine::Rust { .. } => None,
+            #[cfg(feature = "xla")]
+            Engine::Xla { registry, .. } => Some(registry),
         }
     }
 
     /// Artifact spec + compiled executable for a request.
+    #[cfg(feature = "xla")]
     fn compiled(
         &self,
         op: Op,
@@ -160,6 +198,7 @@ impl Engine {
     pub fn kmm(&self, kern: Kernel, c: &Mat, param: f64) -> Result<Mat> {
         match self {
             Engine::Rust { .. } => Ok(kernels::kmm(kern, c, param)),
+            #[cfg(feature = "xla")]
             Engine::Xla { .. } => {
                 let m = c.rows;
                 let (exe, _, d_art) = self.compiled(Op::Kmm, kern, m, c.cols, m)?;
@@ -180,10 +219,11 @@ impl Engine {
     /// and finally fall back to the f64 Rust factorization — a fit must
     /// not die on a borderline K_MM.
     pub fn precond(&self, kmm: &Mat, lam: f64, eps: f64) -> Result<(Mat, Mat)> {
-        let m = kmm.rows;
         match self {
             Engine::Rust { .. } => precond_rust(kmm, lam, eps),
+            #[cfg(feature = "xla")]
             Engine::Xla { .. } => {
+                let m = kmm.rows;
                 let (exe, _, _) = self.compiled(Op::Precond, Kernel::Gaussian, m, 0, m)?;
                 let kmm_lit = literal_from_f32(&kmm.to_f32(), &[m, m])?;
                 let lam_lit = literal_scalar(lam as f32);
@@ -209,29 +249,22 @@ impl Engine {
     // the blocked Nyström matvec (CG hot path)
     // ------------------------------------------------------------------
 
-    /// Build the per-fit plan: rows of `x` split into artifact-sized
-    /// blocks, padded, masked and uploaded once.
-    pub fn matvec_plan<'a>(
-        &'a self,
-        kern: Kernel,
-        x: &'a Mat,
-        c: &Mat,
-        param: f64,
-    ) -> Result<MatvecPlan<'a>> {
+    /// Build the per-fit plan. Rust: rows sliced into blocks with their
+    /// squared norms precomputed, worker pool spawned. XLA: blocks padded,
+    /// masked and uploaded once.
+    pub fn matvec_plan(&self, kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Result<MatvecPlan> {
         anyhow::ensure!(x.cols == c.cols, "x/c feature dims differ");
-        let (n, m) = (x.rows, c.rows);
         match self {
-            Engine::Rust { opts } => Ok(MatvecPlan::Rust(RustPlan {
-                x,
-                c: c.clone(),
+            Engine::Rust { opts } => Ok(MatvecPlan::Rust(RustPlan::build(
                 kern,
+                x,
+                c,
                 param,
-                block: 1024,
-                n,
-                m,
-                workers: opts.workers,
-            })),
+                opts.workers,
+            )?)),
+            #[cfg(feature = "xla")]
             Engine::Xla { opts, .. } => {
+                let (n, m) = (x.rows, c.rows);
                 let (exe, b_art, d_art) = self.compiled(Op::KnmMatvec, kern, m, x.cols, n)?;
                 let c_pad = c.pad_cols(d_art);
                 let c_lit = literal_from_f32(&c_pad.to_f32(), &[m, d_art])?;
@@ -267,6 +300,10 @@ impl Engine {
                     b_art,
                     n,
                     m,
+                    scratch: RefCell::new(XlaScratch {
+                        u32v: Vec::new(),
+                        vbuf: vec![0.0f32; b_art],
+                    }),
                 }))
             }
         }
@@ -281,6 +318,7 @@ impl Engine {
     pub fn kernel_block(&self, kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Result<Mat> {
         match self {
             Engine::Rust { .. } => Ok(kernels::kernel_block(kern, x, c, param)),
+            #[cfg(feature = "xla")]
             Engine::Xla { .. } => {
                 let mut out = Mat::zeros(x.rows, c.rows);
                 self.for_kernel_blocks(kern, x, c, param, |start, rows, m, kr| {
@@ -305,8 +343,17 @@ impl Engine {
         param: f64,
     ) -> Result<Vec<f64>> {
         anyhow::ensure!(alpha.len() == c.rows, "alpha length");
+        anyhow::ensure!(x.cols == c.cols, "x/c feature dims differ");
         match self {
-            Engine::Rust { .. } => Ok(kernels::predict(kern, x, c, alpha, param)),
+            Engine::Rust { opts } => Ok(kernels::predict_blocked_par(
+                kern,
+                x,
+                c,
+                alpha,
+                param,
+                opts.workers,
+            )),
+            #[cfg(feature = "xla")]
             Engine::Xla { .. } => {
                 let mut preds = vec![0.0f64; x.rows];
                 self.for_kernel_blocks(kern, x, c, param, |start, rows, m, kr| {
@@ -324,6 +371,7 @@ impl Engine {
     }
 
     /// Shared streaming loop over kernel_block artifact calls.
+    #[cfg(feature = "xla")]
     fn for_kernel_blocks(
         &self,
         kern: Kernel,
@@ -383,6 +431,7 @@ fn precond_rust(kmm: &Mat, lam: f64, eps: f64) -> Result<(Mat, Mat)> {
 // plans
 // ---------------------------------------------------------------------
 
+#[cfg(feature = "xla")]
 struct XlaBlock {
     x: xla::Literal,
     mask: xla::Literal,
@@ -390,6 +439,15 @@ struct XlaBlock {
     rows: usize,
 }
 
+/// Staging buffers reused across applies (the seed reallocated them on
+/// every CG iteration).
+#[cfg(feature = "xla")]
+struct XlaScratch {
+    u32v: Vec<f32>,
+    vbuf: Vec<f32>,
+}
+
+#[cfg(feature = "xla")]
 pub struct XlaPlan {
     exe: Rc<Exe>,
     c_lit: xla::Literal,
@@ -399,47 +457,279 @@ pub struct XlaPlan {
     b_art: usize,
     n: usize,
     m: usize,
+    scratch: RefCell<XlaScratch>,
 }
 
-pub struct RustPlan<'a> {
-    x: &'a Mat,
-    c: Mat,
+/// One Rust-engine row block, sliced and norm-precomputed at plan build.
+struct RustBlock {
+    /// owned copy of rows [start, start + x.rows) of the dataset
+    x: Mat,
+    /// squared row norms of `x` (read by the Gaussian panel)
+    xn: Vec<f64>,
+    start: usize,
+}
+
+/// State shared between the plan and its worker pool (immutable after
+/// construction, so plain `Arc` sharing — no locks on the data).
+struct RustShared {
     kern: Kernel,
     param: f64,
-    block: usize,
+    c: Mat,
+    cn: Vec<f64>,
+    blocks: Vec<RustBlock>,
+    m: usize,
+    tile: usize,
+}
+
+/// One fan-out unit: apply `u`/`v` over blocks [lo, hi).
+struct Job {
+    u: Arc<Vec<f64>>,
+    v: Option<Arc<Vec<f64>>>,
+    lo: usize,
+    hi: usize,
+    idx: usize,
+    out: mpsc::Sender<(usize, Vec<f64>)>,
+}
+
+/// Persistent worker pool: threads spawned once per plan, fed jobs over a
+/// shared channel, each owning its own [`kernels::TileScratch`]. Dropping
+/// the pool closes the channel and joins the threads.
+struct WorkerPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    fn spawn(shared: Arc<RustShared>, workers: usize) -> Result<WorkerPool> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = Arc::clone(&rx);
+            let shared = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name("falkon-matvec".into())
+                .spawn(move || {
+                    let mut scratch = kernels::TileScratch::new(shared.tile, shared.m);
+                    loop {
+                        // hold the lock only while dequeueing
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        let Ok(job) = job else { break };
+                        let mut w = vec![0.0f64; shared.m];
+                        for b in job.lo..job.hi {
+                            let blk = &shared.blocks[b];
+                            let vb = job
+                                .v
+                                .as_deref()
+                                .map(|vf| &vf[blk.start..blk.start + blk.x.rows]);
+                            kernels::knm_matvec_blocked(
+                                shared.kern,
+                                &blk.x,
+                                &shared.c,
+                                &blk.xn,
+                                &shared.cn,
+                                &job.u,
+                                vb,
+                                None,
+                                shared.param,
+                                &mut scratch,
+                                &mut w,
+                            );
+                        }
+                        let _ = job.out.send((job.idx, w));
+                    }
+                })
+                .map_err(|e| anyhow!("spawning matvec worker: {e}"))?;
+            handles.push(handle);
+        }
+        Ok(WorkerPool {
+            tx: Some(tx),
+            handles,
+        })
+    }
+
+    fn submit(&self, job: Job) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("pool sender alive while pool exists")
+            .send(job)
+            .map_err(|_| anyhow!("matvec worker pool disconnected"))
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // closes the channel; workers exit their recv loop
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+pub struct RustPlan {
+    shared: Arc<RustShared>,
+    /// scratch for the inline (single-worker) path
+    scratch: RefCell<kernels::TileScratch>,
+    pool: Option<WorkerPool>,
+    workers: usize,
     n: usize,
     m: usize,
-    workers: usize,
+}
+
+impl RustPlan {
+    fn build(kern: Kernel, x: &Mat, c: &Mat, param: f64, workers: usize) -> Result<RustPlan> {
+        let (n, m) = (x.rows, c.rows);
+        let cn = kernels::row_sq_norms(c);
+        let mut blocks = Vec::with_capacity(n.div_ceil(ROW_BLOCK.max(1)));
+        let mut start = 0;
+        while start < n {
+            let end = (start + ROW_BLOCK).min(n);
+            let xb = x.slice_rows(start, end);
+            let xn = kernels::row_sq_norms(&xb);
+            blocks.push(RustBlock { x: xb, xn, start });
+            start = end;
+        }
+        let tile = kernels::DEFAULT_TILE;
+        let shared = Arc::new(RustShared {
+            kern,
+            param,
+            c: c.clone(),
+            cn,
+            blocks,
+            m,
+            tile,
+        });
+        let workers = workers.max(1);
+        let pool = if workers > 1 {
+            Some(WorkerPool::spawn(Arc::clone(&shared), workers)?)
+        } else {
+            None
+        };
+        Ok(RustPlan {
+            scratch: RefCell::new(kernels::TileScratch::new(tile, m)),
+            shared,
+            pool,
+            workers,
+            n,
+            m,
+        })
+    }
+
+    fn apply(&self, u: &[f64], v: Option<&[f64]>) -> Result<Vec<f64>> {
+        anyhow::ensure!(u.len() == self.m, "u length {} != M {}", u.len(), self.m);
+        if let Some(v) = v {
+            anyhow::ensure!(v.len() == self.n, "v length {} != n {}", v.len(), self.n);
+        }
+        let mut w = vec![0.0f64; self.m];
+        let nb = self.shared.blocks.len();
+        if nb == 0 {
+            return Ok(w);
+        }
+        match &self.pool {
+            None => {
+                let mut scratch = self.scratch.borrow_mut();
+                for blk in &self.shared.blocks {
+                    let vb = v.map(|vf| &vf[blk.start..blk.start + blk.x.rows]);
+                    kernels::knm_matvec_blocked(
+                        self.shared.kern,
+                        &blk.x,
+                        &self.shared.c,
+                        &blk.xn,
+                        &self.shared.cn,
+                        u,
+                        vb,
+                        None,
+                        self.shared.param,
+                        &mut scratch,
+                        &mut w,
+                    );
+                }
+            }
+            Some(pool) => {
+                let jobs = self.workers.min(nb);
+                let per = nb.div_ceil(jobs);
+                let u = Arc::new(u.to_vec());
+                let v = v.map(|vf| Arc::new(vf.to_vec()));
+                let (otx, orx) = mpsc::channel();
+                let mut sent = 0usize;
+                let mut lo = 0usize;
+                while lo < nb {
+                    let hi = (lo + per).min(nb);
+                    pool.submit(Job {
+                        u: Arc::clone(&u),
+                        v: v.clone(),
+                        lo,
+                        hi,
+                        idx: sent,
+                        out: otx.clone(),
+                    })?;
+                    sent += 1;
+                    lo = hi;
+                }
+                drop(otx);
+                // sum partials in job order so results are deterministic
+                let mut parts: Vec<Option<Vec<f64>>> = (0..sent).map(|_| None).collect();
+                for _ in 0..sent {
+                    let (idx, part) = orx
+                        .recv()
+                        .map_err(|_| anyhow!("matvec worker pool disconnected"))?;
+                    parts[idx] = Some(part);
+                }
+                for part in parts.into_iter().flatten() {
+                    for j in 0..self.m {
+                        w[j] += part[j];
+                    }
+                }
+            }
+        }
+        Ok(w)
+    }
 }
 
 /// The per-fit blocked matvec: `apply` computes
 /// `w = Σ_blocks Krᵀ(mask ⊙ (Kr·u + v_block))` (Alg. 1's
 /// KnM_times_vector). `v = None` means zeros (the CG iteration);
 /// `v = Some(y/n)` builds the right-hand side.
-pub enum MatvecPlan<'a> {
+pub enum MatvecPlan {
+    Rust(RustPlan),
+    #[cfg(feature = "xla")]
     Xla(XlaPlan),
-    Rust(RustPlan<'a>),
 }
 
-impl<'a> MatvecPlan<'a> {
+impl MatvecPlan {
     pub fn n(&self) -> usize {
         match self {
-            MatvecPlan::Xla(p) => p.n,
             MatvecPlan::Rust(p) => p.n,
+            #[cfg(feature = "xla")]
+            MatvecPlan::Xla(p) => p.n,
         }
     }
 
     pub fn m(&self) -> usize {
         match self {
-            MatvecPlan::Xla(p) => p.m,
             MatvecPlan::Rust(p) => p.m,
+            #[cfg(feature = "xla")]
+            MatvecPlan::Xla(p) => p.m,
         }
     }
 
     pub fn n_blocks(&self) -> usize {
         match self {
+            MatvecPlan::Rust(p) => p.shared.blocks.len(),
+            #[cfg(feature = "xla")]
             MatvecPlan::Xla(p) => p.blocks.len(),
-            MatvecPlan::Rust(p) => p.n.div_ceil(p.block),
+        }
+    }
+
+    /// Worker threads serving this plan (1 = inline).
+    pub fn workers(&self) -> usize {
+        match self {
+            MatvecPlan::Rust(p) => p.workers,
+            #[cfg(feature = "xla")]
+            MatvecPlan::Xla(_) => 1,
         }
     }
 
@@ -448,40 +738,52 @@ impl<'a> MatvecPlan<'a> {
     /// once per fused stage).
     pub fn kernel_evals_per_apply(&self) -> usize {
         match self {
-            MatvecPlan::Xla(p) => p.blocks.len() * p.b_art * p.m * 2,
             MatvecPlan::Rust(p) => p.n * p.m,
+            #[cfg(feature = "xla")]
+            MatvecPlan::Xla(p) => p.blocks.len() * p.b_art * p.m * 2,
         }
     }
 
     pub fn apply(&self, u: &[f64], v: Option<&[f64]>) -> Result<Vec<f64>> {
         match self {
             MatvecPlan::Rust(p) => p.apply(u, v),
+            #[cfg(feature = "xla")]
             MatvecPlan::Xla(p) => p.apply(u, v),
         }
     }
 }
 
+#[cfg(feature = "xla")]
 impl XlaPlan {
     fn apply(&self, u: &[f64], v: Option<&[f64]>) -> Result<Vec<f64>> {
         anyhow::ensure!(u.len() == self.m, "u length {} != M {}", u.len(), self.m);
         if let Some(v) = v {
             anyhow::ensure!(v.len() == self.n, "v length {} != n {}", v.len(), self.n);
         }
-        let u32v: Vec<f32> = u.iter().map(|&x| x as f32).collect();
-        let u_lit = literal_from_f32(&u32v, &[self.m])?;
+        let mut scratch = self.scratch.borrow_mut();
+        let XlaScratch { u32v, vbuf } = &mut *scratch;
+        u32v.clear();
+        u32v.extend(u.iter().map(|&x| x as f32));
+        let u_lit = literal_from_f32(u32v, &[self.m])?;
         let mut w = vec![0.0f64; self.m];
-        let mut vbuf = vec![0.0f32; self.b_art];
         for blk in &self.blocks {
             let v_lit;
             let v_ref: &xla::Literal = match v {
                 None => &self.zeros_v,
                 Some(vfull) => {
-                    vbuf.fill(0.0);
-                    for i in 0..blk.rows {
-                        vbuf[i] = vfull[blk.start + i] as f32;
+                    let src = &vfull[blk.start..blk.start + blk.rows];
+                    if src.iter().all(|&x| x == 0.0) {
+                        // all-zero block: reuse the shared zeros literal
+                        // instead of staging a fresh one
+                        &self.zeros_v
+                    } else {
+                        vbuf.fill(0.0);
+                        for (dst, &sv) in vbuf.iter_mut().zip(src) {
+                            *dst = sv as f32;
+                        }
+                        v_lit = literal_from_f32(vbuf, &[self.b_art])?;
+                        &v_lit
                     }
-                    v_lit = literal_from_f32(&vbuf, &[self.b_art])?;
-                    &v_lit
                 }
             };
             let part = self
@@ -503,61 +805,6 @@ impl XlaPlan {
     }
 }
 
-impl<'a> RustPlan<'a> {
-    fn apply(&self, u: &[f64], v: Option<&[f64]>) -> Result<Vec<f64>> {
-        anyhow::ensure!(u.len() == self.m, "u length");
-        let ranges: Vec<(usize, usize)> = (0..self.n)
-            .step_by(self.block)
-            .map(|s| (s, (s + self.block).min(self.n)))
-            .collect();
-        let workers = self.workers.max(1).min(ranges.len().max(1));
-        let run = |&(s, e): &(usize, usize)| -> Vec<f64> {
-            let xb = self.x.slice_rows(s, e);
-            let vb: Vec<f64> = match v {
-                Some(vf) => vf[s..e].to_vec(),
-                None => vec![0.0; e - s],
-            };
-            kernels::knm_matvec(self.kern, &xb, &self.c, u, &vb, None, self.param)
-        };
-        let mut w = vec![0.0f64; self.m];
-        if workers <= 1 {
-            for r in &ranges {
-                let part = run(r);
-                for j in 0..self.m {
-                    w[j] += part[j];
-                }
-            }
-        } else {
-            let partials: Vec<Vec<f64>> = std::thread::scope(|sc| {
-                let chunks: Vec<&[(usize, usize)]> =
-                    ranges.chunks(ranges.len().div_ceil(workers)).collect();
-                let handles: Vec<_> = chunks
-                    .into_iter()
-                    .map(|chunk| {
-                        sc.spawn(move || {
-                            let mut acc = vec![0.0f64; self.m];
-                            for r in chunk {
-                                let part = run(r);
-                                for j in 0..self.m {
-                                    acc[j] += part[j];
-                                }
-                            }
-                            acc
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().unwrap()).collect()
-            });
-            for p in partials {
-                for j in 0..self.m {
-                    w[j] += p[j];
-                }
-            }
-        }
-        Ok(w)
-    }
-}
-
 /// Apply the preconditioned operator (Alg. 2's BHB, generalized per
 /// Def. 3 with the leverage-score reweighting D and the rank-deficient
 /// partial isometry Q from appendix A / Example 2):
@@ -568,8 +815,8 @@ impl<'a> RustPlan<'a> {
 /// full-rank Cholesky path) and AᵀA = TTᵀ/M + λI. With uniform sampling
 /// D = I (`d = None`) and Q = I (`q = None`) this is exactly Alg. 1/2.
 /// Shared by the estimator and the condition-number diagnostics.
-pub struct Bhb<'p, 'a> {
-    pub plan: &'p MatvecPlan<'a>,
+pub struct Bhb<'p> {
+    pub plan: &'p MatvecPlan,
     /// q×q upper-triangular (diagonal on the eig path)
     pub t: &'p Mat,
     /// q×q upper-triangular (diagonal on the eig path)
@@ -582,7 +829,7 @@ pub struct Bhb<'p, 'a> {
     pub q: Option<&'p Mat>,
 }
 
-impl<'p, 'a> Bhb<'p, 'a> {
+impl<'p> Bhb<'p> {
     fn dmul(&self, v: &mut [f64]) {
         if let Some(d) = self.d {
             for (x, w) in v.iter_mut().zip(d) {
@@ -684,6 +931,26 @@ mod tests {
     }
 
     #[test]
+    fn rust_plan_matches_reference_all_kernels() {
+        // plan spans several ROW_BLOCKs; compare against the row-at-a-time
+        // reference kernels for every family
+        let mut rng = Rng::new(21);
+        let (n, d, m) = (2100, 6, 17);
+        let x = Mat::from_vec(n, d, rng.normals(n * d));
+        let c = x.select_rows(&rng.choose(n, m));
+        let u = rng.normals(m);
+        let v = rng.normals(n);
+        let eng = Engine::rust();
+        for kern in [Kernel::Gaussian, Kernel::Laplacian, Kernel::Linear] {
+            let plan = eng.matvec_plan(kern, &x, &c, 1.4).unwrap();
+            let got = plan.apply(&u, Some(&v)).unwrap();
+            let want = kernels::knm_matvec(kern, &x, &c, &u, &v, None, 1.4);
+            let diff = crate::linalg::vec_ops::max_abs_diff(&got, &want);
+            assert!(diff < 1e-9, "{kern:?} diff={diff}");
+        }
+    }
+
+    #[test]
     fn rust_plan_parallel_matches_serial() {
         let (x, c, _) = toy(2500, 4, 3);
         let eng1 = Engine::rust();
@@ -700,6 +967,48 @@ mod tests {
         for j in 0..c.rows {
             assert!((w1[j] - w4[j]).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn worker_pool_survives_many_applies() {
+        // a 20-iteration fit reuses the same pool; exercise repeated
+        // applies (u and v paths) plus ragged block chunking (3 workers,
+        // 5 blocks)
+        let mut rng = Rng::new(5);
+        let (n, d, m) = (4300, 3, 12);
+        let x = Mat::from_vec(n, d, rng.normals(n * d));
+        let c = x.select_rows(&rng.choose(n, m));
+        let eng = Engine::rust_with(EngineOptions {
+            imp: Impl::Pallas,
+            workers: 3,
+        });
+        let eng1 = Engine::rust();
+        let plan = eng.matvec_plan(Kernel::Gaussian, &x, &c, 1.0).unwrap();
+        let serial = eng1.matvec_plan(Kernel::Gaussian, &x, &c, 1.0).unwrap();
+        assert_eq!(plan.n_blocks(), 5);
+        for it in 0..6 {
+            let u = rng.normals(m);
+            let v = if it % 2 == 0 { Some(rng.normals(n)) } else { None };
+            let got = plan.apply(&u, v.as_deref()).unwrap();
+            let want = serial.apply(&u, v.as_deref()).unwrap();
+            let diff = crate::linalg::vec_ops::max_abs_diff(&got, &want);
+            assert!(diff < 1e-9, "iter {it}: {diff}");
+        }
+    }
+
+    #[test]
+    fn plan_applies_are_deterministic() {
+        let (x, c, _) = toy(2500, 4, 6);
+        let eng = Engine::rust_with(EngineOptions {
+            imp: Impl::Pallas,
+            workers: 4,
+        });
+        let mut rng = Rng::new(7);
+        let u = rng.normals(c.rows);
+        let plan = eng.matvec_plan(Kernel::Gaussian, &x, &c, 1.3).unwrap();
+        let w1 = plan.apply(&u, None).unwrap();
+        let w2 = plan.apply(&u, None).unwrap();
+        assert_eq!(w1, w2, "pooled apply must be bitwise deterministic");
     }
 
     #[test]

@@ -1,8 +1,10 @@
-//! PJRT runtime: artifact registry, compiled-executable cache, literal
-//! marshalling, and the [`Engine`]/[`MatvecPlan`] compute abstraction that
-//! the FALKON coordinator drives. Python never runs here — artifacts are
-//! HLO text produced once by `make artifacts`.
+//! Runtime: the [`Engine`]/[`MatvecPlan`] compute abstraction the FALKON
+//! coordinator drives, the artifact registry, and (behind the `xla` cargo
+//! feature) the PJRT executable cache + literal marshalling. Python never
+//! runs here — artifacts are HLO text produced once by `make artifacts`.
+//! Without the `xla` feature only the pure-Rust tiled engine is built.
 pub mod engine;
+#[cfg(feature = "xla")]
 pub mod exe;
 pub mod spec;
 

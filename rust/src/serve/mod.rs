@@ -18,6 +18,10 @@ pub struct ServeConfig {
     /// engine name ("xla", "xla-jnp", "rust") — constructed on the server
     /// thread because PJRT clients are thread-local
     pub engine: String,
+    /// rust-engine worker threads for the blocked predict path. Only
+    /// batches larger than one kernel tile (128 rows) fan out, so this
+    /// matters when `max_batch` is raised above the default 64.
+    pub workers: usize,
 }
 
 impl Default for ServeConfig {
@@ -26,6 +30,7 @@ impl Default for ServeConfig {
             max_batch: 64,
             max_wait: Duration::from_millis(2),
             engine: "xla".into(),
+            workers: 1,
         }
     }
 }
@@ -115,11 +120,14 @@ fn serve_loop(
     stop: Receiver<()>,
 ) -> ServeStats {
     // engine lives on this thread (PJRT client is thread-local)
-    let engine = match crate::runtime::Engine::by_name(&cfg.engine, 1) {
+    let engine = match crate::runtime::Engine::by_name(&cfg.engine, cfg.workers) {
         Ok(e) => e,
         Err(err) => {
             eprintln!("serve: engine init failed ({err}); falling back to rust engine");
-            crate::runtime::Engine::rust()
+            crate::runtime::Engine::rust_with(crate::runtime::EngineOptions {
+                workers: cfg.workers,
+                ..Default::default()
+            })
         }
     };
     let d = model.centers.cols;
@@ -233,6 +241,7 @@ mod tests {
                 engine: "rust".into(),
                 max_batch: 16,
                 max_wait: Duration::from_millis(10),
+                ..Default::default()
             },
         )
         .unwrap();
