@@ -1,0 +1,233 @@
+//! **P2 (§Perf "Setup path")** — latency of the per-fit O(M²d) + O(M³)
+//! preconditioner setup at the paper's M = √n regime: tiled K_MM
+//! formation, blocked Cholesky, blocked multi-RHS TRSM, and the full
+//! `Engine::precond`, each against its scalar reference, over an M sweep
+//! plus a worker-pool sweep. Emits the machine-readable
+//! `BENCH_precond.json` (override with `--json <path>`) so the setup path
+//! gets the same before/after discipline as `BENCH_matvec.json`. The
+//! acceptance gate is the recorded `chol_speedup_vs_ref` at M = 2048
+//! (blocked must be ≥2× the scalar reference).
+
+use falkon::bench::{fmt_secs, time_fn, write_json, BenchArgs, Table};
+use falkon::kernels::{self, Kernel};
+use falkon::linalg::mat::Mat;
+use falkon::linalg::{chol, tri};
+use falkon::runtime::{Engine, EngineOptions, Impl};
+use falkon::util::json::Value;
+use falkon::util::pool::WorkerPool;
+use falkon::util::rng::Rng;
+
+/// SPD shift used for the factorization targets (mirrors the engine's
+/// jittered K_MM + eps·M·I).
+const EPS: f64 = 1e-8;
+
+fn fmt_opt(s: Option<f64>) -> String {
+    s.map(fmt_secs).unwrap_or_else(|| "-".into())
+}
+
+fn speedup(ref_s: Option<f64>, fast_s: f64) -> Option<f64> {
+    ref_s.map(|r| r / fast_s)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::from_env();
+    let smoke = args.flag("--smoke");
+    let json_path = args
+        .get("--json")
+        .unwrap_or("BENCH_precond.json")
+        .to_string();
+    let reps = if smoke { 1 } else { 3 };
+    let d = 10usize;
+    let workers = args.usize_or("--workers", 4);
+    let ms: Vec<usize> = if smoke {
+        vec![128, 256]
+    } else {
+        vec![512, 1024, 2048, 4096]
+    };
+    // the scalar references are O(M³) with strided access; past this M
+    // only the blocked paths run (the acceptance speedup is at 2048)
+    let ref_cap = if smoke { 256 } else { 2048 };
+    // RHS width for the multi-RHS TRSM (the lscores/solve_spd_mat shape)
+    let nrhs = if smoke { 32 } else { 256 };
+    let pool = WorkerPool::new("bench-precond", workers)?;
+
+    let mut table = Table::new(
+        "P2: preconditioner setup path (gaussian, d=10)",
+        &[
+            "M", "kmm", "kmm_ref", "chol", "chol_ref", "chol_x", "trsm", "trsm_ref", "precond",
+        ],
+    );
+    let mut sweep_records: Vec<Value> = Vec::new();
+
+    for &m in &ms {
+        let mut rng = Rng::new(91);
+        let c = Mat::from_vec(m, d, rng.normals(m * d));
+
+        // -- K_MM formation ------------------------------------------------
+        let kmm_stats = time_fn(1, reps, || {
+            let _ = kernels::kmm(Kernel::Gaussian, &c, 1.0);
+        });
+        let kmm_pool_stats = time_fn(1, reps, || {
+            let _ = kernels::kmm_par(Kernel::Gaussian, &c, 1.0, Some(&pool));
+        });
+        let kmm_ref_stats = (m <= ref_cap).then(|| {
+            time_fn(0, reps, || {
+                let _ = kernels::kernel_block_ref(Kernel::Gaussian, &c, &c, 1.0);
+            })
+        });
+
+        // -- blocked Cholesky ---------------------------------------------
+        let mut kj = kernels::kmm(Kernel::Gaussian, &c, 1.0);
+        kj.add_diag(EPS * m as f64);
+        let chol_stats = time_fn(1, reps, || {
+            let _ = chol::cholesky_upper_blocked(&kj, chol::CHOL_BLOCK, None).unwrap();
+        });
+        let chol_pool_stats = time_fn(1, reps, || {
+            let _ = chol::cholesky_upper_blocked(&kj, chol::CHOL_BLOCK, Some(&pool)).unwrap();
+        });
+        let chol_ref_stats = (m <= ref_cap).then(|| {
+            time_fn(0, reps.min(2), || {
+                let _ = chol::cholesky_upper_ref(&kj).unwrap();
+            })
+        });
+
+        // -- blocked multi-RHS TRSM ---------------------------------------
+        let r = chol::cholesky_upper_blocked(&kj, chol::CHOL_BLOCK, None).unwrap();
+        let b = Mat::from_vec(m, nrhs, rng.normals(m * nrhs));
+        let trsm_stats = time_fn(1, reps, || {
+            let y = tri::solve_lower_t_mat(&r, &b);
+            let _ = tri::solve_upper_mat(&r, &y);
+        });
+        let trsm_ref_stats = (m <= ref_cap).then(|| {
+            time_fn(0, reps, || {
+                let y = tri::solve_lower_t_mat_ref(&r, &b);
+                let _ = tri::solve_upper_mat_ref(&r, &y);
+            })
+        });
+
+        // -- full preconditioner (pooled engine, chol + SYRK + chol) ------
+        let eng = Engine::rust_with(EngineOptions {
+            imp: Impl::Pallas,
+            workers,
+        });
+        let kmm_mat = eng.kmm(Kernel::Gaussian, &c, 1.0)?;
+        let precond_stats = time_fn(0, reps, || {
+            let _ = eng.precond(&kmm_mat, 1e-3, EPS).unwrap();
+        });
+
+        let chol_speedup = speedup(chol_ref_stats.map(|s| s.median), chol_stats.median);
+        table.row(&[
+            format!("{m}"),
+            fmt_secs(kmm_stats.median),
+            fmt_opt(kmm_ref_stats.map(|s| s.median)),
+            fmt_secs(chol_stats.median),
+            fmt_opt(chol_ref_stats.map(|s| s.median)),
+            chol_speedup
+                .map(|s| format!("{s:.2}x"))
+                .unwrap_or_else(|| "-".into()),
+            fmt_secs(trsm_stats.median),
+            fmt_opt(trsm_ref_stats.map(|s| s.median)),
+            fmt_secs(precond_stats.median),
+        ]);
+
+        let mut rec: Vec<(&str, Value)> = vec![
+            ("m", Value::num(m as f64)),
+            ("d", Value::num(d as f64)),
+            ("nrhs", Value::num(nrhs as f64)),
+            ("workers", Value::num(workers as f64)),
+            ("kmm", kmm_stats.to_json()),
+            ("kmm_pool", kmm_pool_stats.to_json()),
+            ("chol", chol_stats.to_json()),
+            ("chol_pool", chol_pool_stats.to_json()),
+            ("trsm", trsm_stats.to_json()),
+            ("precond", precond_stats.to_json()),
+        ];
+        if let Some(s) = kmm_ref_stats {
+            rec.push(("kmm_ref", s.to_json()));
+            rec.push((
+                "kmm_speedup_vs_ref",
+                Value::num(s.median / kmm_stats.median),
+            ));
+        }
+        if let Some(s) = chol_ref_stats {
+            rec.push(("chol_ref", s.to_json()));
+            rec.push(("chol_speedup_vs_ref", Value::num(s.median / chol_stats.median)));
+            rec.push((
+                "chol_pool_speedup_vs_ref",
+                Value::num(s.median / chol_pool_stats.median),
+            ));
+        }
+        if let Some(s) = trsm_ref_stats {
+            rec.push(("trsm_ref", s.to_json()));
+            rec.push((
+                "trsm_speedup_vs_ref",
+                Value::num(s.median / trsm_stats.median),
+            ));
+        }
+        sweep_records.push(Value::obj(rec));
+    }
+    table.print();
+
+    // -- pool worker sweep on the largest ref-comparable shape ------------
+    let m_sweep = *ms.last().unwrap().min(&2048);
+    let mut wtable = Table::new(
+        "P2b: setup-path worker sweep (blocked chol + kmm)",
+        &["workers", "chol", "kmm", "chol speedup", "kmm speedup"],
+    );
+    let mut worker_records: Vec<Value> = Vec::new();
+    {
+        let mut rng = Rng::new(93);
+        let c = Mat::from_vec(m_sweep, d, rng.normals(m_sweep * d));
+        let mut kj = kernels::kmm(Kernel::Gaussian, &c, 1.0);
+        kj.add_diag(EPS * m_sweep as f64);
+        let mut chol_base = f64::NAN;
+        let mut kmm_base = f64::NAN;
+        for w in [1usize, 2, 4, 8] {
+            let wpool = if w > 1 {
+                Some(WorkerPool::new("bench-precond-sweep", w)?)
+            } else {
+                None
+            };
+            let p = wpool.as_ref();
+            let chol_stats = time_fn(1, reps, || {
+                let _ = chol::cholesky_upper_blocked(&kj, chol::CHOL_BLOCK, p).unwrap();
+            });
+            let kmm_stats = time_fn(1, reps, || {
+                let _ = kernels::kmm_par(Kernel::Gaussian, &c, 1.0, p);
+            });
+            if w == 1 {
+                chol_base = chol_stats.median;
+                kmm_base = kmm_stats.median;
+            }
+            wtable.row(&[
+                format!("{w}"),
+                fmt_secs(chol_stats.median),
+                fmt_secs(kmm_stats.median),
+                format!("{:.2}x", chol_base / chol_stats.median),
+                format!("{:.2}x", kmm_base / kmm_stats.median),
+            ]);
+            worker_records.push(Value::obj(vec![
+                ("workers", Value::num(w as f64)),
+                ("m", Value::num(m_sweep as f64)),
+                ("chol", chol_stats.to_json()),
+                ("kmm", kmm_stats.to_json()),
+                ("chol_speedup_vs_1", Value::num(chol_base / chol_stats.median)),
+                ("kmm_speedup_vs_1", Value::num(kmm_base / kmm_stats.median)),
+            ]));
+        }
+    }
+    wtable.print();
+
+    let report = Value::obj(vec![
+        ("schema", Value::str("falkon/bench_precond/v1")),
+        ("smoke", Value::Bool(smoke)),
+        ("d", Value::num(d as f64)),
+        ("reps", Value::num(reps as f64)),
+        ("ref_cap", Value::num(ref_cap as f64)),
+        ("sweep", Value::arr(sweep_records)),
+        ("workers_sweep", Value::arr(worker_records)),
+    ]);
+    write_json(&json_path, &report)?;
+    println!("\nwrote {json_path}");
+    Ok(())
+}

@@ -205,12 +205,7 @@ pub fn prepare(engine: &Engine, x: &Mat, config: &FalkonConfig) -> Result<FitSta
         phases.time("precond", || -> Result<(Mat, Mat, Option<Mat>)> {
             let mut kmm = engine.kmm(config.kernel, &sel.c, config.sigma)?;
             if let Some(d) = &sel.d_weights {
-                // K_MM -> D K_MM D (Def. 3)
-                for i in 0..kmm.rows {
-                    for j in 0..kmm.cols {
-                        kmm[(i, j)] *= d[i] * d[j];
-                    }
-                }
+                kmm.scale_sym_diag(d); // K_MM -> D K_MM D (Def. 3)
             }
             match config.precond {
                 PrecondKind::Chol => {

@@ -37,9 +37,7 @@ pub fn precond_eig(kmm: &Mat, lam: f64, rank_tol: f64) -> Result<(Mat, Mat, Mat)
     }
     let mut q = Mat::zeros(m, q_rank);
     for i in 0..m {
-        for j in 0..q_rank {
-            q[(i, j)] = e.vectors[(i, j)];
-        }
+        q.row_mut(i).copy_from_slice(&e.vectors.row(i)[..q_rank]);
     }
     Ok((t, a, q))
 }

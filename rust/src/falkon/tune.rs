@@ -66,11 +66,7 @@ pub fn grid_search(
         )?;
         let mut kmm = engine.kmm(cfg.kernel, &sel.c, sigma)?;
         if let Some(d) = &sel.d_weights {
-            for i in 0..kmm.rows {
-                for j in 0..kmm.cols {
-                    kmm[(i, j)] *= d[i] * d[j];
-                }
-            }
+            kmm.scale_sym_diag(d); // K_MM -> D K_MM D (Def. 3)
         }
         let plan = engine.matvec_plan(cfg.kernel, x, &sel.c, sigma)?;
 

@@ -5,18 +5,24 @@
 //!
 //! Two tiers live here (DESIGN.md §Perf):
 //!
-//! - **reference**: [`Kernel::eval`], [`kernel_block`], [`knm_matvec`],
+//! - **reference**: [`Kernel::eval`], [`kernel_block_ref`], [`knm_matvec`],
 //!   [`predict`] — row-at-a-time, libm `exp`, deliberately simple. These
 //!   are the oracles the property tests pin everything else to.
-//! - **tiled hot path**: [`knm_matvec_blocked`], [`predict_blocked`] —
-//!   panel-of-rows tiles with the ‖x‖²+‖c‖²−2x·c norm expansion (the inner
-//!   loop is a 1×4 register tile of dot products, same structure as the
-//!   Pallas tile), a reusable Kr tile buffer ([`TileScratch`]) and the
-//!   vectorizable [`crate::linalg::vec_ops::fast_exp`]. The runtime's
-//!   `MatvecPlan` drives these every CG iteration.
+//! - **tiled hot path**: [`knm_matvec_blocked`], [`predict_blocked`],
+//!   [`kernel_block`], [`kmm`] — panel-of-rows tiles with the
+//!   ‖x‖²+‖c‖²−2x·c norm expansion (the inner loop is a 1×4 register tile
+//!   of dot products, same structure as the Pallas tile), a reusable Kr
+//!   tile buffer ([`TileScratch`]) and the vectorizable
+//!   [`crate::linalg::vec_ops::fast_exp`] in *every* kernel family's
+//!   exponential arm. The runtime's `MatvecPlan` drives the fused matvec
+//!   every CG iteration; dense blocks (`kernel_block`, `kmm`) write
+//!   panels straight into the output matrix, fan row blocks out over the
+//!   shared [`WorkerPool`], and `kmm` computes only the upper triangle of
+//!   the symmetric K_MM then mirrors it (DESIGN.md §Perf "Setup path").
 
 use crate::linalg::mat::Mat;
 use crate::linalg::vec_ops::{self, fast_exp};
+use crate::util::pool::{chunk_ranges, chunk_ranges_weighted, fan_out, WorkerPool};
 
 /// Row tile height of the fused matvec: one Kr panel is `TILE × M` f64s
 /// (1 MiB at M = 1024), sized to stay L2-resident across its two passes.
@@ -103,11 +109,10 @@ pub fn row_sq_norms(x: &Mat) -> Vec<f64> {
         .collect()
 }
 
-/// Dense kernel block K(X, C) -> (X.rows × C.rows) — reference path.
-///
-/// For the Gaussian kernel this uses the ‖x‖²+‖c‖²−2x·c expansion so the
-/// inner loop is a dot product (same structure as the Pallas tile).
-pub fn kernel_block(kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Mat {
+/// Dense kernel block K(X, C) -> (X.rows × C.rows) — **reference** path
+/// (libm `exp` via [`Kernel::eval`] for the non-Gaussian arms), the
+/// oracle the tiled [`kernel_block`] is property-tested against.
+pub fn kernel_block_ref(kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Mat {
     assert_eq!(x.cols, c.cols, "feature dims differ");
     let mut out = Mat::zeros(x.rows, c.rows);
     match kern {
@@ -138,9 +143,144 @@ pub fn kernel_block(kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Mat {
     out
 }
 
-/// K_MM over the centers.
+/// Dense kernel block K(X, C) on the tiled panel machinery (serial).
+pub fn kernel_block(kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Mat {
+    kernel_block_par(kern, x, c, param, None)
+}
+
+/// [`kernel_block`] with row blocks fanned out over the shared worker
+/// pool. Panels are written straight into the output matrix (no Kr
+/// staging buffer), every exponential arm goes through `fast_exp`, and
+/// each output row is produced by exactly one task — pooled results are
+/// bitwise equal to serial.
+pub fn kernel_block_par(
+    kern: Kernel,
+    x: &Mat,
+    c: &Mat,
+    param: f64,
+    pool: Option<&WorkerPool>,
+) -> Mat {
+    assert_eq!(x.cols, c.cols, "feature dims differ");
+    let (n, m, d) = (x.rows, c.rows, x.cols);
+    let mut out = Mat::zeros(n, m);
+    if n == 0 || m == 0 {
+        return out;
+    }
+    let cn = match kern {
+        Kernel::Gaussian => row_sq_norms(c),
+        _ => Vec::new(),
+    };
+    let xn = match kern {
+        Kernel::Gaussian => row_sq_norms(x),
+        _ => Vec::new(),
+    };
+    let workers = pool.map(|p| p.workers()).unwrap_or(1);
+    let ranges = chunk_ranges(n, workers);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+    let mut rest = out.data.as_mut_slice();
+    let (cn, xn) = (cn.as_slice(), xn.as_slice());
+    for &(lo, hi) in &ranges {
+        let (chunk, tail) = rest.split_at_mut((hi - lo) * m);
+        rest = tail;
+        tasks.push(Box::new(move || {
+            let mut s = lo;
+            while s < hi {
+                let rows = (hi - s).min(DEFAULT_TILE);
+                let xb = &x.data[s * d..(s + rows) * d];
+                let xnr = match kern {
+                    Kernel::Gaussian => &xn[s..s + rows],
+                    _ => &[] as &[f64],
+                };
+                kernel_panel(
+                    kern,
+                    xb,
+                    d,
+                    rows,
+                    xnr,
+                    c,
+                    cn,
+                    0,
+                    param,
+                    &mut chunk[(s - lo) * m..],
+                    m,
+                );
+                s += rows;
+            }
+        }));
+    }
+    fan_out(pool, tasks);
+    out
+}
+
+/// K_MM over the centers (tiled, serial).
 pub fn kmm(kern: Kernel, c: &Mat, param: f64) -> Mat {
-    kernel_block(kern, c, c, param)
+    kmm_par(kern, c, param, None)
+}
+
+/// K_MM on the panel machinery, exploiting symmetry: each row block
+/// computes only columns j ≥ block start (the upper triangle plus a
+/// ≤TILE-wide sliver below the diagonal), then the strict lower triangle
+/// is mirrored from the upper. Row blocks fan out over the pool; the
+/// mirror pass makes K_MM exactly symmetric, which the reference
+/// (computing both sides independently) only is to rounding.
+pub fn kmm_par(kern: Kernel, c: &Mat, param: f64, pool: Option<&WorkerPool>) -> Mat {
+    let (m, d) = (c.rows, c.cols);
+    let mut out = Mat::zeros(m, m);
+    if m == 0 {
+        return out;
+    }
+    let cn = match kern {
+        Kernel::Gaussian => row_sq_norms(c),
+        _ => Vec::new(),
+    };
+    let cn = cn.as_slice();
+    let workers = pool.map(|p| p.workers()).unwrap_or(1);
+    // chunk by panel so a task's panels start at its first row: columns
+    // [panel start, m) then cover everything on/right of the diagonal.
+    // Panel p evaluates ~TILE·(m - p·TILE) kernels, so chunks are
+    // weighted by triangle area rather than panel count.
+    let npanels = m.div_ceil(DEFAULT_TILE);
+    let ranges = chunk_ranges_weighted(npanels, workers, |p| (m - p * DEFAULT_TILE) as u64);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+    let mut rest = out.data.as_mut_slice();
+    let mut consumed = 0usize;
+    for &(plo, phi) in &ranges {
+        let (rlo, rhi) = ((plo * DEFAULT_TILE).min(m), (phi * DEFAULT_TILE).min(m));
+        let (chunk, tail) = rest.split_at_mut((rhi - rlo) * m);
+        rest = tail;
+        debug_assert_eq!(consumed, rlo * m);
+        consumed += chunk.len();
+        tasks.push(Box::new(move || {
+            let mut s = rlo;
+            while s < rhi {
+                let rows = (rhi - s).min(DEFAULT_TILE);
+                let xb = &c.data[s * d..(s + rows) * d];
+                let xn = match kern {
+                    Kernel::Gaussian => &cn[s..s + rows],
+                    _ => &[] as &[f64],
+                };
+                // row i of the panel writes columns [s, m) at offset
+                // (i - rlo)·m + s inside the chunk
+                kernel_panel(
+                    kern,
+                    xb,
+                    d,
+                    rows,
+                    xn,
+                    c,
+                    cn,
+                    s,
+                    param,
+                    &mut chunk[(s - rlo) * m + s..],
+                    m,
+                );
+                s += rows;
+            }
+        }));
+    }
+    fan_out(pool, tasks);
+    out.mirror_upper();
+    out
 }
 
 /// The FALKON block op w = Krᵀ(mask ⊙ (Kr·u + v)) computed on the fly
@@ -226,12 +366,17 @@ impl TileScratch {
     }
 }
 
-/// Fill `kr[0 .. rows*M]` with K(X_panel, C). `xb` is the row-major
-/// `rows × d` panel, `xn`/`cn` the precomputed squared row norms (only
-/// read by the Gaussian kernel). The Gaussian/linear inner loop is a 1×4
+/// Fill a panel of kernel values K(X_panel, C[j0..]) into `out`. `xb` is
+/// the row-major `rows × d` panel, `xn`/`cn` the precomputed squared row
+/// norms (only read by the Gaussian kernel). Row `i` of the panel is
+/// written at `out[i*ldo .. i*ldo + (M - j0)]` — `ldo` lets callers
+/// stream panels straight into a larger matrix (the dense `kernel_block`
+/// / `kmm` paths) and `j0` restricts to columns on/after the diagonal
+/// (the `kmm` symmetry trick). The Gaussian/linear inner loop is a 1×4
 /// register tile of dot products over four center rows; the exponentials
 /// run in a separate branch-free pass over the finished row so LLVM can
 /// vectorize them (`fast_exp`).
+#[allow(clippy::too_many_arguments)]
 fn kernel_panel(
     kern: Kernel,
     xb: &[f64],
@@ -240,13 +385,17 @@ fn kernel_panel(
     xn: &[f64],
     c: &Mat,
     cn: &[f64],
+    j0: usize,
     param: f64,
-    kr: &mut [f64],
+    out: &mut [f64],
+    ldo: usize,
 ) {
     let m = c.rows;
+    let w = m - j0;
     debug_assert_eq!(xb.len(), rows * d);
     debug_assert_eq!(c.cols, d);
-    debug_assert!(kr.len() >= rows * m);
+    debug_assert!(rows == 0 || out.len() >= (rows - 1) * ldo + w);
+    debug_assert!(ldo >= w);
     match kern {
         Kernel::Gaussian => {
             debug_assert_eq!(xn.len(), rows);
@@ -255,8 +404,8 @@ fn kernel_panel(
             for i in 0..rows {
                 let xr = &xb[i * d..(i + 1) * d];
                 let xni = xn[i];
-                let out = &mut kr[i * m..(i + 1) * m];
-                let mut j = 0;
+                let orow = &mut out[i * ldo..i * ldo + w];
+                let mut j = j0;
                 while j + 4 <= m {
                     let c0 = c.row(j);
                     let c1 = c.row(j + 1);
@@ -270,18 +419,18 @@ fn kernel_panel(
                         a2 += xv * c2[k];
                         a3 += xv * c3[k];
                     }
-                    out[j] = (xni + cn[j] - 2.0 * a0).max(0.0);
-                    out[j + 1] = (xni + cn[j + 1] - 2.0 * a1).max(0.0);
-                    out[j + 2] = (xni + cn[j + 2] - 2.0 * a2).max(0.0);
-                    out[j + 3] = (xni + cn[j + 3] - 2.0 * a3).max(0.0);
+                    orow[j - j0] = (xni + cn[j] - 2.0 * a0).max(0.0);
+                    orow[j - j0 + 1] = (xni + cn[j + 1] - 2.0 * a1).max(0.0);
+                    orow[j - j0 + 2] = (xni + cn[j + 2] - 2.0 * a2).max(0.0);
+                    orow[j - j0 + 3] = (xni + cn[j + 3] - 2.0 * a3).max(0.0);
                     j += 4;
                 }
                 while j < m {
                     let dotv = vec_ops::dot(xr, c.row(j));
-                    out[j] = (xni + cn[j] - 2.0 * dotv).max(0.0);
+                    orow[j - j0] = (xni + cn[j] - 2.0 * dotv).max(0.0);
                     j += 1;
                 }
-                for v in out.iter_mut() {
+                for v in orow.iter_mut() {
                     *v = fast_exp(-*v * inv);
                 }
             }
@@ -290,16 +439,16 @@ fn kernel_panel(
             let inv = 1.0 / param;
             for i in 0..rows {
                 let xr = &xb[i * d..(i + 1) * d];
-                let out = &mut kr[i * m..(i + 1) * m];
-                for j in 0..m {
+                let orow = &mut out[i * ldo..i * ldo + w];
+                for j in j0..m {
                     let cr = c.row(j);
                     let mut l1 = 0.0;
                     for k in 0..d {
                         l1 += (xr[k] - cr[k]).abs();
                     }
-                    out[j] = -l1 * inv;
+                    orow[j - j0] = -l1 * inv;
                 }
-                for v in out.iter_mut() {
+                for v in orow.iter_mut() {
                     *v = fast_exp(*v);
                 }
             }
@@ -307,8 +456,8 @@ fn kernel_panel(
         Kernel::Linear => {
             for i in 0..rows {
                 let xr = &xb[i * d..(i + 1) * d];
-                let out = &mut kr[i * m..(i + 1) * m];
-                let mut j = 0;
+                let orow = &mut out[i * ldo..i * ldo + w];
+                let mut j = j0;
                 while j + 4 <= m {
                     let c0 = c.row(j);
                     let c1 = c.row(j + 1);
@@ -322,14 +471,14 @@ fn kernel_panel(
                         a2 += xv * c2[k];
                         a3 += xv * c3[k];
                     }
-                    out[j] = a0;
-                    out[j + 1] = a1;
-                    out[j + 2] = a2;
-                    out[j + 3] = a3;
+                    orow[j - j0] = a0;
+                    orow[j - j0 + 1] = a1;
+                    orow[j - j0 + 2] = a2;
+                    orow[j - j0 + 3] = a3;
                     j += 4;
                 }
                 while j < m {
-                    out[j] = vec_ops::dot(xr, c.row(j));
+                    orow[j - j0] = vec_ops::dot(xr, c.row(j));
                     j += 1;
                 }
             }
@@ -379,7 +528,7 @@ pub fn knm_matvec_blocked(
         let rows = (n - s).min(tile);
         let kr = &mut scratch.kr[..rows * m];
         let xb = &x.data[s * d..(s + rows) * d];
-        kernel_panel(kern, xb, d, rows, &xn[s..s + rows], c, cn, param, kr);
+        kernel_panel(kern, xb, d, rows, &xn[s..s + rows], c, cn, 0, param, kr, m);
         // fused stage 1: y = mask ⊙ (Kr·u + v)
         for i in 0..rows {
             let gi = s + i;
@@ -407,41 +556,47 @@ pub fn knm_matvec_blocked(
 /// row tile, then a dot against α — the serving analogue of
 /// [`knm_matvec_blocked`].
 pub fn predict_blocked(kern: Kernel, x: &Mat, c: &Mat, alpha: &[f64], param: f64) -> Vec<f64> {
-    predict_blocked_par(kern, x, c, alpha, param, 1)
+    predict_blocked_pool(kern, x, c, alpha, param, None)
 }
 
-/// [`predict_blocked`] with the rows fanned out across `workers` scoped
-/// threads, each with its own tile scratch. Small inputs (fewer rows than
-/// one tile per worker) fall back to the serial path, so per-row results
-/// are bitwise identical to the serial tiling regardless of `workers`.
-pub fn predict_blocked_par(
+/// [`predict_blocked`] fanned out over the shared worker pool — the
+/// serving path (`Engine::predict`), so per-request latency pays zero
+/// thread spawns. Each output row is written by exactly one task with
+/// the same per-row arithmetic as the serial tiling, so results are
+/// bitwise identical to [`predict_blocked`] regardless of the pool.
+pub fn predict_blocked_pool(
     kern: Kernel,
     x: &Mat,
     c: &Mat,
     alpha: &[f64],
     param: f64,
-    workers: usize,
+    pool: Option<&WorkerPool>,
 ) -> Vec<f64> {
     let (n, m) = (x.rows, c.rows);
     assert_eq!(c.cols, x.cols, "feature dims differ");
     assert_eq!(alpha.len(), m);
     let cn = row_sq_norms(c);
     let mut out = vec![0.0; n];
-    let workers = workers.max(1).min(n.div_ceil(DEFAULT_TILE).max(1));
-    if workers <= 1 {
-        predict_range(kern, x, c, &cn, alpha, param, 0, n, &mut out);
-    } else {
-        let chunk = n.div_ceil(workers);
-        std::thread::scope(|sc| {
-            for (ci, o) in out.chunks_mut(chunk).enumerate() {
-                let cnr = cn.as_slice();
-                sc.spawn(move || {
-                    let start = ci * chunk;
-                    predict_range(kern, x, c, cnr, alpha, param, start, start + o.len(), o);
-                });
-            }
-        });
+    if n == 0 {
+        return out;
     }
+    // no point fanning out fewer rows than one tile per worker
+    let workers = pool
+        .map(|p| p.workers())
+        .unwrap_or(1)
+        .min(n.div_ceil(DEFAULT_TILE).max(1));
+    let ranges = chunk_ranges(n, workers);
+    let cn = cn.as_slice();
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+    let mut rest = out.as_mut_slice();
+    for &(lo, hi) in &ranges {
+        let (chunk, tail) = rest.split_at_mut(hi - lo);
+        rest = tail;
+        tasks.push(Box::new(move || {
+            predict_range(kern, x, c, cn, alpha, param, lo, hi, chunk);
+        }));
+    }
+    fan_out(pool, tasks);
     out
 }
 
@@ -478,7 +633,7 @@ fn predict_range(
         let kr = &mut scratch.kr[..rows * m];
         let xb = &x.data[s * d..(s + rows) * d];
         let xnr = &xn[s - start..s - start + rows];
-        kernel_panel(kern, xb, d, rows, xnr, c, cn, param, kr);
+        kernel_panel(kern, xb, d, rows, xnr, c, cn, 0, param, kr, m);
         for i in 0..rows {
             out[s - start + i] = vec_ops::dot(&kr[i * m..(i + 1) * m], alpha);
         }
@@ -529,15 +684,71 @@ mod tests {
             let c = Mat::from_vec(m, d, g.normal_vec(m * d));
             let p = g.f64_in(0.5, 3.0);
             for kern in KERNELS {
-                let blk = kernel_block(kern, &x, &c, p);
-                for i in 0..b {
-                    for j in 0..m {
-                        let e = kern.eval(x.row(i), c.row(j), p);
-                        assert!((blk[(i, j)] - e).abs() < 1e-10);
+                for blk in [kernel_block_ref(kern, &x, &c, p), kernel_block(kern, &x, &c, p)] {
+                    for i in 0..b {
+                        for j in 0..m {
+                            let e = kern.eval(x.row(i), c.row(j), p);
+                            assert!((blk[(i, j)] - e).abs() < 1e-10);
+                        }
                     }
                 }
             }
         });
+    }
+
+    #[test]
+    fn tiled_block_matches_reference() {
+        check("tiled kernel_block = reference", 25, |g| {
+            let (b, m, d) = (g.usize_in(1, 30), g.usize_in(1, 16), g.usize_in(1, 7));
+            let x = Mat::from_vec(b, d, g.normal_vec(b * d));
+            let c = Mat::from_vec(m, d, g.normal_vec(m * d));
+            let p = g.f64_in(0.5, 3.0);
+            for kern in KERNELS {
+                let want = kernel_block_ref(kern, &x, &c, p);
+                let got = kernel_block(kern, &x, &c, p);
+                assert!(got.max_abs_diff(&want) < 1e-10, "{kern:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn tiled_kmm_matches_reference_and_is_symmetric() {
+        // sizes around the tile/unroll widths: 1, ragged, multiple tiles
+        let mut rng = crate::util::rng::Rng::new(43);
+        for m in [1usize, 3, 37, DEFAULT_TILE, 2 * DEFAULT_TILE + 11] {
+            let d = 5;
+            let c = Mat::from_vec(m, d, rng.normals(m * d));
+            for kern in KERNELS {
+                let want = kernel_block_ref(kern, &c, &c, 1.3);
+                let got = kmm(kern, &c, 1.3);
+                assert!(got.max_abs_diff(&want) < 1e-10, "{kern:?} m={m}");
+                for i in 0..m {
+                    for j in 0..m {
+                        assert_eq!(got[(i, j)], got[(j, i)], "{kern:?} mirror at {i},{j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_dense_blocks_are_bitwise_equal_to_serial() {
+        let pool = crate::util::pool::WorkerPool::new("test-kern", 4).unwrap();
+        let mut rng = crate::util::rng::Rng::new(44);
+        let (n, m, d) = (3 * DEFAULT_TILE + 7, 41, 6);
+        let x = Mat::from_vec(n, d, rng.normals(n * d));
+        let c = Mat::from_vec(m, d, rng.normals(m * d));
+        for kern in KERNELS {
+            let serial = kernel_block(kern, &x, &c, 1.1);
+            let pooled = kernel_block_par(kern, &x, &c, 1.1, Some(&pool));
+            assert_eq!(serial.data, pooled.data, "{kern:?} kernel_block");
+        }
+        let big_c = Mat::from_vec(n, d, rng.normals(n * d));
+        for kern in KERNELS {
+            let serial = kmm(kern, &big_c, 0.9);
+            let pooled = kmm_par(kern, &big_c, 0.9, Some(&pool));
+            assert_eq!(serial.data, pooled.data, "{kern:?} kmm");
+        }
     }
 
     #[test]
@@ -699,6 +910,23 @@ mod tests {
     }
 
     #[test]
+    fn pooled_predict_matches_serial_bitwise() {
+        let pool = crate::util::pool::WorkerPool::new("test-predict", 4).unwrap();
+        let mut rng = crate::util::rng::Rng::new(47);
+        let (b, m, d) = (3 * DEFAULT_TILE + 19, 29, 5);
+        let x = Mat::from_vec(b, d, rng.normals(b * d));
+        let c = Mat::from_vec(m, d, rng.normals(m * d));
+        let alpha = rng.normals(m);
+        for kern in KERNELS {
+            let serial = predict_blocked(kern, &x, &c, &alpha, 1.2);
+            let pooled = predict_blocked_pool(kern, &x, &c, &alpha, 1.2, Some(&pool));
+            assert_eq!(serial, pooled, "{kern:?}");
+            let no_pool = predict_blocked_pool(kern, &x, &c, &alpha, 1.2, None);
+            assert_eq!(serial, no_pool, "{kern:?} inline");
+        }
+    }
+
+    #[test]
     fn parallel_predict_matches_serial() {
         // big enough that the row chunks actually fan out (n > tile*workers)
         let mut rng = crate::util::rng::Rng::new(37);
@@ -709,13 +937,15 @@ mod tests {
         for kern in KERNELS {
             let serial = predict_blocked(kern, &x, &c, &alpha, 1.2);
             for workers in [2, 3, 8] {
-                let par = predict_blocked_par(kern, &x, &c, &alpha, 1.2, workers);
+                let pool = crate::util::pool::WorkerPool::new("test-predict", workers).unwrap();
+                let par = predict_blocked_pool(kern, &x, &c, &alpha, 1.2, Some(&pool));
                 assert_eq!(par, serial, "{kern:?} workers={workers} must be bitwise equal");
             }
         }
         // and against the row-at-a-time reference
         let want = predict(Kernel::Gaussian, &x, &c, &alpha, 1.2);
-        let got = predict_blocked_par(Kernel::Gaussian, &x, &c, &alpha, 1.2, 4);
+        let pool = crate::util::pool::WorkerPool::new("test-predict", 4).unwrap();
+        let got = predict_blocked_pool(Kernel::Gaussian, &x, &c, &alpha, 1.2, Some(&pool));
         assert!(vec_ops::max_abs_diff(&got, &want) < 1e-10);
     }
 

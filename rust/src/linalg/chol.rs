@@ -1,11 +1,29 @@
 //! Cholesky factorization (upper-triangular convention, matching MATLAB's
 //! `chol` and therefore Alg. 1/2 of the paper line-for-line).
 //!
-//! The runtime normally gets its factors from the `precond` XLA artifact;
-//! this implementation backs (a) the pure-Rust fallback backend, (b) the
-//! exact-KRR / Nyström-direct baselines, and (c) cross-checks in tests.
+//! Two tiers (DESIGN.md §Perf, "Setup path"):
+//!
+//! - [`cholesky_upper_ref`] — the seed's scalar loop, O(M³) with a
+//!   column-strided inner product. Kept as the property-test oracle.
+//! - [`cholesky_upper`] / [`cholesky_upper_blocked`] — right-looking
+//!   blocked factorization: scalar factor of an `nb × nb` diagonal block,
+//!   row-wise TRSM of the panel to its right, then a SYRK rank-`nb`
+//!   update of the trailing matrix whose inner loop is a contiguous
+//!   `axpy` and whose rows fan out over the shared [`WorkerPool`]. This
+//!   is the per-fit O(M³) cost of the preconditioner at M = √n, so it
+//!   gets the same tile/fuse/pool treatment as the matvec hot path.
+//!
+//! Pooled and serial runs are bitwise identical: every trailing row is
+//! updated by exactly one task with the same fixed panel-row order.
 
 use super::mat::Mat;
+use super::vec_ops;
+use crate::util::pool::{chunk_ranges_weighted, fan_out, WorkerPool};
+
+/// Default diagonal-block size: the `nb × trailing` TRSM panel that the
+/// SYRK stage re-reads stays L2-resident up to M = 4096 (64·4096 f64 =
+/// 2 MiB).
+pub const CHOL_BLOCK: usize = 64;
 
 #[derive(Debug)]
 pub enum CholError {
@@ -27,8 +45,113 @@ impl std::fmt::Display for CholError {
 
 impl std::error::Error for CholError {}
 
-/// Upper-triangular R with RᵀR = A. A must be symmetric positive definite.
+/// Upper-triangular R with RᵀR = A (blocked, serial).
 pub fn cholesky_upper(a: &Mat) -> Result<Mat, CholError> {
+    cholesky_upper_blocked(a, CHOL_BLOCK, None)
+}
+
+/// Right-looking blocked Cholesky with explicit block size and optional
+/// worker pool for the trailing SYRK updates. The block size is exposed
+/// so property tests exercise ragged edges (M not a multiple of `nb`,
+/// M < `nb`, M = 1) that [`CHOL_BLOCK`] never hits at test scale.
+pub fn cholesky_upper_blocked(
+    a: &Mat,
+    nb: usize,
+    pool: Option<&WorkerPool>,
+) -> Result<Mat, CholError> {
+    if a.rows != a.cols {
+        return Err(CholError::NotSquare);
+    }
+    let n = a.rows;
+    let nb = nb.max(1);
+    let mut r = Mat::zeros(n, n);
+    for i in 0..n {
+        r.row_mut(i)[i..].copy_from_slice(&a.row(i)[i..]);
+    }
+    let data = &mut r.data;
+    let mut k0 = 0;
+    while k0 < n {
+        let k1 = (k0 + nb).min(n);
+
+        // 1) scalar factor of the diagonal block: contributions from
+        // earlier panels were already subtracted by their SYRK updates,
+        // so only rows t in [k0, i) remain.
+        for i in k0..k1 {
+            let (head, tail) = data.split_at_mut(i * n);
+            let ri = &mut tail[..n];
+            let mut s = ri[i];
+            for t in k0..i {
+                let v = head[t * n + i];
+                s -= v * v;
+            }
+            if s <= 0.0 || !s.is_finite() {
+                return Err(CholError::NotPositiveDefinite(i));
+            }
+            let rii = s.sqrt();
+            ri[i] = rii;
+            for j in (i + 1)..k1 {
+                let mut s = ri[j];
+                for t in k0..i {
+                    s -= head[t * n + i] * head[t * n + j];
+                }
+                ri[j] = s / rii;
+            }
+        }
+
+        if k1 == n {
+            break;
+        }
+
+        // 2) panel TRSM: R[k0..k1, k1..n] = R_diag⁻ᵀ · A'[k0..k1, k1..n],
+        // row by row with a contiguous axpy inner loop.
+        for i in k0..k1 {
+            let (head, tail) = data.split_at_mut(i * n);
+            let ri = &mut tail[..n];
+            for t in k0..i {
+                let c = head[t * n + i];
+                vec_ops::axpy(-c, &head[t * n + k1..t * n + n], &mut ri[k1..]);
+            }
+            let inv = 1.0 / ri[i];
+            for v in &mut ri[k1..] {
+                *v *= inv;
+            }
+        }
+
+        // 3) SYRK trailing update, rows fanned out over the pool:
+        // R[i, i..n] -= Σ_t R[t, i] · R[t, i..n] for i in [k1, n).
+        let (head, trail) = data.split_at_mut(k1 * n);
+        let panel = &head[k0 * n..]; // rows k0..k1, stride n
+        let nrows = n - k1;
+        let workers = pool.map(|p| p.workers()).unwrap_or(1);
+        // trailing row i costs ~(n - i): weight the chunks so workers
+        // get equal flops, not equal row counts
+        let ranges = chunk_ranges_weighted(nrows, workers, |li| (n - (k1 + li)) as u64);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+        let mut rest = trail;
+        for &(lo, hi) in &ranges {
+            let (chunk, tail_rest) = rest.split_at_mut((hi - lo) * n);
+            rest = tail_rest;
+            tasks.push(Box::new(move || {
+                for li in 0..(hi - lo) {
+                    let i = k1 + lo + li; // absolute row index
+                    let row = &mut chunk[li * n + i..li * n + n];
+                    for t in 0..(k1 - k0) {
+                        let c = panel[t * n + i];
+                        vec_ops::axpy(-c, &panel[t * n + i..t * n + n], row);
+                    }
+                }
+            }));
+        }
+        fan_out(pool, tasks);
+
+        k0 = k1;
+    }
+    Ok(r)
+}
+
+/// Reference scalar factorization — the seed's loop, kept as the oracle
+/// the blocked path is property-tested against (pivot index included).
+pub fn cholesky_upper_ref(a: &Mat) -> Result<Mat, CholError> {
     if a.rows != a.cols {
         return Err(CholError::NotSquare);
     }
@@ -65,28 +188,19 @@ pub fn solve_spd(a: &Mat, b: &[f64]) -> Result<Vec<f64>, CholError> {
     Ok(super::tri::solve_upper(&r, &y))
 }
 
-/// Solve A X = B column-wise for SPD A.
+/// Solve A X = B for SPD A: blocked factorization + blocked multi-RHS
+/// triangular solves (the seed gathered/scattered one column at a time).
 pub fn solve_spd_mat(a: &Mat, b: &Mat) -> Result<Mat, CholError> {
     let r = cholesky_upper(a)?;
-    let mut out = Mat::zeros(b.rows, b.cols);
-    let mut col = vec![0.0; b.rows];
-    for j in 0..b.cols {
-        for i in 0..b.rows {
-            col[i] = b[(i, j)];
-        }
-        let y = super::tri::solve_lower_t(&r, &col);
-        let x = super::tri::solve_upper(&r, &y);
-        for i in 0..b.rows {
-            out[(i, j)] = x[i];
-        }
-    }
-    Ok(out)
+    let y = super::tri::solve_lower_t_mat(&r, b);
+    Ok(super::tri::solve_upper_mat(&r, &y))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::linalg::gemm::{gram_t, matmul, matvec};
+    use crate::util::pool::WorkerPool;
     use crate::util::ptest::check;
 
     fn random_spd(g: &mut crate::util::ptest::Gen, n: usize) -> Mat {
@@ -115,6 +229,85 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matches_reference_ragged_sizes() {
+        // block sizes around/below/above n exercise ragged final panels,
+        // n < nb, and n = 1
+        check("blocked chol = reference chol", 25, |g| {
+            let n = g.usize_in(1, 24);
+            let a = random_spd(g, n);
+            let want = cholesky_upper_ref(&a).unwrap();
+            for nb in [1usize, 2, 3, 5, 7, 64] {
+                let got = cholesky_upper_blocked(&a, nb, None).unwrap();
+                assert!(
+                    got.max_abs_diff(&want) < 1e-10,
+                    "n={n} nb={nb} diff={}",
+                    got.max_abs_diff(&want)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn blocked_crosses_default_block() {
+        // one deterministic case bigger than CHOL_BLOCK so the shipped
+        // constant itself is exercised
+        let mut rng = crate::util::rng::Rng::new(41);
+        let n = CHOL_BLOCK + 37;
+        let a = {
+            let m = Mat::from_vec(n, n, rng.normals(n * n));
+            let mut s = gram_t(&m);
+            s.add_diag(n as f64);
+            s
+        };
+        let want = cholesky_upper_ref(&a).unwrap();
+        let got = cholesky_upper(&a).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn pooled_is_bitwise_equal_to_serial() {
+        let mut rng = crate::util::rng::Rng::new(42);
+        let n = 150;
+        let a = {
+            let m = Mat::from_vec(n, n, rng.normals(n * n));
+            let mut s = gram_t(&m);
+            s.add_diag(n as f64);
+            s
+        };
+        let serial = cholesky_upper_blocked(&a, 32, None).unwrap();
+        let pool = WorkerPool::new("test-chol", 4).unwrap();
+        let pooled = cholesky_upper_blocked(&a, 32, Some(&pool)).unwrap();
+        assert_eq!(
+            serial.data, pooled.data,
+            "pool-parallel trailing updates must be bitwise deterministic"
+        );
+    }
+
+    #[test]
+    fn blocked_agrees_on_pivot_index() {
+        check("blocked chol pivot = reference pivot", 20, |g| {
+            let n = g.usize_in(2, 18);
+            let mut a = random_spd(g, n);
+            // poison one pivot hard enough that rounding cannot flip it
+            let p = g.usize_in(0, n);
+            a[(p, p)] = -(10.0 * n as f64);
+            let want = cholesky_upper_ref(&a);
+            for nb in [1usize, 3, 4, 64] {
+                let got = cholesky_upper_blocked(&a, nb, None);
+                match (got, &want) {
+                    (
+                        Err(CholError::NotPositiveDefinite(i)),
+                        Err(CholError::NotPositiveDefinite(j)),
+                    ) => {
+                        assert_eq!(i, *j, "n={n} nb={nb}");
+                    }
+                    other => panic!("expected matching pivot failures, got {other:?}"),
+                }
+            }
+        });
+    }
+
+    #[test]
     fn known_factor() {
         let a = Mat::from_rows(&[vec![4.0, 2.0], vec![2.0, 3.0]]);
         let r = cholesky_upper(&a).unwrap();
@@ -130,12 +323,20 @@ mod tests {
             cholesky_upper(&a),
             Err(CholError::NotPositiveDefinite(1))
         ));
+        assert!(matches!(
+            cholesky_upper_ref(&a),
+            Err(CholError::NotPositiveDefinite(1))
+        ));
     }
 
     #[test]
     fn rejects_non_square() {
         assert!(matches!(
             cholesky_upper(&Mat::zeros(2, 3)),
+            Err(CholError::NotSquare)
+        ));
+        assert!(matches!(
+            cholesky_upper_ref(&Mat::zeros(2, 3)),
             Err(CholError::NotSquare)
         ));
     }

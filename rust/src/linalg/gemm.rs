@@ -9,6 +9,8 @@
 //! the blocked paths are property-tested against (DESIGN.md §Perf).
 
 use super::mat::Mat;
+use super::vec_ops;
+use crate::util::pool::{chunk_ranges_weighted, fan_out, WorkerPool};
 
 /// k-panel height: a KC×cols slice of B is revisited across all rows of A.
 const KC: usize = 128;
@@ -16,6 +18,9 @@ const KC: usize = 128;
 const JC: usize = 512;
 /// i-panel height for `gram_t`: rows of C kept hot while A streams by.
 const IC: usize = 128;
+/// i-panel height for `syrk_t`: the hot row block of A revisited while
+/// every row j ≥ i0 streams by once per panel (32 rows × 4096 cols = 1 MiB).
+const SYRK_IC: usize = 32;
 
 /// C = A · B (cache-blocked).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
@@ -97,11 +102,7 @@ pub(crate) fn gram_t_blocked(a: &Mat, ic: usize) -> Mat {
         }
         ii = iend;
     }
-    for i in 0..n {
-        for j in (i + 1)..n {
-            c[(j, i)] = c[(i, j)];
-        }
-    }
+    c.mirror_upper();
     c
 }
 
@@ -124,6 +125,49 @@ pub fn gram_t_ref(a: &Mat) -> Mat {
             c[(j, i)] = c[(i, j)];
         }
     }
+    c
+}
+
+/// C = A · Aᵀ (symmetric; upper triangle computed then mirrored). The
+/// preconditioner's T·Tᵀ/M product sits on this — exactly half the
+/// multiply count of `matmul(&t, &t.t())`, with both operands read as
+/// contiguous rows of A.
+pub fn syrk_t(a: &Mat) -> Mat {
+    syrk_t_par(a, None)
+}
+
+/// [`syrk_t`] with the output row panels fanned out over the shared
+/// worker pool. Each row of C is written by exactly one task with a fixed
+/// dot-product order, so pooled results are bitwise equal to serial.
+pub fn syrk_t_par(a: &Mat, pool: Option<&WorkerPool>) -> Mat {
+    let n = a.rows;
+    let mut c = Mat::zeros(n, n);
+    let workers = pool.map(|p| p.workers()).unwrap_or(1);
+    // row panels: tasks own disjoint row ranges of C; within a task the
+    // SYRK_IC×cols block of A stays hot while rows j ≥ i stream through.
+    // Row i computes n - i dots, so chunks are weighted by triangle area.
+    let ranges = chunk_ranges_weighted(n, workers, |i| (n - i) as u64);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+    let mut rest = c.data.as_mut_slice();
+    for &(lo, hi) in &ranges {
+        let (chunk, tail) = rest.split_at_mut((hi - lo) * n);
+        rest = tail;
+        tasks.push(Box::new(move || {
+            let mut i0 = lo;
+            while i0 < hi {
+                let i1 = (i0 + SYRK_IC).min(hi);
+                for j in i0..n {
+                    let aj = a.row(j);
+                    for i in i0..i1.min(j + 1) {
+                        chunk[(i - lo) * n + j] = vec_ops::dot(a.row(i), aj);
+                    }
+                }
+                i0 = i1;
+            }
+        }));
+    }
+    fan_out(pool, tasks);
+    c.mirror_upper();
     c
 }
 
@@ -231,6 +275,43 @@ mod tests {
         let (r, c) = (40, 150);
         let a = Mat::from_vec(r, c, rng.normals(r * c));
         assert!(gram_t(&a).max_abs_diff(&gram_t_ref(&a)) < 1e-9);
+    }
+
+    #[test]
+    fn syrk_matches_matmul_transpose() {
+        check("A·Aᵀ = matmul(A, Aᵀ)", 25, |g| {
+            let (r, c) = (g.usize_in(1, 14), g.usize_in(1, 14));
+            let a = Mat::from_vec(r, c, g.normal_vec(r * c));
+            let want = matmul_ref(&a, &a.t());
+            let got = syrk_t(&a);
+            assert!(got.max_abs_diff(&want) < 1e-10);
+            // exactly symmetric by construction
+            for i in 0..r {
+                for j in 0..r {
+                    assert_eq!(got[(i, j)], got[(j, i)]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn syrk_pooled_is_bitwise_equal_to_serial() {
+        let mut rng = crate::util::rng::Rng::new(19);
+        let n = 97; // not a multiple of SYRK_IC or the worker count
+        let a = Mat::from_vec(n, 33, rng.normals(n * 33));
+        let serial = syrk_t(&a);
+        let pool = crate::util::pool::WorkerPool::new("test-syrk", 4).unwrap();
+        let pooled = syrk_t_par(&a, Some(&pool));
+        assert_eq!(serial.data, pooled.data);
+    }
+
+    #[test]
+    fn syrk_crosses_default_panel() {
+        let mut rng = crate::util::rng::Rng::new(20);
+        let n = 2 * SYRK_IC + 11;
+        let a = Mat::from_vec(n, 40, rng.normals(n * 40));
+        let want = matmul(&a, &a.t());
+        assert!(syrk_t(&a).max_abs_diff(&want) < 1e-9);
     }
 
     #[test]

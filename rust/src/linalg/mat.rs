@@ -103,6 +103,32 @@ impl Mat {
         }
     }
 
+    /// Copy the strict upper triangle below the diagonal, making the
+    /// matrix exactly symmetric — the finishing pass of the
+    /// upper-triangle-only products (`gram_t`, `syrk_t`, `kmm`).
+    pub fn mirror_upper(&mut self) {
+        assert_eq!(self.rows, self.cols, "mirror_upper: matrix not square");
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                self[(j, i)] = self[(i, j)];
+            }
+        }
+    }
+
+    /// A → D·A·D for diagonal D given as a vector — the Def. 3
+    /// leverage-score reweighting K_MM → D·K_MM·D, applied one
+    /// contiguous row at a time.
+    pub fn scale_sym_diag(&mut self, d: &[f64]) {
+        assert_eq!(self.rows, self.cols, "scale_sym_diag: matrix not square");
+        assert_eq!(d.len(), self.rows, "scale_sym_diag: diagonal length");
+        for i in 0..self.rows {
+            let di = d[i];
+            for (v, &dj) in self.row_mut(i).iter_mut().zip(d) {
+                *v *= di * dj;
+            }
+        }
+    }
+
     /// Max |a_ij - b_ij|.
     pub fn max_abs_diff(&self, other: &Mat) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
@@ -228,5 +254,12 @@ mod tests {
         m.add_diag(2.0);
         assert_eq!(m[(1, 1)], 3.0);
         assert_eq!(m[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn scale_sym_diag_is_dad() {
+        let mut m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        m.scale_sym_diag(&[2.0, 10.0]);
+        assert_eq!(m.data, vec![4.0, 40.0, 60.0, 400.0]);
     }
 }

@@ -12,18 +12,21 @@
 //! - **Rust**: row blocks sliced and their squared row norms precomputed at
 //!   *plan construction* (the seed re-sliced the whole dataset on every CG
 //!   iteration), served by the tiled kernels with per-thread reusable Kr
-//!   tile buffers, and fanned out over a **persistent channel-fed worker
-//!   pool** spawned once per plan — a 20-iteration fit spawns threads once,
-//!   not 20×. See DESIGN.md §Perf.
+//!   tile buffers, and fanned out over the engine's **shared persistent
+//!   worker pool** (`util/pool.rs`) — spawned once per engine and serving
+//!   the setup path (K_MM panels, blocked Cholesky, SYRK) as well as the
+//!   applies, so a 20-iteration fit spawns threads once, not 20×. See
+//!   DESIGN.md §Perf.
 
 use crate::kernels::{self, Kernel};
 use crate::linalg::mat::Mat;
-use crate::linalg::{chol, tri};
+use crate::linalg::{chol, gemm, tri};
 #[cfg(feature = "xla")]
 use crate::runtime::exe::{literal_from_f32, literal_scalar, literal_to_f32, Exe};
 #[cfg(feature = "xla")]
 use crate::runtime::spec::Op;
 use crate::runtime::spec::{Impl, Registry};
+use crate::util::pool::{chunk_ranges, WorkerPool};
 #[cfg(feature = "xla")]
 use anyhow::Context;
 use anyhow::{anyhow, Result};
@@ -32,8 +35,7 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 #[cfg(feature = "xla")]
 use std::rc::Rc;
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Rows per Rust-engine block — the unit of work distribution across the
 /// worker pool (the cache-level tiling inside a block is finer; see
@@ -45,8 +47,9 @@ const ROW_BLOCK: usize = 1024;
 pub struct EngineOptions {
     /// kernel-op implementation to request from the registry
     pub imp: Impl,
-    /// worker threads for the blocked matvec. Effective on the Rust
-    /// engine; the XLA path stays single-threaded because the `xla`
+    /// worker threads for the blocked matvec *and* the setup-path linear
+    /// algebra (K_MM, preconditioner factorization). Effective on the
+    /// Rust engine; the XLA path stays single-threaded because the `xla`
     /// crate's client handle is an `Rc` (per-thread) — XLA itself can
     /// still use intra-op threads inside one executable.
     pub workers: usize,
@@ -63,8 +66,16 @@ impl Default for EngineOptions {
 
 /// Which compute path serves the ops.
 pub enum Engine {
-    /// Pure-Rust f64 tiled kernels (no artifacts needed).
-    Rust { opts: EngineOptions },
+    /// Pure-Rust f64 tiled kernels (no artifacts needed). With
+    /// `workers > 1` the engine owns one shared [`WorkerPool`]
+    /// (`util/pool.rs`) serving *both* the per-iteration matvec applies
+    /// and the setup-path linear algebra (K_MM panels, blocked Cholesky
+    /// trailing updates, SYRK) — threads are spawned once per engine, not
+    /// per plan or per fit.
+    Rust {
+        opts: EngineOptions,
+        pool: Option<Arc<WorkerPool>>,
+    },
     /// AOT XLA artifacts via PJRT (production).
     #[cfg(feature = "xla")]
     Xla {
@@ -107,13 +118,28 @@ impl Engine {
     }
 
     pub fn rust() -> Engine {
-        Engine::Rust {
-            opts: EngineOptions::default(),
-        }
+        Engine::rust_with(EngineOptions::default())
     }
 
     pub fn rust_with(opts: EngineOptions) -> Engine {
-        Engine::Rust { opts }
+        // a failed thread spawn (resource exhaustion) degrades to the
+        // serial path rather than killing the engine — loudly, so a
+        // slow workers=N engine is distinguishable from a perf bug
+        let pool = if opts.workers > 1 {
+            match WorkerPool::new("falkon-worker", opts.workers) {
+                Ok(p) => Some(Arc::new(p)),
+                Err(e) => {
+                    eprintln!(
+                        "[engine] worker pool spawn failed ({e}); \
+                         falling back to serial applies"
+                    );
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        Engine::Rust { opts, pool }
     }
 
     /// Parse "xla", "xla-jnp", "rust" (CLI `--engine`).
@@ -143,7 +169,7 @@ impl Engine {
 
     pub fn opts(&self) -> &EngineOptions {
         match self {
-            Engine::Rust { opts } => opts,
+            Engine::Rust { opts, .. } => opts,
             #[cfg(feature = "xla")]
             Engine::Xla { opts, .. } => opts,
         }
@@ -194,10 +220,11 @@ impl Engine {
     // K_MM and the preconditioner
     // ------------------------------------------------------------------
 
-    /// K_MM over the centers.
+    /// K_MM over the centers (tiled + symmetric on the Rust path, row
+    /// blocks fanned out over the shared pool).
     pub fn kmm(&self, kern: Kernel, c: &Mat, param: f64) -> Result<Mat> {
         match self {
-            Engine::Rust { .. } => Ok(kernels::kmm(kern, c, param)),
+            Engine::Rust { pool, .. } => Ok(kernels::kmm_par(kern, c, param, pool.as_deref())),
             #[cfg(feature = "xla")]
             Engine::Xla { .. } => {
                 let m = c.rows;
@@ -220,7 +247,7 @@ impl Engine {
     /// not die on a borderline K_MM.
     pub fn precond(&self, kmm: &Mat, lam: f64, eps: f64) -> Result<(Mat, Mat)> {
         match self {
-            Engine::Rust { .. } => precond_rust(kmm, lam, eps),
+            Engine::Rust { pool, .. } => precond_rust(kmm, lam, eps, pool.as_deref()),
             #[cfg(feature = "xla")]
             Engine::Xla { .. } => {
                 let m = kmm.rows;
@@ -240,7 +267,7 @@ impl Engine {
                     eps_try *= 100.0;
                 }
                 // last resort: f64 factorization on the coordinator
-                precond_rust(kmm, lam, eps)
+                precond_rust(kmm, lam, eps, None)
             }
         }
     }
@@ -255,12 +282,12 @@ impl Engine {
     pub fn matvec_plan(&self, kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Result<MatvecPlan> {
         anyhow::ensure!(x.cols == c.cols, "x/c feature dims differ");
         match self {
-            Engine::Rust { opts } => Ok(MatvecPlan::Rust(RustPlan::build(
+            Engine::Rust { pool, .. } => Ok(MatvecPlan::Rust(RustPlan::build(
                 kern,
                 x,
                 c,
                 param,
-                opts.workers,
+                pool.clone(),
             )?)),
             #[cfg(feature = "xla")]
             Engine::Xla { opts, .. } => {
@@ -317,7 +344,9 @@ impl Engine {
     /// XLA path through the kernel_block artifact.
     pub fn kernel_block(&self, kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Result<Mat> {
         match self {
-            Engine::Rust { .. } => Ok(kernels::kernel_block(kern, x, c, param)),
+            Engine::Rust { pool, .. } => {
+                Ok(kernels::kernel_block_par(kern, x, c, param, pool.as_deref()))
+            }
             #[cfg(feature = "xla")]
             Engine::Xla { .. } => {
                 let mut out = Mat::zeros(x.rows, c.rows);
@@ -345,13 +374,13 @@ impl Engine {
         anyhow::ensure!(alpha.len() == c.rows, "alpha length");
         anyhow::ensure!(x.cols == c.cols, "x/c feature dims differ");
         match self {
-            Engine::Rust { opts } => Ok(kernels::predict_blocked_par(
+            Engine::Rust { pool, .. } => Ok(kernels::predict_blocked_pool(
                 kern,
                 x,
                 c,
                 alpha,
                 param,
-                opts.workers,
+                pool.as_deref(),
             )),
             #[cfg(feature = "xla")]
             Engine::Xla { .. } => {
@@ -404,19 +433,22 @@ impl Engine {
     }
 }
 
-/// f64 preconditioner factorization with jitter escalation.
-fn precond_rust(kmm: &Mat, lam: f64, eps: f64) -> Result<(Mat, Mat)> {
+/// f64 preconditioner factorization with jitter escalation. The O(M³)
+/// pieces — both Cholesky factors and the T·Tᵀ SYRK — run blocked, with
+/// trailing updates and output panels fanned out over the shared pool
+/// (DESIGN.md §Perf "Setup path").
+fn precond_rust(kmm: &Mat, lam: f64, eps: f64, pool: Option<&WorkerPool>) -> Result<(Mat, Mat)> {
     let m = kmm.rows;
     let mut eps_try = eps;
     for _ in 0..6 {
         let mut kj = kmm.clone();
         kj.add_diag(eps_try * m as f64);
-        if let Ok(t) = chol::cholesky_upper(&kj) {
+        if let Ok(t) = chol::cholesky_upper_blocked(&kj, chol::CHOL_BLOCK, pool) {
             // A: chol(T Tᵀ / M + lam I)
-            let mut tta = crate::linalg::gemm::matmul(&t, &t.t());
+            let mut tta = gemm::syrk_t_par(&t, pool);
             tta.scale(1.0 / m as f64);
             tta.add_diag(lam);
-            if let Ok(a) = chol::cholesky_upper(&tta) {
+            if let Ok(a) = chol::cholesky_upper_blocked(&tta, chol::CHOL_BLOCK, pool) {
                 return Ok((t, a));
             }
         }
@@ -469,118 +501,37 @@ struct RustBlock {
     start: usize,
 }
 
-/// State shared between the plan and its worker pool (immutable after
-/// construction, so plain `Arc` sharing — no locks on the data).
-struct RustShared {
+thread_local! {
+    /// Per-thread tile scratch for pooled applies: a pool worker allocates
+    /// its Kr buffer on the first job it runs and reuses it across every
+    /// block, apply, CG iteration, and plan served by its engine
+    /// ([`kernels::TileScratch::ensure`] grows it if a later plan has a
+    /// larger M).
+    static POOL_SCRATCH: RefCell<Option<kernels::TileScratch>> = const { RefCell::new(None) };
+}
+
+pub struct RustPlan {
     kern: Kernel,
     param: f64,
     c: Mat,
     cn: Vec<f64>,
     blocks: Vec<RustBlock>,
-    m: usize,
-    tile: usize,
-}
-
-/// One fan-out unit: apply `u`/`v` over blocks [lo, hi).
-struct Job {
-    u: Arc<Vec<f64>>,
-    v: Option<Arc<Vec<f64>>>,
-    lo: usize,
-    hi: usize,
-    idx: usize,
-    out: mpsc::Sender<(usize, Vec<f64>)>,
-}
-
-/// Persistent worker pool: threads spawned once per plan, fed jobs over a
-/// shared channel, each owning its own [`kernels::TileScratch`]. Dropping
-/// the pool closes the channel and joins the threads.
-struct WorkerPool {
-    tx: Option<mpsc::Sender<Job>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
-}
-
-impl WorkerPool {
-    fn spawn(shared: Arc<RustShared>, workers: usize) -> Result<WorkerPool> {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let mut handles = Vec::with_capacity(workers);
-        for _ in 0..workers {
-            let rx = Arc::clone(&rx);
-            let shared = Arc::clone(&shared);
-            let handle = std::thread::Builder::new()
-                .name("falkon-matvec".into())
-                .spawn(move || {
-                    let mut scratch = kernels::TileScratch::new(shared.tile, shared.m);
-                    loop {
-                        // hold the lock only while dequeueing
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        let Ok(job) = job else { break };
-                        let mut w = vec![0.0f64; shared.m];
-                        for b in job.lo..job.hi {
-                            let blk = &shared.blocks[b];
-                            let vb = job
-                                .v
-                                .as_deref()
-                                .map(|vf| &vf[blk.start..blk.start + blk.x.rows]);
-                            kernels::knm_matvec_blocked(
-                                shared.kern,
-                                &blk.x,
-                                &shared.c,
-                                &blk.xn,
-                                &shared.cn,
-                                &job.u,
-                                vb,
-                                None,
-                                shared.param,
-                                &mut scratch,
-                                &mut w,
-                            );
-                        }
-                        let _ = job.out.send((job.idx, w));
-                    }
-                })
-                .map_err(|e| anyhow!("spawning matvec worker: {e}"))?;
-            handles.push(handle);
-        }
-        Ok(WorkerPool {
-            tx: Some(tx),
-            handles,
-        })
-    }
-
-    fn submit(&self, job: Job) -> Result<()> {
-        self.tx
-            .as_ref()
-            .expect("pool sender alive while pool exists")
-            .send(job)
-            .map_err(|_| anyhow!("matvec worker pool disconnected"))
-    }
-}
-
-impl Drop for WorkerPool {
-    fn drop(&mut self) {
-        self.tx.take(); // closes the channel; workers exit their recv loop
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-pub struct RustPlan {
-    shared: Arc<RustShared>,
     /// scratch for the inline (single-worker) path
     scratch: RefCell<kernels::TileScratch>,
-    pool: Option<WorkerPool>,
-    workers: usize,
+    /// shared engine pool (None = inline applies)
+    pool: Option<Arc<WorkerPool>>,
     n: usize,
     m: usize,
 }
 
 impl RustPlan {
-    fn build(kern: Kernel, x: &Mat, c: &Mat, param: f64, workers: usize) -> Result<RustPlan> {
+    fn build(
+        kern: Kernel,
+        x: &Mat,
+        c: &Mat,
+        param: f64,
+        pool: Option<Arc<WorkerPool>>,
+    ) -> Result<RustPlan> {
         let (n, m) = (x.rows, c.rows);
         let cn = kernels::row_sq_norms(c);
         let mut blocks = Vec::with_capacity(n.div_ceil(ROW_BLOCK.max(1)));
@@ -592,27 +543,14 @@ impl RustPlan {
             blocks.push(RustBlock { x: xb, xn, start });
             start = end;
         }
-        let tile = kernels::DEFAULT_TILE;
-        let shared = Arc::new(RustShared {
+        Ok(RustPlan {
             kern,
             param,
             c: c.clone(),
             cn,
             blocks,
-            m,
-            tile,
-        });
-        let workers = workers.max(1);
-        let pool = if workers > 1 {
-            Some(WorkerPool::spawn(Arc::clone(&shared), workers)?)
-        } else {
-            None
-        };
-        Ok(RustPlan {
-            scratch: RefCell::new(kernels::TileScratch::new(tile, m)),
-            shared,
+            scratch: RefCell::new(kernels::TileScratch::new(kernels::DEFAULT_TILE, m)),
             pool,
-            workers,
             n,
             m,
         })
@@ -624,61 +562,63 @@ impl RustPlan {
             anyhow::ensure!(v.len() == self.n, "v length {} != n {}", v.len(), self.n);
         }
         let mut w = vec![0.0f64; self.m];
-        let nb = self.shared.blocks.len();
+        let nb = self.blocks.len();
         if nb == 0 {
             return Ok(w);
         }
-        match &self.pool {
+        match self.pool.as_deref() {
             None => {
                 let mut scratch = self.scratch.borrow_mut();
-                for blk in &self.shared.blocks {
-                    let vb = v.map(|vf| &vf[blk.start..blk.start + blk.x.rows]);
-                    kernels::knm_matvec_blocked(
-                        self.shared.kern,
-                        &blk.x,
-                        &self.shared.c,
-                        &blk.xn,
-                        &self.shared.cn,
-                        u,
-                        vb,
-                        None,
-                        self.shared.param,
-                        &mut scratch,
-                        &mut w,
-                    );
-                }
+                apply_blocks(
+                    self.kern,
+                    &self.c,
+                    &self.cn,
+                    &self.blocks,
+                    u,
+                    v,
+                    self.param,
+                    &mut scratch,
+                    &mut w,
+                );
             }
             Some(pool) => {
-                let jobs = self.workers.min(nb);
-                let per = nb.div_ceil(jobs);
-                let u = Arc::new(u.to_vec());
-                let v = v.map(|vf| Arc::new(vf.to_vec()));
-                let (otx, orx) = mpsc::channel();
-                let mut sent = 0usize;
-                let mut lo = 0usize;
-                while lo < nb {
-                    let hi = (lo + per).min(nb);
-                    pool.submit(Job {
-                        u: Arc::clone(&u),
-                        v: v.clone(),
-                        lo,
-                        hi,
-                        idx: sent,
-                        out: otx.clone(),
-                    })?;
-                    sent += 1;
-                    lo = hi;
-                }
-                drop(otx);
-                // sum partials in job order so results are deterministic
-                let mut parts: Vec<Option<Vec<f64>>> = (0..sent).map(|_| None).collect();
-                for _ in 0..sent {
-                    let (idx, part) = orx
-                        .recv()
-                        .map_err(|_| anyhow!("matvec worker pool disconnected"))?;
-                    parts[idx] = Some(part);
-                }
-                for part in parts.into_iter().flatten() {
+                // one partial-w per job, written by exactly one task each
+                // and summed in job order so pooled applies are bitwise
+                // deterministic (the tasks capture only Sync plan fields,
+                // not the plan itself — its inline scratch is a RefCell)
+                let ranges = chunk_ranges(nb, pool.workers());
+                let mut parts: Vec<Vec<f64>> = vec![vec![0.0f64; self.m]; ranges.len()];
+                let tile = kernels::DEFAULT_TILE;
+                let m = self.m;
+                let (kern, param) = (self.kern, self.param);
+                let (c, cn, blocks) = (&self.c, self.cn.as_slice(), self.blocks.as_slice());
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+                    .iter()
+                    .zip(parts.iter_mut())
+                    .map(|(&(lo, hi), part)| {
+                        let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                            POOL_SCRATCH.with(|cell| {
+                                let mut cell = cell.borrow_mut();
+                                let scratch = cell
+                                    .get_or_insert_with(|| kernels::TileScratch::new(tile, m));
+                                apply_blocks(
+                                    kern,
+                                    c,
+                                    cn,
+                                    &blocks[lo..hi],
+                                    u,
+                                    v,
+                                    param,
+                                    scratch,
+                                    part,
+                                );
+                            });
+                        });
+                        f
+                    })
+                    .collect();
+                pool.run_scoped(tasks);
+                for part in parts {
                     for j in 0..self.m {
                         w[j] += part[j];
                     }
@@ -686,6 +626,29 @@ impl RustPlan {
             }
         }
         Ok(w)
+    }
+}
+
+/// Accumulate `w += Σ_blocks Krᵀ(mask ⊙ (Kr·u + v))` over `blocks` — the
+/// shared body of the inline and pooled apply paths (free function so the
+/// pooled tasks only capture `Sync` plan fields).
+#[allow(clippy::too_many_arguments)]
+fn apply_blocks(
+    kern: Kernel,
+    c: &Mat,
+    cn: &[f64],
+    blocks: &[RustBlock],
+    u: &[f64],
+    v: Option<&[f64]>,
+    param: f64,
+    scratch: &mut kernels::TileScratch,
+    w: &mut [f64],
+) {
+    for blk in blocks {
+        let vb = v.map(|vf| &vf[blk.start..blk.start + blk.x.rows]);
+        kernels::knm_matvec_blocked(
+            kern, &blk.x, c, &blk.xn, cn, u, vb, None, param, scratch, w,
+        );
     }
 }
 
@@ -718,7 +681,7 @@ impl MatvecPlan {
 
     pub fn n_blocks(&self) -> usize {
         match self {
-            MatvecPlan::Rust(p) => p.shared.blocks.len(),
+            MatvecPlan::Rust(p) => p.blocks.len(),
             #[cfg(feature = "xla")]
             MatvecPlan::Xla(p) => p.blocks.len(),
         }
@@ -727,7 +690,7 @@ impl MatvecPlan {
     /// Worker threads serving this plan (1 = inline).
     pub fn workers(&self) -> usize {
         match self {
-            MatvecPlan::Rust(p) => p.workers,
+            MatvecPlan::Rust(p) => p.pool.as_deref().map(WorkerPool::workers).unwrap_or(1),
             #[cfg(feature = "xla")]
             MatvecPlan::Xla(_) => 1,
         }
@@ -1047,6 +1010,75 @@ mod tests {
     fn engine_by_name() {
         assert!(Engine::by_name("rust", 1).is_ok());
         assert!(Engine::by_name("bogus", 1).is_err());
+    }
+
+    #[test]
+    fn pooled_setup_is_bitwise_equal_to_serial() {
+        // kmm + precond through a workers=4 engine must equal workers=1
+        // exactly (ISSUE 2 determinism contract for the setup path)
+        let mut rng = Rng::new(9);
+        let c = Mat::from_vec(170, 6, rng.normals(170 * 6));
+        let eng1 = Engine::rust();
+        let eng4 = Engine::rust_with(EngineOptions {
+            imp: Impl::Pallas,
+            workers: 4,
+        });
+        let k1 = eng1.kmm(Kernel::Gaussian, &c, 1.2).unwrap();
+        let k4 = eng4.kmm(Kernel::Gaussian, &c, 1.2).unwrap();
+        assert_eq!(k1.data, k4.data, "pooled kmm");
+        let (t1, a1) = eng1.precond(&k1, 1e-3, 1e-10).unwrap();
+        let (t4, a4) = eng4.precond(&k4, 1e-3, 1e-10).unwrap();
+        assert_eq!(t1.data, t4.data, "pooled T factor");
+        assert_eq!(a1.data, a4.data, "pooled A factor");
+    }
+
+    #[test]
+    fn blocked_setup_matches_reference_setup_predictions() {
+        // end-to-end contract: a fit whose setup ran the blocked
+        // kmm/cholesky/SYRK path predicts within 1e-8 relative of one
+        // whose factors come from the pre-PR scalar reference routines
+        let (x, c, y) = toy(400, 4, 11);
+        let eng = Engine::rust();
+        let lam = 1e-3;
+        let kmm_blocked = eng.kmm(Kernel::Gaussian, &c, 1.0).unwrap();
+        let (t_b, a_b) = eng.precond(&kmm_blocked, lam, 1e-10).unwrap();
+
+        // reference factors: scalar kernel block + scalar cholesky + matmul
+        let kmm_ref = kernels::kernel_block_ref(Kernel::Gaussian, &c, &c, 1.0);
+        let m = c.rows;
+        let mut kj = kmm_ref.clone();
+        kj.add_diag(1e-10 * m as f64);
+        let t_r = chol::cholesky_upper_ref(&kj).unwrap();
+        let mut tta = crate::linalg::gemm::matmul(&t_r, &t_r.t());
+        tta.scale(1.0 / m as f64);
+        tta.add_diag(lam);
+        let a_r = chol::cholesky_upper_ref(&tta).unwrap();
+
+        let plan = eng.matvec_plan(Kernel::Gaussian, &x, &c, 1.0).unwrap();
+        let mut alphas = Vec::new();
+        for (t, a) in [(&t_b, &a_b), (&t_r, &a_r)] {
+            let bhb = Bhb {
+                plan: &plan,
+                t,
+                a,
+                lam,
+                d: None,
+                q: None,
+            };
+            let r = bhb.rhs(&y).unwrap();
+            let cg = crate::falkon::cg::conjgrad(
+                |p| bhb.apply(p),
+                &r,
+                crate::falkon::cg::CgOptions { t_max: 25, tol: 0.0 },
+                None,
+            )
+            .unwrap();
+            alphas.push(bhb.beta_to_alpha(&cg.beta));
+        }
+        let p1 = kernels::predict(Kernel::Gaussian, &x, &c, &alphas[0], 1.0);
+        let p2 = kernels::predict(Kernel::Gaussian, &x, &c, &alphas[1], 1.0);
+        let rel = crate::linalg::vec_ops::rel_diff(&p1, &p2);
+        assert!(rel < 1e-8, "rel {rel}");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Foundation substrates built from scratch for the offline environment
-//! (DESIGN.md §3): PRNG, JSON, timing, property-test harness.
+//! (DESIGN.md §3): PRNG, JSON, timing, property-test harness, worker pool.
 pub mod json;
+pub mod pool;
 pub mod ptest;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,350 @@
+//! Shared persistent worker pool (substrate — `rayon` is unavailable in
+//! the offline environment; see DESIGN.md §3 and §Perf).
+//!
+//! PR 1 buried a channel-fed pool inside `runtime/engine.rs`, usable only
+//! by the blocked matvec. This module extracts it as a general primitive
+//! so the coordinator's setup-path linear algebra (blocked Cholesky
+//! trailing updates, SYRK, tiled K_MM panels) can fan out over the same
+//! threads as the per-iteration applies.
+//!
+//! The design is a **scoped task pool**: threads are spawned once
+//! ([`WorkerPool::new`]) and live until the pool is dropped; work arrives
+//! as boxed closures over a shared channel. [`WorkerPool::run_scoped`]
+//! accepts tasks that *borrow* caller state (`'env` lifetime, like
+//! `std::thread::scope`) and blocks until every task has finished, which
+//! is what makes the borrow sound — see the safety note there. Per-thread
+//! scratch (e.g. the matvec `TileScratch`) lives in thread-locals owned by
+//! the call sites, so a 20-iteration fit still allocates worker scratch
+//! once, not per apply.
+//!
+//! Determinism contract: `run_scoped` imposes no ordering between tasks.
+//! Callers that partition *output rows* disjointly with a fixed internal
+//! loop order stay bitwise equal to their serial runs; callers that
+//! reduce per-job partials (the plan apply) sum them in job order, which
+//! makes repeated pooled runs bitwise deterministic and serial-equal up
+//! to FP regrouping. Both properties are tested at their call sites.
+
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A boxed unit of work as it travels over the channel.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Tracks one `run_scoped` call: outstanding task count plus the first
+/// panic payload (re-thrown on the caller thread).
+struct ScopeState {
+    state: Mutex<(usize, Option<Box<dyn std::any::Any + Send>>)>,
+    done: Condvar,
+}
+
+/// Persistent channel-fed worker pool: threads spawned once, fed boxed
+/// tasks over a shared `Mutex<Receiver>`. Dropping the pool closes the
+/// channel and joins the threads.
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Task>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` (≥1) threads named `name`.
+    pub fn new(name: &str, workers: usize) -> Result<WorkerPool> {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = Arc::clone(&rx);
+            let handle = std::thread::Builder::new()
+                .name(name.into())
+                .spawn(move || loop {
+                    // hold the lock only while dequeueing
+                    let task = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(task) = task else { break };
+                    task();
+                })
+                .map_err(|e| anyhow!("spawning {name} worker: {e}"))?;
+            handles.push(handle);
+        }
+        Ok(WorkerPool {
+            tx: Some(tx),
+            handles,
+            workers,
+        })
+    }
+
+    /// Thread count the pool was built with.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `tasks` on the pool and block until all of them finish. Tasks
+    /// may borrow caller state (`'env`), exactly like `std::thread::scope`
+    /// closures. If a task panics, the panic is re-thrown here after the
+    /// remaining tasks have drained (no worker thread dies).
+    ///
+    /// Must not be called from inside a pool task (a task blocking on
+    /// tasks behind it in the same queue can deadlock); all call sites in
+    /// this crate fan out from the coordinator thread only.
+    pub fn run_scoped<'env>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let scope = Arc::new(ScopeState {
+            state: Mutex::new((tasks.len(), None)),
+            done: Condvar::new(),
+        });
+        let tx = self.tx.as_ref().expect("pool sender alive while pool exists");
+        for task in tasks {
+            // SAFETY: the task's borrows live for 'env; this function does
+            // not return until the completion barrier below has observed
+            // every task finished (the wrapper decrements even on panic),
+            // so no task can outlive the borrows it captured.
+            let task: Task = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Task>(task)
+            };
+            let scope = Arc::clone(&scope);
+            let wrapped: Task = Box::new(move || {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+                let mut g = scope.state.lock().unwrap();
+                if let Err(payload) = result {
+                    if g.1.is_none() {
+                        g.1 = Some(payload);
+                    }
+                }
+                g.0 -= 1;
+                if g.0 == 0 {
+                    scope.done.notify_all();
+                }
+            });
+            tx.send(wrapped).expect("worker pool disconnected");
+        }
+        let mut g = scope.state.lock().unwrap();
+        while g.0 > 0 {
+            g = scope.done.wait(g).unwrap();
+        }
+        if let Some(payload) = g.1.take() {
+            drop(g);
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // closes the channel; workers exit their recv loop
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Fan `tasks` out over `pool` when it has more than one worker; run them
+/// inline (in order) otherwise. The shared serial/parallel entry point for
+/// the blocked linear-algebra and kernel-panel routines.
+pub fn fan_out<'env>(pool: Option<&WorkerPool>, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+    match pool {
+        Some(p) if p.workers() > 1 => p.run_scoped(tasks),
+        _ => {
+            for t in tasks {
+                t();
+            }
+        }
+    }
+}
+
+/// Split `n` items into at most `parts` contiguous ranges of near-equal
+/// size — the chunking used by the pooled routines whose per-item cost is
+/// uniform, so serial and pooled runs partition work identically.
+pub fn chunk_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let per = n.div_ceil(parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + per).min(n);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Split `n` items into at most `parts` contiguous ranges of near-equal
+/// *total weight* under `weight(i)`. The chunking for triangular
+/// workloads (SYRK trailing updates, upper-triangle K_MM panels), where
+/// item `i` costs ~`n - i` and equal-count chunks would hand the first
+/// worker several times the work of the last. Deterministic in its
+/// inputs; ranges always cover [0, n) exactly.
+pub fn chunk_ranges_weighted(
+    n: usize,
+    parts: usize,
+    weight: impl Fn(usize) -> u64,
+) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    if parts == 1 {
+        return vec![(0, n)];
+    }
+    let total: u64 = (0..n).map(&weight).sum();
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0usize;
+    let mut cum = 0u64;
+    for k in 0..parts {
+        if lo >= n {
+            break;
+        }
+        // cumulative-weight boundary for the end of part k; the last
+        // part's boundary is the full total, so coverage is exact
+        let target = if k + 1 == parts {
+            total
+        } else {
+            total * (k as u64 + 1) / parts as u64
+        };
+        let mut hi = lo;
+        while hi < n && (hi == lo || cum < target) {
+            cum += weight(hi);
+            hi += 1;
+        }
+        out.push((lo, hi));
+        lo = hi;
+    }
+    if let Some(last) = out.last_mut() {
+        last.1 = n; // absorb any rounding remainder into the final range
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_borrowing_tasks_to_completion() {
+        let pool = WorkerPool::new("test-pool", 4).unwrap();
+        let mut out = vec![0usize; 64];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(7)
+            .enumerate()
+            .map(|(i, chunk)| {
+                let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    for (k, v) in chunk.iter_mut().enumerate() {
+                        *v = i * 100 + k;
+                    }
+                });
+                f
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        for (j, &v) in out.iter().enumerate() {
+            assert_eq!(v, (j / 7) * 100 + j % 7);
+        }
+    }
+
+    #[test]
+    fn pool_survives_many_scopes() {
+        let pool = WorkerPool::new("test-pool", 3).unwrap();
+        let counter = AtomicUsize::new(0);
+        for _ in 0..20 {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..5)
+                .map(|_| {
+                    let c = &counter;
+                    let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    });
+                    f
+                })
+                .collect();
+            pool.run_scoped(tasks);
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_stays_usable() {
+        let pool = WorkerPool::new("test-pool", 2).unwrap();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_scoped(vec![Box::new(|| panic!("task boom")) as Box<dyn FnOnce() + Send>]);
+        }));
+        assert!(caught.is_err(), "panic must propagate to the caller");
+        // workers caught the unwind; the pool still executes new tasks
+        let ok = AtomicUsize::new(0);
+        pool.run_scoped(vec![Box::new(|| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        }) as Box<dyn FnOnce() + Send + '_>]);
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn fan_out_inline_without_pool() {
+        let mut sum = 0usize;
+        {
+            let s = &mut sum;
+            fan_out(
+                None,
+                vec![Box::new(move || {
+                    *s = 42;
+                }) as Box<dyn FnOnce() + Send + '_>],
+            );
+        }
+        assert_eq!(sum, 42);
+    }
+
+    #[test]
+    fn weighted_chunks_cover_and_balance_triangular_load() {
+        for n in [1usize, 2, 7, 33, 256] {
+            for parts in [1usize, 2, 4, 8] {
+                let w = |i: usize| (n - i) as u64;
+                let ranges = chunk_ranges_weighted(n, parts, w);
+                // exact coverage, in order, non-empty
+                let mut expect = 0;
+                for &(lo, hi) in &ranges {
+                    assert_eq!(lo, expect);
+                    assert!(hi > lo);
+                    expect = hi;
+                }
+                assert_eq!(expect, n, "n={n} parts={parts}");
+                // triangular weights: no chunk should carry more than
+                // ~2x the ideal share (equal-count splitting gives the
+                // first chunk up to parts× the last)
+                if n >= 4 * parts {
+                    let total: u64 = (0..n).map(w).sum();
+                    let ideal = total / ranges.len() as u64;
+                    for &(lo, hi) in &ranges {
+                        let got: u64 = (lo..hi).map(w).sum();
+                        assert!(
+                            got <= 2 * ideal + w(lo),
+                            "n={n} parts={parts} range {lo}..{hi} weight {got} vs ideal {ideal}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for n in [0usize, 1, 2, 5, 17, 64] {
+            for parts in [1usize, 2, 3, 8, 100] {
+                let ranges = chunk_ranges(n, parts);
+                let mut expect = 0;
+                for &(lo, hi) in &ranges {
+                    assert_eq!(lo, expect);
+                    assert!(hi > lo);
+                    expect = hi;
+                }
+                assert_eq!(expect, n, "n={n} parts={parts}");
+                assert!(ranges.len() <= parts.max(1));
+            }
+        }
+    }
+}
