@@ -238,6 +238,28 @@ pub fn rare_cluster(rng: &mut Rng, n: usize, d: usize, rare_frac: f64) -> Datase
     Dataset::new_regression("rare_cluster", x, y)
 }
 
+/// Generic k-class gaussian-blob problem for the multiclass sweeps (the
+/// paper's one-vs-all workloads range from 10 classes on MNIST-8M to 144
+/// on TIMIT): well-separated cluster centers with mild within-class
+/// spread, so any K is learnable at laptop-scale n and the bench's
+/// batched-vs-looped comparison measures compute, not model difficulty.
+pub fn blobs(rng: &mut Rng, n: usize, d: usize, k: usize) -> Dataset {
+    assert!(k >= 2, "blobs needs at least two classes");
+    let centers = normal_mat(rng, k, d);
+    let mut x = Mat::zeros(n, d);
+    let mut labels = vec![0usize; n];
+    for i in 0..n {
+        let c = rng.below(k);
+        labels[i] = c;
+        let row = x.row_mut(i);
+        let cr = centers.row(c);
+        for j in 0..d {
+            row[j] = 3.0 * cr[j] + 0.8 * rng.normal();
+        }
+    }
+    Dataset::new_multiclass("blobs", x, labels, k)
+}
+
 /// Look up a paper-dataset analogue by name (CLI/bench entry point).
 pub fn by_name(name: &str, rng: &mut Rng, n: usize) -> Option<Dataset> {
     Some(match name {
@@ -265,6 +287,17 @@ mod tests {
         assert_eq!(susy(&mut rng, 50).d(), 18);
         assert_eq!(higgs(&mut rng, 50).d(), 28);
         assert_eq!(imagenet(&mut rng, 50).d(), 512);
+    }
+
+    #[test]
+    fn blobs_cover_all_classes() {
+        let d = blobs(&mut Rng::new(7), 2000, 6, 12);
+        assert_eq!(d.n_classes, 12);
+        assert!(d.is_multiclass());
+        let labels = d.labels.as_ref().unwrap();
+        for k in 0..12 {
+            assert!(labels.iter().any(|&l| l == k), "class {k} empty");
+        }
     }
 
     #[test]

@@ -1,14 +1,42 @@
 //! Conjugate gradient — Alg. 2's `conjgrad`, generic over the operator so
 //! the same loop drives the preconditioned FALKON system, the
-//! un-preconditioned ablation, and the baselines.
+//! un-preconditioned ablation, and the baselines. [`block_conjgrad`] is
+//! the multi-RHS variant: K simultaneous CG recurrences sharing one
+//! `apply_multi` per iteration, the solver side of the one-vs-all
+//! panel-amortization path (DESIGN.md §Perf "Multi-RHS path").
 //!
 //! All heavy per-iteration state lives inside the operator: the FALKON
 //! `apply` runs over a prepared [`crate::runtime::MatvecPlan`] whose row
 //! blocks, norms, Kr tile buffers and worker pool are built once per fit
 //! (DESIGN.md §Perf) — this loop only touches M-length vectors.
 
-use anyhow::Result;
+use crate::linalg::mat::Mat;
 use crate::linalg::vec_ops::{axpy, dot, norm2, xpby};
+use anyhow::Result;
+
+/// Why a CG run stopped — surfaced so callers can distinguish a clean
+/// convergence from a numerically lost operator instead of silently
+/// accepting the best iterate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CgStop {
+    /// residual reached the tolerance (or became exactly zero)
+    Converged,
+    /// ran the full iteration budget (the paper's fixed-`t` regime)
+    MaxIter,
+    /// ⟨p, Wp⟩ came back non-positive or non-finite — the operator lost
+    /// positive-definiteness numerically; the best iterate so far is kept
+    LostPd,
+}
+
+impl CgStop {
+    pub fn name(self) -> &'static str {
+        match self {
+            CgStop::Converged => "converged",
+            CgStop::MaxIter => "max-iter",
+            CgStop::LostPd => "lost-pd",
+        }
+    }
+}
 
 /// Outcome of a CG run.
 #[derive(Debug, Clone)]
@@ -20,6 +48,8 @@ pub struct CgResult {
     pub residuals: Vec<f64>,
     /// true iff a tolerance was requested and reached before t_max
     pub converged: bool,
+    /// why the loop stopped (LostPd is worth logging at the call site)
+    pub stop: CgStop,
 }
 
 /// Options for a CG run. `tol = 0.0` reproduces the paper's fixed-`t`
@@ -55,10 +85,12 @@ pub fn conjgrad(
     let mut residuals = Vec::with_capacity(opts.t_max);
     let mut converged = false;
     let mut iters = 0;
+    let mut stop = CgStop::MaxIter;
 
     for k in 1..=opts.t_max {
         if rsold == 0.0 {
             converged = true;
+            stop = CgStop::Converged;
             break;
         }
         let ap = apply(&p)?;
@@ -66,6 +98,7 @@ pub fn conjgrad(
         if pap <= 0.0 || !pap.is_finite() {
             // operator lost positive-definiteness numerically — stop with
             // the best iterate rather than diverging
+            stop = CgStop::LostPd;
             break;
         }
         let a = rsold / pap;
@@ -80,6 +113,7 @@ pub fn conjgrad(
         }
         if opts.tol > 0.0 && r_norm / b_norm <= opts.tol {
             converged = true;
+            stop = CgStop::Converged;
             break;
         }
         xpby(&r, rsnew / rsold, &mut p);
@@ -91,14 +125,167 @@ pub fn conjgrad(
         iters,
         residuals,
         converged,
+        stop,
+    })
+}
+
+/// Outcome of a block CG run: per-column solutions plus per-column
+/// iteration traces and stop reasons.
+#[derive(Debug, Clone)]
+pub struct BlockCgResult {
+    /// M×K solution block (column k solves W β_k = b_k)
+    pub beta: Mat,
+    /// iterations actually executed, per column
+    pub iters: Vec<usize>,
+    /// per-column ‖r_k‖ after each iteration
+    pub residuals: Vec<Vec<f64>>,
+    /// true iff that column reached the tolerance (or a zero residual)
+    pub converged: Vec<bool>,
+    /// per-column stop reason
+    pub stops: Vec<CgStop>,
+}
+
+impl BlockCgResult {
+    /// Largest per-column iteration count — the number of `apply_multi`
+    /// calls the block solve actually performed.
+    pub fn max_iters(&self) -> usize {
+        self.iters.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Per-column recurrence state of [`block_conjgrad`].
+struct ColState {
+    beta: Vec<f64>,
+    r: Vec<f64>,
+    p: Vec<f64>,
+    rsold: f64,
+    b_norm: f64,
+    iters: usize,
+    residuals: Vec<f64>,
+    stop: Option<CgStop>,
+    converged: bool,
+}
+
+/// Run K simultaneous CG recurrences on `W B = R` where `apply_multi(P)`
+/// computes `W P` for an `M×K_active` direction block — **one** operator
+/// application per iteration regardless of K, which is what lets the
+/// multi-RHS matvec plan amortize its kernel panels across the columns.
+///
+/// Per-column α/β/residual recurrences are identical to [`conjgrad`]'s;
+/// a column that converges (or loses positive-definiteness) is **frozen**:
+/// its state stops updating and it is dropped from the direction block, so
+/// the apply shrinks as columns finish. With `tol = 0.0` every column runs
+/// the full `t_max` (the paper's fixed-`t` regime) and the block solve is
+/// exactly K vector solves sharing their panel sweeps.
+pub fn block_conjgrad(
+    mut apply_multi: impl FnMut(&Mat) -> Result<Mat>,
+    b: &Mat,
+    opts: CgOptions,
+) -> Result<BlockCgResult> {
+    let m = b.rows;
+    let k = b.cols;
+    let mut cols: Vec<ColState> = (0..k)
+        .map(|kc| {
+            let bk: Vec<f64> = (0..m).map(|i| b[(i, kc)]).collect();
+            let rsold = dot(&bk, &bk);
+            ColState {
+                beta: vec![0.0; m],
+                r: bk.clone(),
+                p: bk.clone(),
+                rsold,
+                b_norm: norm2(&bk).max(1e-300),
+                iters: 0,
+                residuals: Vec::with_capacity(opts.t_max),
+                stop: None,
+                converged: false,
+            }
+        })
+        .collect();
+
+    for k_iter in 1..=opts.t_max {
+        // freeze columns whose residual is exactly zero (matches the
+        // vector loop's top-of-iteration check), then gather the rest
+        for st in cols.iter_mut() {
+            if st.stop.is_none() && st.rsold == 0.0 {
+                st.converged = true;
+                st.stop = Some(CgStop::Converged);
+            }
+        }
+        let active: Vec<usize> = (0..k).filter(|&kc| cols[kc].stop.is_none()).collect();
+        if active.is_empty() {
+            break;
+        }
+        // assemble the shrinking direction block and apply W once
+        let mut pblk = Mat::zeros(m, active.len());
+        for (slot, &kc) in active.iter().enumerate() {
+            for i in 0..m {
+                pblk[(i, slot)] = cols[kc].p[i];
+            }
+        }
+        let apblk = apply_multi(&pblk)?;
+        anyhow::ensure!(
+            (apblk.rows, apblk.cols) == (m, active.len()),
+            "apply_multi returned {}x{}, expected {}x{}",
+            apblk.rows,
+            apblk.cols,
+            m,
+            active.len()
+        );
+        let mut ap = vec![0.0; m];
+        for (slot, &kc) in active.iter().enumerate() {
+            let st = &mut cols[kc];
+            for i in 0..m {
+                ap[i] = apblk[(i, slot)];
+            }
+            let pap = dot(&st.p, &ap);
+            if pap <= 0.0 || !pap.is_finite() {
+                st.stop = Some(CgStop::LostPd);
+                continue;
+            }
+            let a = st.rsold / pap;
+            axpy(a, &st.p, &mut st.beta);
+            axpy(-a, &ap, &mut st.r);
+            let rsnew = dot(&st.r, &st.r);
+            let r_norm = rsnew.sqrt();
+            st.iters = k_iter;
+            st.residuals.push(r_norm);
+            if opts.tol > 0.0 && r_norm / st.b_norm <= opts.tol {
+                st.converged = true;
+                st.stop = Some(CgStop::Converged);
+                continue;
+            }
+            xpby(&st.r, rsnew / st.rsold, &mut st.p);
+            st.rsold = rsnew;
+        }
+    }
+
+    let mut beta = Mat::zeros(m, k);
+    let mut iters = Vec::with_capacity(k);
+    let mut residuals = Vec::with_capacity(k);
+    let mut converged = Vec::with_capacity(k);
+    let mut stops = Vec::with_capacity(k);
+    for (kc, st) in cols.into_iter().enumerate() {
+        for i in 0..m {
+            beta[(i, kc)] = st.beta[i];
+        }
+        iters.push(st.iters);
+        residuals.push(st.residuals);
+        converged.push(st.converged);
+        stops.push(st.stop.unwrap_or(CgStop::MaxIter));
+    }
+    Ok(BlockCgResult {
+        beta,
+        iters,
+        residuals,
+        converged,
+        stops,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::gemm::{gram_t, matvec};
-    use crate::linalg::mat::Mat;
+    use crate::linalg::gemm::{gram_t, matmul, matvec};
     use crate::util::ptest::check;
 
     #[test]
@@ -127,6 +314,7 @@ mod tests {
                 assert!((back[i] - b[i]).abs() < 1e-6, "{} vs {}", back[i], b[i]);
             }
             assert!(res.converged);
+            assert_eq!(res.stop, CgStop::Converged);
         });
     }
 
@@ -163,6 +351,7 @@ mod tests {
         .unwrap();
         assert_eq!(res.iters, 3);
         assert_eq!(res.residuals.len(), 3);
+        assert_eq!(res.stop, CgStop::MaxIter);
     }
 
     #[test]
@@ -201,5 +390,166 @@ mod tests {
         for w in res.residuals.windows(2) {
             assert!(w[1] <= w[0] * 1.5, "{:?}", res.residuals);
         }
+    }
+
+    #[test]
+    fn indefinite_operator_reports_lost_pd() {
+        // W = -I: ⟨p, Wp⟩ < 0 on the first iteration
+        let b = vec![1.0, 2.0];
+        let res = conjgrad(
+            |p| Ok(p.iter().map(|v| -v).collect()),
+            &b,
+            CgOptions { t_max: 5, tol: 0.0 },
+            None,
+        )
+        .unwrap();
+        assert_eq!(res.stop, CgStop::LostPd);
+        assert!(!res.converged);
+        assert_eq!(res.iters, 0);
+        assert_eq!(res.beta, vec![0.0, 0.0]); // best (initial) iterate kept
+    }
+
+    // -- block CG ----------------------------------------------------------
+
+    #[test]
+    fn block_cg_matches_k_vector_runs() {
+        // the acceptance contract: per column, block CG must reproduce the
+        // vector solver's trajectory on random SPD systems — ragged K
+        // (1..6) including the K = 1 degeneracy
+        check("block_conjgrad = K × conjgrad", 20, |g| {
+            let m = g.usize_in(1, 10);
+            let k = g.usize_in(1, 6);
+            let a = {
+                let r = Mat::from_vec(m, m, g.normal_vec(m * m));
+                let mut s = gram_t(&r);
+                s.add_diag(m as f64);
+                s
+            };
+            let b = Mat::from_vec(m, k, g.normal_vec(m * k));
+            let opts = CgOptions {
+                t_max: 2 * m + 3,
+                tol: 1e-10,
+            };
+            // apply each column with the same matvec arithmetic the vector
+            // solver uses, so per-column trajectories (and therefore the
+            // tolerance-exit iteration counts) are exactly reproducible
+            let colwise_apply = |p: &Mat| {
+                let mut out = Mat::zeros(p.rows, p.cols);
+                let mut col = vec![0.0; p.rows];
+                for j in 0..p.cols {
+                    for i in 0..p.rows {
+                        col[i] = p[(i, j)];
+                    }
+                    let y = matvec(&a, &col);
+                    for i in 0..p.rows {
+                        out[(i, j)] = y[i];
+                    }
+                }
+                Ok(out)
+            };
+            let blk = block_conjgrad(colwise_apply, &b, opts).unwrap();
+            for kc in 0..k {
+                let bk: Vec<f64> = (0..m).map(|i| b[(i, kc)]).collect();
+                let want = conjgrad(|p| Ok(matvec(&a, p)), &bk, opts, None).unwrap();
+                assert_eq!(blk.iters[kc], want.iters, "col {kc} iters");
+                assert_eq!(blk.converged[kc], want.converged, "col {kc} converged");
+                assert_eq!(blk.stops[kc], want.stop, "col {kc} stop");
+                for i in 0..m {
+                    assert!(
+                        (blk.beta[(i, kc)] - want.beta[i]).abs() < 1e-8,
+                        "col {kc} row {i}: {} vs {}",
+                        blk.beta[(i, kc)],
+                        want.beta[i]
+                    );
+                }
+                assert_eq!(blk.residuals[kc].len(), want.residuals.len());
+                for (rb, rv) in blk.residuals[kc].iter().zip(&want.residuals) {
+                    assert!((rb - rv).abs() < 1e-8 * (1.0 + rv.abs()));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn block_cg_fixed_t_runs_all_columns_full() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let (m, k) = (8, 3);
+        let a = {
+            let r = Mat::from_vec(m, m, rng.normals(m * m));
+            let mut s = gram_t(&r);
+            s.add_diag(m as f64);
+            s
+        };
+        let b = Mat::from_vec(m, k, rng.normals(m * k));
+        let res = block_conjgrad(
+            |p| Ok(matmul(&a, p)),
+            &b,
+            CgOptions { t_max: 4, tol: 0.0 },
+        )
+        .unwrap();
+        assert_eq!(res.iters, vec![4, 4, 4]);
+        assert_eq!(res.max_iters(), 4);
+        for kc in 0..k {
+            assert_eq!(res.stops[kc], CgStop::MaxIter);
+            assert_eq!(res.residuals[kc].len(), 4);
+        }
+    }
+
+    #[test]
+    fn block_cg_freezes_converged_columns_and_shrinks_apply() {
+        // column 0 is the zero RHS (converges at iteration 1 with rsold=0);
+        // the remaining columns keep iterating — the apply width must drop
+        let mut rng = crate::util::rng::Rng::new(6);
+        let (m, k) = (6, 3);
+        let a = {
+            let r = Mat::from_vec(m, m, rng.normals(m * m));
+            let mut s = gram_t(&r);
+            s.add_diag(m as f64);
+            s
+        };
+        let mut b = Mat::from_vec(m, k, rng.normals(m * k));
+        for i in 0..m {
+            b[(i, 0)] = 0.0;
+        }
+        let mut widths = Vec::new();
+        let res = block_conjgrad(
+            |p| {
+                widths.push(p.cols);
+                Ok(matmul(&a, p))
+            },
+            &b,
+            CgOptions { t_max: 3, tol: 0.0 },
+        )
+        .unwrap();
+        assert_eq!(widths, vec![2, 2, 2], "zero column never enters the apply");
+        assert_eq!(res.iters[0], 0);
+        assert!(res.converged[0]);
+        assert_eq!(res.stops[0], CgStop::Converged);
+        for i in 0..m {
+            assert_eq!(res.beta[(i, 0)], 0.0);
+        }
+        assert_eq!(res.iters[1], 3);
+        assert_eq!(res.iters[2], 3);
+    }
+
+    #[test]
+    fn block_cg_shrinks_on_tolerance_exit() {
+        // identity operator: every column converges after one iteration,
+        // so with a tolerance the loop makes exactly one apply
+        let b = Mat::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut applies = 0usize;
+        let res = block_conjgrad(
+            |p| {
+                applies += 1;
+                Ok(p.clone())
+            },
+            &b,
+            CgOptions { t_max: 10, tol: 1e-12 },
+        )
+        .unwrap();
+        assert_eq!(applies, 1);
+        assert_eq!(res.iters, vec![1, 1]);
+        assert!(res.converged.iter().all(|&c| c));
+        assert_eq!(res.beta.data, b.data);
     }
 }

@@ -4,8 +4,13 @@
 //!
 //! Multiclass problems (TIMIT/IMAGENET style) are trained one-vs-all with
 //! the expensive per-fit state (centers, preconditioner, prepared matvec
-//! plan) shared across the K subproblems — only the right-hand side and CG
-//! run differ per class.
+//! plan) shared across the K subproblems — and the K right-hand sides are
+//! solved **simultaneously** by [`super::cg::block_conjgrad`] over
+//! [`crate::runtime::Bhb::apply_multi`], so every Kr panel of the O(nMt)
+//! hot path is computed once per iteration instead of once per class
+//! (DESIGN.md §Perf "Multi-RHS path"). The per-class loop survives as
+//! [`fit_multiclass_looped`], the equivalence oracle the batched path is
+//! benchmarked and tested against.
 
 use crate::data::Dataset;
 use crate::kernels::Kernel;
@@ -16,7 +21,7 @@ use crate::util::timer::{Phases, Timer};
 use anyhow::{Context, Result};
 
 use super::centers::{Centers, SelectedCenters};
-use super::cg::{conjgrad, CgOptions};
+use super::cg::{block_conjgrad, conjgrad, BlockCgResult, CgOptions, CgResult, CgStop};
 
 /// Which preconditioner factorization to use (Sect. A of the paper).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -103,6 +108,9 @@ pub struct FalkonModel {
     pub phases: Phases,
     pub cg_iters: usize,
     pub cg_residuals: Vec<f64>,
+    /// why CG stopped (LostPd means the operator went numerically
+    /// indefinite and the best iterate was kept — also logged at fit time)
+    pub cg_stop: CgStop,
 }
 
 impl FalkonModel {
@@ -131,25 +139,54 @@ pub struct FalkonMulticlass {
     pub centers: Mat,
     pub alphas: Vec<Vec<f64>>,
     pub phases: Phases,
+    /// CG iterations executed per class (all equal to `t` when no
+    /// tolerance is set; per-column early exit otherwise)
+    pub cg_iters: Vec<usize>,
+    /// per-class stop reason from the block CG
+    pub cg_stops: Vec<CgStop>,
 }
 
 impl FalkonMulticlass {
-    /// Per-class scores; scores[k][i] = f_k(x_i).
-    pub fn scores(&self, engine: &Engine, x: &Mat) -> Result<Vec<Vec<f64>>> {
-        self.alphas
-            .iter()
-            .map(|a| engine.predict(self.config.kernel, x, &self.centers, a, self.config.sigma))
-            .collect()
+    /// The K coefficient vectors stacked as the columns of an `M×K`
+    /// block — the input shape of the batched predict path.
+    pub fn alphas_mat(&self) -> Mat {
+        let m = self.centers.rows;
+        let k = self.alphas.len();
+        let mut a = Mat::zeros(m, k);
+        for (kc, alpha) in self.alphas.iter().enumerate() {
+            a.set_col(kc, alpha);
+        }
+        a
     }
 
-    /// Argmax class prediction per row.
+    /// Per-class scores as an `n×K` block (row i = all class scores of
+    /// x_i), computed by the batched multi-output predict: one kernel
+    /// panel per row tile serves every class.
+    pub fn scores_mat(&self, engine: &Engine, x: &Mat) -> Result<Mat> {
+        engine.predict_multi(
+            self.config.kernel,
+            x,
+            &self.centers,
+            &self.alphas_mat(),
+            self.config.sigma,
+        )
+    }
+
+    /// Per-class scores; scores[k][i] = f_k(x_i).
+    pub fn scores(&self, engine: &Engine, x: &Mat) -> Result<Vec<Vec<f64>>> {
+        let sm = self.scores_mat(engine, x)?;
+        Ok((0..sm.cols).map(|kc| sm.col(kc)).collect())
+    }
+
+    /// Argmax class prediction per row (batched across classes).
+    /// `total_cmp` keeps the argmax panic-free on NaN scores.
     pub fn predict_class(&self, engine: &Engine, x: &Mat) -> Result<Vec<usize>> {
-        let scores = self.scores(engine, x)?;
-        let n = x.rows;
-        Ok((0..n)
+        let sm = self.scores_mat(engine, x)?;
+        Ok((0..sm.rows)
             .map(|i| {
-                (0..scores.len())
-                    .max_by(|&a, &b| scores[a][i].partial_cmp(&scores[b][i]).unwrap())
+                let row = sm.row(i);
+                (0..row.len())
+                    .max_by(|&a, &b| row[a].total_cmp(&row[b]))
                     .unwrap()
             })
             .collect())
@@ -234,14 +271,16 @@ pub fn prepare(engine: &Engine, x: &Mat, config: &FalkonConfig) -> Result<FitSta
     })
 }
 
-/// Solve one right-hand side on a prepared state. `on_iter` (if given)
-/// receives (iteration, α at that iteration) — used by convergence
-/// studies; computing α per iteration costs two O(M²) solves.
+/// Solve one right-hand side on a prepared state, returning the Nyström
+/// coefficients plus the full CG outcome (iterations, residual trace,
+/// stop reason). `on_iter` (if given) receives (iteration, α at that
+/// iteration) — used by convergence studies; computing α per iteration
+/// costs two O(M²) solves.
 pub fn solve(
     state: &mut FitState,
     y: &[f64],
     mut on_iter: Option<&mut dyn FnMut(usize, &[f64])>,
-) -> Result<(Vec<f64>, usize, Vec<f64>)> {
+) -> Result<(Vec<f64>, CgResult)> {
     let config = state.config.clone();
     let bhb = Bhb {
         plan: &state.plan,
@@ -273,9 +312,61 @@ pub fn solve(
         },
         cb_dyn.take(),
     )?;
+    if cg.stop == CgStop::LostPd {
+        // don't drop the stop reason on the floor: a LostPd exit means the
+        // preconditioned operator went numerically indefinite and the
+        // returned α is the best iterate, not a converged solution
+        eprintln!(
+            "[falkon] CG stopped after {} iteration(s): {} \
+             (operator lost positive-definiteness; keeping best iterate)",
+            cg.iters,
+            cg.stop.name()
+        );
+    }
     let alpha = bhb.beta_to_alpha(&cg.beta);
     state.phases.add("cg", timer.elapsed_s());
-    Ok((alpha, cg.iters, cg.residuals))
+    Ok((alpha, cg))
+}
+
+/// Solve K right-hand sides simultaneously on a prepared state: one
+/// [`block_conjgrad`] run over [`Bhb::apply_multi`], so each CG iteration
+/// pays a single pass over the kernel panels for all K columns. `y` is
+/// `n×K` (column k = targets of subproblem k); returns the `M×K`
+/// coefficient block and the per-column CG outcome.
+pub fn solve_multi(state: &mut FitState, y: &Mat) -> Result<(Mat, BlockCgResult)> {
+    let config = state.config.clone();
+    anyhow::ensure!(y.rows == state.plan.n(), "y rows {} != n {}", y.rows, state.plan.n());
+    let bhb = Bhb {
+        plan: &state.plan,
+        t: &state.t_factor,
+        a: &state.a_factor,
+        lam: config.lam,
+        d: state.sel.d_weights.as_deref(),
+        q: state.q_factor.as_ref(),
+    };
+    let timer = Timer::start();
+    let r = bhb.rhs_multi(y).context("building multi-RHS")?;
+    let cg = block_conjgrad(
+        |p| bhb.apply_multi(p),
+        &r,
+        CgOptions {
+            t_max: config.t,
+            tol: config.tol,
+        },
+    )?;
+    for (kc, &stop) in cg.stops.iter().enumerate() {
+        if stop == CgStop::LostPd {
+            eprintln!(
+                "[falkon] block CG column {kc} stopped after {} iteration(s): {} \
+                 (operator lost positive-definiteness; keeping best iterate)",
+                cg.iters[kc],
+                stop.name()
+            );
+        }
+    }
+    let alphas = bhb.beta_to_alpha_multi(&cg.beta);
+    state.phases.add("cg", timer.elapsed_s());
+    Ok((alphas, cg))
 }
 
 /// Fit FALKON on a regression / binary (-1, +1) problem.
@@ -301,19 +392,35 @@ pub fn fit_with_callback(
         0.0
     };
     let yc: Vec<f64> = y.iter().map(|v| v - y_offset).collect();
-    let (alpha, cg_iters, cg_residuals) = solve(&mut state, &yc, on_iter)?;
+    let (alpha, cg) = solve(&mut state, &yc, on_iter)?;
     Ok(FalkonModel {
         config: config.clone(),
         centers: state.sel.c,
         alpha,
         y_offset,
         phases: state.phases,
-        cg_iters,
-        cg_residuals,
+        cg_iters: cg.iters,
+        cg_residuals: cg.residuals,
+        cg_stop: cg.stop,
     })
 }
 
-/// One-vs-all multiclass fit sharing centers/preconditioner/plan.
+/// One-vs-all targets stacked as an `n×K` block (column k =
+/// `label_targets(k)`), the input shape of [`solve_multi`].
+fn target_block(data: &Dataset) -> Mat {
+    let n = data.n();
+    let k = data.n_classes;
+    let mut y = Mat::zeros(n, k);
+    for kc in 0..k {
+        y.set_col(kc, &data.label_targets(kc));
+    }
+    y
+}
+
+/// One-vs-all multiclass fit sharing centers/preconditioner/plan, with
+/// all K subproblems solved **simultaneously**: one block CG whose per
+/// iteration cost is a single multi-RHS pass over the kernel panels
+/// (DESIGN.md §Perf "Multi-RHS path") instead of K vector passes.
 pub fn fit_multiclass(
     engine: &Engine,
     data: &Dataset,
@@ -321,17 +428,47 @@ pub fn fit_multiclass(
 ) -> Result<FalkonMulticlass> {
     anyhow::ensure!(data.is_multiclass(), "dataset is not multiclass");
     let mut state = prepare(engine, &data.x, config)?;
+    let y = target_block(data);
+    let (alphas_mat, cg) = solve_multi(&mut state, &y)?;
+    let alphas: Vec<Vec<f64>> = (0..data.n_classes).map(|kc| alphas_mat.col(kc)).collect();
+    Ok(FalkonMulticlass {
+        config: config.clone(),
+        centers: state.sel.c,
+        alphas,
+        phases: state.phases,
+        cg_iters: cg.iters,
+        cg_stops: cg.stops,
+    })
+}
+
+/// The pre-batching one-vs-all loop: one vector CG per class over the
+/// shared plan, recomputing every Kr panel K times per iteration. Kept as
+/// the equivalence oracle and the baseline the multiclass bench reports
+/// its batched-vs-looped speedup against.
+pub fn fit_multiclass_looped(
+    engine: &Engine,
+    data: &Dataset,
+    config: &FalkonConfig,
+) -> Result<FalkonMulticlass> {
+    anyhow::ensure!(data.is_multiclass(), "dataset is not multiclass");
+    let mut state = prepare(engine, &data.x, config)?;
     let mut alphas = Vec::with_capacity(data.n_classes);
+    let mut cg_iters = Vec::with_capacity(data.n_classes);
+    let mut cg_stops = Vec::with_capacity(data.n_classes);
     for k in 0..data.n_classes {
         let yk = data.label_targets(k);
-        let (alpha, _, _) = solve(&mut state, &yk, None)?;
+        let (alpha, cg) = solve(&mut state, &yk, None)?;
         alphas.push(alpha);
+        cg_iters.push(cg.iters);
+        cg_stops.push(cg.stop);
     }
     Ok(FalkonMulticlass {
         config: config.clone(),
         centers: state.sel.c,
         alphas,
         phases: state.phases,
+        cg_iters,
+        cg_stops,
     })
 }
 
@@ -474,6 +611,89 @@ mod tests {
             .count() as f64
             / pred.len() as f64;
         assert!(err < 0.05, "c-err {err} on separable classes");
+    }
+
+    /// Separable k-class blob problem shared by the multiclass tests.
+    fn blob_dataset(seed: u64, n: usize, d: usize, k: usize) -> crate::data::Dataset {
+        synth::blobs(&mut Rng::new(seed), n, d, k)
+    }
+
+    #[test]
+    fn batched_multiclass_matches_looped() {
+        // the batched block-CG fit must reproduce the per-class loop's
+        // coefficients (same shared state, same recurrences — only the
+        // panel amortization differs) to well below prediction noise
+        let data = blob_dataset(16, 600, 6, 4);
+        let (train, test) = data.split(0.25, &mut Rng::new(17));
+        let eng = Engine::rust();
+        let cfg = FalkonConfig {
+            sigma: 4.0,
+            lam: 1e-5,
+            m: 60,
+            t: 12,
+            seed: 8,
+            ..Default::default()
+        };
+        let batched = fit_multiclass(&eng, &train, &cfg).unwrap();
+        let looped = fit_multiclass_looped(&eng, &train, &cfg).unwrap();
+        assert_eq!(batched.alphas.len(), looped.alphas.len());
+        assert_eq!(batched.centers.data, looped.centers.data);
+        assert_eq!(batched.cg_iters, looped.cg_iters);
+        // predictions agree far inside the acceptance budget (1e-8)
+        let sb = batched.scores_mat(&eng, &test.x).unwrap();
+        let sl = looped.scores_mat(&eng, &test.x).unwrap();
+        let diff = sb.max_abs_diff(&sl);
+        assert!(diff < 1e-8, "batched vs looped score diff {diff}");
+        assert_eq!(
+            batched.predict_class(&eng, &test.x).unwrap(),
+            looped.predict_class(&eng, &test.x).unwrap()
+        );
+    }
+
+    #[test]
+    fn batched_multiclass_matches_looped_pooled_engine() {
+        // same contract through the worker pool (pooled apply_multi)
+        let data = blob_dataset(26, 900, 5, 3);
+        let eng = Engine::rust_with(crate::runtime::EngineOptions {
+            workers: 4,
+            ..Default::default()
+        });
+        let cfg = FalkonConfig {
+            sigma: 4.0,
+            lam: 1e-5,
+            m: 48,
+            t: 10,
+            seed: 4,
+            ..Default::default()
+        };
+        let batched = fit_multiclass(&eng, &data, &cfg).unwrap();
+        let looped = fit_multiclass_looped(&eng, &data, &cfg).unwrap();
+        let sb = batched.scores_mat(&eng, &data.x).unwrap();
+        let sl = looped.scores_mat(&eng, &data.x).unwrap();
+        assert!(sb.max_abs_diff(&sl) < 1e-8);
+    }
+
+    #[test]
+    fn multiclass_tolerance_freezes_columns_independently() {
+        // with an early-exit tolerance each column may stop at its own
+        // iteration; every column must report a Converged stop and an
+        // iteration count within budget
+        let data = blob_dataset(36, 700, 5, 4);
+        let eng = Engine::rust();
+        let cfg = FalkonConfig {
+            sigma: 4.0,
+            lam: 1.0 / (700f64).sqrt(),
+            m: 64,
+            t: 200,
+            tol: 1e-8,
+            seed: 5,
+            ..Default::default()
+        };
+        let model = fit_multiclass(&eng, &data, &cfg).unwrap();
+        for (kc, (&iters, &stop)) in model.cg_iters.iter().zip(&model.cg_stops).enumerate() {
+            assert!(iters < 64, "col {kc} took {iters}");
+            assert_eq!(stop, crate::falkon::CgStop::Converged, "col {kc}");
+        }
     }
 
     #[test]

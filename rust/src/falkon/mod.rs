@@ -10,8 +10,8 @@ pub mod precond;
 pub mod tune;
 
 pub use centers::{Centers, SelectedCenters};
-pub use cg::{conjgrad, CgOptions, CgResult};
+pub use cg::{block_conjgrad, conjgrad, BlockCgResult, CgOptions, CgResult, CgStop};
 pub use estimator::{
-    fit, fit_multiclass, fit_with_callback, prepare, solve, FalkonConfig, FalkonModel,
-    FalkonMulticlass, FitState, PrecondKind,
+    fit, fit_multiclass, fit_multiclass_looped, fit_with_callback, prepare, solve, solve_multi,
+    FalkonConfig, FalkonModel, FalkonMulticlass, FitState, PrecondKind,
 };

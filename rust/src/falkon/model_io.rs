@@ -64,6 +64,7 @@ pub fn model_from_json(v: &Value) -> Result<FalkonModel> {
         phases: Default::default(),
         cg_iters: 0,
         cg_residuals: Vec::new(),
+        cg_stop: crate::falkon::CgStop::MaxIter,
     })
 }
 

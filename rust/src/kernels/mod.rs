@@ -6,9 +6,11 @@
 //! Two tiers live here (DESIGN.md §Perf):
 //!
 //! - **reference**: [`Kernel::eval`], [`kernel_block_ref`], [`knm_matvec`],
-//!   [`predict`] — row-at-a-time, libm `exp`, deliberately simple. These
-//!   are the oracles the property tests pin everything else to.
-//! - **tiled hot path**: [`knm_matvec_blocked`], [`predict_blocked`],
+//!   [`knm_matmat`], [`predict`], [`predict_multi`] — row-at-a-time, libm
+//!   `exp`, deliberately simple. These are the oracles the property tests
+//!   pin everything else to.
+//! - **tiled hot path**: [`knm_matvec_blocked`], [`knm_matmat_blocked`],
+//!   [`predict_blocked`], [`predict_multi_blocked`],
 //!   [`kernel_block`], [`kmm`] — panel-of-rows tiles with the
 //!   ‖x‖²+‖c‖²−2x·c norm expansion (the inner loop is a 1×4 register tile
 //!   of dot products, same structure as the Pallas tile), a reusable Kr
@@ -19,6 +21,13 @@
 //!   panels straight into the output matrix, fan row blocks out over the
 //!   shared [`WorkerPool`], and `kmm` computes only the upper triangle of
 //!   the symmetric K_MM then mirrors it (DESIGN.md §Perf "Setup path").
+//!
+//! The `*_matmat` / `*_multi` variants are the multi-RHS generalization
+//! (DESIGN.md §Perf "Multi-RHS path"): the one-vs-all multiclass solve
+//! runs K right-hand sides against the *same* Kr panels, so each panel
+//! is computed once per tile and streamed through a K-column GEMM
+//! (`Y = Kr·U + V`, `W += Krᵀ·Y`) instead of K separate GEMV sweeps —
+//! K·t panel sweeps per fit become t.
 
 use crate::linalg::mat::Mat;
 use crate::linalg::vec_ops::{self, fast_exp};
@@ -315,6 +324,58 @@ pub fn knm_matvec(
     w
 }
 
+/// Multi-RHS generalization of [`knm_matvec`]: W = Krᵀ(mask ⊙ (Kr·U + V))
+/// with U an `M×K` coefficient block, V an `n×K` offset block and W the
+/// `M×K` result — **reference** path (row-at-a-time, libm `exp`), the
+/// oracle [`knm_matmat_blocked`] is property-tested against. The mask
+/// contract matches the vector version: masked rows contribute nothing.
+pub fn knm_matmat(
+    kern: Kernel,
+    x: &Mat,
+    c: &Mat,
+    u: &Mat,
+    v: Option<&Mat>,
+    mask: Option<&[f64]>,
+    param: f64,
+) -> Mat {
+    let (n, m) = (x.rows, c.rows);
+    let k = u.cols;
+    assert_eq!(u.rows, m, "u rows != centers");
+    if let Some(v) = v {
+        assert_eq!(v.rows, n, "v rows != x rows");
+        assert_eq!(v.cols, k, "v cols != u cols");
+    }
+    let mut w = Mat::zeros(m, k);
+    let mut krow = vec![0.0; m];
+    let mut yrow = vec![0.0; k];
+    for i in 0..n {
+        let mi = mask.map(|mk| mk[i]).unwrap_or(1.0);
+        if mi == 0.0 {
+            continue;
+        }
+        let xr = x.row(i);
+        for j in 0..m {
+            krow[j] = kern.eval(xr, c.row(j), param);
+        }
+        // yrow = mi * (krowᵀ·U + v_i)
+        match v {
+            Some(v) => yrow.copy_from_slice(v.row(i)),
+            None => yrow.fill(0.0),
+        }
+        for j in 0..m {
+            vec_ops::axpy(krow[j], u.row(j), &mut yrow);
+        }
+        if mi != 1.0 {
+            vec_ops::scale(mi, &mut yrow);
+        }
+        // W += krow ⊗ yrow
+        for j in 0..m {
+            vec_ops::axpy(krow[j], &yrow, w.row_mut(j));
+        }
+    }
+    w
+}
+
 /// Predictions f(x_i) = Σ_j α_j K(x_i, c_j) for a block of rows —
 /// **reference** path for [`predict_blocked`].
 pub fn predict(kern: Kernel, x: &Mat, c: &Mat, alpha: &[f64], param: f64) -> Vec<f64> {
@@ -331,13 +392,31 @@ pub fn predict(kern: Kernel, x: &Mat, c: &Mat, alpha: &[f64], param: f64) -> Vec
     out
 }
 
+/// Multi-output predictions F = Kr·A for an `M×K` coefficient block
+/// (column k = class k's α) — **reference** path for
+/// [`predict_multi_blocked`]. Returns `n×K`.
+pub fn predict_multi(kern: Kernel, x: &Mat, c: &Mat, alpha: &Mat, param: f64) -> Mat {
+    assert_eq!(alpha.rows, c.rows, "alpha rows != centers");
+    let k = alpha.cols;
+    let mut out = Mat::zeros(x.rows, k);
+    for i in 0..x.rows {
+        let xr = x.row(i);
+        for j in 0..c.rows {
+            let kv = kern.eval(xr, c.row(j), param);
+            vec_ops::axpy(kv, alpha.row(j), out.row_mut(i));
+        }
+    }
+    out
+}
+
 // ---------------------------------------------------------------------
 // tiled hot path
 // ---------------------------------------------------------------------
 
 /// Reusable per-thread buffers for the tiled kernels: one Kr tile
-/// (`tile × M`) plus the fused intermediate y (`tile`). Built once per
-/// plan/worker; the apply loop performs no X-block heap allocation.
+/// (`tile × M`) plus the fused intermediate Y (`tile × K`; K = 1 on the
+/// vector path). Built once per plan/worker; the apply loop performs no
+/// X-block heap allocation.
 pub struct TileScratch {
     tile: usize,
     kr: Vec<f64>,
@@ -360,8 +439,18 @@ impl TileScratch {
 
     /// Grow the Kr buffer if a caller re-uses the scratch with a larger M.
     fn ensure(&mut self, m: usize) {
+        self.ensure_multi(m, 1);
+    }
+
+    /// Grow both buffers for a multi-RHS apply: Kr to `tile × M`, Y to
+    /// `tile × K`. A pool worker's scratch is sized to the widest K it has
+    /// served — a later plan with more classes grows it once, in place.
+    fn ensure_multi(&mut self, m: usize, k: usize) {
         if self.kr.len() < self.tile * m {
             self.kr.resize(self.tile * m, 0.0);
+        }
+        if self.y.len() < self.tile * k {
+            self.y.resize(self.tile * k, 0.0);
         }
     }
 }
@@ -552,6 +641,133 @@ pub fn knm_matvec_blocked(
     }
 }
 
+/// `out[i·K .. (i+1)·K] += Kr[i,:]·U` for every panel row i — the shared
+/// K-column GEMM of the multi-RHS stages ([`knm_matmat_blocked`] stage 1,
+/// [`predict_multi_blocked`]). The inner loop is a 4-center register tile:
+/// four Kr entries each scale a contiguous K-row of U into the K-wide
+/// accumulator, so LLVM vectorizes across the K columns.
+fn panel_times_mat(kr: &[f64], rows: usize, m: usize, u: &Mat, out: &mut [f64]) {
+    let k = u.cols;
+    debug_assert_eq!(u.rows, m);
+    debug_assert!(out.len() >= rows * k);
+    for i in 0..rows {
+        let kri = &kr[i * m..(i + 1) * m];
+        let orow = &mut out[i * k..(i + 1) * k];
+        let mut j = 0;
+        while j + 4 <= m {
+            let (a0, a1, a2, a3) = (kri[j], kri[j + 1], kri[j + 2], kri[j + 3]);
+            let u0 = u.row(j);
+            let u1 = u.row(j + 1);
+            let u2 = u.row(j + 2);
+            let u3 = u.row(j + 3);
+            for t in 0..k {
+                orow[t] += a0 * u0[t] + a1 * u1[t] + a2 * u2[t] + a3 * u3[t];
+            }
+            j += 4;
+        }
+        while j < m {
+            vec_ops::axpy(kri[j], u.row(j), orow);
+            j += 1;
+        }
+    }
+}
+
+/// Tiled/fused W += Krᵀ(mask ⊙ (Kr·U + V)) over the rows of `x` — the
+/// multi-RHS generalization of [`knm_matvec_blocked`]. Each Kr panel is
+/// computed **once** and streamed through both K-column stages, so K
+/// right-hand sides cost one panel sweep instead of K.
+///
+/// `u` is `M×K`; `v` (when present) is the row-major `x.rows × K` offset
+/// block indexed by local row, matching the vector version's `v` contract;
+/// `w` is `M×K` and accumulated into (callers zero it). Rows whose fused
+/// Y-row is entirely zero — in particular every masked row — are skipped
+/// in the accumulation pass.
+#[allow(clippy::too_many_arguments)]
+pub fn knm_matmat_blocked(
+    kern: Kernel,
+    x: &Mat,
+    c: &Mat,
+    xn: &[f64],
+    cn: &[f64],
+    u: &Mat,
+    v: Option<&[f64]>,
+    mask: Option<&[f64]>,
+    param: f64,
+    scratch: &mut TileScratch,
+    w: &mut Mat,
+) {
+    let (n, m, d) = (x.rows, c.rows, x.cols);
+    let k = u.cols;
+    assert_eq!(c.cols, d, "feature dims differ");
+    assert_eq!(u.rows, m, "u rows != centers");
+    assert_eq!((w.rows, w.cols), (m, k), "w shape");
+    assert_eq!(xn.len(), n);
+    assert_eq!(cn.len(), m);
+    if let Some(v) = v {
+        assert_eq!(v.len(), n * k, "v length != n·K");
+    }
+    if let Some(mk) = mask {
+        assert_eq!(mk.len(), n);
+    }
+    if k == 0 {
+        return;
+    }
+    scratch.ensure_multi(m, k);
+    let tile = scratch.tile;
+    let TileScratch { kr, y, .. } = scratch;
+    let mut s = 0;
+    while s < n {
+        let rows = (n - s).min(tile);
+        let kr = &mut kr[..rows * m];
+        let xb = &x.data[s * d..(s + rows) * d];
+        kernel_panel(kern, xb, d, rows, &xn[s..s + rows], c, cn, 0, param, kr, m);
+        // fused stage 1: Y = mask ⊙ (Kr·U + V)   (rows × K)
+        let y = &mut y[..rows * k];
+        for i in 0..rows {
+            let gi = s + i;
+            let yrow = &mut y[i * k..(i + 1) * k];
+            let mi = mask.map(|mk| mk[gi]).unwrap_or(1.0);
+            if mi == 0.0 {
+                yrow.fill(0.0);
+                continue;
+            }
+            match v {
+                Some(vf) => yrow.copy_from_slice(&vf[gi * k..(gi + 1) * k]),
+                None => yrow.fill(0.0),
+            }
+        }
+        panel_times_mat(kr, rows, m, u, y);
+        // masked rows were initialized to zero, but stage 1 added Kr·U to
+        // them too — re-zero them (and apply non-trivial mask weights) so
+        // the accumulation pass honors the mask contract exactly.
+        if let Some(mk) = mask {
+            for i in 0..rows {
+                let mi = mk[s + i];
+                if mi != 1.0 {
+                    let yrow = &mut y[i * k..(i + 1) * k];
+                    if mi == 0.0 {
+                        yrow.fill(0.0);
+                    } else {
+                        vec_ops::scale(mi, yrow);
+                    }
+                }
+            }
+        }
+        // fused stage 2: W += Krᵀ·Y (masked / zero rows skipped)
+        for i in 0..rows {
+            let yrow = &y[i * k..(i + 1) * k];
+            if yrow.iter().all(|&t| t == 0.0) {
+                continue;
+            }
+            let kri = &kr[i * m..(i + 1) * m];
+            for j in 0..m {
+                vec_ops::axpy(kri[j], yrow, w.row_mut(j));
+            }
+        }
+        s += rows;
+    }
+}
+
 /// Tiled predictions f(x_i) = Σ_j α_j K(x_i, c_j): one kernel panel per
 /// row tile, then a dot against α — the serving analogue of
 /// [`knm_matvec_blocked`].
@@ -637,6 +853,92 @@ fn predict_range(
         for i in 0..rows {
             out[s - start + i] = vec_ops::dot(&kr[i * m..(i + 1) * m], alpha);
         }
+        s += rows;
+    }
+}
+
+/// Tiled multi-output predictions F = Kr·A for an `M×K` coefficient block:
+/// one kernel panel per row tile serves all K classes at once — the
+/// serving analogue of [`knm_matmat_blocked`]. Returns `n×K`.
+pub fn predict_multi_blocked(kern: Kernel, x: &Mat, c: &Mat, alpha: &Mat, param: f64) -> Mat {
+    predict_multi_blocked_pool(kern, x, c, alpha, param, None)
+}
+
+/// [`predict_multi_blocked`] with row chunks fanned out over the shared
+/// worker pool. Each output row is written by exactly one task with the
+/// same per-row arithmetic as the serial tiling, so pooled results are
+/// bitwise identical to serial regardless of the pool.
+pub fn predict_multi_blocked_pool(
+    kern: Kernel,
+    x: &Mat,
+    c: &Mat,
+    alpha: &Mat,
+    param: f64,
+    pool: Option<&WorkerPool>,
+) -> Mat {
+    let (n, m) = (x.rows, c.rows);
+    let k = alpha.cols;
+    assert_eq!(c.cols, x.cols, "feature dims differ");
+    assert_eq!(alpha.rows, m, "alpha rows != centers");
+    let mut out = Mat::zeros(n, k);
+    if n == 0 || k == 0 {
+        return out;
+    }
+    let cn = row_sq_norms(c);
+    let workers = pool
+        .map(|p| p.workers())
+        .unwrap_or(1)
+        .min(n.div_ceil(DEFAULT_TILE).max(1));
+    let ranges = chunk_ranges(n, workers);
+    let cn = cn.as_slice();
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+    let mut rest = out.data.as_mut_slice();
+    for &(lo, hi) in &ranges {
+        let (chunk, tail) = rest.split_at_mut((hi - lo) * k);
+        rest = tail;
+        tasks.push(Box::new(move || {
+            predict_multi_range(kern, x, c, cn, alpha, param, lo, hi, chunk);
+        }));
+    }
+    fan_out(pool, tasks);
+    out
+}
+
+/// Serial tiled multi-output predict over rows [start, end) of `x`,
+/// writing the row-major `(end-start) × K` block into `out`.
+#[allow(clippy::too_many_arguments)]
+fn predict_multi_range(
+    kern: Kernel,
+    x: &Mat,
+    c: &Mat,
+    cn: &[f64],
+    alpha: &Mat,
+    param: f64,
+    start: usize,
+    end: usize,
+    out: &mut [f64],
+) {
+    let (m, d) = (c.rows, x.cols);
+    let k = alpha.cols;
+    debug_assert_eq!(out.len(), (end - start) * k);
+    if start == end {
+        return;
+    }
+    let mut scratch = TileScratch::new(DEFAULT_TILE.min(end - start), m);
+    let xn: Vec<f64> = (start..end)
+        .map(|i| {
+            let r = x.row(i);
+            vec_ops::dot(r, r)
+        })
+        .collect();
+    let mut s = start;
+    while s < end {
+        let rows = (end - s).min(scratch.tile);
+        let kr = &mut scratch.kr[..rows * m];
+        let xb = &x.data[s * d..(s + rows) * d];
+        let xnr = &xn[s - start..s - start + rows];
+        kernel_panel(kern, xb, d, rows, xnr, c, cn, 0, param, kr, m);
+        panel_times_mat(kr, rows, m, alpha, &mut out[(s - start) * k..]);
         s += rows;
     }
 }
@@ -947,6 +1249,179 @@ mod tests {
         let pool = crate::util::pool::WorkerPool::new("test-predict", 4).unwrap();
         let got = predict_blocked_pool(Kernel::Gaussian, &x, &c, &alpha, 1.2, Some(&pool));
         assert!(vec_ops::max_abs_diff(&got, &want) < 1e-10);
+    }
+
+    // -- multi-RHS path ----------------------------------------------------
+
+    /// Run the tiled multi-RHS apply with an explicit tile size.
+    #[allow(clippy::too_many_arguments)]
+    fn run_matmat_blocked(
+        kern: Kernel,
+        x: &Mat,
+        c: &Mat,
+        u: &Mat,
+        v: Option<&Mat>,
+        mask: Option<&[f64]>,
+        p: f64,
+        tile: usize,
+    ) -> Mat {
+        let xn = row_sq_norms(x);
+        let cn = row_sq_norms(c);
+        let mut scratch = TileScratch::new(tile, c.rows);
+        let mut w = Mat::zeros(c.rows, u.cols);
+        knm_matmat_blocked(
+            kern,
+            x,
+            c,
+            &xn,
+            &cn,
+            u,
+            v.map(|vm| vm.data.as_slice()),
+            mask,
+            p,
+            &mut scratch,
+            &mut w,
+        );
+        w
+    }
+
+    #[test]
+    fn matmat_reference_matches_k_matvecs() {
+        // column k of knm_matmat must equal knm_matvec on (u_k, v_k)
+        check("knm_matmat = K × knm_matvec", 15, |g| {
+            let (b, m, d, k) = (
+                g.usize_in(1, 10),
+                g.usize_in(1, 8),
+                g.usize_in(1, 5),
+                g.usize_in(1, 5),
+            );
+            let x = Mat::from_vec(b, d, g.normal_vec(b * d));
+            let c = Mat::from_vec(m, d, g.normal_vec(m * d));
+            let u = Mat::from_vec(m, k, g.normal_vec(m * k));
+            let v = Mat::from_vec(b, k, g.normal_vec(b * k));
+            let mask: Vec<f64> = (0..b).map(|_| if g.bool() { 1.0 } else { 0.0 }).collect();
+            let kern = *g.pick(&KERNELS);
+            let w = knm_matmat(kern, &x, &c, &u, Some(&v), Some(&mask), 1.2);
+            for kc in 0..k {
+                let uk: Vec<f64> = (0..m).map(|j| u[(j, kc)]).collect();
+                let vk: Vec<f64> = (0..b).map(|i| v[(i, kc)]).collect();
+                let want = knm_matvec(kern, &x, &c, &uk, &vk, Some(&mask), 1.2);
+                for j in 0..m {
+                    assert!((w[(j, kc)] - want[j]).abs() < 1e-9, "{kern:?} col {kc}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn blocked_matmat_matches_reference_all_kernels() {
+        check("knm_matmat_blocked = knm_matmat", 25, |g| {
+            let (b, m, d) = (g.usize_in(1, 20), g.usize_in(1, 14), g.usize_in(1, 6));
+            // ragged K around the register-tile widths, including K = 1
+            let k = *g.pick(&[1usize, 2, 3, 5, 8]);
+            let x = Mat::from_vec(b, d, g.normal_vec(b * d));
+            let c = Mat::from_vec(m, d, g.normal_vec(m * d));
+            let u = Mat::from_vec(m, k, g.normal_vec(m * k));
+            let v = Mat::from_vec(b, k, g.normal_vec(b * k));
+            let p = g.f64_in(0.5, 3.0);
+            for kern in KERNELS {
+                let want = knm_matmat(kern, &x, &c, &u, Some(&v), None, p);
+                for tile in [1usize, 3, 64] {
+                    let got = run_matmat_blocked(kern, &x, &c, &u, Some(&v), None, p, tile);
+                    let diff = got.max_abs_diff(&want);
+                    assert!(diff < 1e-10, "{kern:?} k={k} tile={tile} diff={diff}");
+                }
+                // and the v = None path (the CG iteration shape)
+                let want0 = knm_matmat(kern, &x, &c, &u, None, None, p);
+                let got0 = run_matmat_blocked(kern, &x, &c, &u, None, None, p, 4);
+                assert!(got0.max_abs_diff(&want0) < 1e-10, "{kern:?} v=None");
+            }
+        });
+    }
+
+    #[test]
+    fn blocked_matmat_honors_mask_contract() {
+        check("blocked matmat mask contract", 15, |g| {
+            let (b, m, d, k) = (
+                g.usize_in(2, 14),
+                g.usize_in(1, 9),
+                g.usize_in(1, 5),
+                g.usize_in(1, 4),
+            );
+            let x = Mat::from_vec(b, d, g.normal_vec(b * d));
+            let c = Mat::from_vec(m, d, g.normal_vec(m * d));
+            let u = Mat::from_vec(m, k, g.normal_vec(m * k));
+            let v = Mat::from_vec(b, k, g.normal_vec(b * k));
+            let mask: Vec<f64> = (0..b).map(|_| if g.bool() { 1.0 } else { 0.0 }).collect();
+            let kern = *g.pick(&KERNELS);
+            let want = knm_matmat(kern, &x, &c, &u, Some(&v), Some(&mask), 1.1);
+            let got = run_matmat_blocked(kern, &x, &c, &u, Some(&v), Some(&mask), 1.1, 4);
+            assert!(got.max_abs_diff(&want) < 1e-10, "{kern:?}");
+        });
+    }
+
+    #[test]
+    fn blocked_matmat_matches_k1_vector_path() {
+        // K = 1 degeneracy: the multi-RHS tiling must agree with the
+        // vector hot path on the same inputs
+        let mut rng = crate::util::rng::Rng::new(61);
+        let (b, m, d) = (2 * DEFAULT_TILE + 13, 33, 7);
+        let x = Mat::from_vec(b, d, rng.normals(b * d));
+        let c = Mat::from_vec(m, d, rng.normals(m * d));
+        let uv = rng.normals(m);
+        let u = Mat::from_vec(m, 1, uv.clone());
+        let vv = rng.normals(b);
+        let v = Mat::from_vec(b, 1, vv.clone());
+        for kern in KERNELS {
+            let got = run_matmat_blocked(kern, &x, &c, &u, Some(&v), None, 1.4, DEFAULT_TILE);
+            let want = run_blocked(kern, &x, &c, &uv, Some(&vv), None, 1.4, DEFAULT_TILE);
+            for j in 0..m {
+                assert!((got[(j, 0)] - want[j]).abs() < 1e-10, "{kern:?} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn predict_multi_matches_per_column_predict() {
+        check("predict_multi = K × predict", 15, |g| {
+            let (b, m, d, k) = (
+                g.usize_in(1, 12),
+                g.usize_in(1, 9),
+                g.usize_in(1, 5),
+                g.usize_in(1, 5),
+            );
+            let x = Mat::from_vec(b, d, g.normal_vec(b * d));
+            let c = Mat::from_vec(m, d, g.normal_vec(m * d));
+            let a = Mat::from_vec(m, k, g.normal_vec(m * k));
+            let p = g.f64_in(0.5, 3.0);
+            for kern in KERNELS {
+                let refm = predict_multi(kern, &x, &c, &a, p);
+                let got = predict_multi_blocked(kern, &x, &c, &a, p);
+                assert!(got.max_abs_diff(&refm) < 1e-10, "{kern:?} blocked vs ref");
+                for kc in 0..k {
+                    let ak: Vec<f64> = (0..m).map(|j| a[(j, kc)]).collect();
+                    let want = predict(kern, &x, &c, &ak, p);
+                    for i in 0..b {
+                        assert!((refm[(i, kc)] - want[i]).abs() < 1e-10, "{kern:?}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pooled_predict_multi_is_bitwise_equal_to_serial() {
+        let pool = crate::util::pool::WorkerPool::new("test-pmulti", 4).unwrap();
+        let mut rng = crate::util::rng::Rng::new(67);
+        let (b, m, d, k) = (3 * DEFAULT_TILE + 17, 27, 5, 6);
+        let x = Mat::from_vec(b, d, rng.normals(b * d));
+        let c = Mat::from_vec(m, d, rng.normals(m * d));
+        let a = Mat::from_vec(m, k, rng.normals(m * k));
+        for kern in KERNELS {
+            let serial = predict_multi_blocked(kern, &x, &c, &a, 1.2);
+            let pooled = predict_multi_blocked_pool(kern, &x, &c, &a, 1.2, Some(&pool));
+            assert_eq!(serial.data, pooled.data, "{kern:?}");
+        }
     }
 
     #[test]

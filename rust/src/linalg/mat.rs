@@ -115,6 +115,35 @@ impl Mat {
         }
     }
 
+    /// Copy of column j (row-major storage makes columns strided; the
+    /// multi-RHS callers gather one when they need vector-shaped access).
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        assert!(j < self.cols);
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Overwrite column j from a slice.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert!(j < self.cols);
+        assert_eq!(v.len(), self.rows, "set_col length");
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// A → D·A for diagonal D given as a vector — row i scaled by d[i]
+    /// (the Def. 2/3 reweighting applied to a multi-RHS block, one
+    /// contiguous row at a time).
+    pub fn scale_rows(&mut self, d: &[f64]) {
+        assert_eq!(d.len(), self.rows, "scale_rows: diagonal length");
+        for i in 0..self.rows {
+            let di = d[i];
+            for v in self.row_mut(i) {
+                *v *= di;
+            }
+        }
+    }
+
     /// A → D·A·D for diagonal D given as a vector — the Def. 3
     /// leverage-score reweighting K_MM → D·K_MM·D, applied one
     /// contiguous row at a time.
@@ -261,5 +290,21 @@ mod tests {
         let mut m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
         m.scale_sym_diag(&[2.0, 10.0]);
         assert_eq!(m.data, vec![4.0, 40.0, 60.0, 400.0]);
+    }
+
+    #[test]
+    fn scale_rows_is_da() {
+        let mut m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        m.scale_rows(&[2.0, 10.0]);
+        assert_eq!(m.data, vec![2.0, 4.0, 30.0, 40.0]);
+    }
+
+    #[test]
+    fn col_roundtrip() {
+        let mut m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(m.col(1), vec![2.0, 4.0, 6.0]);
+        m.set_col(0, &[7.0, 8.0, 9.0]);
+        assert_eq!(m.col(0), vec![7.0, 8.0, 9.0]);
+        assert_eq!(m.col(1), vec![2.0, 4.0, 6.0]);
     }
 }

@@ -67,9 +67,15 @@ pub fn norm2(x: &[f64]) -> f64 {
 ///
 /// Accuracy: |rel err| < ~5e-15 on [-708, 708] — far inside the 1e-10
 /// agreement budget the property tests enforce against the libm-based
-/// reference kernels. Inputs below -708 return 0 (the true value is
-/// denormal there, < 1e-307); inputs above 708 are clamped (callers in
-/// this crate only ever pass x ≤ 0).
+/// reference kernels. Both overflow tails are handled branch-free (two
+/// selects on the way out, so the panel loop still vectorizes):
+///
+/// - x < -709: returns exact 0 (the true value is denormal, < 1e-307)
+/// - x > 708: returns +inf (true overflow is at ~709.78; the sliver
+///   (708, 709.78] saturates to +inf rather than silently returning a
+///   wrong finite value — the crate's kernel arms only ever pass x ≤ 0,
+///   so this tail is reachable only on pathological inputs)
+/// - NaN passes through as NaN
 #[inline]
 pub fn fast_exp(x: f64) -> f64 {
     const LOG2E: f64 = std::f64::consts::LOG2_E;
@@ -94,12 +100,18 @@ pub fn fast_exp(x: f64) -> f64 {
                                             + r * (1.0 / 3628800.0
                                                 + r * (1.0 / 39916800.0
                                                     + r * (1.0 / 479001600.0))))))))))));
-    // 2^k assembled directly in the exponent field (k in [-1022, 1022])
+    // 2^k assembled directly in the exponent field (k in [-1022, 1022]);
+    // NaN inputs reach here with kf = NaN, which casts to 0 -> scale = 1,
+    // so out stays NaN and falls through both selects below
     let scale = f64::from_bits(((1023i64 + kf as i64) as u64) << 52);
     let out = p * scale;
-    // true underflow: exp(x) < 2^-1022 for x < -708.39; report exact 0
+    // true underflow: exp(x) < 2^-1022 for x < -708.39; report exact 0.
+    // positive overflow: saturate to +inf instead of exp(708) ≈ 3e307
+    // (both comparisons are false for NaN, preserving passthrough)
     if x < -709.0 {
         0.0
+    } else if x > 708.0 {
+        f64::INFINITY
     } else {
         out
     }
@@ -206,6 +218,29 @@ mod tests {
             let (got, want) = (fast_exp(x), x.exp());
             assert!((got - want).abs() < 1e-13 * want.max(1e-30) + 1e-300, "x={x}");
         }
+    }
+
+    #[test]
+    fn fast_exp_positive_overflow_saturates() {
+        // x ≥ 710 overflows f64 — must report +inf, not a silently wrong
+        // finite value (the pre-fix clamp returned exp(708) ≈ 3e307)
+        assert_eq!(fast_exp(710.0), f64::INFINITY);
+        assert_eq!(fast_exp(1000.0), f64::INFINITY);
+        assert_eq!(fast_exp(f64::INFINITY), f64::INFINITY);
+        assert_eq!(fast_exp(f64::MAX), f64::INFINITY);
+        // the accurate range still ends cleanly at the clamp boundary
+        let near = fast_exp(700.0);
+        let want = (700.0f64).exp();
+        assert!((near - want).abs() / want < 1e-12, "{near} vs {want}");
+        assert!(fast_exp(708.0).is_finite());
+        // negative tail unchanged
+        assert_eq!(fast_exp(f64::NEG_INFINITY), 0.0);
+    }
+
+    #[test]
+    fn fast_exp_nan_passthrough() {
+        assert!(fast_exp(f64::NAN).is_nan());
+        assert!(fast_exp(-f64::NAN).is_nan());
     }
 
     #[test]

@@ -4,8 +4,14 @@
 //! requests (waiting at most `max_wait` for stragglers), stacks them into
 //! one row-block, runs a single blocked predict, and fans the results
 //! back out. Clients hold a cheap, cloneable, `Send` [`Handle`].
+//!
+//! [`MulticlassServer`] is the one-vs-all counterpart: a batch of rows is
+//! served by **one** multi-output predict (`Engine::predict_multi`), so
+//! the kernel panels are amortized across the batch rows *and* the K
+//! classes — a K-class request costs one panel sweep, not K
+//! (DESIGN.md §Perf "Multi-RHS path").
 
-use crate::falkon::FalkonModel;
+use crate::falkon::{FalkonModel, FalkonMulticlass};
 use crate::linalg::mat::Mat;
 use anyhow::{anyhow, Result};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -187,6 +193,178 @@ fn serve_loop(
     stats
 }
 
+// ---------------------------------------------------------------------
+// multiclass serving
+// ---------------------------------------------------------------------
+
+/// One multiclass answer: the argmax class plus the per-class scores
+/// (callers needing calibrated probabilities can post-process the scores).
+#[derive(Debug, Clone)]
+pub struct ClassPrediction {
+    pub class: usize,
+    pub scores: Vec<f64>,
+}
+
+struct ClassRequest {
+    features: Vec<f64>,
+    reply: Sender<Result<ClassPrediction>>,
+}
+
+/// Client handle for the multiclass server.
+#[derive(Clone)]
+pub struct MulticlassHandle {
+    tx: Sender<ClassRequest>,
+    d: usize,
+}
+
+impl MulticlassHandle {
+    pub fn predict(&self, features: Vec<f64>) -> Result<ClassPrediction> {
+        if features.len() != self.d {
+            return Err(anyhow!(
+                "feature dim {} != model dim {}",
+                features.len(),
+                self.d
+            ));
+        }
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(ClassRequest {
+                features,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("server stopped"))?;
+        reply_rx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+}
+
+/// Batched one-vs-all server: same dynamic-batching loop as [`Server`],
+/// but each executed batch runs a single multi-output predict covering
+/// every class.
+pub struct MulticlassServer {
+    handle: MulticlassHandle,
+    join: Option<std::thread::JoinHandle<ServeStats>>,
+    shutdown: Sender<()>,
+}
+
+impl MulticlassServer {
+    /// Spawn the model thread and return the server (handles via
+    /// [`MulticlassServer::handle`]).
+    pub fn start(model: FalkonMulticlass, cfg: ServeConfig) -> Result<MulticlassServer> {
+        let d = model.centers.cols;
+        let (tx, rx) = channel::<ClassRequest>();
+        let (stop_tx, stop_rx) = channel::<()>();
+        let join = std::thread::Builder::new()
+            .name("falkon-serve-mc".into())
+            .spawn(move || serve_multiclass_loop(model, cfg, rx, stop_rx))
+            .map_err(|e| anyhow!("spawning multiclass server: {e}"))?;
+        Ok(MulticlassServer {
+            handle: MulticlassHandle { tx, d },
+            join: Some(join),
+            shutdown: stop_tx,
+        })
+    }
+
+    pub fn handle(&self) -> MulticlassHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the server and collect stats (the serve loop notices the stop
+    /// signal on its next idle poll).
+    pub fn stop(mut self) -> ServeStats {
+        let _ = self.shutdown.send(());
+        let join = self.join.take().unwrap();
+        join.join().unwrap_or_default()
+    }
+}
+
+fn serve_multiclass_loop(
+    model: FalkonMulticlass,
+    cfg: ServeConfig,
+    rx: Receiver<ClassRequest>,
+    stop: Receiver<()>,
+) -> ServeStats {
+    let engine = match crate::runtime::Engine::by_name(&cfg.engine, cfg.workers) {
+        Ok(e) => e,
+        Err(err) => {
+            eprintln!("serve: engine init failed ({err}); falling back to rust engine");
+            crate::runtime::Engine::rust_with(crate::runtime::EngineOptions {
+                workers: cfg.workers,
+                ..Default::default()
+            })
+        }
+    };
+    let d = model.centers.cols;
+    // stacked once: the per-batch predict reads the same M×K block
+    let alphas = model.alphas_mat();
+    let mut stats = ServeStats::default();
+    let mut pending: Vec<ClassRequest> = Vec::new();
+
+    loop {
+        if stop.try_recv().is_ok() {
+            break;
+        }
+        if pending.is_empty() {
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let deadline = Instant::now() + cfg.max_wait;
+        while pending.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+        }
+        let rows = pending.len();
+        let mut x = Mat::zeros(rows, d);
+        for (i, r) in pending.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(&r.features);
+        }
+        // one panel-amortized predict for the whole (rows × K) batch
+        let scores = engine.predict_multi(
+            model.config.kernel,
+            &x,
+            &model.centers,
+            &alphas,
+            model.config.sigma,
+        );
+        match scores {
+            Ok(sm) => {
+                for (i, r) in pending.drain(..).enumerate() {
+                    let row = sm.row(i);
+                    // total_cmp: a pathological request whose scores go NaN
+                    // must not panic the serve thread for everyone else
+                    let class = (0..row.len())
+                        .max_by(|&a, &b| row[a].total_cmp(&row[b]))
+                        .unwrap_or(0);
+                    let _ = r.reply.send(Ok(ClassPrediction {
+                        class,
+                        scores: row.to_vec(),
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for r in pending.drain(..) {
+                    let _ = r.reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+        stats.requests += rows as u64;
+        stats.batches += 1;
+    }
+    if stats.batches > 0 {
+        stats.mean_batch = stats.requests as f64 / stats.batches as f64;
+    }
+    stats
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,6 +440,100 @@ mod tests {
         // dynamic batching must have coalesced at least some requests
         assert!(stats.batches < 32, "batches {}", stats.batches);
         assert!(stats.mean_batch > 1.0);
+    }
+
+    fn tiny_multiclass() -> (crate::falkon::FalkonMulticlass, Mat, Vec<usize>) {
+        let mut rng = Rng::new(21);
+        let (n, d, k) = (400, 4, 3);
+        let data = crate::data::synth::blobs(&mut rng, n, d, k);
+        let eng = Engine::rust();
+        let cfg = FalkonConfig {
+            sigma: 4.0,
+            lam: 1e-5,
+            m: 40,
+            t: 10,
+            seed: 3,
+            ..Default::default()
+        };
+        let model = crate::falkon::fit_multiclass(&eng, &data, &cfg).unwrap();
+        let labels = data.labels.clone().unwrap();
+        (model, data.x, labels)
+    }
+
+    #[test]
+    fn multiclass_server_matches_direct_predict() {
+        let (model, x, _) = tiny_multiclass();
+        let eng = Engine::rust();
+        let want_classes = model.predict_class(&eng, &x.slice_rows(0, 12)).unwrap();
+        let want_scores = model.scores_mat(&eng, &x.slice_rows(0, 12)).unwrap();
+        let server = MulticlassServer::start(
+            model,
+            ServeConfig {
+                engine: "rust".into(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = server.handle();
+        for i in 0..12 {
+            let got = h.predict(x.row(i).to_vec()).unwrap();
+            assert_eq!(got.class, want_classes[i], "row {i}");
+            assert_eq!(got.scores.len(), want_scores.cols);
+            for kc in 0..want_scores.cols {
+                assert!(
+                    (got.scores[kc] - want_scores[(i, kc)]).abs() < 1e-12,
+                    "row {i} class {kc}"
+                );
+            }
+        }
+        let stats = server.stop();
+        assert_eq!(stats.requests, 12);
+    }
+
+    #[test]
+    fn multiclass_server_batches_concurrent_clients() {
+        let (model, x, _) = tiny_multiclass();
+        let server = MulticlassServer::start(
+            model,
+            ServeConfig {
+                engine: "rust".into(),
+                max_batch: 16,
+                max_wait: Duration::from_millis(10),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = server.handle();
+        let results: Vec<ClassPrediction> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..24)
+                .map(|i| {
+                    let h = h.clone();
+                    let row = x.row(i % x.rows).to_vec();
+                    s.spawn(move || h.predict(row).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        assert_eq!(results.len(), 24);
+        let stats = server.stop();
+        assert_eq!(stats.requests, 24);
+        assert!(stats.batches < 24, "batches {}", stats.batches);
+    }
+
+    #[test]
+    fn multiclass_server_rejects_wrong_dimension() {
+        let (model, _, _) = tiny_multiclass();
+        let server = MulticlassServer::start(
+            model,
+            ServeConfig {
+                engine: "rust".into(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = server.handle();
+        assert!(h.predict(vec![1.0]).is_err());
+        server.stop();
     }
 
     #[test]

@@ -158,6 +158,42 @@ fn full_fit_agrees_across_engines() {
 }
 
 #[test]
+fn xla_apply_multi_matches_rust() {
+    // the XLA plan's loop-over-columns apply_multi (and the cached
+    // padded-center literal it reuses across calls) must agree with the
+    // Rust panel-amortized path column-wise
+    let Some((xla, rust)) = engines() else { return };
+    let mut rng = Rng::new(17);
+    let n = 200;
+    let x = Mat::from_vec(n, 7, rng.normals(n * 7));
+    let c = x.select_rows(&rng.choose(n, 32));
+    let k = 4;
+    let u = Mat::from_vec(32, k, rng.normals(32 * k));
+    let v = Mat::from_vec(n, k, rng.normals(n * k));
+    let p1 = xla.matvec_plan(Kernel::Gaussian, &x, &c, 1.4).unwrap();
+    let p2 = rust.matvec_plan(Kernel::Gaussian, &x, &c, 1.4).unwrap();
+    for vopt in [None, Some(&v)] {
+        let w1 = p1.apply_multi(&u, vopt).unwrap();
+        let w2 = p2.apply_multi(&u, vopt).unwrap();
+        for kc in 0..k {
+            let d = rel_diff(&w1.col(kc), &w2.col(kc));
+            assert!(d < 5e-4, "col {kc} rel {d}");
+        }
+    }
+    // second plan over the same centers rides the cached literal
+    let p3 = xla.matvec_plan(Kernel::Gaussian, &x, &c, 1.4).unwrap();
+    let w3 = p3.apply_multi(&u, None).unwrap();
+    let w1 = p1.apply_multi(&u, None).unwrap();
+    assert!(w3.max_abs_diff(&w1) < 1e-6);
+    // multi-output predict path
+    let preds_multi = xla.predict_multi(Kernel::Gaussian, &x, &c, &u, 1.4).unwrap();
+    for kc in 0..k {
+        let want = rust.predict(Kernel::Gaussian, &x, &c, &u.col(kc), 1.4).unwrap();
+        assert!(rel_diff(&preds_multi.col(kc), &want) < 5e-4, "predict col {kc}");
+    }
+}
+
+#[test]
 fn multiclass_fit_on_xla() {
     let Some((xla, _)) = engines() else { return };
     let mut rng = Rng::new(15);
