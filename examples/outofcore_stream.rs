@@ -1,0 +1,84 @@
+//! Out-of-core walkthrough: write a CSV "on disk" dataset, stream-convert
+//! it to the chunked binary shard format, train FALKON with a chunk
+//! budget far smaller than the dataset, and bulk-score the shard — the
+//! full feature matrix is never resident after the CSV is written.
+//!
+//!     cargo run --release --example outofcore_stream
+//!
+//! The same flow is available from the CLI:
+//!
+//!     falkon convert --input data.csv --output data.shard
+//!     falkon train   --dataset data.shard --stream --chunk-rows 8192 --engine rust
+//!     falkon predict --model model.json --dataset data.shard
+
+use falkon::data::shard::{self, ShardSource};
+use falkon::data::stream_text::CsvSource;
+use falkon::falkon::{fit_source, FalkonConfig};
+use falkon::metrics;
+use falkon::runtime::Engine;
+use falkon::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir();
+    let csv_path = dir.join("falkon_example_stream.csv");
+    let shard_path = dir.join("falkon_example_stream.shard");
+    let csv_path = csv_path.to_string_lossy().into_owned();
+    let shard_path = shard_path.to_string_lossy().into_owned();
+
+    // 1. a 20k-row CSV (label first, like MillionSongs distributions)
+    let mut rng = Rng::new(0);
+    let (n, d) = (20_000usize, 6usize);
+    let mut csv = String::from("y,f0,f1,f2,f3,f4,f5\n");
+    for _ in 0..n {
+        let row = rng.normals(d);
+        let y: f64 = row.iter().map(|v| (v * 1.3).sin()).sum::<f64>() + 0.05 * rng.normal();
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        csv.push_str(&format!("{y},{}\n", cells.join(",")));
+    }
+    std::fs::write(&csv_path, &csv)?;
+    println!("wrote {csv_path} ({} KiB)", csv.len() / 1024);
+
+    // 2. stream-convert: the CSV is parsed lazily, 2048 rows at a time,
+    //    and lands as shard records — O(chunk) memory end to end
+    let mut lazy = CsvSource::open(&csv_path, true, 2048)?;
+    let rows = shard::write_source(&shard_path, &mut lazy)?;
+    println!("converted {rows} rows -> {shard_path}");
+
+    // 3. out-of-core fit: chunk budget = n/10 rows; every CG iteration
+    //    re-streams the shard instead of holding X in memory
+    let chunk_rows = n / 10;
+    let source = ShardSource::open(&shard_path, chunk_rows)?;
+    println!(
+        "fitting with chunk budget {chunk_rows} rows (~{} KiB resident of {} KiB total)",
+        chunk_rows * d * 8 / 1024,
+        n * d * 8 / 1024
+    );
+    let engine = Engine::rust();
+    let config = FalkonConfig {
+        sigma: 2.0,
+        lam: 1e-4,
+        m: 512,
+        t: 12,
+        seed: 7,
+        ..Default::default()
+    };
+    let model = fit_source(&engine, Box::new(source), &config)?;
+    println!("fit done\n{}", model.phases.report());
+
+    // 4. bulk-score the shard (streamed too) and report training error
+    let mut eval = ShardSource::open(&shard_path, chunk_rows)?;
+    let score = falkon::serve::predict_source(&model, &engine, &mut eval)?;
+    let mse = metrics::mse(&score.preds, &score.targets);
+    let var = falkon::linalg::vec_ops::variance(&score.targets);
+    println!(
+        "train MSE = {mse:.4} (target variance {var:.4}, R² = {:.3}); \
+         peak resident chunk = {} KiB",
+        1.0 - mse / var,
+        score.max_chunk_bytes / 1024
+    );
+    anyhow::ensure!(mse < var, "model failed to beat the mean predictor");
+
+    let _ = std::fs::remove_file(&csv_path);
+    let _ = std::fs::remove_file(&shard_path);
+    Ok(())
+}

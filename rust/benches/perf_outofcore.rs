@@ -1,0 +1,177 @@
+//! **Out-of-core pipeline** (DESIGN.md § "Out-of-core path") — fit and
+//! score a synthetic dataset several times larger than the configured
+//! chunk budget through the sharded `DataSource` path, against the
+//! in-memory path as the baseline. Emits the machine-readable
+//! `BENCH_outofcore.json` (override with `--json <path>`):
+//!
+//! - `max_resident_chunk_bytes` — the peak-RSS proxy: the largest
+//!   feature chunk any streamed sweep held resident. The acceptance gate
+//!   (asserted in-bench and re-checked from the JSON in CI) is that it
+//!   stays **below the full dataset bytes** while predictions agree with
+//!   the in-memory fit to ≤ 1e-8.
+//! - fit wall-clock and bulk-predict rows/s for both paths (the streamed
+//!   path re-reads the shard every CG iteration — the I/O-for-memory
+//!   trade the paper's O(n) memory claim is about).
+
+use falkon::bench::{fmt_secs, time_fn, write_json, BenchArgs, Table};
+use falkon::data::shard::{self, ShardSource};
+use falkon::data::synth;
+use falkon::falkon::{fit, prepare_source, solve, FalkonConfig, FalkonModel};
+use falkon::linalg::vec_ops::{max_abs_diff, mean};
+use falkon::runtime::Engine;
+use falkon::util::json::Value;
+use falkon::util::rng::Rng;
+use falkon::util::timer::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::from_env();
+    let smoke = args.flag("--smoke");
+    let json_path = args
+        .get("--json")
+        .unwrap_or("BENCH_outofcore.json")
+        .to_string();
+    let (n, d, m, t) = if smoke {
+        (6_000usize, 8usize, 128usize, 8usize)
+    } else {
+        (50_000, 10, 1024, 15)
+    };
+    let chunk_rows = args.usize_or("--chunk-rows", n / 8);
+    let workers = args.usize_or("--workers", 1);
+    let full_bytes = n * d * 8;
+
+    let mut rng = Rng::new(17);
+    let data = synth::smooth_regression(&mut rng, n, d, 0.05);
+    let shard_path = std::env::temp_dir()
+        .join(format!("falkon_bench_ooc_{}.shard", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let t_conv = Timer::start();
+    shard::write_dataset(&shard_path, &data)?;
+    let convert_s = t_conv.elapsed_s();
+
+    let config = FalkonConfig {
+        sigma: 2.0,
+        lam: 1e-4,
+        m,
+        t,
+        seed: 3,
+        ..Default::default()
+    };
+    let eng = if workers > 1 {
+        Engine::rust_with(falkon::runtime::EngineOptions {
+            workers,
+            ..Default::default()
+        })
+    } else {
+        Engine::rust()
+    };
+
+    // -- in-memory fit (baseline) -----------------------------------------
+    let t_mem = Timer::start();
+    let model_mem = fit(&eng, &data.x, &data.y, &config)?;
+    let fit_mem_s = t_mem.elapsed_s();
+
+    // -- out-of-core fit through prepare/solve so the plan's residency
+    //    proxy is observable -----------------------------------------------
+    let t_ooc = Timer::start();
+    let src = ShardSource::open(&shard_path, chunk_rows)?;
+    let (mut state, y) = prepare_source(&eng, Box::new(src), &config)?;
+    let y_offset = mean(&y);
+    let yc: Vec<f64> = y.iter().map(|v| v - y_offset).collect();
+    let (alpha, cg) = solve(&mut state, &yc, None)?;
+    let fit_ooc_s = t_ooc.elapsed_s();
+    let resident = state.plan.resident_x_bytes().unwrap_or(full_bytes);
+    let model_ooc = FalkonModel {
+        config: config.clone(),
+        centers: state.sel.c.clone(),
+        alpha,
+        y_offset,
+        phases: state.phases.clone(),
+        cg_iters: cg.iters,
+        cg_residuals: cg.residuals,
+        cg_stop: cg.stop,
+    };
+
+    // -- agreement + residency gates --------------------------------------
+    let p_mem = model_mem.predict(&eng, &data.x)?;
+    let p_ooc = model_ooc.predict(&eng, &data.x)?;
+    let pred_diff = max_abs_diff(&p_mem, &p_ooc);
+    anyhow::ensure!(
+        pred_diff < 1e-8,
+        "out-of-core predictions diverge from in-memory: {pred_diff}"
+    );
+    anyhow::ensure!(
+        resident < full_bytes,
+        "resident chunk bytes {resident} not below dataset bytes {full_bytes}"
+    );
+
+    // -- bulk predict throughput ------------------------------------------
+    let reps = if smoke { 1 } else { 3 };
+    let pred_mem_stats = time_fn(1, reps, || {
+        let _ = model_mem.predict(&eng, &data.x).unwrap();
+    });
+    let pred_ooc_stats = time_fn(1, reps, || {
+        let mut src = ShardSource::open(&shard_path, chunk_rows).unwrap();
+        let _ = falkon::serve::predict_source(&model_ooc, &eng, &mut src).unwrap();
+    });
+    let rows_s_mem = n as f64 / pred_mem_stats.median;
+    let rows_s_ooc = n as f64 / pred_ooc_stats.median;
+
+    let mut table = Table::new(
+        "out-of-core vs in-memory (gaussian smooth regression)",
+        &["path", "fit", "predict", "rows/s", "resident X"],
+    );
+    table.row(&[
+        "in-memory".into(),
+        fmt_secs(fit_mem_s),
+        fmt_secs(pred_mem_stats.median),
+        format!("{rows_s_mem:.0}"),
+        format!("{} KiB", full_bytes / 1024),
+    ]);
+    table.row(&[
+        "sharded".into(),
+        fmt_secs(fit_ooc_s),
+        fmt_secs(pred_ooc_stats.median),
+        format!("{rows_s_ooc:.0}"),
+        format!("{} KiB", resident / 1024),
+    ]);
+    table.print();
+    println!(
+        "\nn={n} d={d} M={m} t={t} chunk_rows={chunk_rows} | resident/full = {:.3}, \
+         pred diff = {pred_diff:.2e}",
+        resident as f64 / full_bytes as f64
+    );
+
+    let report = Value::obj(vec![
+        ("schema", Value::str("falkon/bench_outofcore/v1")),
+        ("smoke", Value::Bool(smoke)),
+        ("n", Value::num(n as f64)),
+        ("d", Value::num(d as f64)),
+        ("m", Value::num(m as f64)),
+        ("t", Value::num(t as f64)),
+        ("workers", Value::num(workers as f64)),
+        ("chunk_rows", Value::num(chunk_rows as f64)),
+        ("full_dataset_bytes", Value::num(full_bytes as f64)),
+        ("max_resident_chunk_bytes", Value::num(resident as f64)),
+        (
+            "resident_ratio",
+            Value::num(resident as f64 / full_bytes as f64),
+        ),
+        ("convert_s", Value::num(convert_s)),
+        ("fit_in_memory_s", Value::num(fit_mem_s)),
+        ("fit_outofcore_s", Value::num(fit_ooc_s)),
+        (
+            "fit_slowdown_vs_memory",
+            Value::num(fit_ooc_s / fit_mem_s.max(1e-12)),
+        ),
+        ("predict_in_memory", pred_mem_stats.to_json()),
+        ("predict_outofcore", pred_ooc_stats.to_json()),
+        ("predict_rows_s_in_memory", Value::num(rows_s_mem)),
+        ("predict_rows_s_outofcore", Value::num(rows_s_ooc)),
+        ("pred_max_abs_diff", Value::num(pred_diff)),
+    ]);
+    write_json(&json_path, &report)?;
+    println!("wrote {json_path}");
+    let _ = std::fs::remove_file(&shard_path);
+    Ok(())
+}

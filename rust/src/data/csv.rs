@@ -20,6 +20,33 @@ impl std::fmt::Display for CsvError {
 
 impl std::error::Error for CsvError {}
 
+/// Parse one CSV line into label + feature values, or `None` for blank
+/// lines. Shared by the eager [`read`] and the lazy
+/// [`crate::data::stream_text::CsvSource`], so both agree on every edge
+/// case (blank lines, whitespace, missing trailing newline).
+pub(crate) fn parse_line(raw: &str, lineno: usize) -> Result<Option<(f64, Vec<f64>)>, CsvError> {
+    let line = raw.trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut vals = Vec::new();
+    for tok in line.split(',') {
+        vals.push(tok.trim().parse::<f64>().map_err(|e| CsvError {
+            line: lineno,
+            msg: format!("bad number {tok:?}: {e}"),
+        })?);
+    }
+    if vals.len() < 2 {
+        return Err(CsvError {
+            line: lineno,
+            msg: "need label + at least one feature".into(),
+        });
+    }
+    let label = vals[0];
+    let feats = vals.split_off(1);
+    Ok(Some((label, feats)))
+}
+
 /// Parse rows of comma-separated floats. `has_header` skips line 1.
 /// Returns (labels, features) with the first column as the label.
 pub fn read(r: impl BufRead, has_header: bool) -> Result<(Vec<f64>, Mat), CsvError> {
@@ -34,35 +61,22 @@ pub fn read(r: impl BufRead, has_header: bool) -> Result<(Vec<f64>, Mat), CsvErr
             line: lineno + 1,
             msg: e.to_string(),
         })?;
-        let line = line.trim();
-        if line.is_empty() {
+        let Some((label, feats)) = parse_line(&line, lineno + 1)? else {
             continue;
-        }
-        let mut vals = Vec::new();
-        for tok in line.split(',') {
-            vals.push(tok.trim().parse::<f64>().map_err(|e| CsvError {
-                line: lineno + 1,
-                msg: format!("bad number {tok:?}: {e}"),
-            })?);
-        }
-        if vals.len() < 2 {
-            return Err(CsvError {
-                line: lineno + 1,
-                msg: "need label + at least one feature".into(),
-            });
-        }
+        };
+        let vals_len = feats.len() + 1;
         match width {
-            None => width = Some(vals.len()),
-            Some(w) if w != vals.len() => {
+            None => width = Some(vals_len),
+            Some(w) if w != vals_len => {
                 return Err(CsvError {
                     line: lineno + 1,
-                    msg: format!("ragged row: {} cols, expected {w}", vals.len()),
+                    msg: format!("ragged row: {vals_len} cols, expected {w}"),
                 })
             }
             _ => {}
         }
-        y.push(vals[0]);
-        rows.push(vals[1..].to_vec());
+        y.push(label);
+        rows.push(feats);
     }
     Ok((y, Mat::from_rows(&rows)))
 }

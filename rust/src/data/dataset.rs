@@ -134,13 +134,20 @@ impl ZScore {
 
     pub fn apply(&self, x: &Mat) -> Mat {
         let mut out = x.clone();
-        for i in 0..out.rows {
-            let row = out.row_mut(i);
+        self.apply_mut(&mut out);
+        out
+    }
+
+    /// In-place [`ZScore::apply`] — the streaming pipeline normalizes each
+    /// resident chunk without allocating a second copy.
+    pub fn apply_mut(&self, x: &mut Mat) {
+        assert_eq!(x.cols, self.mean.len(), "zscore dim mismatch");
+        for i in 0..x.rows {
+            let row = x.row_mut(i);
             for j in 0..row.len() {
                 row[j] = (row[j] - self.mean[j]) / self.std[j];
             }
         }
-        out
     }
 
     /// Fit on train, transform both in place.

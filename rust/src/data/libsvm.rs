@@ -26,6 +26,48 @@ impl std::fmt::Display for ParseError {
 
 impl std::error::Error for ParseError {}
 
+/// Parse one libsvm line into (label, 0-based sparse features), or `None`
+/// for blank/comment-only lines. Shared by the eager [`read`] and the
+/// lazy [`crate::data::stream_text::LibsvmSource`], so both agree on
+/// every edge case (comments, blank lines, out-of-order indices).
+pub(crate) fn parse_line(
+    raw: &str,
+    lineno: usize,
+) -> Result<Option<(f64, Vec<(usize, f64)>)>, ParseError> {
+    let line = raw.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut parts = line.split_ascii_whitespace();
+    let label: f64 = parts.next().unwrap().parse().map_err(|e| ParseError {
+        line: lineno,
+        msg: format!("bad label: {e}"),
+    })?;
+    let mut feats = Vec::new();
+    for tok in parts {
+        let (i, v) = tok.split_once(':').ok_or_else(|| ParseError {
+            line: lineno,
+            msg: format!("expected index:value, got {tok:?}"),
+        })?;
+        let i: usize = i.parse().map_err(|e| ParseError {
+            line: lineno,
+            msg: format!("bad index: {e}"),
+        })?;
+        let v: f64 = v.parse().map_err(|e| ParseError {
+            line: lineno,
+            msg: format!("bad value: {e}"),
+        })?;
+        if i == 0 {
+            return Err(ParseError {
+                line: lineno,
+                msg: "libsvm indices are 1-based".into(),
+            });
+        }
+        feats.push((i - 1, v));
+    }
+    Ok(Some((label, feats)))
+}
+
 /// Parse from any reader. `dim = Some(d)` pins the feature count (features
 /// beyond it error); `None` infers it from the data.
 pub fn read(r: impl BufRead, dim: Option<usize>) -> Result<(Mat, Vec<f64>), ParseError> {
@@ -37,41 +79,11 @@ pub fn read(r: impl BufRead, dim: Option<usize>) -> Result<(Mat, Vec<f64>), Pars
             line: lineno + 1,
             msg: e.to_string(),
         })?;
-        let line = line.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
+        let Some((label, feats)) = parse_line(&line, lineno + 1)? else {
             continue;
-        }
-        let mut parts = line.split_ascii_whitespace();
-        let label: f64 = parts
-            .next()
-            .unwrap()
-            .parse()
-            .map_err(|e| ParseError {
-                line: lineno + 1,
-                msg: format!("bad label: {e}"),
-            })?;
-        let mut feats = Vec::new();
-        for tok in parts {
-            let (i, v) = tok.split_once(':').ok_or_else(|| ParseError {
-                line: lineno + 1,
-                msg: format!("expected index:value, got {tok:?}"),
-            })?;
-            let i: usize = i.parse().map_err(|e| ParseError {
-                line: lineno + 1,
-                msg: format!("bad index: {e}"),
-            })?;
-            let v: f64 = v.parse().map_err(|e| ParseError {
-                line: lineno + 1,
-                msg: format!("bad value: {e}"),
-            })?;
-            if i == 0 {
-                return Err(ParseError {
-                    line: lineno + 1,
-                    msg: "libsvm indices are 1-based".into(),
-                });
-            }
-            max_idx = max_idx.max(i);
-            feats.push((i - 1, v));
+        };
+        for &(j, _) in &feats {
+            max_idx = max_idx.max(j + 1);
         }
         ys.push(label);
         rows.push(feats);

@@ -1,8 +1,17 @@
-//! Data pipeline: dataset container + normalization, synthetic analogues
-//! of the paper's evaluation datasets, and loaders for real data.
+//! Data pipeline: the in-memory [`Dataset`] container + normalization,
+//! synthetic analogues of the paper's evaluation datasets, eager loaders
+//! for real data, and the **out-of-core pipeline** — a chunked
+//! [`source::DataSource`] abstraction (in-memory, binary shard, lazy
+//! libsvm/CSV backends) that streams datasets larger than RAM through
+//! fit and predict with O(chunk) resident features (see
+//! DESIGN.md § "Out-of-core path").
 pub mod csv;
 pub mod dataset;
 pub mod libsvm;
+pub mod shard;
+pub mod source;
+pub mod stream_text;
 pub mod synth;
 
 pub use dataset::{Dataset, ZScore};
+pub use source::{Chunk, DataSource, MemSource, ZScoreSource};

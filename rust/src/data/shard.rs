@@ -1,0 +1,494 @@
+//! Chunked binary shard format — the on-disk backend of the out-of-core
+//! pipeline (`falkon convert` writes it, [`ShardSource`] streams it).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! header:  magic "FALKSHRD" | version u32 | flags u32 | d u64
+//!          | n_classes u64 | name_len u32 | name (utf-8)
+//! records: rows u64 | x rows·d f64 | y rows f64 | labels rows u64 (flag bit 0)
+//! ```
+//!
+//! Records are appended as data arrives, so a conversion from a text
+//! stream is single-pass and never needs the row count up front. The
+//! reader scans the record headers once at `open` (seeking over the
+//! payloads — O(records) work, O(1) memory), which yields the exact row
+//! count and lets the reader's [`DataSource::next_chunk`] serve any chunk budget with
+//! positioned reads: a chunk never exceeds `min(budget, record rows)`
+//! resident rows. `std` has no portable mmap, so chunk access is
+//! seek+read — the working-set property (only the requested rows touch
+//! memory) is the same.
+
+use super::dataset::Dataset;
+use super::source::{Chunk, DataSource, DEFAULT_CHUNK_ROWS};
+use crate::linalg::mat::Mat;
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+
+const MAGIC: &[u8; 8] = b"FALKSHRD";
+const VERSION: u32 = 1;
+const FLAG_LABELS: u32 = 1;
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read a u64 or detect a clean end-of-file (None). A partial trailing
+/// integer is a corrupt shard and errors.
+fn try_read_u64(r: &mut impl Read) -> Result<Option<u64>> {
+    let mut b = [0u8; 8];
+    let mut got = 0;
+    while got < 8 {
+        let k = r.read(&mut b[got..])?;
+        if k == 0 {
+            anyhow::ensure!(got == 0, "truncated record header ({got} of 8 bytes)");
+            return Ok(None);
+        }
+        got += k;
+    }
+    Ok(Some(u64::from_le_bytes(b)))
+}
+
+fn read_f64s(r: &mut impl Read, count: usize) -> Result<Vec<f64>> {
+    let mut buf = vec![0u8; count * 8];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn read_u64s(r: &mut impl Read, count: usize) -> Result<Vec<u64>> {
+    let mut buf = vec![0u8; count * 8];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Incremental shard writer: create with the schema, append row blocks
+/// as they arrive, `finish` to flush. Single-pass — the total row count
+/// is never needed up front.
+pub struct ShardWriter {
+    w: BufWriter<File>,
+    d: usize,
+    has_labels: bool,
+    rows: usize,
+}
+
+impl ShardWriter {
+    pub fn create(
+        path: &str,
+        d: usize,
+        n_classes: usize,
+        has_labels: bool,
+        name: &str,
+    ) -> Result<ShardWriter> {
+        anyhow::ensure!(d > 0, "shard needs at least one feature");
+        let f = File::create(path).with_context(|| format!("creating shard {path}"))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        write_u32(&mut w, VERSION)?;
+        write_u32(&mut w, if has_labels { FLAG_LABELS } else { 0 })?;
+        write_u64(&mut w, d as u64)?;
+        write_u64(&mut w, n_classes as u64)?;
+        let name_bytes = name.as_bytes();
+        write_u32(&mut w, name_bytes.len() as u32)?;
+        w.write_all(name_bytes)?;
+        Ok(ShardWriter {
+            w,
+            d,
+            has_labels,
+            rows: 0,
+        })
+    }
+
+    /// Append one record. Empty blocks are skipped (a record's row count
+    /// must be positive so the reader's record scan terminates cleanly).
+    pub fn write_chunk(&mut self, x: &Mat, y: &[f64], labels: Option<&[usize]>) -> Result<()> {
+        anyhow::ensure!(x.cols == self.d, "chunk d {} != shard d {}", x.cols, self.d);
+        anyhow::ensure!(x.rows == y.len(), "chunk x rows {} != y len {}", x.rows, y.len());
+        anyhow::ensure!(
+            labels.is_some() == self.has_labels,
+            "chunk labels presence does not match the shard schema"
+        );
+        if x.rows == 0 {
+            return Ok(());
+        }
+        if let Some(l) = labels {
+            anyhow::ensure!(l.len() == x.rows, "labels len != rows");
+        }
+        // serialize the record into one buffer and write it in a single
+        // call — per-value write_all through the BufWriter dominates
+        // convert throughput on large chunks
+        let payload = (x.data.len() + y.len() + labels.map_or(0, |l| l.len())) * 8;
+        let mut buf = Vec::with_capacity(8 + payload);
+        buf.extend_from_slice(&(x.rows as u64).to_le_bytes());
+        for &v in &x.data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in y {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        if let Some(l) = labels {
+            for &v in l {
+                buf.extend_from_slice(&(v as u64).to_le_bytes());
+            }
+        }
+        self.w.write_all(&buf)?;
+        self.rows += x.rows;
+        Ok(())
+    }
+
+    /// Flush and return the total rows written.
+    pub fn finish(mut self) -> Result<usize> {
+        self.w.flush()?;
+        Ok(self.rows)
+    }
+}
+
+/// Write an in-memory [`Dataset`] as a single-record shard (one record
+/// lets the reader re-chunk at any budget).
+pub fn write_dataset(path: &str, data: &Dataset) -> Result<()> {
+    let mut w = ShardWriter::create(
+        path,
+        data.d(),
+        data.n_classes,
+        data.labels.is_some(),
+        &data.name,
+    )?;
+    w.write_chunk(&data.x, &data.y, data.labels.as_deref())?;
+    w.finish()?;
+    Ok(())
+}
+
+/// Stream-convert any [`DataSource`] into a shard, one record per source
+/// chunk — single pass, O(chunk) memory. Returns the rows written.
+pub fn write_source(path: &str, source: &mut dyn DataSource) -> Result<usize> {
+    source.reset()?;
+    // peek the first chunk to learn whether the stream carries labels
+    // (the schema flag lives in the header)
+    let first = source.next_chunk()?;
+    let has_labels = first.as_ref().map(|c| c.labels.is_some()).unwrap_or(false);
+    let mut w = ShardWriter::create(
+        path,
+        source.d(),
+        source.n_classes(),
+        has_labels,
+        source.name(),
+    )?;
+    if let Some(chunk) = first {
+        w.write_chunk(&chunk.x, &chunk.y, chunk.labels.as_deref())?;
+    }
+    while let Some(chunk) = source.next_chunk()? {
+        w.write_chunk(&chunk.x, &chunk.y, chunk.labels.as_deref())?;
+    }
+    w.finish()
+}
+
+/// Offset + row count of one record's payload (`off` points at the
+/// record's `rows` header field).
+struct RecordMeta {
+    off: u64,
+    rows: usize,
+}
+
+/// Seek-based streaming reader over a shard file. `open` scans the
+/// record headers once (exact row count, record offsets); `next_chunk`
+/// then reads at most `chunk_rows` rows per call with positioned reads,
+/// never crossing a record boundary.
+pub struct ShardSource {
+    file: File,
+    d: usize,
+    n_classes: usize,
+    has_labels: bool,
+    name: String,
+    records: Vec<RecordMeta>,
+    n: usize,
+    chunk_rows: usize,
+    rec: usize,
+    row_in_rec: usize,
+    row_global: usize,
+}
+
+impl ShardSource {
+    pub fn open(path: &str, chunk_rows: usize) -> Result<ShardSource> {
+        let mut file = File::open(path).with_context(|| format!("opening shard {path}"))?;
+        let mut magic = [0u8; 8];
+        file.read_exact(&mut magic)
+            .with_context(|| format!("reading shard header of {path}"))?;
+        anyhow::ensure!(&magic == MAGIC, "{path} is not a falkon shard (bad magic)");
+        let version = read_u32(&mut file)?;
+        anyhow::ensure!(version == VERSION, "unsupported shard version {version}");
+        let flags = read_u32(&mut file)?;
+        let has_labels = flags & FLAG_LABELS != 0;
+        let d = read_u64(&mut file)? as usize;
+        anyhow::ensure!(d > 0, "shard has zero feature dim");
+        let n_classes = read_u64(&mut file)? as usize;
+        let name_len = read_u32(&mut file)? as usize;
+        let mut name_bytes = vec![0u8; name_len];
+        file.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes).context("shard name is not utf-8")?;
+
+        // record scan: headers only, payloads seeked over. `len` bounds
+        // every record end, so a corrupt row count (however large) fails
+        // the truncation check instead of overflowing the seek offset.
+        let row_bytes = (d + 1 + usize::from(has_labels)) as u64 * 8;
+        let len = file.metadata()?.len();
+        let mut records = Vec::new();
+        let mut n = 0usize;
+        loop {
+            let off = file.stream_position()?;
+            let Some(rows) = try_read_u64(&mut file)? else {
+                break;
+            };
+            anyhow::ensure!(rows > 0, "shard record at offset {off} has zero rows");
+            let end = off as u128 + 8 + rows as u128 * row_bytes as u128;
+            anyhow::ensure!(
+                end <= len as u128,
+                "shard record at offset {off} is truncated ({end} > file len {len})"
+            );
+            let rows = rows as usize;
+            records.push(RecordMeta { off, rows });
+            n += rows;
+            file.seek(SeekFrom::Start(end as u64))?;
+        }
+        Ok(ShardSource {
+            file,
+            d,
+            n_classes,
+            has_labels,
+            name,
+            records,
+            n,
+            chunk_rows: chunk_rows.max(1),
+            rec: 0,
+            row_in_rec: 0,
+            row_global: 0,
+        })
+    }
+}
+
+impl DataSource for ShardSource {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.n)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.rec = 0;
+        self.row_in_rec = 0;
+        self.row_global = 0;
+        Ok(())
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<Chunk>> {
+        if self.rec >= self.records.len() {
+            return Ok(None);
+        }
+        let (off, rec_rows) = {
+            let rm = &self.records[self.rec];
+            (rm.off, rm.rows)
+        };
+        let take = (rec_rows - self.row_in_rec).min(self.chunk_rows);
+        let base = off + 8; // past the rows header
+        // x block
+        self.file
+            .seek(SeekFrom::Start(base + (self.row_in_rec * self.d * 8) as u64))?;
+        let xdata = read_f64s(&mut self.file, take * self.d)?;
+        // y block
+        self.file.seek(SeekFrom::Start(
+            base + (rec_rows * self.d * 8) as u64 + (self.row_in_rec * 8) as u64,
+        ))?;
+        let y = read_f64s(&mut self.file, take)?;
+        // labels block
+        let labels = if self.has_labels {
+            self.file.seek(SeekFrom::Start(
+                base + (rec_rows * (self.d + 1) * 8) as u64 + (self.row_in_rec * 8) as u64,
+            ))?;
+            Some(
+                read_u64s(&mut self.file, take)?
+                    .into_iter()
+                    .map(|v| v as usize)
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        let start = self.row_global;
+        self.row_global += take;
+        self.row_in_rec += take;
+        if self.row_in_rec == rec_rows {
+            self.rec += 1;
+            self.row_in_rec = 0;
+        }
+        Ok(Some(Chunk {
+            start,
+            x: Mat::from_vec(take, self.d, xdata),
+            y,
+            labels,
+        }))
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Load a whole shard into memory (small shards / the in-memory CLI path).
+pub fn load(path: &str) -> Result<Dataset> {
+    let mut src = ShardSource::open(path, DEFAULT_CHUNK_ROWS)?;
+    super::source::collect(&mut src)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::source::{collect, MemSource};
+    use crate::data::synth;
+    use crate::util::ptest::check;
+    use crate::util::rng::Rng;
+
+    fn tmp(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("falkon_shard_{tag}_{}.shard", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn roundtrip_regression_bitwise() {
+        let data = synth::smooth_regression(&mut Rng::new(3), 257, 6, 0.05);
+        let path = tmp("reg");
+        write_dataset(&path, &data).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.x.data, data.x.data);
+        assert_eq!(back.y, data.y);
+        assert_eq!(back.d(), 6);
+        assert_eq!(back.name, data.name);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn roundtrip_multiclass_bitwise() {
+        let data = synth::blobs(&mut Rng::new(4), 120, 5, 3);
+        let path = tmp("mc");
+        write_dataset(&path, &data).unwrap();
+        let back = load(&path).unwrap();
+        assert!(back.is_multiclass());
+        assert_eq!(back.n_classes, 3);
+        assert_eq!(back.labels, data.labels);
+        assert_eq!(back.x.data, data.x.data);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn reader_rechunks_at_any_budget() {
+        // property: Dataset -> shard -> DataSource equals the in-memory
+        // source bitwise, for random record sizes and read budgets
+        check("shard roundtrip", 12, |g| {
+            let n = g.usize_in(1, 200);
+            let d = g.usize_in(1, 9);
+            let mut rng = Rng::new(g.case as u64 + 100);
+            let data = crate::data::Dataset::new_regression(
+                "p",
+                crate::linalg::mat::Mat::from_vec(n, d, rng.normals(n * d)),
+                rng.normals(n),
+            );
+            let rec_rows = g.usize_in(1, n + 20);
+            let budget = g.usize_in(1, n + 20);
+            let path = tmp(&format!("prop{}", g.case));
+            // write in rec_rows-sized records via the streaming writer
+            let mut src = MemSource::new(data.clone(), rec_rows);
+            let wrote = write_source(&path, &mut src).unwrap();
+            assert_eq!(wrote, n);
+            let mut shard = ShardSource::open(&path, budget).unwrap();
+            assert_eq!(shard.len_hint(), Some(n));
+            let back = collect(&mut shard).unwrap();
+            assert_eq!(back.x.data, data.x.data, "x mismatch");
+            assert_eq!(back.y, data.y, "y mismatch");
+            // chunks never exceed the budget
+            shard.reset().unwrap();
+            while let Some(c) = shard.next_chunk().unwrap() {
+                assert!(c.rows() <= budget);
+            }
+            let _ = std::fs::remove_file(&path);
+        });
+    }
+
+    #[test]
+    fn incremental_writer_appends_records() {
+        let data = synth::smooth_regression(&mut Rng::new(8), 90, 4, 0.05);
+        let path = tmp("incr");
+        let mut w = ShardWriter::create(&path, 4, 0, false, "incr").unwrap();
+        for start in (0..90).step_by(40) {
+            let end = (start + 40).min(90);
+            w.write_chunk(&data.x.slice_rows(start, end), &data.y[start..end], None)
+                .unwrap();
+        }
+        assert_eq!(w.finish().unwrap(), 90);
+        let back = load(&path).unwrap();
+        assert_eq!(back.x.data, data.x.data);
+        assert_eq!(back.y, data.y);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let path = tmp("bad");
+        std::fs::write(&path, b"NOTASHARDxxxxxxxxxxxx").unwrap();
+        assert!(ShardSource::open(&path, 64).is_err());
+        // valid shard, then cut the file short
+        let data = synth::smooth_regression(&mut Rng::new(9), 40, 3, 0.05);
+        write_dataset(&path, &data).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 16]).unwrap();
+        assert!(ShardSource::open(&path, 64).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_chunks_are_skipped() {
+        let path = tmp("empty");
+        let mut w = ShardWriter::create(&path, 2, 0, false, "e").unwrap();
+        w.write_chunk(&Mat::zeros(0, 2), &[], None).unwrap();
+        let x = Mat::from_rows(&[vec![1.0, 2.0]]);
+        w.write_chunk(&x, &[3.0], None).unwrap();
+        assert_eq!(w.finish().unwrap(), 1);
+        let back = load(&path).unwrap();
+        assert_eq!(back.n(), 1);
+        assert_eq!(back.y, vec![3.0]);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,366 @@
+//! Chunked data access — the out-of-core pipeline's core abstraction.
+//!
+//! A [`DataSource`] yields the dataset as a sequence of contiguous row
+//! blocks ([`Chunk`]s), so the n-dependent passes (center selection,
+//! normalization statistics, the CG matvec sweeps, bulk prediction) can
+//! run with only O(chunk) feature rows resident instead of the full
+//! `n × d` matrix. Three backends implement it:
+//!
+//! - [`MemSource`] wraps an in-memory [`Dataset`] (the default path, and
+//!   the oracle the streaming paths are property-tested against),
+//! - [`crate::data::shard::ShardSource`] reads the chunked binary shard
+//!   format with positioned reads (written by `falkon convert`),
+//! - [`crate::data::stream_text::LibsvmSource`] /
+//!   [`crate::data::stream_text::CsvSource`] parse text formats lazily,
+//!   one chunk at a time.
+//!
+//! [`ZScoreSource`] wraps any source and applies a z-score transform to
+//! every chunk on the fly; [`ZScore::fit_source`] computes the per-feature
+//! mean/variance in one streaming pass (Welford), so normalization never
+//! materializes the dataset either.
+//!
+//! Sources are rewindable ([`DataSource::reset`]): one FALKON fit sweeps
+//! the stream once per CG iteration plus twice during setup, and the
+//! streaming [`crate::runtime::MatvecPlan`] resets the source at the top
+//! of every apply.
+
+use super::dataset::{Dataset, ZScore};
+use crate::linalg::mat::Mat;
+use anyhow::Result;
+
+/// Default rows per chunk (8192 rows × d features × 8 bytes resident).
+pub const DEFAULT_CHUNK_ROWS: usize = 8192;
+
+/// Rows that fit a byte budget at feature dimension `d` (at least 1).
+pub fn rows_for_budget(budget_bytes: usize, d: usize) -> usize {
+    (budget_bytes / (8 * d.max(1))).max(1)
+}
+
+/// One resident row block of a streamed dataset. `start` is the global
+/// index of the first row; consecutive chunks of a sweep are contiguous
+/// (`next.start == prev.start + prev.x.rows`).
+#[derive(Debug, Clone)]
+pub struct Chunk {
+    /// global index of row 0 of this chunk
+    pub start: usize,
+    /// `rows × d` features
+    pub x: Mat,
+    /// regression target / ±1 label / class index per row
+    pub y: Vec<f64>,
+    /// class indices (multiclass sources only)
+    pub labels: Option<Vec<usize>>,
+}
+
+impl Chunk {
+    pub fn rows(&self) -> usize {
+        self.x.rows
+    }
+
+    /// Resident feature bytes of this chunk (the out-of-core memory unit).
+    pub fn x_bytes(&self) -> usize {
+        self.x.data.len() * std::mem::size_of::<f64>()
+    }
+}
+
+/// A rewindable stream of dataset chunks. Implementations are `Send` so
+/// a streaming matvec plan stays movable across threads like the
+/// in-memory plan.
+pub trait DataSource: Send {
+    /// Feature dimension of every chunk.
+    fn d(&self) -> usize;
+
+    /// Exact total row count if known without a full data pass (all
+    /// shipped backends know it; `None` routes center selection to
+    /// reservoir sampling).
+    fn len_hint(&self) -> Option<usize>;
+
+    /// Rewind to the first chunk. Called before every sweep.
+    fn reset(&mut self) -> Result<()>;
+
+    /// The next row block, or `None` at end of stream.
+    fn next_chunk(&mut self) -> Result<Option<Chunk>>;
+
+    /// Configured chunk budget in rows (actual chunks may be smaller at
+    /// stream tail or record boundaries).
+    fn chunk_rows(&self) -> usize;
+
+    /// Number of classes (0 = regression, 2 = binary, K = multiclass).
+    fn n_classes(&self) -> usize {
+        0
+    }
+
+    /// Dataset display name.
+    fn name(&self) -> &str {
+        "source"
+    }
+}
+
+/// Materialize a source into an in-memory [`Dataset`] (loading small
+/// shards, and the round-trip oracle of the streaming tests).
+pub fn collect(source: &mut dyn DataSource) -> Result<Dataset> {
+    source.reset()?;
+    let d = source.d();
+    let mut xdata: Vec<f64> = Vec::new();
+    let mut y: Vec<f64> = Vec::new();
+    let mut labels: Vec<usize> = Vec::new();
+    let mut any_labels = false;
+    while let Some(chunk) = source.next_chunk()? {
+        anyhow::ensure!(chunk.start == y.len(), "source chunks must be contiguous");
+        xdata.extend_from_slice(&chunk.x.data);
+        y.extend_from_slice(&chunk.y);
+        if let Some(l) = &chunk.labels {
+            any_labels = true;
+            labels.extend_from_slice(l);
+        }
+    }
+    let n = y.len();
+    let x = Mat::from_vec(n, d, xdata);
+    if any_labels {
+        anyhow::ensure!(labels.len() == n, "labels missing on some chunks");
+        Ok(Dataset::new_multiclass(
+            source.name(),
+            x,
+            labels,
+            source.n_classes(),
+        ))
+    } else {
+        let mut ds = Dataset::new_regression(source.name(), x, y);
+        ds.n_classes = source.n_classes();
+        Ok(ds)
+    }
+}
+
+/// In-memory backend: chunked views over a [`Dataset`]. The chunks copy
+/// their rows (the trait yields owned blocks), so prefer the plain
+/// `Dataset` paths when everything fits — this backend exists as the
+/// oracle and for mixing in-memory data into source-shaped APIs.
+pub struct MemSource {
+    data: Dataset,
+    chunk_rows: usize,
+    pos: usize,
+}
+
+impl MemSource {
+    pub fn new(data: Dataset, chunk_rows: usize) -> MemSource {
+        MemSource {
+            data,
+            chunk_rows: chunk_rows.max(1),
+            pos: 0,
+        }
+    }
+
+    /// Recover the wrapped dataset.
+    pub fn into_inner(self) -> Dataset {
+        self.data
+    }
+}
+
+impl DataSource for MemSource {
+    fn d(&self) -> usize {
+        self.data.d()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.data.n())
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<Chunk>> {
+        let n = self.data.n();
+        if self.pos >= n {
+            return Ok(None);
+        }
+        let start = self.pos;
+        let end = (start + self.chunk_rows).min(n);
+        self.pos = end;
+        Ok(Some(Chunk {
+            start,
+            x: self.data.x.slice_rows(start, end),
+            y: self.data.y[start..end].to_vec(),
+            labels: self.data.labels.as_ref().map(|l| l[start..end].to_vec()),
+        }))
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    fn n_classes(&self) -> usize {
+        self.data.n_classes
+    }
+
+    fn name(&self) -> &str {
+        &self.data.name
+    }
+}
+
+/// Normalizing adapter: applies a fitted [`ZScore`] to every chunk's
+/// features on the fly, so the streamed data is normalized without a
+/// materialized copy (the out-of-core analogue of [`ZScore::apply`]).
+pub struct ZScoreSource {
+    inner: Box<dyn DataSource>,
+    z: ZScore,
+}
+
+impl ZScoreSource {
+    pub fn new(inner: Box<dyn DataSource>, z: ZScore) -> ZScoreSource {
+        assert_eq!(z.mean.len(), inner.d(), "zscore dim != source dim");
+        ZScoreSource { inner, z }
+    }
+}
+
+impl DataSource for ZScoreSource {
+    fn d(&self) -> usize {
+        self.inner.d()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.inner.len_hint()
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.inner.reset()
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<Chunk>> {
+        let mut chunk = match self.inner.next_chunk()? {
+            Some(c) => c,
+            None => return Ok(None),
+        };
+        self.z.apply_mut(&mut chunk.x);
+        Ok(Some(chunk))
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.inner.chunk_rows()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.inner.n_classes()
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+}
+
+impl ZScore {
+    /// Fit per-feature mean/std in one streaming pass (Welford's update,
+    /// numerically stable at any n) — the out-of-core counterpart of
+    /// [`ZScore::fit`], which needs the full matrix resident. Population
+    /// variance and the 1e-12 std floor match the in-memory fit.
+    pub fn fit_source(source: &mut dyn DataSource) -> Result<ZScore> {
+        source.reset()?;
+        let d = source.d();
+        let mut n = 0.0f64;
+        let mut mean = vec![0.0f64; d];
+        let mut m2 = vec![0.0f64; d];
+        while let Some(chunk) = source.next_chunk()? {
+            for i in 0..chunk.x.rows {
+                n += 1.0;
+                let row = chunk.x.row(i);
+                for j in 0..d {
+                    let delta = row[j] - mean[j];
+                    mean[j] += delta / n;
+                    m2[j] += delta * (row[j] - mean[j]);
+                }
+            }
+        }
+        anyhow::ensure!(n > 0.0, "cannot fit a z-score on an empty source");
+        let std = m2.iter().map(|&v| (v / n).sqrt().max(1e-12)).collect();
+        Ok(ZScore { mean, std })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::rng::Rng;
+
+    fn toy(n: usize) -> Dataset {
+        synth::smooth_regression(&mut Rng::new(5), n, 4, 0.05)
+    }
+
+    #[test]
+    fn mem_source_roundtrips() {
+        let data = toy(101);
+        let mut src = MemSource::new(data.clone(), 17);
+        assert_eq!(src.len_hint(), Some(101));
+        assert_eq!(src.d(), 4);
+        let back = collect(&mut src).unwrap();
+        assert_eq!(back.x.data, data.x.data);
+        assert_eq!(back.y, data.y);
+        assert_eq!(back.n_classes, 0);
+    }
+
+    #[test]
+    fn chunks_are_contiguous_and_budgeted() {
+        let data = toy(100);
+        let mut src = MemSource::new(data, 33);
+        src.reset().unwrap();
+        let mut seen = 0;
+        let mut sizes = Vec::new();
+        while let Some(c) = src.next_chunk().unwrap() {
+            assert_eq!(c.start, seen);
+            assert!(c.rows() <= 33);
+            assert_eq!(c.x_bytes(), c.rows() * 4 * 8);
+            seen += c.rows();
+            sizes.push(c.rows());
+        }
+        assert_eq!(seen, 100);
+        assert_eq!(sizes, vec![33, 33, 33, 1]);
+    }
+
+    #[test]
+    fn reset_replays_the_stream() {
+        let data = toy(50);
+        let mut src = MemSource::new(data, 16);
+        let a = collect(&mut src).unwrap();
+        let b = collect(&mut src).unwrap();
+        assert_eq!(a.x.data, b.x.data);
+    }
+
+    #[test]
+    fn mem_source_preserves_labels() {
+        let data = synth::blobs(&mut Rng::new(9), 60, 3, 4);
+        let mut src = MemSource::new(data.clone(), 13);
+        let back = collect(&mut src).unwrap();
+        assert!(back.is_multiclass());
+        assert_eq!(back.n_classes, 4);
+        assert_eq!(back.labels, data.labels);
+    }
+
+    #[test]
+    fn streaming_zscore_matches_in_memory() {
+        let data = toy(400);
+        let want = ZScore::fit(&data.x);
+        let mut src = MemSource::new(data, 37);
+        let got = ZScore::fit_source(&mut src).unwrap();
+        for j in 0..4 {
+            assert!((got.mean[j] - want.mean[j]).abs() < 1e-10, "mean {j}");
+            assert!((got.std[j] - want.std[j]).abs() < 1e-10, "std {j}");
+        }
+    }
+
+    #[test]
+    fn zscore_source_normalizes_chunks() {
+        let data = toy(200);
+        let z = ZScore::fit(&data.x);
+        let want = z.apply(&data.x);
+        let mut src = ZScoreSource::new(Box::new(MemSource::new(data, 41)), z);
+        let got = collect(&mut src).unwrap();
+        assert_eq!(got.x.data, want.data);
+    }
+
+    #[test]
+    fn budget_helper_floors_at_one_row() {
+        assert_eq!(rows_for_budget(0, 10), 1);
+        assert_eq!(rows_for_budget(8 * 10 * 64, 10), 64);
+        assert_eq!(rows_for_budget(1 << 20, 0), 1 << 20 >> 3);
+    }
+}

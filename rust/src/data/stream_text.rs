@@ -1,0 +1,390 @@
+//! Lazily-parsed text backends for the out-of-core pipeline: libsvm and
+//! CSV files served chunk by chunk through [`DataSource`], so a file
+//! larger than RAM streams through fit/predict with O(chunk) resident
+//! features.
+//!
+//! `open` runs one cheap validation scan (line-by-line, O(1) memory) that
+//! counts rows and infers the feature dimension, so `len_hint` is exact
+//! and malformed lines fail at open time rather than mid-fit. Each
+//! [`DataSource::reset`] reopens the file; parsing shares the exact
+//! line-level grammar of the eager loaders (`data::libsvm::read`,
+//! `data::csv::read`), which remain the round-trip oracles in the tests.
+
+use super::source::{Chunk, DataSource};
+use crate::linalg::mat::Mat;
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+
+/// Streaming libsvm reader (`<label> <index>:<value> ...`, 1-based
+/// indices, `#` comments). Out-of-order and gapped indices are fine —
+/// each row scatters into a dense `d`-vector.
+pub struct LibsvmSource {
+    path: String,
+    name: String,
+    d: usize,
+    n: usize,
+    chunk_rows: usize,
+    reader: Option<BufReader<File>>,
+    lineno: usize,
+    row: usize,
+}
+
+impl LibsvmSource {
+    /// Open + validation scan. `dim = Some(d)` pins the feature count
+    /// (indices beyond it error); `None` infers it as the max index seen.
+    pub fn open(path: &str, dim: Option<usize>, chunk_rows: usize) -> Result<LibsvmSource> {
+        let f = File::open(path).with_context(|| format!("opening libsvm file {path}"))?;
+        let mut r = BufReader::new(f);
+        let mut line = String::new();
+        let mut lineno = 0usize;
+        let mut n = 0usize;
+        let mut max_idx = 0usize;
+        loop {
+            line.clear();
+            if r.read_line(&mut line)
+                .with_context(|| format!("reading {path}"))?
+                == 0
+            {
+                break;
+            }
+            lineno += 1;
+            if let Some((_, feats)) = super::libsvm::parse_line(&line, lineno)? {
+                n += 1;
+                for &(j, _) in &feats {
+                    max_idx = max_idx.max(j + 1);
+                }
+            }
+        }
+        let d = match dim {
+            Some(d) => {
+                anyhow::ensure!(
+                    max_idx <= d,
+                    "feature index {max_idx} exceeds pinned dim {d} in {path}"
+                );
+                d
+            }
+            None => max_idx,
+        };
+        anyhow::ensure!(n > 0, "{path} has no data rows");
+        anyhow::ensure!(d > 0, "{path} has no features");
+        Ok(LibsvmSource {
+            path: path.to_string(),
+            name: path.to_string(),
+            d,
+            n,
+            chunk_rows: chunk_rows.max(1),
+            reader: None,
+            lineno: 0,
+            row: 0,
+        })
+    }
+}
+
+impl DataSource for LibsvmSource {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.n)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        let f = File::open(&self.path)
+            .with_context(|| format!("reopening libsvm file {}", self.path))?;
+        self.reader = Some(BufReader::new(f));
+        self.lineno = 0;
+        self.row = 0;
+        Ok(())
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<Chunk>> {
+        if self.reader.is_none() {
+            self.reset()?;
+        }
+        let r = self.reader.as_mut().unwrap();
+        let mut xdata: Vec<f64> = Vec::with_capacity(self.chunk_rows.min(self.n) * self.d);
+        let mut y: Vec<f64> = Vec::with_capacity(self.chunk_rows.min(self.n));
+        let mut line = String::new();
+        while y.len() < self.chunk_rows {
+            line.clear();
+            if r.read_line(&mut line)? == 0 {
+                break;
+            }
+            self.lineno += 1;
+            if let Some((label, feats)) = super::libsvm::parse_line(&line, self.lineno)? {
+                let base = xdata.len();
+                xdata.resize(base + self.d, 0.0);
+                for &(j, v) in &feats {
+                    anyhow::ensure!(
+                        j < self.d,
+                        "feature index {} exceeds dim {} on line {} of {} \
+                         (file changed since open?)",
+                        j + 1,
+                        self.d,
+                        self.lineno,
+                        self.path
+                    );
+                    xdata[base + j] = v;
+                }
+                y.push(label);
+            }
+        }
+        if y.is_empty() {
+            return Ok(None);
+        }
+        let rows = y.len();
+        let start = self.row;
+        self.row += rows;
+        Ok(Some(Chunk {
+            start,
+            x: Mat::from_vec(rows, self.d, xdata),
+            y,
+            labels: None,
+        }))
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Streaming numeric CSV reader (label in the first column, like the
+/// eager `data::csv` loader).
+pub struct CsvSource {
+    path: String,
+    name: String,
+    has_header: bool,
+    d: usize,
+    n: usize,
+    chunk_rows: usize,
+    reader: Option<BufReader<File>>,
+    lineno: usize,
+    row: usize,
+}
+
+impl CsvSource {
+    /// Open + validation scan (counts rows, checks a consistent width).
+    pub fn open(path: &str, has_header: bool, chunk_rows: usize) -> Result<CsvSource> {
+        let f = File::open(path).with_context(|| format!("opening csv file {path}"))?;
+        let mut r = BufReader::new(f);
+        let mut line = String::new();
+        let mut lineno = 0usize;
+        let mut n = 0usize;
+        let mut width: Option<usize> = None;
+        loop {
+            line.clear();
+            if r.read_line(&mut line)
+                .with_context(|| format!("reading {path}"))?
+                == 0
+            {
+                break;
+            }
+            lineno += 1;
+            if has_header && lineno == 1 {
+                continue;
+            }
+            if let Some((_, feats)) = super::csv::parse_line(&line, lineno)? {
+                let w = feats.len() + 1;
+                match width {
+                    None => width = Some(w),
+                    Some(prev) => anyhow::ensure!(
+                        prev == w,
+                        "ragged row on line {lineno} of {path}: {w} cols, expected {prev}"
+                    ),
+                }
+                n += 1;
+            }
+        }
+        anyhow::ensure!(n > 0, "{path} has no data rows");
+        let d = width.unwrap() - 1;
+        Ok(CsvSource {
+            path: path.to_string(),
+            name: path.to_string(),
+            has_header,
+            d,
+            n,
+            chunk_rows: chunk_rows.max(1),
+            reader: None,
+            lineno: 0,
+            row: 0,
+        })
+    }
+}
+
+impl DataSource for CsvSource {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.n)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        let f = File::open(&self.path)
+            .with_context(|| format!("reopening csv file {}", self.path))?;
+        self.reader = Some(BufReader::new(f));
+        self.lineno = 0;
+        self.row = 0;
+        Ok(())
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<Chunk>> {
+        if self.reader.is_none() {
+            self.reset()?;
+        }
+        let r = self.reader.as_mut().unwrap();
+        let mut xdata: Vec<f64> = Vec::with_capacity(self.chunk_rows.min(self.n) * self.d);
+        let mut y: Vec<f64> = Vec::with_capacity(self.chunk_rows.min(self.n));
+        let mut line = String::new();
+        while y.len() < self.chunk_rows {
+            line.clear();
+            if r.read_line(&mut line)? == 0 {
+                break;
+            }
+            self.lineno += 1;
+            if self.has_header && self.lineno == 1 {
+                continue;
+            }
+            if let Some((label, feats)) = super::csv::parse_line(&line, self.lineno)? {
+                anyhow::ensure!(
+                    feats.len() == self.d,
+                    "ragged row on line {} of {}: {} features, expected {} \
+                     (file changed since open?)",
+                    self.lineno,
+                    self.path,
+                    feats.len(),
+                    self.d
+                );
+                xdata.extend_from_slice(&feats);
+                y.push(label);
+            }
+        }
+        if y.is_empty() {
+            return Ok(None);
+        }
+        let rows = y.len();
+        let start = self.row;
+        self.row += rows;
+        Ok(Some(Chunk {
+            start,
+            x: Mat::from_vec(rows, self.d, xdata),
+            y,
+            labels: None,
+        }))
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::source::collect;
+    use std::io::Cursor;
+
+    fn tmp(tag: &str, contents: &str) -> String {
+        let p = std::env::temp_dir()
+            .join(format!("falkon_stream_{tag}_{}.txt", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        std::fs::write(&p, contents).unwrap();
+        p
+    }
+
+    #[test]
+    fn libsvm_stream_matches_eager() {
+        // blank lines, comments, out-of-order indices, no trailing newline
+        let src = "# header comment\n1 3:3.0 1:1.0\n\n-1 2:2.5 # trailing\n2 1:0.5 4:4.0";
+        let path = tmp("lsvm", src);
+        let (want_x, want_y) = crate::data::libsvm::read(Cursor::new(src), None).unwrap();
+        let mut s = LibsvmSource::open(&path, None, 2).unwrap();
+        assert_eq!(s.len_hint(), Some(3));
+        assert_eq!(s.d(), 4);
+        let got = collect(&mut s).unwrap();
+        assert_eq!(got.x.data, want_x.data);
+        assert_eq!(got.y, want_y);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn libsvm_out_of_order_indices_scatter() {
+        let path = tmp("order", "1 5:5.0 2:2.0 1:1.0\n");
+        let mut s = LibsvmSource::open(&path, None, 8).unwrap();
+        let got = collect(&mut s).unwrap();
+        assert_eq!(got.x.data, vec![1.0, 2.0, 0.0, 0.0, 5.0]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn libsvm_pinned_dim_and_errors() {
+        let path = tmp("pin", "1 2:2.0\n");
+        let s = LibsvmSource::open(&path, Some(6), 8).unwrap();
+        assert_eq!(s.d(), 6);
+        assert!(LibsvmSource::open(&path, Some(1), 8).is_err());
+        let _ = std::fs::remove_file(&path);
+        let bad = tmp("badl", "1 nocolon\n");
+        assert!(LibsvmSource::open(&bad, None, 8).is_err());
+        let _ = std::fs::remove_file(&bad);
+    }
+
+    #[test]
+    fn csv_stream_matches_eager() {
+        // header, blank line, missing trailing newline
+        let src = "label,f1,f2\n1.0,2.0,3.0\n\n-1.0,4.5,5.5";
+        let path = tmp("csv", src);
+        let (want_y, want_x) = crate::data::csv::read(Cursor::new(src), true).unwrap();
+        let mut s = CsvSource::open(&path, true, 1).unwrap();
+        assert_eq!(s.len_hint(), Some(2));
+        assert_eq!(s.d(), 2);
+        let got = collect(&mut s).unwrap();
+        assert_eq!(got.x.data, want_x.data);
+        assert_eq!(got.y, want_y);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn csv_rejects_ragged_and_empty() {
+        let ragged = tmp("rag", "1,2\n1,2,3\n");
+        assert!(CsvSource::open(&ragged, false, 4).is_err());
+        let _ = std::fs::remove_file(&ragged);
+        let empty = tmp("emp", "\n\n");
+        assert!(CsvSource::open(&empty, false, 4).is_err());
+        let _ = std::fs::remove_file(&empty);
+    }
+
+    #[test]
+    fn reset_replays_and_chunks_are_contiguous() {
+        let mut body = String::new();
+        for i in 0..23 {
+            body.push_str(&format!("{i},1.0,{i}.5\n"));
+        }
+        let path = tmp("replay", &body);
+        let mut s = CsvSource::open(&path, false, 7).unwrap();
+        let a = collect(&mut s).unwrap();
+        let b = collect(&mut s).unwrap();
+        assert_eq!(a.x.data, b.x.data);
+        assert_eq!(a.n(), 23);
+        s.reset().unwrap();
+        let mut seen = 0;
+        while let Some(c) = s.next_chunk().unwrap() {
+            assert_eq!(c.start, seen);
+            assert!(c.rows() <= 7);
+            seen += c.rows();
+        }
+        assert_eq!(seen, 23);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -115,6 +115,127 @@ pub fn sample_by_scores(
     (indices, d_weights)
 }
 
+// ---------------------------------------------------------------------
+// streaming selection (the out-of-core path)
+// ---------------------------------------------------------------------
+
+/// Uniform reservoir sampler over a row stream (Algorithm R): after
+/// pushing every row exactly once, the kept rows are a uniform sample of
+/// size `min(m, rows seen)` — without knowing the stream length up
+/// front. This is how the out-of-core path selects Nyström centers from
+/// a source whose row count is unknown; sources with a known length use
+/// [`CenterGather`] instead so the selected indices match the in-memory
+/// fit exactly.
+pub struct Reservoir {
+    m: usize,
+    rows: Mat,
+    indices: Vec<usize>,
+    seen: usize,
+}
+
+impl Reservoir {
+    pub fn new(m: usize, d: usize) -> Reservoir {
+        assert!(m > 0, "reservoir needs m > 0");
+        Reservoir {
+            m,
+            rows: Mat::zeros(m, d),
+            indices: Vec::with_capacity(m),
+            seen: 0,
+        }
+    }
+
+    /// Offer the next stream row (global index = rows pushed so far).
+    pub fn push(&mut self, row: &[f64], rng: &mut Rng) {
+        if self.indices.len() < self.m {
+            let slot = self.indices.len();
+            self.rows.row_mut(slot).copy_from_slice(row);
+            self.indices.push(self.seen);
+        } else {
+            let j = rng.below(self.seen + 1);
+            if j < self.m {
+                self.rows.row_mut(j).copy_from_slice(row);
+                self.indices[j] = self.seen;
+            }
+        }
+        self.seen += 1;
+    }
+
+    /// Rows offered so far.
+    pub fn seen(&self) -> usize {
+        self.seen
+    }
+
+    /// The sampled rows and their global stream indices (trimmed if the
+    /// stream had fewer than `m` rows).
+    pub fn finish(self) -> (Mat, Vec<usize>) {
+        let kept = self.indices.len();
+        if kept < self.m {
+            (self.rows.slice_rows(0, kept), self.indices)
+        } else {
+            (self.rows, self.indices)
+        }
+    }
+}
+
+/// Gather pre-drawn center indices from a single chunked pass: given the
+/// index list (e.g. `rng.choose(n, m)` — the same draw the in-memory
+/// [`Centers::Uniform`] makes), `offer` each contiguous chunk and
+/// `finish` returns the centers **in index-list order**, so a streaming
+/// fit selects bit-identical centers to the in-memory fit at equal seed.
+pub struct CenterGather {
+    /// (global row index, output slot), sorted by row index
+    slots: Vec<(usize, usize)>,
+    c: Mat,
+    cursor: usize,
+}
+
+impl CenterGather {
+    pub fn new(indices: &[usize], d: usize) -> CenterGather {
+        let mut slots: Vec<(usize, usize)> = indices
+            .iter()
+            .copied()
+            .enumerate()
+            .map(|(slot, idx)| (idx, slot))
+            .collect();
+        slots.sort_unstable();
+        CenterGather {
+            slots,
+            c: Mat::zeros(indices.len(), d),
+            cursor: 0,
+        }
+    }
+
+    /// Offer a chunk of rows starting at global row `start`. Chunks must
+    /// arrive in stream order (contiguous, ascending).
+    pub fn offer(&mut self, start: usize, x: &Mat) {
+        let end = start + x.rows;
+        while self.cursor < self.slots.len() {
+            let (idx, slot) = self.slots[self.cursor];
+            if idx >= end {
+                break;
+            }
+            assert!(
+                idx >= start,
+                "chunk starting at {start} skipped wanted row {idx} (chunks out of order?)"
+            );
+            self.c.row_mut(slot).copy_from_slice(x.row(idx - start));
+            self.cursor += 1;
+        }
+    }
+
+    /// All gathered centers; errors if the stream ended before every
+    /// requested row was seen.
+    pub fn finish(self) -> Result<Mat> {
+        anyhow::ensure!(
+            self.cursor == self.slots.len(),
+            "stream ended before all {} centers were gathered ({} found)",
+            self.slots.len(),
+            self.cursor
+        );
+        Ok(self.c)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,5 +299,99 @@ mod tests {
         scores[0] = 1.0; // all mass on one index
         let (idx, _) = sample_by_scores(&scores, 5, 30, &mut rng);
         assert_eq!(idx.len(), 5);
+    }
+
+    #[test]
+    fn reservoir_keeps_exact_m_and_matches_stream_rows() {
+        let mut rng = Rng::new(11);
+        let n = 500;
+        let x = Mat::from_vec(n, 3, rng.normals(n * 3));
+        let mut res = Reservoir::new(20, 3);
+        for i in 0..n {
+            res.push(x.row(i), &mut rng);
+        }
+        assert_eq!(res.seen(), n);
+        let (c, idx) = res.finish();
+        assert_eq!(c.rows, 20);
+        assert_eq!(idx.len(), 20);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20, "indices must be distinct");
+        for (k, &i) in idx.iter().enumerate() {
+            assert_eq!(c.row(k), x.row(i), "kept row {k} != stream row {i}");
+        }
+    }
+
+    #[test]
+    fn reservoir_short_stream_keeps_everything() {
+        let mut rng = Rng::new(12);
+        let x = Mat::from_vec(7, 2, rng.normals(14));
+        let mut res = Reservoir::new(20, 2);
+        for i in 0..7 {
+            res.push(x.row(i), &mut rng);
+        }
+        let (c, idx) = res.finish();
+        assert_eq!(c.rows, 7);
+        assert_eq!(idx, (0..7).collect::<Vec<_>>());
+        assert_eq!(c.data, x.data);
+    }
+
+    #[test]
+    fn reservoir_is_roughly_uniform() {
+        // every stream position should be kept with probability ~m/n
+        let (n, m, reps) = (200usize, 10usize, 300usize);
+        let mut hits = vec![0usize; n];
+        for rep in 0..reps {
+            let mut rng = Rng::new(1000 + rep as u64);
+            let mut res = Reservoir::new(m, 1);
+            for i in 0..n {
+                res.push(&[i as f64], &mut rng);
+            }
+            let (_, idx) = res.finish();
+            for i in idx {
+                hits[i] += 1;
+            }
+        }
+        let expect = reps as f64 * m as f64 / n as f64; // = 15
+        // early, middle and late thirds all within a loose band
+        for (lo, hi) in [(0, n / 3), (n / 3, 2 * n / 3), (2 * n / 3, n)] {
+            let mean = hits[lo..hi].iter().sum::<usize>() as f64 / (hi - lo) as f64;
+            assert!(
+                (mean - expect).abs() < 0.35 * expect,
+                "band {lo}..{hi}: mean {mean} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn gather_matches_select_rows_in_index_order() {
+        let mut rng = Rng::new(13);
+        let n = 300;
+        let x = Mat::from_vec(n, 4, rng.normals(n * 4));
+        let indices = rng.choose(n, 24);
+        let want = x.select_rows(&indices);
+        let mut g = CenterGather::new(&indices, 4);
+        // ragged chunk sizes
+        let mut start = 0;
+        for step in [37usize, 100, 1, 95, 200] {
+            let end = (start + step).min(n);
+            g.offer(start, &x.slice_rows(start, end));
+            start = end;
+            if start == n {
+                break;
+            }
+        }
+        let got = g.finish().unwrap();
+        assert_eq!(got.data, want.data, "gathered centers must be bitwise equal");
+    }
+
+    #[test]
+    fn gather_errors_on_short_stream() {
+        let g = CenterGather::new(&[5, 2], 2);
+        assert!(g.finish().is_err());
+        let mut g = CenterGather::new(&[5, 2], 2);
+        g.offer(0, &Mat::zeros(3, 2));
+        assert!(g.finish().is_err());
     }
 }

@@ -12,6 +12,7 @@
 //! [`fit_multiclass_looped`], the equivalence oracle the batched path is
 //! benchmarked and tested against.
 
+use crate::data::source::DataSource;
 use crate::data::Dataset;
 use crate::kernels::Kernel;
 use crate::linalg::mat::Mat;
@@ -20,7 +21,7 @@ use crate::util::rng::Rng;
 use crate::util::timer::{Phases, Timer};
 use anyhow::{Context, Result};
 
-use super::centers::{Centers, SelectedCenters};
+use super::centers::{CenterGather, Centers, Reservoir, SelectedCenters};
 use super::cg::{block_conjgrad, conjgrad, BlockCgResult, CgOptions, CgResult, CgStop};
 
 /// Which preconditioner factorization to use (Sect. A of the paper).
@@ -119,6 +120,31 @@ impl FalkonModel {
         let mut p = engine.predict(
             self.config.kernel,
             x,
+            &self.centers,
+            &self.alpha,
+            self.config.sigma,
+        )?;
+        if self.y_offset != 0.0 {
+            for v in &mut p {
+                *v += self.y_offset;
+            }
+        }
+        Ok(p)
+    }
+
+    /// Streaming [`FalkonModel::predict`]: sweep a chunked
+    /// [`DataSource`] once, so a larger-than-RAM dataset is scored with
+    /// O(chunk) resident features
+    /// ([`crate::serve::predict_source`] additionally returns the
+    /// streamed targets for evaluation).
+    pub fn predict_source(
+        &self,
+        engine: &Engine,
+        source: &mut dyn DataSource,
+    ) -> Result<Vec<f64>> {
+        let mut p = engine.predict_source(
+            self.config.kernel,
+            source,
             &self.centers,
             &self.alpha,
             self.config.sigma,
@@ -271,6 +297,120 @@ pub fn prepare(engine: &Engine, x: &Mat, config: &FalkonConfig) -> Result<FitSta
     })
 }
 
+/// Out-of-core [`prepare`]: build the fit state from a chunked
+/// [`DataSource`] without ever materializing the `n×d` matrix. One
+/// streaming pass selects the Nyström centers and collects the targets
+/// (features are O(chunk) resident; the targets are O(n) — 8 bytes/row,
+/// the same budget the paper's O(n) memory claim carries); K_MM and the
+/// preconditioner then run on the M×M state as usual, and the returned
+/// plan re-streams the source on every CG iteration
+/// (DESIGN.md § "Out-of-core path").
+///
+/// Center selection: sources that know their length (`len_hint`) draw
+/// the **same uniform indices as the in-memory fit** at equal seed and
+/// gather them during the pass, so a streamed fit reproduces the
+/// in-memory fit bit-for-bit; unknown-length sources fall back to
+/// reservoir sampling ([`Reservoir`]). Leverage-score selection needs
+/// the dense sketch in memory and is rejected.
+///
+/// Returns the prepared state plus the collected targets.
+pub fn prepare_source(
+    engine: &Engine,
+    mut source: Box<dyn DataSource>,
+    config: &FalkonConfig,
+) -> Result<(FitState, Vec<f64>)> {
+    anyhow::ensure!(
+        matches!(config.centers, Centers::Uniform),
+        "streaming fits support uniform center selection only \
+         (leverage scores need the dense sketch in memory)"
+    );
+    anyhow::ensure!(
+        source.n_classes() <= 2,
+        "streaming fits support regression/binary targets ({}-class source); \
+         multiclass one-vs-all needs the in-memory fit",
+        source.n_classes()
+    );
+    let mut phases = Phases::new();
+    let mut rng = Rng::new(config.seed);
+    let d = source.d();
+    anyhow::ensure!(d > 0, "source has no features");
+
+    let mut y: Vec<f64> = Vec::new();
+    let sel = phases.time("centers", || -> Result<SelectedCenters> {
+        source.reset()?;
+        let (c, indices) = match source.len_hint() {
+            Some(n) => {
+                anyhow::ensure!(n > 0, "source is empty");
+                // same draw as Centers::Uniform on the in-memory path
+                let indices = rng.choose(n, config.m.min(n));
+                let mut gather = CenterGather::new(&indices, d);
+                let mut seen = 0usize;
+                while let Some(chunk) = source.next_chunk()? {
+                    anyhow::ensure!(chunk.start == seen, "source chunks must be contiguous");
+                    seen += chunk.x.rows;
+                    gather.offer(chunk.start, &chunk.x);
+                    y.extend_from_slice(&chunk.y);
+                }
+                anyhow::ensure!(seen == n, "source yielded {seen} rows, len_hint said {n}");
+                (gather.finish()?, indices)
+            }
+            None => {
+                let mut res = Reservoir::new(config.m.max(1), d);
+                let mut seen = 0usize;
+                while let Some(chunk) = source.next_chunk()? {
+                    anyhow::ensure!(chunk.start == seen, "source chunks must be contiguous");
+                    seen += chunk.x.rows;
+                    for i in 0..chunk.x.rows {
+                        res.push(chunk.x.row(i), &mut rng);
+                    }
+                    y.extend_from_slice(&chunk.y);
+                }
+                anyhow::ensure!(seen > 0, "source is empty");
+                res.finish()
+            }
+        };
+        Ok(SelectedCenters {
+            c,
+            indices,
+            d_weights: None,
+            scores: None,
+        })
+    })?;
+    let n = y.len();
+
+    let (t_factor, a_factor, q_factor) =
+        phases.time("precond", || -> Result<(Mat, Mat, Option<Mat>)> {
+            let kmm = engine.kmm(config.kernel, &sel.c, config.sigma)?;
+            match config.precond {
+                PrecondKind::Chol => {
+                    let (t, a) = engine.precond(&kmm, config.lam, config.eps)?;
+                    Ok((t, a, None))
+                }
+                PrecondKind::Eig => {
+                    let (t, a, q) = super::precond::precond_eig(&kmm, config.lam, config.eps)?;
+                    Ok((t, a, Some(q)))
+                }
+            }
+        })?;
+
+    let plan = phases.time("plan", || {
+        engine.matvec_plan_source(config.kernel, source, &sel.c, config.sigma, n)
+    })?;
+
+    Ok((
+        FitState {
+            sel,
+            t_factor,
+            a_factor,
+            q_factor,
+            plan,
+            phases,
+            config: config.clone(),
+        },
+        y,
+    ))
+}
+
 /// Solve one right-hand side on a prepared state, returning the Nyström
 /// coefficients plus the full CG outcome (iterations, residual trace,
 /// stop reason). `on_iter` (if given) receives (iteration, α at that
@@ -370,6 +510,23 @@ pub fn solve_multi(state: &mut FitState, y: &Mat) -> Result<(Mat, BlockCgResult)
 }
 
 /// Fit FALKON on a regression / binary (-1, +1) problem.
+///
+/// ```
+/// use falkon::data::synth;
+/// use falkon::falkon::{fit, FalkonConfig};
+/// use falkon::runtime::Engine;
+/// use falkon::util::rng::Rng;
+///
+/// let mut rng = Rng::new(1);
+/// let data = synth::smooth_regression(&mut rng, 400, 3, 0.05);
+/// let engine = Engine::rust();
+/// let config = FalkonConfig { sigma: 1.5, lam: 1e-4, m: 48, t: 10, ..Default::default() };
+/// let model = fit(&engine, &data.x, &data.y, &config).unwrap();
+/// let preds = model.predict(&engine, &data.x).unwrap();
+/// let mse = falkon::metrics::mse(&preds, &data.y);
+/// let var = falkon::linalg::vec_ops::variance(&data.y);
+/// assert!(mse < 0.5 * var, "mse {mse} vs var {var}");
+/// ```
 pub fn fit(engine: &Engine, x: &Mat, y: &[f64], config: &FalkonConfig) -> Result<FalkonModel> {
     fit_with_callback(engine, x, y, config, None)
 }
@@ -393,6 +550,59 @@ pub fn fit_with_callback(
     };
     let yc: Vec<f64> = y.iter().map(|v| v - y_offset).collect();
     let (alpha, cg) = solve(&mut state, &yc, on_iter)?;
+    Ok(FalkonModel {
+        config: config.clone(),
+        centers: state.sel.c,
+        alpha,
+        y_offset,
+        phases: state.phases,
+        cg_iters: cg.iters,
+        cg_residuals: cg.residuals,
+        cg_stop: cg.stop,
+    })
+}
+
+/// Out-of-core fit: FALKON from a chunked [`DataSource`], so a dataset
+/// larger than RAM streams through training with O(M² + chunk) working
+/// memory for features (targets stay O(n); see [`prepare_source`]).
+/// Regression and ±1 binary labels ride the `y` channel.
+///
+/// For a source with a known length this is **bit-identical** to the
+/// in-memory [`fit`] on the same data, seed and (serial) engine — the
+/// end-to-end property the out-of-core tests pin.
+///
+/// ```
+/// use falkon::data::{synth, MemSource};
+/// use falkon::falkon::{fit_source, FalkonConfig};
+/// use falkon::runtime::Engine;
+/// use falkon::util::rng::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let data = synth::smooth_regression(&mut rng, 300, 3, 0.05);
+/// let x = data.x.clone();
+/// let y = data.y.clone();
+/// // 64-row chunks: only ~64×3 feature values resident per sweep
+/// let source = Box::new(MemSource::new(data, 64));
+/// let engine = Engine::rust();
+/// let config = FalkonConfig { sigma: 1.5, lam: 1e-4, m: 40, t: 10, ..Default::default() };
+/// let model = fit_source(&engine, source, &config).unwrap();
+/// let preds = model.predict(&engine, &x).unwrap();
+/// let mse = falkon::metrics::mse(&preds, &y);
+/// assert!(mse < falkon::linalg::vec_ops::variance(&y));
+/// ```
+pub fn fit_source(
+    engine: &Engine,
+    source: Box<dyn DataSource>,
+    config: &FalkonConfig,
+) -> Result<FalkonModel> {
+    let (mut state, y) = prepare_source(engine, source, config)?;
+    let y_offset = if config.center_y {
+        crate::linalg::vec_ops::mean(&y)
+    } else {
+        0.0
+    };
+    let yc: Vec<f64> = y.iter().map(|v| v - y_offset).collect();
+    let (alpha, cg) = solve(&mut state, &yc, None)?;
     Ok(FalkonModel {
         config: config.clone(),
         centers: state.sel.c,
@@ -723,5 +933,97 @@ mod tests {
         assert!((c.lam - 0.01).abs() < 1e-12);
         assert!(c.m >= 900 && c.m <= 1000, "{}", c.m);
         assert!(c.t >= 9 && c.t <= 11);
+    }
+
+    // -- out-of-core fits ----------------------------------------------
+
+    use crate::data::source::{Chunk, DataSource, MemSource};
+
+    #[test]
+    fn streaming_fit_is_bitwise_equal_to_in_memory_fit() {
+        // known-length source + equal seed => same center indices, same
+        // per-row accumulation order => identical model (serial engine)
+        let mut rng = Rng::new(41);
+        let data = synth::smooth_regression(&mut rng, 1700, 5, 0.05);
+        let eng = Engine::rust();
+        let cfg = small_config(48, 12);
+        let mem = fit(&eng, &data.x, &data.y, &cfg).unwrap();
+        for chunk_rows in [300usize, 1024] {
+            let src = Box::new(MemSource::new(data.clone(), chunk_rows));
+            let ooc = crate::falkon::fit_source(&eng, src, &cfg).unwrap();
+            assert_eq!(ooc.centers.data, mem.centers.data, "chunk {chunk_rows}");
+            assert_eq!(ooc.alpha, mem.alpha, "chunk {chunk_rows}");
+            assert_eq!(ooc.y_offset, mem.y_offset);
+            assert_eq!(ooc.cg_iters, mem.cg_iters);
+        }
+    }
+
+    #[test]
+    fn streaming_fit_pooled_close_to_in_memory() {
+        let mut rng = Rng::new(42);
+        let data = synth::smooth_regression(&mut rng, 1400, 4, 0.05);
+        let eng = Engine::rust_with(crate::runtime::EngineOptions {
+            workers: 4,
+            ..Default::default()
+        });
+        let cfg = small_config(40, 10);
+        let mem = fit(&eng, &data.x, &data.y, &cfg).unwrap();
+        let src = Box::new(MemSource::new(data.clone(), 250));
+        let ooc = crate::falkon::fit_source(&eng, src, &cfg).unwrap();
+        assert_eq!(ooc.centers.data, mem.centers.data);
+        let pm = mem.predict(&eng, &data.x).unwrap();
+        let po = ooc.predict(&eng, &data.x).unwrap();
+        let diff = crate::linalg::vec_ops::max_abs_diff(&pm, &po);
+        assert!(diff < 1e-8, "pooled streaming vs in-memory: {diff}");
+    }
+
+    /// Test double: a source that hides its length, forcing the
+    /// reservoir-sampling selection path.
+    struct HiddenLen(MemSource);
+
+    impl DataSource for HiddenLen {
+        fn d(&self) -> usize {
+            self.0.d()
+        }
+        fn len_hint(&self) -> Option<usize> {
+            None
+        }
+        fn reset(&mut self) -> anyhow::Result<()> {
+            self.0.reset()
+        }
+        fn next_chunk(&mut self) -> anyhow::Result<Option<Chunk>> {
+            self.0.next_chunk()
+        }
+        fn chunk_rows(&self) -> usize {
+            self.0.chunk_rows()
+        }
+    }
+
+    #[test]
+    fn unknown_length_source_fits_via_reservoir() {
+        let mut rng = Rng::new(43);
+        let data = synth::smooth_regression(&mut rng, 900, 4, 0.05);
+        let eng = Engine::rust();
+        let cfg = small_config(48, 12);
+        let src = Box::new(HiddenLen(MemSource::new(data.clone(), 128)));
+        let model = crate::falkon::fit_source(&eng, src, &cfg).unwrap();
+        assert_eq!(model.centers.rows, 48);
+        let preds = model.predict(&eng, &data.x).unwrap();
+        let err = metrics::mse(&preds, &data.y);
+        let var = crate::linalg::vec_ops::variance(&data.y);
+        assert!(err < 0.35 * var, "mse {err} vs var {var}");
+    }
+
+    #[test]
+    fn streaming_fit_rejects_leverage_scores() {
+        let mut rng = Rng::new(44);
+        let data = synth::smooth_regression(&mut rng, 200, 3, 0.05);
+        let eng = Engine::rust();
+        let cfg = FalkonConfig {
+            centers: Centers::ApproxLeverage { sketch: 32 },
+            ..small_config(16, 4)
+        };
+        let src = Box::new(MemSource::new(data, 64));
+        assert!(crate::falkon::fit_source(&eng, src, &cfg).is_err());
     }
 }

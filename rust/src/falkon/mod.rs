@@ -1,6 +1,36 @@
 //! The FALKON algorithm (the paper's contribution): Nyström center
 //! selection (uniform + approximate leverage scores), the Nyström-based
 //! preconditioner, and conjugate gradient over the blocked kernel matvec.
+//!
+//! Entry points: [`fit`] (regression / ±1 binary), [`fit_multiclass`]
+//! (one-vs-all with a shared plan and a batched multi-RHS solve), and
+//! [`fit_source`] (out-of-core: train from a chunked
+//! [`crate::data::DataSource`] with O(chunk) resident features).
+//!
+//! # Example: multiclass blobs
+//!
+//! ```
+//! use falkon::data::synth;
+//! use falkon::falkon::{fit_multiclass, FalkonConfig};
+//! use falkon::runtime::Engine;
+//! use falkon::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(1);
+//! let data = synth::blobs(&mut rng, 400, 4, 3); // separable 3-class blobs
+//! let engine = Engine::rust();
+//! let config = FalkonConfig {
+//!     sigma: 4.0,
+//!     lam: 1e-5,
+//!     m: 40,
+//!     t: 8,
+//!     ..Default::default()
+//! };
+//! let model = fit_multiclass(&engine, &data, &config).unwrap();
+//! let pred = model.predict_class(&engine, &data.x).unwrap();
+//! let labels = data.labels.as_ref().unwrap();
+//! let errs = pred.iter().zip(labels).filter(|(p, l)| p != l).count();
+//! assert!(errs as f64 / pred.len() as f64 < 0.05, "{errs} errors");
+//! ```
 pub mod centers;
 pub mod cg;
 pub mod estimator;
@@ -9,9 +39,10 @@ pub mod model_io;
 pub mod precond;
 pub mod tune;
 
-pub use centers::{Centers, SelectedCenters};
+pub use centers::{CenterGather, Centers, Reservoir, SelectedCenters};
 pub use cg::{block_conjgrad, conjgrad, BlockCgResult, CgOptions, CgResult, CgStop};
 pub use estimator::{
-    fit, fit_multiclass, fit_multiclass_looped, fit_with_callback, prepare, solve, solve_multi,
-    FalkonConfig, FalkonModel, FalkonMulticlass, FitState, PrecondKind,
+    fit, fit_multiclass, fit_multiclass_looped, fit_source, fit_with_callback, prepare,
+    prepare_source, solve, solve_multi, FalkonConfig, FalkonModel, FalkonMulticlass, FitState,
+    PrecondKind,
 };

@@ -598,8 +598,33 @@ pub fn knm_matvec_blocked(
     scratch: &mut TileScratch,
     w: &mut [f64],
 ) {
+    knm_matvec_ranged(kern, x, c, xn, cn, u, v, mask, param, scratch, w, 0, x.rows)
+}
+
+/// [`knm_matvec_blocked`] restricted to rows `[start, end)` of `x`
+/// (`xn`/`v`/`mask` stay indexed by full rows of `x`). This is how the
+/// out-of-core plan fans one resident chunk out over the worker pool:
+/// each worker sweeps a disjoint row range of the *same* chunk, so the
+/// chunk is never copied per worker.
+#[allow(clippy::too_many_arguments)]
+pub fn knm_matvec_ranged(
+    kern: Kernel,
+    x: &Mat,
+    c: &Mat,
+    xn: &[f64],
+    cn: &[f64],
+    u: &[f64],
+    v: Option<&[f64]>,
+    mask: Option<&[f64]>,
+    param: f64,
+    scratch: &mut TileScratch,
+    w: &mut [f64],
+    start: usize,
+    end: usize,
+) {
     let (n, m, d) = (x.rows, c.rows, x.cols);
     assert_eq!(c.cols, d, "feature dims differ");
+    assert!(start <= end && end <= n, "row range {start}..{end} of {n}");
     assert_eq!(u.len(), m);
     assert_eq!(w.len(), m);
     assert_eq!(xn.len(), n);
@@ -612,9 +637,9 @@ pub fn knm_matvec_blocked(
     }
     scratch.ensure(m);
     let tile = scratch.tile;
-    let mut s = 0;
-    while s < n {
-        let rows = (n - s).min(tile);
+    let mut s = start;
+    while s < end {
+        let rows = (end - s).min(tile);
         let kr = &mut scratch.kr[..rows * m];
         let xb = &x.data[s * d..(s + rows) * d];
         kernel_panel(kern, xb, d, rows, &xn[s..s + rows], c, cn, 0, param, kr, m);
@@ -696,9 +721,33 @@ pub fn knm_matmat_blocked(
     scratch: &mut TileScratch,
     w: &mut Mat,
 ) {
+    knm_matmat_ranged(kern, x, c, xn, cn, u, v, mask, param, scratch, w, 0, x.rows)
+}
+
+/// [`knm_matmat_blocked`] restricted to rows `[start, end)` of `x` — the
+/// multi-RHS counterpart of [`knm_matvec_ranged`], used by the
+/// out-of-core plan to fan a resident chunk over the pool without
+/// per-worker copies. `xn`/`v`/`mask` stay indexed by full rows of `x`.
+#[allow(clippy::too_many_arguments)]
+pub fn knm_matmat_ranged(
+    kern: Kernel,
+    x: &Mat,
+    c: &Mat,
+    xn: &[f64],
+    cn: &[f64],
+    u: &Mat,
+    v: Option<&[f64]>,
+    mask: Option<&[f64]>,
+    param: f64,
+    scratch: &mut TileScratch,
+    w: &mut Mat,
+    start: usize,
+    end: usize,
+) {
     let (n, m, d) = (x.rows, c.rows, x.cols);
     let k = u.cols;
     assert_eq!(c.cols, d, "feature dims differ");
+    assert!(start <= end && end <= n, "row range {start}..{end} of {n}");
     assert_eq!(u.rows, m, "u rows != centers");
     assert_eq!((w.rows, w.cols), (m, k), "w shape");
     assert_eq!(xn.len(), n);
@@ -715,9 +764,9 @@ pub fn knm_matmat_blocked(
     scratch.ensure_multi(m, k);
     let tile = scratch.tile;
     let TileScratch { kr, y, .. } = scratch;
-    let mut s = 0;
-    while s < n {
-        let rows = (n - s).min(tile);
+    let mut s = start;
+    while s < end {
+        let rows = (end - s).min(tile);
         let kr = &mut kr[..rows * m];
         let xb = &x.data[s * d..(s + rows) * d];
         kernel_panel(kern, xb, d, rows, &xn[s..s + rows], c, cn, 0, param, kr, m);
@@ -949,6 +998,78 @@ mod tests {
     use crate::util::ptest::check;
 
     const KERNELS: [Kernel; 3] = [Kernel::Gaussian, Kernel::Laplacian, Kernel::Linear];
+
+    #[test]
+    fn ranged_sweeps_cover_the_blocked_sweep() {
+        // splitting a sweep into disjoint row ranges and summing must be
+        // bitwise-equal to the full blocked sweep (the ranges partition
+        // the rows and each row's contribution is computed identically) —
+        // the contract the out-of-core plan's pooled fan-out relies on
+        check("ranged = blocked", 10, |g| {
+            let (n, m, d) = (g.usize_in(1, 400), g.usize_in(1, 12), g.usize_in(1, 5));
+            let k = g.usize_in(1, 4);
+            let x = Mat::from_vec(n, d, g.normal_vec(n * d));
+            let c = Mat::from_vec(m, d, g.normal_vec(m * d));
+            let xn = row_sq_norms(&x);
+            let cn = row_sq_norms(&c);
+            let u = g.normal_vec(m);
+            let v = g.normal_vec(n);
+            let um = Mat::from_vec(m, k, g.normal_vec(m * k));
+            let vm = g.normal_vec(n * k);
+            let split = g.usize_in(0, n + 1);
+            let p = g.f64_in(0.5, 2.5);
+            for kern in KERNELS {
+                let mut scratch = TileScratch::new(DEFAULT_TILE, m);
+                let mut want = vec![0.0; m];
+                knm_matvec_blocked(
+                    kern, &x, &c, &xn, &cn, &u, Some(&v), None, p, &mut scratch, &mut want,
+                );
+                let mut got = vec![0.0; m];
+                for (lo, hi) in [(0, split), (split, n)] {
+                    knm_matvec_ranged(
+                        kern,
+                        &x,
+                        &c,
+                        &xn,
+                        &cn,
+                        &u,
+                        Some(&v),
+                        None,
+                        p,
+                        &mut scratch,
+                        &mut got,
+                        lo,
+                        hi,
+                    );
+                }
+                assert_eq!(got, want, "{kern:?} vector split at {split}");
+
+                let mut want_m = Mat::zeros(m, k);
+                knm_matmat_blocked(
+                    kern, &x, &c, &xn, &cn, &um, Some(&vm), None, p, &mut scratch, &mut want_m,
+                );
+                let mut got_m = Mat::zeros(m, k);
+                for (lo, hi) in [(0, split), (split, n)] {
+                    knm_matmat_ranged(
+                        kern,
+                        &x,
+                        &c,
+                        &xn,
+                        &cn,
+                        &um,
+                        Some(&vm),
+                        None,
+                        p,
+                        &mut scratch,
+                        &mut got_m,
+                        lo,
+                        hi,
+                    );
+                }
+                assert_eq!(got_m.data, want_m.data, "{kern:?} multi split at {split}");
+            }
+        });
+    }
 
     #[test]
     fn gaussian_values() {

@@ -10,7 +10,44 @@
 //!   matvecs, baselines, benchmarks and the CLI launcher. Python never
 //!   runs at request time.
 //!
-//! Start with [`falkon::FalkonEstimator`] or `examples/quickstart.rs`.
+//! # Layout
+//!
+//! | module | role |
+//! |---|---|
+//! | [`data`] | datasets, loaders, and the chunked out-of-core [`data::DataSource`] pipeline |
+//! | [`kernels`] | tiled/fused Gaussian, Laplacian and linear kernel sweeps |
+//! | [`falkon`] | the algorithm: centers, preconditioner, (block) CG, fit/predict |
+//! | [`runtime`] | the [`runtime::Engine`]/[`runtime::MatvecPlan`] compute abstraction |
+//! | [`serve`] | batched online serving + streamed offline bulk scoring |
+//! | [`baselines`] | exact KRR and Nyström baselines for the paper's tables |
+//! | [`linalg`], [`util`], [`bench`], [`cli`], [`config`], [`metrics`] | substrates |
+//!
+//! # Quickstart
+//!
+//! Fit and evaluate on an in-memory dataset ([`falkon::fit`]):
+//!
+//! ```
+//! use falkon::data::synth;
+//! use falkon::falkon::{fit, FalkonConfig};
+//! use falkon::runtime::Engine;
+//! use falkon::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(0);
+//! let data = synth::smooth_regression(&mut rng, 500, 4, 0.05);
+//! let engine = Engine::rust(); // or Engine::xla(...) over the AOT artifacts
+//! let config = FalkonConfig { sigma: 2.0, lam: 1e-4, m: 64, t: 10, ..Default::default() };
+//! let model = fit(&engine, &data.x, &data.y, &config).unwrap();
+//! let preds = model.predict(&engine, &data.x).unwrap();
+//! assert_eq!(preds.len(), 500);
+//! ```
+//!
+//! Datasets larger than RAM stream through [`falkon::fit_source`] /
+//! [`serve::predict_source`] via a chunked [`data::DataSource`] (binary
+//! shards, lazy libsvm/CSV) with O(chunk) resident features — see
+//! `examples/outofcore_stream.rs` and DESIGN.md § "Out-of-core path".
+//!
+//! See also `examples/quickstart.rs` and the `falkon` CLI (`train`,
+//! `predict`, `convert`, `serve`, `tune`, `lscores`, `info`).
 
 // The `xla` feature gates the PJRT engine on the `xla` crate (xla-rs),
 // which the offline build environment cannot fetch. This guard turns the

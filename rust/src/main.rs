@@ -1,7 +1,9 @@
 //! `falkon` — the launcher. Subcommands:
 //!
-//!   train     fit FALKON on a dataset (synthetic analogue or file)
-//!   predict   evaluate a saved model on a dataset
+//!   train     fit FALKON on a dataset (synthetic analogue or file);
+//!             --stream trains out-of-core from a chunked source
+//!   predict   evaluate a saved model on a dataset (.shard inputs stream)
+//!   convert   convert a dataset to the chunked binary shard format
 //!   serve     run the batched prediction server against a request storm
 //!   lscores   estimate approximate leverage scores and print a summary
 //!   info      show the artifact registry / engine status
@@ -11,8 +13,10 @@
 use anyhow::{anyhow, bail, Result};
 use falkon::cli::Command;
 use falkon::config::ExperimentConfig;
-use falkon::data::{synth, Dataset, ZScore};
-use falkon::falkon::{fit, fit_multiclass, model_io, Centers, FalkonConfig};
+use falkon::data::shard::ShardSource;
+use falkon::data::stream_text::{CsvSource, LibsvmSource};
+use falkon::data::{synth, DataSource, Dataset, MemSource, ZScore, ZScoreSource};
+use falkon::falkon::{fit, fit_multiclass, fit_source, model_io, Centers, FalkonConfig};
 use falkon::kernels::Kernel;
 use falkon::metrics;
 use falkon::runtime::Engine;
@@ -39,6 +43,7 @@ fn run(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(rest),
         "predict" => cmd_predict(rest),
+        "convert" => cmd_convert(rest),
         "serve" => cmd_serve(rest),
         "lscores" => cmd_lscores(rest),
         "tune" => cmd_tune(rest),
@@ -55,8 +60,9 @@ fn top_usage() -> String {
     "falkon — An Optimal Large Scale Kernel Method (NIPS 2017), rust+JAX+Pallas\n\n\
      usage: falkon <command> [--help]\n\n\
      commands:\n\
-       train     fit FALKON on a dataset\n\
-       predict   evaluate a saved model\n\
+       train     fit FALKON on a dataset (--stream = out-of-core)\n\
+       predict   evaluate a saved model (.shard inputs stream)\n\
+       convert   convert a dataset to the binary shard format\n\
        serve     batched prediction server demo\n\
        lscores   approximate leverage scores summary\n\
        tune      grid-search sigma/lambda on a holdout\n\
@@ -65,11 +71,14 @@ fn top_usage() -> String {
 }
 
 /// Load a dataset: synthetic analogue by name, or a file path
-/// (.libsvm/.svm or .csv).
+/// (.libsvm/.svm, .csv or .shard).
 fn load_dataset(name: &str, n: usize, seed: u64) -> Result<Dataset> {
     let mut rng = Rng::new(seed ^ 0xDA7A);
     if let Some(d) = synth::by_name(name, &mut rng, n) {
         return Ok(d);
+    }
+    if name.ends_with(".shard") {
+        return falkon::data::shard::load(name);
     }
     if name.ends_with(".csv") {
         return falkon::data::csv::load_regression(name, true);
@@ -79,7 +88,30 @@ fn load_dataset(name: &str, n: usize, seed: u64) -> Result<Dataset> {
     }
     bail!(
         "unknown dataset {name:?} — synthetic: songs yelp timit susy higgs \
-         imagenet smooth, or a .csv/.libsvm path"
+         imagenet smooth, or a .csv/.libsvm/.shard path"
+    )
+}
+
+/// Open a dataset as a chunked [`DataSource`] (the out-of-core path).
+/// Synthetic analogues are generated in memory and wrapped, so every
+/// dataset name the in-memory path accepts also streams.
+fn open_source(name: &str, n: usize, seed: u64, chunk_rows: usize) -> Result<Box<dyn DataSource>> {
+    let mut rng = Rng::new(seed ^ 0xDA7A);
+    if let Some(d) = synth::by_name(name, &mut rng, n) {
+        return Ok(Box::new(MemSource::new(d, chunk_rows)));
+    }
+    if name.ends_with(".shard") {
+        return Ok(Box::new(ShardSource::open(name, chunk_rows)?));
+    }
+    if name.ends_with(".csv") {
+        return Ok(Box::new(CsvSource::open(name, true, chunk_rows)?));
+    }
+    if name.ends_with(".libsvm") || name.ends_with(".svm") || name.ends_with(".txt") {
+        return Ok(Box::new(LibsvmSource::open(name, None, chunk_rows)?));
+    }
+    bail!(
+        "unknown dataset {name:?} — synthetic: songs yelp timit susy higgs \
+         imagenet smooth, or a .csv/.libsvm/.shard path"
     )
 }
 
@@ -100,6 +132,8 @@ fn train_spec() -> Command {
         .opt("config", "", "JSON config file (overrides all other flags)")
         .opt("out", "", "save fitted model JSON here")
         .switch("no-normalize", "skip z-score normalization")
+        .switch("stream", "out-of-core: fit from a chunked source (O(chunk) resident features)")
+        .opt("chunk-rows", "8192", "rows per resident chunk on the streaming path")
 }
 
 fn config_from_flags(p: &falkon::cli::Parsed) -> Result<ExperimentConfig> {
@@ -146,10 +180,83 @@ fn prepare_data(cfg: &ExperimentConfig) -> Result<(Dataset, Dataset)> {
     Ok((train, test))
 }
 
+/// Out-of-core training: one streaming z-score pass (optional), a
+/// streaming fit, and a streaming scoring sweep — the dataset is never
+/// materialized. The streaming path has no in-memory holdout split, so
+/// the reported metrics are training metrics.
+fn train_stream(p: &falkon::cli::Parsed, cfg: &ExperimentConfig, engine: &Engine) -> Result<()> {
+    let chunk_rows = p.usize("chunk-rows")?.max(1);
+    let open = || open_source(&cfg.dataset, cfg.n, cfg.falkon.seed, chunk_rows);
+    // reject unsupported tasks before any data sweep (the z-score pass
+    // below reads the whole stream)
+    let mut first = open()?;
+    anyhow::ensure!(
+        first.n_classes() <= 2,
+        "--stream supports regression/binary tasks (dataset {} has {} classes); \
+         use the in-memory path for one-vs-all multiclass",
+        cfg.dataset,
+        first.n_classes()
+    );
+    // paper protocol: z-score except YELP (binary n-grams) and IMAGENET
+    let z = if cfg.normalize && cfg.dataset != "yelp" && cfg.dataset != "imagenet" {
+        Some(ZScore::fit_source(first.as_mut())?)
+    } else {
+        None
+    };
+    let wrap = |s: Box<dyn DataSource>| -> Box<dyn DataSource> {
+        match &z {
+            Some(z) => Box::new(ZScoreSource::new(s, z.clone())),
+            None => s,
+        }
+    };
+    // sources are rewindable: reuse the already-scanned one for the fit
+    let source = wrap(first);
+    println!(
+        "dataset={} n={:?} d={} chunk_rows={chunk_rows} | engine={} kernel={:?} σ={} λ={:.2e} M={} t={} [stream]",
+        cfg.dataset,
+        source.len_hint(),
+        source.d(),
+        engine.name(),
+        cfg.falkon.kernel,
+        cfg.falkon.sigma,
+        cfg.falkon.lam,
+        cfg.falkon.m,
+        cfg.falkon.t
+    );
+    let timer = Timer::start();
+    let model = fit_source(engine, source, &cfg.falkon)?;
+    let fit_s = timer.elapsed_s();
+    println!("fit: {fit_s:.2}s (cg iters: {})\n{}", model.cg_iters, model.phases.report());
+    let mut eval = wrap(open()?);
+    let (score, secs) = falkon::util::timer::timed(|| {
+        falkon::serve::predict_source(&model, engine, eval.as_mut())
+    });
+    let score = score?;
+    println!(
+        "scored {} rows in {secs:.2}s ({:.0} rows/s, peak chunk {} KiB)",
+        score.rows,
+        score.rows as f64 / secs.max(1e-9),
+        score.max_chunk_bytes / 1024
+    );
+    println!(
+        "train MSE = {:.4}  RMSE = {:.4} (streaming path: no holdout split)",
+        metrics::mse(&score.preds, &score.targets),
+        metrics::rmse(&score.preds, &score.targets)
+    );
+    if !p.str("out").is_empty() {
+        model_io::save(&model, p.str("out"))?;
+        println!("model saved to {}", p.str("out"));
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &[String]) -> Result<()> {
     let p = train_spec().parse(args)?;
     let cfg = config_from_flags(&p)?;
     let engine = Engine::by_name(&cfg.engine, cfg.workers)?;
+    if p.flag("stream") {
+        return train_stream(&p, &cfg, &engine);
+    }
     let (train, test) = prepare_data(&cfg)?;
     println!(
         "dataset={} n_train={} n_test={} d={} | engine={} kernel={:?} σ={} λ={:.2e} M={} t={}",
@@ -210,10 +317,46 @@ fn cmd_predict(args: &[String]) -> Result<()> {
         .opt("n", "20000", "rows for synthetic datasets")
         .opt("engine", "xla", "xla | xla-jnp | rust")
         .opt("workers", "1", "rust-engine worker threads")
+        .opt("chunk-rows", "8192", "rows per resident chunk for .shard inputs")
+        .switch("no-normalize", "skip z-score normalization")
         .opt("seed", "0", "rng seed (dataset generation + split)");
     let p = spec.parse(args)?;
     let model = model_io::load(p.str("model"))?;
     let engine = Engine::by_name(p.str("engine"), p.usize("workers")?)?;
+    if p.str("dataset").ends_with(".shard") {
+        // out-of-core scoring: stream the shard, never materialize it.
+        // Like the in-memory path (prepare_data), features are z-scored
+        // by default — a streaming stats pass here — so a model trained
+        // on normalized data isn't silently fed raw features.
+        let mut src: Box<dyn DataSource> =
+            Box::new(ShardSource::open(p.str("dataset"), p.usize("chunk-rows")?.max(1))?);
+        anyhow::ensure!(
+            src.d() == model.centers.cols,
+            "model d={} vs shard d={}",
+            model.centers.cols,
+            src.d()
+        );
+        if !p.flag("no-normalize") {
+            let z = ZScore::fit_source(src.as_mut())?;
+            src = Box::new(ZScoreSource::new(src, z));
+        }
+        let (score, secs) = falkon::util::timer::timed(|| {
+            falkon::serve::predict_source(&model, &engine, src.as_mut())
+        });
+        let score = score?;
+        println!(
+            "n={} in {secs:.3}s ({:.0} rows/s, peak chunk {} KiB) [stream]",
+            score.rows,
+            score.rows as f64 / secs.max(1e-9),
+            score.max_chunk_bytes / 1024
+        );
+        println!(
+            "MSE = {:.4}  AUC = {:.4}",
+            metrics::mse(&score.preds, &score.targets),
+            metrics::auc(&score.preds, &score.targets)
+        );
+        return Ok(());
+    }
     let cfg = ExperimentConfig {
         dataset: p.str("dataset").to_string(),
         n: p.usize("n")?,
@@ -243,6 +386,45 @@ fn cmd_predict(args: &[String]) -> Result<()> {
         metrics::mse(&preds, &test.y),
         metrics::auc(&preds, &test.y)
     );
+    Ok(())
+}
+
+/// Stream-convert a dataset into the chunked binary shard format
+/// (`data::shard`): text inputs are parsed lazily and written record by
+/// record, so a file larger than RAM converts in O(chunk) memory.
+fn cmd_convert(args: &[String]) -> Result<()> {
+    let spec = Command::new("convert", "convert a dataset to the chunked binary shard format")
+        .req("input", "input path (.csv/.libsvm/.svm/.txt) or synthetic dataset name")
+        .req("output", "output .shard path")
+        .opt("n", "20000", "rows for synthetic datasets")
+        .opt("chunk-rows", "8192", "rows per streamed record")
+        .opt("dim", "0", "pin the libsvm feature dim (0 = infer from the data)")
+        .switch("no-header", "csv input has no header row")
+        .opt("seed", "0", "rng seed for synthetic datasets");
+    let p = spec.parse(args)?;
+    let input = p.str("input");
+    let output = p.str("output");
+    let chunk_rows = p.usize("chunk-rows")?.max(1);
+    let timer = Timer::start();
+    let rows = if let Some(data) =
+        synth::by_name(input, &mut Rng::new(p.u64("seed")? ^ 0xDA7A), p.usize("n")?)
+    {
+        falkon::data::shard::write_dataset(output, &data)?;
+        data.n()
+    } else if input.ends_with(".csv") {
+        let mut src = CsvSource::open(input, !p.flag("no-header"), chunk_rows)?;
+        falkon::data::shard::write_source(output, &mut src)?
+    } else if input.ends_with(".libsvm") || input.ends_with(".svm") || input.ends_with(".txt") {
+        let dim = match p.usize("dim")? {
+            0 => None,
+            d => Some(d),
+        };
+        let mut src = LibsvmSource::open(input, dim, chunk_rows)?;
+        falkon::data::shard::write_source(output, &mut src)?
+    } else {
+        bail!("unknown input {input:?} — a .csv/.libsvm path or a synthetic dataset name")
+    };
+    println!("wrote {rows} rows to {output} in {:.2}s", timer.elapsed_s());
     Ok(())
 }
 

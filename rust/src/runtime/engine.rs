@@ -24,6 +24,7 @@
 //! once per class (DESIGN.md §Perf "Multi-RHS path"). The XLA plan serves
 //! it as a loop over columns (the artifact contract is vector-shaped).
 
+use crate::data::source::DataSource;
 use crate::kernels::{self, Kernel};
 use crate::linalg::mat::Mat;
 use crate::linalg::{chol, gemm, tri};
@@ -36,7 +37,7 @@ use crate::util::pool::{chunk_ranges, WorkerPool};
 #[cfg(feature = "xla")]
 use anyhow::Context;
 use anyhow::{anyhow, Result};
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 #[cfg(feature = "xla")]
 use std::collections::HashMap;
 #[cfg(feature = "xla")]
@@ -374,6 +375,75 @@ impl Engine {
                 }))
             }
         }
+    }
+
+    /// Build an **out-of-core** plan over a chunked [`DataSource`]: no
+    /// row blocks are retained — every apply re-streams the source and
+    /// accumulates per-chunk partial products, so only the centers
+    /// (`M×d`), one chunk, and O(M) vectors are resident
+    /// (DESIGN.md § "Out-of-core path"). `n` is the exact row count
+    /// (known from the source's open scan or the setup pass).
+    ///
+    /// The sweep runs the coordinator's f64 tiled kernels on both
+    /// engines; the Rust engine additionally fans each resident chunk
+    /// out over its shared worker pool.
+    pub fn matvec_plan_source(
+        &self,
+        kern: Kernel,
+        source: Box<dyn DataSource>,
+        c: &Mat,
+        param: f64,
+        n: usize,
+    ) -> Result<MatvecPlan> {
+        anyhow::ensure!(source.d() == c.cols, "source/c feature dims differ");
+        if let Some(hint) = source.len_hint() {
+            anyhow::ensure!(hint == n, "source len_hint {hint} != n {n}");
+        }
+        let pool = match self {
+            Engine::Rust { pool, .. } => pool.clone(),
+            #[cfg(feature = "xla")]
+            Engine::Xla { .. } => None,
+        };
+        let m = c.rows;
+        let chunk_rows = source.chunk_rows();
+        Ok(MatvecPlan::Stream(StreamPlan {
+            kern,
+            param,
+            c: c.clone(),
+            cn: kernels::row_sq_norms(c),
+            source: RefCell::new(source),
+            scratch: RefCell::new(kernels::TileScratch::new(kernels::DEFAULT_TILE, m)),
+            pool,
+            n,
+            m,
+            chunks_seen: Cell::new(n.div_ceil(chunk_rows.max(1))),
+            max_chunk_bytes: Cell::new(0),
+        }))
+    }
+
+    /// Streaming prediction: sweep a [`DataSource`] once, predicting each
+    /// resident chunk with the blocked predict path, so serving a
+    /// larger-than-RAM dataset needs O(chunk) feature memory.
+    pub fn predict_source(
+        &self,
+        kern: Kernel,
+        source: &mut dyn DataSource,
+        c: &Mat,
+        alpha: &[f64],
+        param: f64,
+    ) -> Result<Vec<f64>> {
+        anyhow::ensure!(source.d() == c.cols, "source/c feature dims differ");
+        source.reset()?;
+        let mut preds = match source.len_hint() {
+            Some(n) => Vec::with_capacity(n),
+            None => Vec::new(),
+        };
+        while let Some(chunk) = source.next_chunk()? {
+            anyhow::ensure!(chunk.start == preds.len(), "source chunks must be contiguous");
+            let p = self.predict(kern, &chunk.x, c, alpha, param)?;
+            preds.extend_from_slice(&p);
+        }
+        Ok(preds)
     }
 
     // ------------------------------------------------------------------
@@ -801,6 +871,210 @@ impl RustPlan {
     }
 }
 
+/// The out-of-core plan: instead of retaining sliced row blocks like
+/// [`RustPlan`], every apply **re-streams** a chunked [`DataSource`] and
+/// accumulates per-chunk partial products, so the working set is
+/// O(M² + chunk) — one resident chunk, the centers, and the M-vectors —
+/// regardless of n. With a worker pool, each resident chunk's rows fan
+/// out over disjoint ranges (no per-worker copies; see
+/// [`kernels::knm_matvec_ranged`]) and the per-job partials are summed
+/// in job order, so repeated pooled applies are bitwise deterministic.
+/// Serial applies are bitwise-equal to the in-memory plan's: both
+/// accumulate per-row contributions in global row order.
+pub struct StreamPlan {
+    kern: Kernel,
+    param: f64,
+    c: Mat,
+    cn: Vec<f64>,
+    /// the rewindable chunk stream; `RefCell` because applies take `&self`
+    source: RefCell<Box<dyn DataSource>>,
+    /// scratch for the inline (single-worker) path
+    scratch: RefCell<kernels::TileScratch>,
+    /// shared engine pool (None = inline applies)
+    pool: Option<Arc<WorkerPool>>,
+    n: usize,
+    m: usize,
+    /// chunks served by the last sweep (estimate before the first)
+    chunks_seen: Cell<usize>,
+    /// peak resident chunk bytes across all sweeps — the out-of-core
+    /// bench's peak-RSS proxy
+    max_chunk_bytes: Cell<usize>,
+}
+
+impl StreamPlan {
+    /// Largest resident chunk (feature bytes) any sweep has held.
+    pub fn max_resident_bytes(&self) -> usize {
+        self.max_chunk_bytes.get()
+    }
+
+    /// Run one full sweep over the source, handing each resident chunk
+    /// (with its row norms and global start row) to `per_chunk`.
+    fn sweep(
+        &self,
+        mut per_chunk: impl FnMut(&crate::data::Chunk, &[f64]) -> Result<()>,
+    ) -> Result<()> {
+        let mut src = self.source.borrow_mut();
+        src.reset()?;
+        let mut seen = 0usize;
+        let mut chunks = 0usize;
+        while let Some(chunk) = src.next_chunk()? {
+            anyhow::ensure!(chunk.start == seen, "source chunks must be contiguous");
+            seen += chunk.x.rows;
+            anyhow::ensure!(seen <= self.n, "source yielded more rows than n = {}", self.n);
+            self.max_chunk_bytes.set(self.max_chunk_bytes.get().max(chunk.x_bytes()));
+            let xn = kernels::row_sq_norms(&chunk.x);
+            per_chunk(&chunk, &xn)?;
+            chunks += 1;
+        }
+        anyhow::ensure!(seen == self.n, "source yielded {seen} rows, plan expects {}", self.n);
+        self.chunks_seen.set(chunks);
+        Ok(())
+    }
+
+    fn apply(&self, u: &[f64], v: Option<&[f64]>) -> Result<Vec<f64>> {
+        anyhow::ensure!(u.len() == self.m, "u length {} != M {}", u.len(), self.m);
+        if let Some(v) = v {
+            anyhow::ensure!(v.len() == self.n, "v length {} != n {}", v.len(), self.n);
+        }
+        let mut w = vec![0.0f64; self.m];
+        let tile = kernels::DEFAULT_TILE;
+        let m = self.m;
+        let (kern, param) = (self.kern, self.param);
+        let (c, cn) = (&self.c, self.cn.as_slice());
+        self.sweep(|chunk, xn| {
+            let rows = chunk.x.rows;
+            let vb = v.map(|vf| &vf[chunk.start..chunk.start + rows]);
+            match self.pool.as_deref() {
+                None => {
+                    let mut scratch = self.scratch.borrow_mut();
+                    kernels::knm_matvec_blocked(
+                        kern, &chunk.x, c, xn, cn, u, vb, None, param, &mut scratch, &mut w,
+                    );
+                }
+                Some(pool) => {
+                    // disjoint row ranges of the one resident chunk, one
+                    // partial-w per job, summed in job order (bitwise
+                    // deterministic; same reduction as RustPlan::apply)
+                    let workers = pool.workers().min(rows.div_ceil(tile).max(1));
+                    let ranges = chunk_ranges(rows, workers);
+                    let mut parts: Vec<Vec<f64>> = vec![vec![0.0f64; m]; ranges.len()];
+                    let x = &chunk.x;
+                    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+                        .iter()
+                        .zip(parts.iter_mut())
+                        .map(|(&(lo, hi), part)| {
+                            let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                                POOL_SCRATCH.with(|cell| {
+                                    let mut cell = cell.borrow_mut();
+                                    let scratch = cell
+                                        .get_or_insert_with(|| kernels::TileScratch::new(tile, m));
+                                    kernels::knm_matvec_ranged(
+                                        kern,
+                                        x,
+                                        c,
+                                        xn,
+                                        cn,
+                                        u,
+                                        vb,
+                                        None,
+                                        param,
+                                        scratch,
+                                        part,
+                                        lo,
+                                        hi,
+                                    );
+                                });
+                            });
+                            f
+                        })
+                        .collect();
+                    pool.run_scoped(tasks);
+                    for part in parts {
+                        for j in 0..m {
+                            w[j] += part[j];
+                        }
+                    }
+                }
+            }
+            Ok(())
+        })?;
+        Ok(w)
+    }
+
+    /// Multi-RHS streaming apply — same chunk lifecycle as
+    /// [`StreamPlan::apply`], with each resident chunk's Kr panels
+    /// serving all K columns ([`kernels::knm_matmat_ranged`]).
+    fn apply_multi(&self, u: &Mat, v: Option<&Mat>) -> Result<Mat> {
+        let k = u.cols;
+        anyhow::ensure!(u.rows == self.m, "u rows {} != M {}", u.rows, self.m);
+        if let Some(v) = v {
+            anyhow::ensure!(v.rows == self.n, "v rows {} != n {}", v.rows, self.n);
+            anyhow::ensure!(v.cols == k, "v cols {} != u cols {}", v.cols, k);
+        }
+        let mut w = Mat::zeros(self.m, k);
+        if k == 0 {
+            return Ok(w);
+        }
+        let tile = kernels::DEFAULT_TILE;
+        let m = self.m;
+        let (kern, param) = (self.kern, self.param);
+        let (c, cn) = (&self.c, self.cn.as_slice());
+        self.sweep(|chunk, xn| {
+            let rows = chunk.x.rows;
+            let vb = v.map(|vf| &vf.data[chunk.start * k..(chunk.start + rows) * k]);
+            match self.pool.as_deref() {
+                None => {
+                    let mut scratch = self.scratch.borrow_mut();
+                    kernels::knm_matmat_blocked(
+                        kern, &chunk.x, c, xn, cn, u, vb, None, param, &mut scratch, &mut w,
+                    );
+                }
+                Some(pool) => {
+                    let workers = pool.workers().min(rows.div_ceil(tile).max(1));
+                    let ranges = chunk_ranges(rows, workers);
+                    let mut parts: Vec<Mat> = vec![Mat::zeros(m, k); ranges.len()];
+                    let x = &chunk.x;
+                    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+                        .iter()
+                        .zip(parts.iter_mut())
+                        .map(|(&(lo, hi), part)| {
+                            let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                                POOL_SCRATCH.with(|cell| {
+                                    let mut cell = cell.borrow_mut();
+                                    let scratch = cell
+                                        .get_or_insert_with(|| kernels::TileScratch::new(tile, m));
+                                    kernels::knm_matmat_ranged(
+                                        kern,
+                                        x,
+                                        c,
+                                        xn,
+                                        cn,
+                                        u,
+                                        vb,
+                                        None,
+                                        param,
+                                        scratch,
+                                        part,
+                                        lo,
+                                        hi,
+                                    );
+                                });
+                            });
+                            f
+                        })
+                        .collect();
+                    pool.run_scoped(tasks);
+                    for part in parts {
+                        w.add(&part);
+                    }
+                }
+            }
+            Ok(())
+        })?;
+        Ok(w)
+    }
+}
+
 /// Accumulate `w += Σ_blocks Krᵀ(mask ⊙ (Kr·u + v))` over `blocks` — the
 /// shared body of the inline and pooled apply paths (free function so the
 /// pooled tasks only capture `Sync` plan fields).
@@ -854,6 +1128,8 @@ fn apply_blocks_multi(
 /// `v = Some(y/n)` builds the right-hand side.
 pub enum MatvecPlan {
     Rust(RustPlan),
+    /// out-of-core: re-streams a chunked [`DataSource`] every apply
+    Stream(StreamPlan),
     #[cfg(feature = "xla")]
     Xla(XlaPlan),
 }
@@ -862,6 +1138,7 @@ impl MatvecPlan {
     pub fn n(&self) -> usize {
         match self {
             MatvecPlan::Rust(p) => p.n,
+            MatvecPlan::Stream(p) => p.n,
             #[cfg(feature = "xla")]
             MatvecPlan::Xla(p) => p.n,
         }
@@ -870,6 +1147,7 @@ impl MatvecPlan {
     pub fn m(&self) -> usize {
         match self {
             MatvecPlan::Rust(p) => p.m,
+            MatvecPlan::Stream(p) => p.m,
             #[cfg(feature = "xla")]
             MatvecPlan::Xla(p) => p.m,
         }
@@ -878,6 +1156,7 @@ impl MatvecPlan {
     pub fn n_blocks(&self) -> usize {
         match self {
             MatvecPlan::Rust(p) => p.blocks.len(),
+            MatvecPlan::Stream(p) => p.chunks_seen.get(),
             #[cfg(feature = "xla")]
             MatvecPlan::Xla(p) => p.blocks.len(),
         }
@@ -887,6 +1166,7 @@ impl MatvecPlan {
     pub fn workers(&self) -> usize {
         match self {
             MatvecPlan::Rust(p) => p.pool.as_deref().map(WorkerPool::workers).unwrap_or(1),
+            MatvecPlan::Stream(p) => p.pool.as_deref().map(WorkerPool::workers).unwrap_or(1),
             #[cfg(feature = "xla")]
             MatvecPlan::Xla(_) => 1,
         }
@@ -898,14 +1178,35 @@ impl MatvecPlan {
     pub fn kernel_evals_per_apply(&self) -> usize {
         match self {
             MatvecPlan::Rust(p) => p.n * p.m,
+            MatvecPlan::Stream(p) => p.n * p.m,
             #[cfg(feature = "xla")]
             MatvecPlan::Xla(p) => p.blocks.len() * p.b_art * p.m * 2,
+        }
+    }
+
+    /// Feature bytes this plan keeps resident: the in-memory plan retains
+    /// every sliced row block (≈ the full `n×d` dataset); the streaming
+    /// plan only ever holds one chunk, so this reports the **peak** chunk
+    /// seen — the out-of-core bench's peak-RSS proxy. `None` on the XLA
+    /// plan (blocks live device-side as literals).
+    pub fn resident_x_bytes(&self) -> Option<usize> {
+        match self {
+            MatvecPlan::Rust(p) => Some(
+                p.blocks
+                    .iter()
+                    .map(|b| b.x.data.len() * std::mem::size_of::<f64>())
+                    .sum(),
+            ),
+            MatvecPlan::Stream(p) => Some(p.max_resident_bytes()),
+            #[cfg(feature = "xla")]
+            MatvecPlan::Xla(_) => None,
         }
     }
 
     pub fn apply(&self, u: &[f64], v: Option<&[f64]>) -> Result<Vec<f64>> {
         match self {
             MatvecPlan::Rust(p) => p.apply(u, v),
+            MatvecPlan::Stream(p) => p.apply(u, v),
             #[cfg(feature = "xla")]
             MatvecPlan::Xla(p) => p.apply(u, v),
         }
@@ -919,6 +1220,7 @@ impl MatvecPlan {
     pub fn apply_multi(&self, u: &Mat, v: Option<&Mat>) -> Result<Mat> {
         match self {
             MatvecPlan::Rust(p) => p.apply_multi(u, v),
+            MatvecPlan::Stream(p) => p.apply_multi(u, v),
             #[cfg(feature = "xla")]
             MatvecPlan::Xla(p) => p.apply_multi(u, v),
         }
@@ -1617,5 +1919,149 @@ mod tests {
         }
         assert!(diag_dev < 0.9, "diag deviation {diag_dev}");
         assert!(max_offdiag < 0.9, "offdiag {max_offdiag}");
+    }
+
+    // -- out-of-core streaming plan ------------------------------------
+
+    use crate::data::source::MemSource;
+    use crate::data::Dataset;
+
+    fn stream_plan_over(
+        eng: &Engine,
+        x: &Mat,
+        c: &Mat,
+        chunk_rows: usize,
+        param: f64,
+    ) -> MatvecPlan {
+        let data = Dataset::new_regression("t", x.clone(), vec![0.0; x.rows]);
+        eng.matvec_plan_source(
+            Kernel::Gaussian,
+            Box::new(MemSource::new(data, chunk_rows)),
+            c,
+            param,
+            x.rows,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn stream_plan_matches_in_memory_bitwise_serial() {
+        // serial chunked sweeps accumulate per-row in global row order,
+        // exactly like the in-memory plan — bitwise, at ANY chunk budget
+        let (x, c, y) = toy(2700, 5, 31);
+        let eng = Engine::rust();
+        let plan_mem = eng.matvec_plan(Kernel::Gaussian, &x, &c, 1.2).unwrap();
+        let mut rng = Rng::new(32);
+        let u = rng.normals(c.rows);
+        let want = plan_mem.apply(&u, Some(&y)).unwrap();
+        let want0 = plan_mem.apply(&u, None).unwrap();
+        for chunk_rows in [64usize, 1000, 1024, 5000] {
+            let plan = stream_plan_over(&eng, &x, &c, chunk_rows, 1.2);
+            assert_eq!(plan.n(), x.rows);
+            assert_eq!(plan.m(), c.rows);
+            let got = plan.apply(&u, Some(&y)).unwrap();
+            assert_eq!(got, want, "chunk {chunk_rows}");
+            assert_eq!(plan.apply(&u, None).unwrap(), want0, "chunk {chunk_rows} v=0");
+            // resident bytes = the largest chunk, not the dataset
+            let resident = plan.resident_x_bytes().unwrap();
+            assert_eq!(resident, chunk_rows.min(x.rows) * x.cols * 8);
+            assert!(resident <= plan_mem.resident_x_bytes().unwrap());
+        }
+    }
+
+    #[test]
+    fn stream_plan_pooled_matches_serial() {
+        let (x, c, y) = toy(3100, 4, 33);
+        let eng1 = Engine::rust();
+        let eng4 = Engine::rust_with(EngineOptions {
+            imp: Impl::Pallas,
+            workers: 4,
+        });
+        let mut rng = Rng::new(34);
+        let u = rng.normals(c.rows);
+        let serial = stream_plan_over(&eng1, &x, &c, 700, 1.1);
+        let pooled = stream_plan_over(&eng4, &x, &c, 700, 1.1);
+        for v in [None, Some(&y)] {
+            let w1 = serial.apply(&u, v.map(|f| f.as_slice())).unwrap();
+            let w4 = pooled.apply(&u, v.map(|f| f.as_slice())).unwrap();
+            let diff = crate::linalg::vec_ops::max_abs_diff(&w1, &w4);
+            assert!(diff < 1e-9, "{diff}");
+        }
+        // pooled repeats are bitwise deterministic
+        let a = pooled.apply(&u, Some(&y)).unwrap();
+        let b = pooled.apply(&u, Some(&y)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stream_apply_multi_matches_k_applies() {
+        let (x, c, _) = toy(1900, 4, 35);
+        let eng = Engine::rust();
+        let (n, m) = (x.rows, c.rows);
+        let mut rng = Rng::new(36);
+        for k in [1usize, 3] {
+            let u = Mat::from_vec(m, k, rng.normals(m * k));
+            let v = Mat::from_vec(n, k, rng.normals(n * k));
+            let plan = stream_plan_over(&eng, &x, &c, 450, 1.3);
+            for vopt in [None, Some(&v)] {
+                let got = plan.apply_multi(&u, vopt).unwrap();
+                for kc in 0..k {
+                    let vcol = vopt.map(|vm| vm.col(kc));
+                    let want = plan.apply(&u.col(kc), vcol.as_deref()).unwrap();
+                    for j in 0..m {
+                        let diff = (got[(j, kc)] - want[j]).abs();
+                        assert!(diff < 1e-9, "k={k} col={kc} row={j} diff={diff}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_plan_rejects_mismatched_source() {
+        let (x, c, _) = toy(300, 4, 37);
+        let eng = Engine::rust();
+        let data = Dataset::new_regression("t", x.clone(), vec![0.0; x.rows]);
+        // wrong n
+        assert!(eng
+            .matvec_plan_source(
+                Kernel::Gaussian,
+                Box::new(MemSource::new(data.clone(), 64)),
+                &c,
+                1.0,
+                x.rows + 1,
+            )
+            .is_err());
+        // wrong feature dim
+        let bad_c = Mat::zeros(8, 3);
+        assert!(eng
+            .matvec_plan_source(
+                Kernel::Gaussian,
+                Box::new(MemSource::new(data, 64)),
+                &bad_c,
+                1.0,
+                x.rows,
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn predict_source_matches_in_memory_predict() {
+        let (x, c, _) = toy(1500, 5, 38);
+        let mut rng = Rng::new(39);
+        let alpha = rng.normals(c.rows);
+        for workers in [1usize, 3] {
+            let eng = Engine::rust_with(EngineOptions {
+                imp: Impl::Pallas,
+                workers,
+            });
+            let want = eng.predict(Kernel::Gaussian, &x, &c, &alpha, 1.4).unwrap();
+            let data = Dataset::new_regression("t", x.clone(), vec![0.0; x.rows]);
+            let mut src = MemSource::new(data, 333);
+            let got = eng
+                .predict_source(Kernel::Gaussian, &mut src, &c, &alpha, 1.4)
+                .unwrap();
+            assert_eq!(got, want, "workers {workers}");
+        }
     }
 }

@@ -3,6 +3,12 @@
 //! feature) the PJRT executable cache + literal marshalling. Python never
 //! runs here — artifacts are HLO text produced once by `make artifacts`.
 //! Without the `xla` feature only the pure-Rust tiled engine is built.
+//!
+//! Plans come in three shapes: the in-memory Rust plan (row blocks sliced
+//! once, served by the shared worker pool), the XLA plan (blocks uploaded
+//! as literals), and the **streaming plan** (`Engine::matvec_plan_source`)
+//! that re-reads a chunked [`crate::data::DataSource`] every apply so
+//! only O(chunk) features stay resident (DESIGN.md § "Out-of-core path").
 pub mod engine;
 #[cfg(feature = "xla")]
 pub mod exe;

@@ -10,12 +10,67 @@
 //! the kernel panels are amortized across the batch rows *and* the K
 //! classes — a K-class request costs one panel sweep, not K
 //! (DESIGN.md §Perf "Multi-RHS path").
+//!
+//! [`predict_source`] is the **offline bulk** path: it streams a chunked
+//! [`crate::data::DataSource`] through the model, so scoring a dataset
+//! larger than RAM keeps only one chunk of features resident
+//! (DESIGN.md § "Out-of-core path").
 
+use crate::data::source::DataSource;
 use crate::falkon::{FalkonModel, FalkonMulticlass};
 use crate::linalg::mat::Mat;
 use anyhow::{anyhow, Result};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
+
+/// Result of one offline bulk-scoring sweep over a [`DataSource`].
+#[derive(Debug, Clone)]
+pub struct BulkScore {
+    /// model predictions (with the target offset applied), in row order
+    pub preds: Vec<f64>,
+    /// the targets streamed alongside (for evaluation)
+    pub targets: Vec<f64>,
+    pub rows: usize,
+    /// largest resident chunk (feature bytes) during the sweep — the
+    /// out-of-core serving path's peak-RSS proxy
+    pub max_chunk_bytes: usize,
+}
+
+/// Offline batch serving from a chunked source: sweep the stream once,
+/// scoring each resident chunk with the blocked predict path, so a
+/// dataset larger than RAM is served with O(chunk) feature memory. The
+/// online counterpart is [`Server`] (request batching); this is the bulk
+/// path behind `falkon predict` on `.shard` inputs.
+pub fn predict_source(
+    model: &FalkonModel,
+    engine: &crate::runtime::Engine,
+    source: &mut dyn DataSource,
+) -> Result<BulkScore> {
+    anyhow::ensure!(
+        source.d() == model.centers.cols,
+        "source d {} != model d {}",
+        source.d(),
+        model.centers.cols
+    );
+    source.reset()?;
+    let mut preds = Vec::new();
+    let mut targets = Vec::new();
+    let mut max_chunk_bytes = 0usize;
+    while let Some(chunk) = source.next_chunk()? {
+        anyhow::ensure!(chunk.start == preds.len(), "source chunks must be contiguous");
+        max_chunk_bytes = max_chunk_bytes.max(chunk.x_bytes());
+        let mut p = model.predict(engine, &chunk.x)?;
+        preds.append(&mut p);
+        targets.extend_from_slice(&chunk.y);
+    }
+    let rows = preds.len();
+    Ok(BulkScore {
+        preds,
+        targets,
+        rows,
+        max_chunk_bytes,
+    })
+}
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -550,5 +605,28 @@ mod tests {
         let h = server.handle();
         assert!(h.predict(vec![1.0, 2.0]).is_err());
         server.stop();
+    }
+
+    #[test]
+    fn bulk_predict_source_matches_in_memory_predict() {
+        let (model, x, y) = tiny_model();
+        let eng = Engine::rust();
+        let want = model.predict(&eng, &x).unwrap();
+        let data = crate::data::Dataset::new_regression("bulk", x, y.clone());
+        let mut src = crate::data::MemSource::new(data, 77);
+        let score = predict_source(&model, &eng, &mut src).unwrap();
+        assert_eq!(score.preds, want);
+        assert_eq!(score.targets, y);
+        assert_eq!(score.rows, want.len());
+        // only one 77-row chunk of features was ever resident
+        assert_eq!(score.max_chunk_bytes, 77 * model.centers.cols * 8);
+        // dimension mismatch is rejected up front
+        let bad = crate::data::Dataset::new_regression(
+            "bad",
+            Mat::zeros(4, model.centers.cols + 1),
+            vec![0.0; 4],
+        );
+        let mut bad_src = crate::data::MemSource::new(bad, 4);
+        assert!(predict_source(&model, &eng, &mut bad_src).is_err());
     }
 }

@@ -1,0 +1,228 @@
+//! End-to-end out-of-core pipeline tests (pure-Rust engine, no
+//! artifacts needed): the acceptance contract is that fitting the same
+//! synthetic dataset via the in-memory `Dataset` path and via a sharded
+//! `DataSource` with a chunk budget **smaller than the dataset** yields
+//! predictions agreeing within 1e-8, with only chunk-sized feature
+//! blocks resident during the streamed sweeps.
+
+use falkon::data::shard::{self, ShardSource};
+use falkon::data::source::{collect, DataSource, MemSource};
+use falkon::data::stream_text::{CsvSource, LibsvmSource};
+use falkon::data::synth;
+use falkon::falkon::{fit, fit_source, prepare_source, solve, FalkonConfig};
+use falkon::linalg::vec_ops::{max_abs_diff, mean};
+use falkon::runtime::{Engine, EngineOptions};
+use falkon::util::rng::Rng;
+
+fn tmp(tag: &str, ext: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("falkon_ooc_{tag}_{}.{ext}", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn cfg(m: usize, t: usize) -> FalkonConfig {
+    FalkonConfig {
+        sigma: 2.0,
+        lam: 1e-4,
+        m,
+        t,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn sharded_fit_matches_in_memory_fit() {
+    // the ISSUE acceptance test: same synthetic dataset, in-memory fit
+    // vs a sharded source with a chunk budget far below the dataset
+    let n = 3000;
+    let mut rng = Rng::new(1);
+    let data = synth::smooth_regression(&mut rng, n, 6, 0.05);
+    let eng = Engine::rust();
+    let config = cfg(64, 12);
+
+    let mem_model = fit(&eng, &data.x, &data.y, &config).unwrap();
+
+    let path = tmp("accept", "shard");
+    shard::write_dataset(&path, &data).unwrap();
+    let chunk_rows = 500; // 6 chunks per sweep; budget ≪ n
+    let src = ShardSource::open(&path, chunk_rows).unwrap();
+    assert_eq!(src.len_hint(), Some(n));
+    let ooc_model = fit_source(&eng, Box::new(src), &config).unwrap();
+
+    // same seed + known length => identical centers
+    assert_eq!(ooc_model.centers.data, mem_model.centers.data);
+    // predictions agree within the 1e-8 acceptance budget
+    let pm = mem_model.predict(&eng, &data.x).unwrap();
+    let po = ooc_model.predict(&eng, &data.x).unwrap();
+    let diff = max_abs_diff(&pm, &po);
+    assert!(diff < 1e-8, "in-memory vs sharded predictions differ by {diff}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn sharded_fit_keeps_only_chunk_resident() {
+    // drive prepare/solve directly so the plan's peak-residency proxy is
+    // observable: max resident chunk bytes must stay below the dataset
+    let n = 2400;
+    let d = 5;
+    let mut rng = Rng::new(2);
+    let data = synth::smooth_regression(&mut rng, n, d, 0.05);
+    let path = tmp("resident", "shard");
+    shard::write_dataset(&path, &data).unwrap();
+    let chunk_rows = 300;
+    let eng = Engine::rust();
+    let config = cfg(48, 10);
+    let src = ShardSource::open(&path, chunk_rows).unwrap();
+    let (mut state, y) = prepare_source(&eng, Box::new(src), &config).unwrap();
+    assert_eq!(y, data.y);
+    let y_offset = mean(&y);
+    let yc: Vec<f64> = y.iter().map(|v| v - y_offset).collect();
+    solve(&mut state, &yc, None).unwrap();
+    let resident = state.plan.resident_x_bytes().unwrap();
+    let full = n * d * 8;
+    assert_eq!(resident, chunk_rows * d * 8);
+    assert!(
+        resident * 4 < full,
+        "resident {resident} not well below dataset {full}"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn sharded_fit_matches_on_pooled_engine() {
+    let n = 2200;
+    let mut rng = Rng::new(3);
+    let data = synth::smooth_regression(&mut rng, n, 4, 0.05);
+    let eng = Engine::rust_with(EngineOptions {
+        workers: 4,
+        ..Default::default()
+    });
+    let config = cfg(48, 10);
+    let mem_model = fit(&eng, &data.x, &data.y, &config).unwrap();
+    let path = tmp("pooled", "shard");
+    shard::write_dataset(&path, &data).unwrap();
+    let src = ShardSource::open(&path, 400).unwrap();
+    let ooc_model = fit_source(&eng, Box::new(src), &config).unwrap();
+    let pm = mem_model.predict(&eng, &data.x).unwrap();
+    let po = ooc_model.predict(&eng, &data.x).unwrap();
+    let diff = max_abs_diff(&pm, &po);
+    assert!(diff < 1e-8, "pooled diff {diff}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn chunk_budget_does_not_change_the_model() {
+    let mut rng = Rng::new(4);
+    let data = synth::smooth_regression(&mut rng, 1500, 4, 0.05);
+    let eng = Engine::rust();
+    let config = cfg(40, 10);
+    let path = tmp("budget", "shard");
+    shard::write_dataset(&path, &data).unwrap();
+    let fit_at = |budget: usize| {
+        let src = ShardSource::open(&path, budget).unwrap();
+        fit_source(&eng, Box::new(src), &config).unwrap()
+    };
+    let a = fit_at(97);
+    let b = fit_at(1024);
+    // serial accumulation is row-ordered regardless of chunk boundaries
+    assert_eq!(a.alpha, b.alpha);
+    assert_eq!(a.centers.data, b.centers.data);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn streamed_bulk_predict_matches_in_memory() {
+    let mut rng = Rng::new(5);
+    let data = synth::smooth_regression(&mut rng, 1200, 5, 0.05);
+    let eng = Engine::rust();
+    let model = fit(&eng, &data.x, &data.y, &cfg(40, 10)).unwrap();
+    let want = model.predict(&eng, &data.x).unwrap();
+    let path = tmp("bulk", "shard");
+    shard::write_dataset(&path, &data).unwrap();
+    let mut src = ShardSource::open(&path, 250).unwrap();
+    let score = falkon::serve::predict_source(&model, &eng, &mut src).unwrap();
+    assert_eq!(score.preds, want);
+    assert_eq!(score.targets, data.y);
+    assert_eq!(score.max_chunk_bytes, 250 * 5 * 8);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn text_stream_convert_fit_roundtrip() {
+    // CSV text -> lazy CsvSource -> shard (stream convert) -> streamed
+    // fit; the in-memory loader over the same file is the oracle
+    let mut rng = Rng::new(6);
+    let n = 600;
+    let d = 3;
+    let mut csv = String::from("y,f0,f1,f2\n");
+    for _ in 0..n {
+        let row = rng.normals(d);
+        let y = row.iter().sum::<f64>() + 0.1 * rng.normal();
+        csv.push_str(&format!("{y},{},{},{}\n", row[0], row[1], row[2]));
+    }
+    let csv_path = tmp("text", "csv");
+    std::fs::write(&csv_path, &csv).unwrap();
+
+    let eager = falkon::data::csv::load_regression(&csv_path, true).unwrap();
+    let mut lazy = CsvSource::open(&csv_path, true, 128).unwrap();
+    let lazy_collected = collect(&mut lazy).unwrap();
+    assert_eq!(lazy_collected.x.data, eager.x.data);
+    assert_eq!(lazy_collected.y, eager.y);
+
+    let shard_path = tmp("text", "shard");
+    let rows = shard::write_source(&shard_path, &mut lazy).unwrap();
+    assert_eq!(rows, n);
+
+    let eng = Engine::rust();
+    let config = cfg(32, 8);
+    let mem_model = fit(&eng, &eager.x, &eager.y, &config).unwrap();
+    let src = ShardSource::open(&shard_path, 128).unwrap();
+    let ooc_model = fit_source(&eng, Box::new(src), &config).unwrap();
+    let pm = mem_model.predict(&eng, &eager.x).unwrap();
+    let po = ooc_model.predict(&eng, &eager.x).unwrap();
+    assert!(max_abs_diff(&pm, &po) < 1e-8);
+
+    let _ = std::fs::remove_file(&csv_path);
+    let _ = std::fs::remove_file(&shard_path);
+}
+
+#[test]
+fn libsvm_stream_fits_directly() {
+    // a lazy libsvm source plugs straight into fit_source
+    let mut rng = Rng::new(7);
+    let n = 400;
+    let mut text = String::new();
+    for _ in 0..n {
+        let a = rng.normal();
+        let b = rng.normal();
+        let y = a - b + 0.05 * rng.normal();
+        text.push_str(&format!("{y} 1:{a} 2:{b}\n"));
+    }
+    let path = tmp("lsvm", "libsvm");
+    std::fs::write(&path, &text).unwrap();
+    let src = LibsvmSource::open(&path, None, 100).unwrap();
+    let eng = Engine::rust();
+    let model = fit_source(&eng, Box::new(src), &cfg(32, 8)).unwrap();
+    let eager = falkon::data::libsvm::load_regression(&path, None).unwrap();
+    let preds = model.predict(&eng, &eager.x).unwrap();
+    let err = falkon::metrics::mse(&preds, &eager.y);
+    let var = falkon::linalg::vec_ops::variance(&eager.y);
+    assert!(err < 0.2 * var, "mse {err} vs var {var}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn mem_source_fit_equals_dataset_fit() {
+    // the MemSource backend is the oracle: wrapping the same Dataset
+    // must not change the fit at all
+    let mut rng = Rng::new(8);
+    let data = synth::smooth_regression(&mut rng, 900, 4, 0.05);
+    let eng = Engine::rust();
+    let config = cfg(40, 10);
+    let mem = fit(&eng, &data.x, &data.y, &config).unwrap();
+    let ooc = fit_source(&eng, Box::new(MemSource::new(data.clone(), 177)), &config).unwrap();
+    assert_eq!(ooc.alpha, mem.alpha);
+    assert_eq!(ooc.centers.data, mem.centers.data);
+}
