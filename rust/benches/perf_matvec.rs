@@ -28,12 +28,14 @@ fn engines() -> Vec<(String, Engine)> {
     if let Ok(e) = Engine::xla(EngineOptions {
         imp: Impl::Pallas,
         workers: 1,
+        ..Default::default()
     }) {
         out.push(("xla/pallas".to_string(), e));
     }
     if let Ok(e) = Engine::xla(EngineOptions {
         imp: Impl::Jnp,
         workers: 1,
+        ..Default::default()
     }) {
         out.push(("xla/jnp".to_string(), e));
     }
@@ -111,6 +113,7 @@ fn main() -> anyhow::Result<()> {
             let eng = Engine::rust_with(EngineOptions {
                 imp: Impl::Pallas,
                 workers,
+                ..Default::default()
             });
             let plan = eng.matvec_plan(Kernel::Gaussian, &x, &c, 1.0)?;
             let evals = plan.kernel_evals_per_apply() as f64;

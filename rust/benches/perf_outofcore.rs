@@ -12,20 +12,74 @@
 //! - fit wall-clock and bulk-predict rows/s for both paths (the streamed
 //!   path re-reads the shard every CG iteration — the I/O-for-memory
 //!   trade the paper's O(n) memory claim is about).
+//!
+//! `--inject-faults` adds a third leg: the same streamed fit through a
+//! deterministic [`FaultySource`] schedule of transient read faults. The
+//! retry layer must absorb every one of them — the gate is that the
+//! faulted coefficients are **bitwise identical** to the fault-free
+//! streamed fit, with the injected-fault count reported in the JSON.
 
 use falkon::bench::{fmt_secs, time_fn, write_json, BenchArgs, Table};
 use falkon::data::shard::{self, ShardSource};
+use falkon::data::source::{Chunk, DataSource};
 use falkon::data::synth;
 use falkon::falkon::{fit, prepare_source, solve, FalkonConfig, FalkonModel};
 use falkon::linalg::vec_ops::{max_abs_diff, mean};
 use falkon::runtime::Engine;
+use falkon::util::fault::{FaultKind, FaultPlan, FaultySource};
 use falkon::util::json::Value;
 use falkon::util::rng::Rng;
 use falkon::util::timer::Timer;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Forwards to a [`FaultySource`] while mirroring its injection counter
+/// into a shared cell (`prepare_source` consumes the boxed source).
+struct CountingFaults {
+    inner: FaultySource,
+    injected: Arc<AtomicUsize>,
+}
+
+impl DataSource for CountingFaults {
+    fn d(&self) -> usize {
+        self.inner.d()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.inner.len_hint()
+    }
+
+    fn reset(&mut self) -> anyhow::Result<()> {
+        self.inner.reset()
+    }
+
+    fn next_chunk(&mut self) -> anyhow::Result<Option<Chunk>> {
+        let r = self.inner.next_chunk();
+        self.injected.store(self.inner.injected(), Ordering::Relaxed);
+        r
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.inner.chunk_rows()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.inner.n_classes()
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn skipped_rows(&self) -> usize {
+        self.inner.skipped_rows()
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let args = BenchArgs::from_env();
     let smoke = args.flag("--smoke");
+    let inject_faults = args.flag("--inject-faults");
     let json_path = args
         .get("--json")
         .unwrap_or("BENCH_outofcore.json")
@@ -90,7 +144,36 @@ fn main() -> anyhow::Result<()> {
         cg_iters: cg.iters,
         cg_residuals: cg.residuals,
         cg_stop: cg.stop,
+        report: state.report.clone(),
     };
+
+    // -- fault-injection leg (--inject-faults): same streamed fit under
+    //    a deterministic transient-fault schedule; the retry layer must
+    //    absorb every fault without changing a single bit ----------------
+    let mut injected_faults = 0usize;
+    let mut fit_faulted_s = 0.0f64;
+    if inject_faults {
+        let plan = FaultPlan::new()
+            .at(0, FaultKind::TransientRead, 1)
+            .seeded_transient(0xFA11, 100, 1);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let src = CountingFaults {
+            inner: FaultySource::new(Box::new(ShardSource::open(&shard_path, chunk_rows)?), plan),
+            injected: counter.clone(),
+        };
+        let t_flt = Timer::start();
+        let (mut fstate, fy) = prepare_source(&eng, Box::new(src), &config)?;
+        let f_offset = mean(&fy);
+        let fyc: Vec<f64> = fy.iter().map(|v| v - f_offset).collect();
+        let (falpha, _) = solve(&mut fstate, &fyc, None)?;
+        fit_faulted_s = t_flt.elapsed_s();
+        injected_faults = counter.load(Ordering::Relaxed);
+        anyhow::ensure!(injected_faults > 0, "fault schedule never fired");
+        anyhow::ensure!(
+            falpha == model_ooc.alpha,
+            "faulted streamed fit diverged from the fault-free one"
+        );
+    }
 
     // -- agreement + residency gates --------------------------------------
     let p_mem = model_mem.predict(&eng, &data.x)?;
@@ -135,6 +218,15 @@ fn main() -> anyhow::Result<()> {
         format!("{rows_s_ooc:.0}"),
         format!("{} KiB", resident / 1024),
     ]);
+    if inject_faults {
+        table.row(&[
+            "sharded+faults".into(),
+            fmt_secs(fit_faulted_s),
+            "-".into(),
+            "-".into(),
+            format!("{injected_faults} faults absorbed"),
+        ]);
+    }
     table.print();
     println!(
         "\nn={n} d={d} M={m} t={t} chunk_rows={chunk_rows} | resident/full = {:.3}, \
@@ -169,6 +261,9 @@ fn main() -> anyhow::Result<()> {
         ("predict_rows_s_in_memory", Value::num(rows_s_mem)),
         ("predict_rows_s_outofcore", Value::num(rows_s_ooc)),
         ("pred_max_abs_diff", Value::num(pred_diff)),
+        ("inject_faults", Value::Bool(inject_faults)),
+        ("injected_faults", Value::num(injected_faults as f64)),
+        ("fit_faulted_s", Value::num(fit_faulted_s)),
     ]);
     write_json(&json_path, &report)?;
     println!("wrote {json_path}");

@@ -109,6 +109,7 @@ fn main() -> anyhow::Result<()> {
         let eng = Engine::rust_with(EngineOptions {
             imp: Impl::Pallas,
             workers,
+            ..Default::default()
         });
         let kmm_mat = eng.kmm(Kernel::Gaussian, &c, 1.0)?;
         let precond_stats = time_fn(0, reps, || {

@@ -184,11 +184,15 @@ pub fn write_dataset(path: &str, data: &Dataset) -> Result<()> {
 
 /// Stream-convert any [`DataSource`] into a shard, one record per source
 /// chunk — single pass, O(chunk) memory. Returns the rows written.
+/// Transient source errors are retried with bounded backoff; a retried
+/// read re-delivers the suppressed chunk, so the shard is identical to a
+/// fault-free conversion.
 pub fn write_source(path: &str, source: &mut dyn DataSource) -> Result<usize> {
-    source.reset()?;
+    let retry = crate::util::fault::RetryPolicy::default();
+    retry.run("convert: reset", || source.reset())?;
     // peek the first chunk to learn whether the stream carries labels
     // (the schema flag lives in the header)
-    let first = source.next_chunk()?;
+    let first = retry.run("convert: next_chunk", || source.next_chunk())?;
     let has_labels = first.as_ref().map(|c| c.labels.is_some()).unwrap_or(false);
     let mut w = ShardWriter::create(
         path,
@@ -200,7 +204,7 @@ pub fn write_source(path: &str, source: &mut dyn DataSource) -> Result<usize> {
     if let Some(chunk) = first {
         w.write_chunk(&chunk.x, &chunk.y, chunk.labels.as_deref())?;
     }
-    while let Some(chunk) = source.next_chunk()? {
+    while let Some(chunk) = retry.run("convert: next_chunk", || source.next_chunk())? {
         w.write_chunk(&chunk.x, &chunk.y, chunk.labels.as_deref())?;
     }
     w.finish()

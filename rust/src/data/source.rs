@@ -93,6 +93,14 @@ pub trait DataSource: Send {
     fn name(&self) -> &str {
         "source"
     }
+
+    /// Rows dropped by a sanitizing wrapper since the last [`reset`]
+    /// (0 for raw backends; see [`SanitizeSource`]).
+    ///
+    /// [`reset`]: DataSource::reset
+    fn skipped_rows(&self) -> usize {
+        0
+    }
 }
 
 /// Materialize a source into an in-memory [`Dataset`] (loading small
@@ -246,6 +254,149 @@ impl DataSource for ZScoreSource {
     fn name(&self) -> &str {
         self.inner.name()
     }
+
+    fn skipped_rows(&self) -> usize {
+        self.inner.skipped_rows()
+    }
+}
+
+/// What to do with a row whose features or target are NaN/±Inf.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NanPolicy {
+    /// error out with the offending global row index (the default —
+    /// silent data corruption should be loud)
+    #[default]
+    FailFast,
+    /// drop the row and count it ([`DataSource::skipped_rows`] reports
+    /// the per-sweep total)
+    Skip,
+}
+
+impl NanPolicy {
+    pub fn parse(s: &str) -> anyhow::Result<NanPolicy> {
+        match s {
+            "fail" | "fail-fast" => Ok(NanPolicy::FailFast),
+            "skip" => Ok(NanPolicy::Skip),
+            other => anyhow::bail!("unknown --nan-policy {other:?} (expected fail|skip)"),
+        }
+    }
+}
+
+/// Sanitizing adapter: validates every chunk's rows for non-finite
+/// features/targets at the chunk boundary, applying a [`NanPolicy`].
+/// Under `Skip` the emitted stream is renumbered to stay contiguous and
+/// `len_hint` becomes `None` (the surviving row count is unknowable
+/// without a full pass, which routes center selection to reservoir
+/// sampling); under `FailFast` the stream is passed through untouched
+/// until the first bad row, which fails fatally with its global index.
+pub struct SanitizeSource {
+    inner: Box<dyn DataSource>,
+    policy: NanPolicy,
+    emitted: usize,
+    skipped: usize,
+}
+
+impl SanitizeSource {
+    pub fn new(inner: Box<dyn DataSource>, policy: NanPolicy) -> SanitizeSource {
+        SanitizeSource {
+            inner,
+            policy,
+            emitted: 0,
+            skipped: 0,
+        }
+    }
+}
+
+fn row_is_finite(chunk: &Chunk, i: usize) -> bool {
+    chunk.y[i].is_finite() && chunk.x.row(i).iter().all(|v| v.is_finite())
+}
+
+impl DataSource for SanitizeSource {
+    fn d(&self) -> usize {
+        self.inner.d()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        match self.policy {
+            NanPolicy::FailFast => self.inner.len_hint(),
+            NanPolicy::Skip => None,
+        }
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.emitted = 0;
+        self.skipped = 0;
+        self.inner.reset()
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<Chunk>> {
+        loop {
+            let chunk = match self.inner.next_chunk()? {
+                Some(c) => c,
+                None => return Ok(None),
+            };
+            let rows = chunk.rows();
+            let bad: Vec<usize> = (0..rows).filter(|&i| !row_is_finite(&chunk, i)).collect();
+            if bad.is_empty() {
+                let start = self.emitted;
+                self.emitted += rows;
+                return Ok(Some(Chunk { start, ..chunk }));
+            }
+            match self.policy {
+                NanPolicy::FailFast => {
+                    return Err(crate::util::fault::FaultError::fatal(format!(
+                        "non-finite value in row {} of {} (rerun with --nan-policy skip \
+                         to drop such rows)",
+                        chunk.start + bad[0],
+                        self.inner.name(),
+                    )));
+                }
+                NanPolicy::Skip => {
+                    self.skipped += bad.len();
+                    let keep: Vec<usize> =
+                        (0..rows).filter(|i| row_is_finite(&chunk, *i)).collect();
+                    if keep.is_empty() {
+                        continue; // whole chunk dropped; pull the next one
+                    }
+                    let d = chunk.x.cols;
+                    let mut xdata = Vec::with_capacity(keep.len() * d);
+                    let mut y = Vec::with_capacity(keep.len());
+                    let mut labels = chunk.labels.as_ref().map(|_| Vec::with_capacity(keep.len()));
+                    for &i in &keep {
+                        xdata.extend_from_slice(chunk.x.row(i));
+                        y.push(chunk.y[i]);
+                        if let (Some(out), Some(src)) = (labels.as_mut(), chunk.labels.as_ref()) {
+                            out.push(src[i]);
+                        }
+                    }
+                    let start = self.emitted;
+                    self.emitted += keep.len();
+                    return Ok(Some(Chunk {
+                        start,
+                        x: Mat::from_vec(keep.len(), d, xdata),
+                        y,
+                        labels,
+                    }));
+                }
+            }
+        }
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.inner.chunk_rows()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.inner.n_classes()
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn skipped_rows(&self) -> usize {
+        self.skipped
+    }
 }
 
 impl ZScore {
@@ -355,6 +506,96 @@ mod tests {
         let mut src = ZScoreSource::new(Box::new(MemSource::new(data, 41)), z);
         let got = collect(&mut src).unwrap();
         assert_eq!(got.x.data, want.data);
+    }
+
+    fn poison(mut data: Dataset, rows: &[usize], hit_y: bool) -> Dataset {
+        for &i in rows {
+            if hit_y {
+                data.y[i] = f64::NAN;
+            } else {
+                data.x.row_mut(i)[0] = f64::INFINITY;
+            }
+        }
+        data
+    }
+
+    #[test]
+    fn sanitize_skip_drops_and_renumbers() {
+        let clean = toy(90);
+        let dirty = poison(clean.clone(), &[3, 40, 41, 89], false);
+        let mut src = SanitizeSource::new(Box::new(MemSource::new(dirty, 30)), NanPolicy::Skip);
+        assert_eq!(src.len_hint(), None, "skip mode cannot promise a length");
+        let got = collect(&mut src).unwrap();
+        assert_eq!(got.y.len(), 86);
+        assert_eq!(src.skipped_rows(), 4);
+        // surviving rows keep their order and values
+        let want_y: Vec<f64> = clean
+            .y
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| ![3usize, 40, 41, 89].contains(i))
+            .map(|(_, v)| *v)
+            .collect();
+        assert_eq!(got.y, want_y);
+    }
+
+    #[test]
+    fn sanitize_fail_fast_names_the_row() {
+        let dirty = poison(toy(50), &[23], true);
+        let mut src =
+            SanitizeSource::new(Box::new(MemSource::new(dirty, 20)), NanPolicy::FailFast);
+        let err = collect(&mut src).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("row 23"), "{msg}");
+        assert_eq!(
+            crate::util::fault::classify(&err),
+            crate::util::fault::ErrorClass::Fatal
+        );
+    }
+
+    #[test]
+    fn sanitize_passes_clean_data_through() {
+        let data = toy(70);
+        let mut src =
+            SanitizeSource::new(Box::new(MemSource::new(data.clone(), 19)), NanPolicy::Skip);
+        let got = collect(&mut src).unwrap();
+        assert_eq!(got.x.data, data.x.data);
+        assert_eq!(got.y, data.y);
+        assert_eq!(src.skipped_rows(), 0);
+    }
+
+    #[test]
+    fn sanitize_reset_clears_the_skip_counter() {
+        let dirty = poison(toy(40), &[5, 6], false);
+        let mut src = SanitizeSource::new(Box::new(MemSource::new(dirty, 10)), NanPolicy::Skip);
+        collect(&mut src).unwrap();
+        assert_eq!(src.skipped_rows(), 2);
+        let again = collect(&mut src).unwrap(); // collect resets first
+        assert_eq!(src.skipped_rows(), 2);
+        assert_eq!(again.y.len(), 38);
+    }
+
+    #[test]
+    fn sanitize_drops_fully_poisoned_chunks() {
+        // chunk 1 (rows 10..20) is entirely bad: the stream must skip
+        // it and stay contiguous
+        let dirty = poison(toy(30), &(10..20).collect::<Vec<_>>(), false);
+        let mut src = SanitizeSource::new(Box::new(MemSource::new(dirty, 10)), NanPolicy::Skip);
+        src.reset().unwrap();
+        let mut seen = 0;
+        while let Some(c) = src.next_chunk().unwrap() {
+            assert_eq!(c.start, seen);
+            seen += c.rows();
+        }
+        assert_eq!(seen, 20);
+        assert_eq!(src.skipped_rows(), 10);
+    }
+
+    #[test]
+    fn nan_policy_parses() {
+        assert_eq!(NanPolicy::parse("fail").unwrap(), NanPolicy::FailFast);
+        assert_eq!(NanPolicy::parse("skip").unwrap(), NanPolicy::Skip);
+        assert!(NanPolicy::parse("lol").is_err());
     }
 
     #[test]

@@ -67,6 +67,22 @@ impl Default for CgOptions {
     }
 }
 
+/// Resumable CG loop state: a verbatim snapshot of the recurrence taken
+/// at the **end** of iteration `iters` (`p` and the implied `rsold =
+/// ⟨r,r⟩` already updated for the next step), so a run resumed from a
+/// state replays iterations `iters+1..` bit-for-bit — the checkpoint
+/// contract of `train --resume`.
+#[derive(Debug, Clone)]
+pub struct CgState {
+    pub beta: Vec<f64>,
+    pub r: Vec<f64>,
+    pub p: Vec<f64>,
+    /// iterations completed when the snapshot was taken
+    pub iters: usize,
+    /// full residual trace up to `iters`
+    pub residuals: Vec<f64>,
+}
+
 /// Run CG on `W β = b` where `apply(p)` computes `W p`.
 /// `on_iter(k, beta)` is invoked after each iteration (1-based k) — used by
 /// the convergence-study benches to trace test error per iteration.
@@ -74,20 +90,56 @@ pub fn conjgrad(
     mut apply: impl FnMut(&[f64]) -> Result<Vec<f64>>,
     b: &[f64],
     opts: CgOptions,
+    on_iter: Option<&mut dyn FnMut(usize, &[f64])>,
+) -> Result<CgResult> {
+    conjgrad_resumable(&mut apply, b, opts, None, on_iter, None)
+}
+
+/// [`conjgrad`] with checkpoint hooks: `init` resumes from a prior
+/// [`CgState`] snapshot (bitwise-identical trajectory to the
+/// uninterrupted run), and `on_state` observes the end-of-iteration
+/// state whenever the loop is about to continue — the estimator's
+/// checkpoint writer. No snapshot is emitted on a terminal iteration
+/// (converged / budget exhausted / LostPd): the run is over and the
+/// sidecar is about to be finalized or discarded.
+pub fn conjgrad_resumable(
+    apply: &mut dyn FnMut(&[f64]) -> Result<Vec<f64>>,
+    b: &[f64],
+    opts: CgOptions,
+    init: Option<CgState>,
     mut on_iter: Option<&mut dyn FnMut(usize, &[f64])>,
+    mut on_state: Option<&mut dyn FnMut(&CgState)>,
 ) -> Result<CgResult> {
     let m = b.len();
-    let mut beta = vec![0.0; m];
-    let mut r = b.to_vec();
-    let mut p = b.to_vec();
+    let (mut beta, mut r, mut p, start_k, mut residuals) = match init {
+        Some(st) => {
+            anyhow::ensure!(
+                st.beta.len() == m && st.r.len() == m && st.p.len() == m,
+                "resume state dimension {} does not match rhs {}",
+                st.beta.len(),
+                m
+            );
+            anyhow::ensure!(
+                st.residuals.len() == st.iters,
+                "resume state residual trace is inconsistent"
+            );
+            (st.beta, st.r, st.p, st.iters, st.residuals)
+        }
+        None => (
+            vec![0.0; m],
+            b.to_vec(),
+            b.to_vec(),
+            0,
+            Vec::with_capacity(opts.t_max),
+        ),
+    };
     let mut rsold = dot(&r, &r);
     let b_norm = norm2(b).max(1e-300);
-    let mut residuals = Vec::with_capacity(opts.t_max);
     let mut converged = false;
-    let mut iters = 0;
+    let mut iters = start_k;
     let mut stop = CgStop::MaxIter;
 
-    for k in 1..=opts.t_max {
+    for k in (start_k + 1)..=opts.t_max {
         if rsold == 0.0 {
             converged = true;
             stop = CgStop::Converged;
@@ -118,6 +170,18 @@ pub fn conjgrad(
         }
         xpby(&r, rsnew / rsold, &mut p);
         rsold = rsnew;
+        if k == opts.t_max {
+            break; // budget exhausted: terminal, no snapshot
+        }
+        if let Some(cb) = on_state.as_deref_mut() {
+            cb(&CgState {
+                beta: beta.clone(),
+                r: r.clone(),
+                p: p.clone(),
+                iters: k,
+                residuals: residuals.clone(),
+            });
+        }
     }
 
     Ok(CgResult {
@@ -407,6 +471,92 @@ mod tests {
         assert!(!res.converged);
         assert_eq!(res.iters, 0);
         assert_eq!(res.beta, vec![0.0, 0.0]); // best (initial) iterate kept
+    }
+
+    #[test]
+    fn resumed_run_is_bitwise_identical() {
+        // snapshot mid-run via on_state, then resume from each snapshot:
+        // the tail trajectory must reproduce the uninterrupted run exactly
+        check("CG resume is bitwise", 10, |g| {
+            let m = g.usize_in(2, 10);
+            let a = {
+                let r = Mat::from_vec(m, m, g.normal_vec(m * m));
+                let mut s = gram_t(&r);
+                s.add_diag(m as f64);
+                s
+            };
+            let b = g.normal_vec(m);
+            let opts = CgOptions { t_max: 9, tol: 0.0 };
+            let mut snaps: Vec<CgState> = Vec::new();
+            let full = conjgrad_resumable(
+                &mut |p: &[f64]| Ok(matvec(&a, p)),
+                &b,
+                opts,
+                None,
+                None,
+                Some(&mut |st: &CgState| snaps.push(st.clone())),
+            )
+            .unwrap();
+            for snap in snaps {
+                let resumed = conjgrad_resumable(
+                    &mut |p: &[f64]| Ok(matvec(&a, p)),
+                    &b,
+                    opts,
+                    Some(snap),
+                    None,
+                    None,
+                )
+                .unwrap();
+                assert_eq!(resumed.beta, full.beta, "beta must match bitwise");
+                assert_eq!(resumed.iters, full.iters);
+                assert_eq!(resumed.residuals, full.residuals);
+                assert_eq!(resumed.stop, full.stop);
+            }
+        });
+    }
+
+    #[test]
+    fn resume_past_budget_returns_snapshot() {
+        let snap = CgState {
+            beta: vec![1.0, 2.0],
+            r: vec![0.1, 0.2],
+            p: vec![0.1, 0.2],
+            iters: 5,
+            residuals: vec![5.0, 4.0, 3.0, 2.0, 1.0],
+        };
+        let res = conjgrad_resumable(
+            &mut |p: &[f64]| Ok(p.to_vec()),
+            &[1.0, 1.0],
+            CgOptions { t_max: 3, tol: 0.0 },
+            Some(snap),
+            None,
+            None,
+        )
+        .unwrap();
+        assert_eq!(res.iters, 5);
+        assert_eq!(res.beta, vec![1.0, 2.0]);
+        assert_eq!(res.stop, CgStop::MaxIter);
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_dimension() {
+        let snap = CgState {
+            beta: vec![0.0; 3],
+            r: vec![0.0; 3],
+            p: vec![0.0; 3],
+            iters: 1,
+            residuals: vec![1.0],
+        };
+        let err = conjgrad_resumable(
+            &mut |p: &[f64]| Ok(p.to_vec()),
+            &[1.0, 1.0],
+            CgOptions::default(),
+            Some(snap),
+            None,
+            None,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("dimension"), "{err}");
     }
 
     // -- block CG ----------------------------------------------------------

@@ -1,0 +1,256 @@
+//! Checkpoint/resume for long CG solves (DESIGN.md §Fault tolerance).
+//!
+//! Every `every` CG iterations the estimator serializes the full
+//! [`CgState`] snapshot to a JSON sidecar next to the model. The sidecar
+//! carries a fingerprint of everything the trajectory depends on —
+//! kernel, hyperparameters, data size, centers, preconditioner factors —
+//! so `train --resume` refuses to splice a checkpoint into a different
+//! run. Budget knobs (`t`, `tol`) are deliberately **excluded** from the
+//! fingerprint: resuming an interrupted fit with a larger iteration
+//! budget is legitimate and changes nothing about iterations already
+//! done.
+//!
+//! The JSON number writer emits the shortest representation that parses
+//! back to the same f64, so a resumed run replays the CG recurrence
+//! bit-for-bit — the property `tests/fault_tolerance.rs` pins by killing
+//! a streamed fit mid-CG and comparing against the uninterrupted model.
+
+use crate::util::fault::{fingerprint_f64s, fingerprint_str, fingerprint_u64s, FaultError};
+use crate::util::json::{self, Value};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use super::cg::CgState;
+use super::estimator::{FitState, PrecondKind};
+
+/// Sidecar format tag (bump on any incompatible layout change).
+const FORMAT: &str = "falkon-checkpoint-v1";
+
+/// Where and how often to checkpoint a fit.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CheckpointSpec {
+    /// sidecar path (written atomically: tmp file + rename)
+    pub path: PathBuf,
+    /// snapshot every `every` CG iterations (0 disables writing)
+    pub every: usize,
+    /// load an existing compatible sidecar before solving
+    pub resume: bool,
+}
+
+impl CheckpointSpec {
+    pub fn new(path: impl Into<PathBuf>, every: usize, resume: bool) -> CheckpointSpec {
+        CheckpointSpec {
+            path: path.into(),
+            every,
+            resume,
+        }
+    }
+}
+
+/// Fingerprint of everything a CG trajectory depends on. Two prepared
+/// states with equal fingerprints produce bitwise-identical CG
+/// iterations, so a snapshot from one is valid for the other.
+pub fn fingerprint(state: &FitState) -> u64 {
+    let c = &state.config;
+    let mut h = fingerprint_str(0xFA1C0, &format!("{:?}", c.kernel));
+    h = fingerprint_f64s(h, &[c.sigma, c.lam, c.eps]);
+    h = fingerprint_u64s(
+        h,
+        &[
+            c.m as u64,
+            c.seed,
+            state.plan.n() as u64,
+            match c.precond {
+                PrecondKind::Chol => 0,
+                PrecondKind::Eig => 1,
+            },
+            // the eig *fallback* also installs Q under PrecondKind::Chol,
+            // so the actual factor shape is part of the identity
+            state.q_factor.is_some() as u64,
+        ],
+    );
+    h = fingerprint_f64s(h, &state.sel.c.data);
+    h = fingerprint_f64s(h, &state.t_factor.data);
+    h = fingerprint_f64s(h, &state.a_factor.data);
+    if let Some(q) = &state.q_factor {
+        h = fingerprint_f64s(h, &q.data);
+    }
+    h
+}
+
+fn nums(vals: &[f64]) -> Value {
+    Value::Arr(vals.iter().map(|&v| Value::Num(v)).collect())
+}
+
+fn f64s(v: &Value, key: &str) -> Result<Vec<f64>> {
+    v.get(key)
+        .as_arr()
+        .with_context(|| format!("checkpoint field '{key}' is not an array"))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .with_context(|| format!("checkpoint field '{key}' has a non-number entry"))
+        })
+        .collect()
+}
+
+/// Write a snapshot atomically (tmp + rename). Errors — including
+/// non-finite state, which JSON cannot round-trip — are returned for the
+/// caller to log; a failed snapshot must never kill the fit it protects.
+pub fn save(path: &Path, fp: u64, s: &CgState) -> Result<()> {
+    let finite = s.beta.iter().chain(&s.r).chain(&s.p).chain(&s.residuals);
+    anyhow::ensure!(
+        finite.clone().all(|v| v.is_finite()),
+        "CG state holds non-finite values; skipping snapshot"
+    );
+    let v = Value::obj(vec![
+        ("format", Value::str(FORMAT)),
+        // hex string: u64 does not survive the f64 number type
+        ("fingerprint", Value::str(format!("{fp:016x}"))),
+        ("iters", Value::num(s.iters as f64)),
+        ("beta", nums(&s.beta)),
+        ("r", nums(&s.r)),
+        ("p", nums(&s.p)),
+        ("residuals", nums(&s.residuals)),
+    ]);
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, v.to_string())
+        .with_context(|| format!("writing checkpoint tmp {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming checkpoint into place at {}", path.display()))?;
+    Ok(())
+}
+
+/// Load a snapshot for a run with fingerprint `fp`. `Ok(None)` when no
+/// sidecar exists (fresh start); a corrupt or mismatched sidecar is a
+/// **fatal** error — resuming from it would silently produce a model
+/// from spliced trajectories, so the operator must delete it explicitly.
+pub fn load(path: &Path, fp: u64) -> Result<Option<CgState>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            return Err(anyhow::Error::new(e)
+                .context(format!("reading checkpoint {}", path.display())))
+        }
+    };
+    let v = json::parse(&text).map_err(|e| {
+        FaultError::fatal(format!(
+            "checkpoint {} is corrupt ({e}); delete it to start fresh",
+            path.display()
+        ))
+    })?;
+    anyhow::ensure!(
+        v.get("format").as_str() == Some(FORMAT),
+        "checkpoint {} has unknown format {:?}; delete it to start fresh",
+        path.display(),
+        v.get("format").as_str()
+    );
+    let want = format!("{fp:016x}");
+    let got = v.get("fingerprint").as_str().unwrap_or("");
+    if got != want {
+        return Err(FaultError::fatal(format!(
+            "checkpoint {} was written by a different run \
+             (fingerprint {got} != {want}); it cannot be resumed here — \
+             delete it to start fresh",
+            path.display()
+        )));
+    }
+    let iters = v
+        .get("iters")
+        .as_usize()
+        .context("checkpoint field 'iters' missing or invalid")?;
+    let st = CgState {
+        beta: f64s(&v, "beta")?,
+        r: f64s(&v, "r")?,
+        p: f64s(&v, "p")?,
+        iters,
+        residuals: f64s(&v, "residuals")?,
+    };
+    anyhow::ensure!(
+        st.residuals.len() == st.iters,
+        "checkpoint {} residual trace is inconsistent with its iteration count",
+        path.display()
+    );
+    anyhow::ensure!(
+        st.beta.len() == st.r.len() && st.r.len() == st.p.len(),
+        "checkpoint {} state vectors have mismatched lengths",
+        path.display()
+    );
+    Ok(Some(st))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("falkon_ckpt_{tag}_{}.json", std::process::id()))
+    }
+
+    fn state() -> CgState {
+        CgState {
+            beta: vec![0.125, -3.0, 1.0 / 3.0],
+            r: vec![1e-300, 2.5e17, -0.75],
+            p: vec![7.0, 0.0, 9.5e-8],
+            iters: 2,
+            residuals: vec![0.5, 0.25],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_lossless() {
+        let p = tmp("roundtrip");
+        let s = state();
+        save(&p, 0xDEAD_BEEF, &s).unwrap();
+        let back = load(&p, 0xDEAD_BEEF).unwrap().unwrap();
+        assert_eq!(
+            s.beta.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            back.beta.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            s.r.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            back.r.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(s.p, back.p);
+        assert_eq!(s.iters, back.iters);
+        assert_eq!(s.residuals, back.residuals);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn missing_sidecar_is_a_fresh_start() {
+        assert!(load(&tmp("missing_never_written"), 1).unwrap().is_none());
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_fatal() {
+        let p = tmp("mismatch");
+        save(&p, 11, &state()).unwrap();
+        let err = load(&p, 22).unwrap_err();
+        assert_eq!(
+            crate::util::fault::classify(&err),
+            crate::util::fault::ErrorClass::Fatal
+        );
+        assert!(format!("{err:#}").contains("different run"), "{err:#}");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn corrupt_sidecar_is_fatal_with_advice() {
+        let p = tmp("corrupt");
+        std::fs::write(&p, "{not json").unwrap();
+        let err = load(&p, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("delete it"), "{err:#}");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn non_finite_state_refuses_to_save() {
+        let p = tmp("nonfinite");
+        let mut s = state();
+        s.r[0] = f64::NAN;
+        assert!(save(&p, 1, &s).is_err());
+        assert!(!p.exists(), "no partial sidecar may be left behind");
+    }
+}

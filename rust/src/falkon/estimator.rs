@@ -22,7 +22,79 @@ use crate::util::timer::{Phases, Timer};
 use anyhow::{Context, Result};
 
 use super::centers::{CenterGather, Centers, Reservoir, SelectedCenters};
-use super::cg::{block_conjgrad, conjgrad, BlockCgResult, CgOptions, CgResult, CgStop};
+use super::cg::{
+    block_conjgrad, conjgrad_resumable, BlockCgResult, CgOptions, CgResult, CgState, CgStop,
+};
+use super::checkpoint::CheckpointSpec;
+
+/// One automatic step down the numerical degradation ladder — or a
+/// recovery action — taken during a fit (DESIGN.md §Fault tolerance).
+/// Every step is recorded in the [`FitReport`] so silent fallbacks are
+/// auditable after the fact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Degradation {
+    /// the Cholesky preconditioner needed `rungs` jitter escalations
+    /// (ε multiplied by 100 per rung) before factorizing
+    JitterEscalation { rungs: usize },
+    /// all jitter rungs failed; fell back to the rank-revealing eig
+    /// preconditioner automatically
+    EigFallback { reason: String },
+    /// CG lost positive-definiteness and was warm-restarted from the
+    /// best iterate after `at_iter` iterations
+    CgWarmRestart { at_iter: usize },
+    /// non-finite rows dropped by a skip-policy sanitizer during the
+    /// streamed setup pass
+    RowsSkipped { count: usize },
+    /// the solve resumed from a checkpoint sidecar at `from_iter`
+    Resumed { from_iter: usize },
+}
+
+impl std::fmt::Display for Degradation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Degradation::JitterEscalation { rungs } => {
+                write!(f, "preconditioner needed {rungs} jitter escalation(s)")
+            }
+            Degradation::EigFallback { reason } => {
+                write!(f, "fell back to eig preconditioner: {reason}")
+            }
+            Degradation::CgWarmRestart { at_iter } => {
+                write!(f, "CG warm-restarted after iteration {at_iter} (lost PD)")
+            }
+            Degradation::RowsSkipped { count } => {
+                write!(f, "skipped {count} non-finite row(s) per pass")
+            }
+            Degradation::Resumed { from_iter } => {
+                write!(f, "resumed from checkpoint at iteration {from_iter}")
+            }
+        }
+    }
+}
+
+/// Audit trail of a fit: every degradation-ladder step and recovery
+/// action that happened, in order. A clean fit has an empty report.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FitReport {
+    pub events: Vec<Degradation>,
+}
+
+impl FitReport {
+    /// Record (and log) one event.
+    pub fn record(&mut self, d: Degradation) {
+        eprintln!("[falkon] degradation: {d}");
+        self.events.push(d);
+    }
+
+    /// True iff the fit took no degradation/recovery steps.
+    pub fn is_clean(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Human-readable event lines for CLI/report output.
+    pub fn lines(&self) -> Vec<String> {
+        self.events.iter().map(|d| d.to_string()).collect()
+    }
+}
 
 /// Which preconditioner factorization to use (Sect. A of the paper).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -60,6 +132,9 @@ pub struct FalkonConfig {
     /// no intercept term)
     pub center_y: bool,
     pub seed: u64,
+    /// optional CG checkpoint/resume sidecar (`train --checkpoint`);
+    /// None = no snapshots, never resumed
+    pub checkpoint: Option<CheckpointSpec>,
 }
 
 impl Default for FalkonConfig {
@@ -76,6 +151,7 @@ impl Default for FalkonConfig {
             precond: PrecondKind::default(),
             center_y: true,
             seed: 0,
+            checkpoint: None,
         }
     }
 }
@@ -112,6 +188,8 @@ pub struct FalkonModel {
     /// why CG stopped (LostPd means the operator went numerically
     /// indefinite and the best iterate was kept — also logged at fit time)
     pub cg_stop: CgStop,
+    /// audit trail of automatic degradation/recovery steps
+    pub report: FitReport,
 }
 
 impl FalkonModel {
@@ -170,6 +248,8 @@ pub struct FalkonMulticlass {
     pub cg_iters: Vec<usize>,
     /// per-class stop reason from the block CG
     pub cg_stops: Vec<CgStop>,
+    /// audit trail of automatic degradation/recovery steps
+    pub report: FitReport,
 }
 
 impl FalkonMulticlass {
@@ -231,6 +311,8 @@ pub struct FitState {
     pub plan: MatvecPlan,
     pub phases: Phases,
     pub config: FalkonConfig,
+    /// degradation/recovery events accumulated across prepare and solve
+    pub report: FitReport,
 }
 
 impl FitState {
@@ -246,10 +328,48 @@ impl FitState {
     }
 }
 
+/// Factor the preconditioner through the numerical degradation ladder
+/// (DESIGN.md §Fault tolerance): the configured route first — Chol with
+/// its built-in jitter escalation — and, if every jitter rung fails, an
+/// automatic fallback to the rank-revealing eig factorization, which
+/// handles exactly singular/indefinite K_MM. Each rung taken and the
+/// fallback itself are recorded in `report`. Returns `(T, A, Q)` with
+/// `Q = None` on the plain Cholesky path.
+pub fn setup_precond(
+    engine: &Engine,
+    kmm: &Mat,
+    config: &FalkonConfig,
+    report: &mut FitReport,
+) -> Result<(Mat, Mat, Option<Mat>)> {
+    match config.precond {
+        PrecondKind::Eig => {
+            let (t, a, q) = super::precond::precond_eig(kmm, config.lam, config.eps)?;
+            Ok((t, a, Some(q)))
+        }
+        PrecondKind::Chol => match engine.precond_traced(kmm, config.lam, config.eps) {
+            Ok((t, a, rungs)) => {
+                if rungs > 0 {
+                    report.record(Degradation::JitterEscalation { rungs });
+                }
+                Ok((t, a, None))
+            }
+            Err(err) => {
+                report.record(Degradation::EigFallback {
+                    reason: format!("{err:#}"),
+                });
+                let (t, a, q) = super::precond::precond_eig(kmm, config.lam, config.eps)
+                    .context("eig fallback after the jittered Cholesky ladder failed")?;
+                Ok((t, a, Some(q)))
+            }
+        },
+    }
+}
+
 /// Build everything up to (but not including) the CG solve: centers,
 /// K_MM (+ D weighting), preconditioner factors, prepared matvec plan.
 pub fn prepare(engine: &Engine, x: &Mat, config: &FalkonConfig) -> Result<FitState> {
     let mut phases = Phases::new();
+    let mut report = FitReport::default();
     let mut rng = Rng::new(config.seed);
 
     let sel = phases.time("centers", || {
@@ -270,16 +390,7 @@ pub fn prepare(engine: &Engine, x: &Mat, config: &FalkonConfig) -> Result<FitSta
             if let Some(d) = &sel.d_weights {
                 kmm.scale_sym_diag(d); // K_MM -> D K_MM D (Def. 3)
             }
-            match config.precond {
-                PrecondKind::Chol => {
-                    let (t, a) = engine.precond(&kmm, config.lam, config.eps)?;
-                    Ok((t, a, None))
-                }
-                PrecondKind::Eig => {
-                    let (t, a, q) = super::precond::precond_eig(&kmm, config.lam, config.eps)?;
-                    Ok((t, a, Some(q)))
-                }
-            }
+            setup_precond(engine, &kmm, config, &mut report)
         })?;
 
     let plan = phases.time("plan", || {
@@ -294,6 +405,7 @@ pub fn prepare(engine: &Engine, x: &Mat, config: &FalkonConfig) -> Result<FitSta
         plan,
         phases,
         config: config.clone(),
+        report,
     })
 }
 
@@ -331,13 +443,15 @@ pub fn prepare_source(
         source.n_classes()
     );
     let mut phases = Phases::new();
+    let mut report = FitReport::default();
     let mut rng = Rng::new(config.seed);
     let d = source.d();
     anyhow::ensure!(d > 0, "source has no features");
 
+    let retry = engine.opts().retry;
     let mut y: Vec<f64> = Vec::new();
     let sel = phases.time("centers", || -> Result<SelectedCenters> {
-        source.reset()?;
+        retry.run("center pass: reset", || source.reset())?;
         let (c, indices) = match source.len_hint() {
             Some(n) => {
                 anyhow::ensure!(n > 0, "source is empty");
@@ -345,7 +459,7 @@ pub fn prepare_source(
                 let indices = rng.choose(n, config.m.min(n));
                 let mut gather = CenterGather::new(&indices, d);
                 let mut seen = 0usize;
-                while let Some(chunk) = source.next_chunk()? {
+                while let Some(chunk) = retry.run("centers: next_chunk", || source.next_chunk())? {
                     anyhow::ensure!(chunk.start == seen, "source chunks must be contiguous");
                     seen += chunk.x.rows;
                     gather.offer(chunk.start, &chunk.x);
@@ -357,7 +471,7 @@ pub fn prepare_source(
             None => {
                 let mut res = Reservoir::new(config.m.max(1), d);
                 let mut seen = 0usize;
-                while let Some(chunk) = source.next_chunk()? {
+                while let Some(chunk) = retry.run("centers: next_chunk", || source.next_chunk())? {
                     anyhow::ensure!(chunk.start == seen, "source chunks must be contiguous");
                     seen += chunk.x.rows;
                     for i in 0..chunk.x.rows {
@@ -377,20 +491,15 @@ pub fn prepare_source(
         })
     })?;
     let n = y.len();
+    let skipped = source.skipped_rows();
+    if skipped > 0 {
+        report.record(Degradation::RowsSkipped { count: skipped });
+    }
 
     let (t_factor, a_factor, q_factor) =
         phases.time("precond", || -> Result<(Mat, Mat, Option<Mat>)> {
             let kmm = engine.kmm(config.kernel, &sel.c, config.sigma)?;
-            match config.precond {
-                PrecondKind::Chol => {
-                    let (t, a) = engine.precond(&kmm, config.lam, config.eps)?;
-                    Ok((t, a, None))
-                }
-                PrecondKind::Eig => {
-                    let (t, a, q) = super::precond::precond_eig(&kmm, config.lam, config.eps)?;
-                    Ok((t, a, Some(q)))
-                }
-            }
+            setup_precond(engine, &kmm, config, &mut report)
         })?;
 
     let plan = phases.time("plan", || {
@@ -406,6 +515,7 @@ pub fn prepare_source(
             plan,
             phases,
             config: config.clone(),
+            report,
         },
         y,
     ))
@@ -422,6 +532,12 @@ pub fn solve(
     mut on_iter: Option<&mut dyn FnMut(usize, &[f64])>,
 ) -> Result<(Vec<f64>, CgResult)> {
     let config = state.config.clone();
+    let ckpt = config.checkpoint.clone();
+    // fingerprint before borrowing the operator pieces: it binds any
+    // sidecar to this exact trajectory (kernel, hyperparameters, centers,
+    // preconditioner factors)
+    let fp = ckpt.as_ref().map(|_| super::checkpoint::fingerprint(state));
+    let mut events: Vec<Degradation> = Vec::new();
     let bhb = Bhb {
         plan: &state.plan,
         t: &state.t_factor,
@@ -433,25 +549,84 @@ pub fn solve(
     let timer = Timer::start();
     let bhb = &bhb;
     let r = bhb.rhs(y).context("building rhs")?;
+
+    let mut init: Option<CgState> = None;
+    if let (Some(c), Some(fpv)) = (&ckpt, fp) {
+        if c.resume {
+            if let Some(st) = super::checkpoint::load(&c.path, fpv)
+                .context("loading checkpoint for resume")?
+            {
+                events.push(Degradation::Resumed { from_iter: st.iters });
+                init = Some(st);
+            }
+        }
+    }
+
     let mut alpha_cb = on_iter.as_deref_mut().map(|cb| {
         move |k: usize, beta: &[f64]| {
             let alpha = bhb.beta_to_alpha(beta);
             cb(k, &alpha);
         }
     });
-    let mut cb_dyn: Option<&mut dyn FnMut(usize, &[f64])> = match alpha_cb.as_mut() {
+    // periodic sidecar writer: a failed write is logged, never fatal —
+    // the checkpoint protects the fit, not the other way round
+    let mut snap = ckpt.as_ref().filter(|c| c.every > 0).map(|c| {
+        let path = c.path.clone();
+        let every = c.every;
+        let fpv = fp.unwrap_or(0);
+        move |s: &CgState| {
+            if s.iters % every == 0 {
+                if let Err(e) = super::checkpoint::save(&path, fpv, s) {
+                    eprintln!("[falkon] checkpoint write failed (fit continues): {e:#}");
+                }
+            }
+        }
+    });
+    let opts = CgOptions {
+        t_max: config.t,
+        tol: config.tol,
+    };
+    let cb: Option<&mut dyn FnMut(usize, &[f64])> = match alpha_cb.as_mut() {
         Some(f) => Some(f),
         None => None,
     };
-    let cg = conjgrad(
-        |p| bhb.apply(p),
-        &r,
-        CgOptions {
-            t_max: config.t,
-            tol: config.tol,
-        },
-        cb_dyn.take(),
-    )?;
+    let sn: Option<&mut dyn FnMut(&CgState)> = match snap.as_mut() {
+        Some(f) => Some(f),
+        None => None,
+    };
+    let mut cg = conjgrad_resumable(&mut |p| bhb.apply(p), &r, opts, init, cb, sn)?;
+
+    // degradation ladder, CG rung: a LostPd exit means ⟨p, Wp⟩ went
+    // non-positive — the Fletcher–Reeves direction is poisoned, but the
+    // best iterate is still valid. Discard the direction and warm-restart
+    // steepest-descent (p = true residual at β) from that iterate.
+    let mut restarts = 0usize;
+    while cg.stop == CgStop::LostPd && restarts < 2 && cg.iters < config.t {
+        let before = cg.iters;
+        let w = bhb.apply(&cg.beta)?;
+        let r2: Vec<f64> = r.iter().zip(&w).map(|(bi, wi)| bi - wi).collect();
+        events.push(Degradation::CgWarmRestart { at_iter: before });
+        let st = CgState {
+            beta: cg.beta.clone(),
+            r: r2.clone(),
+            p: r2,
+            iters: before,
+            residuals: cg.residuals.clone(),
+        };
+        let cb: Option<&mut dyn FnMut(usize, &[f64])> = match alpha_cb.as_mut() {
+            Some(f) => Some(f),
+            None => None,
+        };
+        let sn: Option<&mut dyn FnMut(&CgState)> = match snap.as_mut() {
+            Some(f) => Some(f),
+            None => None,
+        };
+        cg = conjgrad_resumable(&mut |p| bhb.apply(p), &r, opts, Some(st), cb, sn)?;
+        restarts += 1;
+        if cg.iters == before {
+            break; // no progress even from a fresh direction: genuinely indefinite
+        }
+    }
     if cg.stop == CgStop::LostPd {
         // don't drop the stop reason on the floor: a LostPd exit means the
         // preconditioned operator went numerically indefinite and the
@@ -464,7 +639,15 @@ pub fn solve(
         );
     }
     let alpha = bhb.beta_to_alpha(&cg.beta);
+    if let Some(c) = &ckpt {
+        // the solve completed — a stale sidecar would only confuse (or be
+        // rejected by) a later run
+        let _ = std::fs::remove_file(&c.path);
+    }
     state.phases.add("cg", timer.elapsed_s());
+    for e in events {
+        state.report.record(e);
+    }
     Ok((alpha, cg))
 }
 
@@ -559,6 +742,7 @@ pub fn fit_with_callback(
         cg_iters: cg.iters,
         cg_residuals: cg.residuals,
         cg_stop: cg.stop,
+        report: state.report,
     })
 }
 
@@ -612,6 +796,7 @@ pub fn fit_source(
         cg_iters: cg.iters,
         cg_residuals: cg.residuals,
         cg_stop: cg.stop,
+        report: state.report,
     })
 }
 
@@ -648,6 +833,7 @@ pub fn fit_multiclass(
         phases: state.phases,
         cg_iters: cg.iters,
         cg_stops: cg.stops,
+        report: state.report,
     })
 }
 
@@ -679,6 +865,7 @@ pub fn fit_multiclass_looped(
         phases: state.phases,
         cg_iters,
         cg_stops,
+        report: state.report,
     })
 }
 

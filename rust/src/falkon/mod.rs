@@ -33,6 +33,7 @@
 //! ```
 pub mod centers;
 pub mod cg;
+pub mod checkpoint;
 pub mod estimator;
 pub mod lscores;
 pub mod model_io;
@@ -40,9 +41,13 @@ pub mod precond;
 pub mod tune;
 
 pub use centers::{CenterGather, Centers, Reservoir, SelectedCenters};
-pub use cg::{block_conjgrad, conjgrad, BlockCgResult, CgOptions, CgResult, CgStop};
+pub use cg::{
+    block_conjgrad, conjgrad, conjgrad_resumable, BlockCgResult, CgOptions, CgResult, CgState,
+    CgStop,
+};
+pub use checkpoint::CheckpointSpec;
 pub use estimator::{
     fit, fit_multiclass, fit_multiclass_looped, fit_source, fit_with_callback, prepare,
-    prepare_source, solve, solve_multi, FalkonConfig, FalkonModel, FalkonMulticlass, FitState,
-    PrecondKind,
+    prepare_source, setup_precond, solve, solve_multi, Degradation, FalkonConfig, FalkonModel,
+    FalkonMulticlass, FitReport, FitState, PrecondKind,
 };

@@ -65,6 +65,7 @@ pub fn model_from_json(v: &Value) -> Result<FalkonModel> {
         cg_iters: 0,
         cg_residuals: Vec::new(),
         cg_stop: crate::falkon::CgStop::MaxIter,
+        report: Default::default(),
     })
 }
 

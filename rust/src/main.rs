@@ -15,8 +15,12 @@ use falkon::cli::Command;
 use falkon::config::ExperimentConfig;
 use falkon::data::shard::ShardSource;
 use falkon::data::stream_text::{CsvSource, LibsvmSource};
-use falkon::data::{synth, DataSource, Dataset, MemSource, ZScore, ZScoreSource};
-use falkon::falkon::{fit, fit_multiclass, fit_source, model_io, Centers, FalkonConfig};
+use falkon::data::{
+    synth, DataSource, Dataset, MemSource, NanPolicy, SanitizeSource, ZScore, ZScoreSource,
+};
+use falkon::falkon::{
+    fit, fit_multiclass, fit_source, model_io, Centers, CheckpointSpec, FalkonConfig,
+};
 use falkon::kernels::Kernel;
 use falkon::metrics;
 use falkon::runtime::Engine;
@@ -134,6 +138,10 @@ fn train_spec() -> Command {
         .switch("no-normalize", "skip z-score normalization")
         .switch("stream", "out-of-core: fit from a chunked source (O(chunk) resident features)")
         .opt("chunk-rows", "8192", "rows per resident chunk on the streaming path")
+        .opt("checkpoint", "", "CG checkpoint sidecar path (enables periodic snapshots)")
+        .opt("checkpoint-every", "5", "snapshot the CG state every k iterations")
+        .switch("resume", "resume from an existing compatible --checkpoint sidecar")
+        .opt("nan-policy", "fail", "streamed rows with NaN/Inf: fail | skip")
 }
 
 fn config_from_flags(p: &falkon::cli::Parsed) -> Result<ExperimentConfig> {
@@ -186,7 +194,13 @@ fn prepare_data(cfg: &ExperimentConfig) -> Result<(Dataset, Dataset)> {
 /// the reported metrics are training metrics.
 fn train_stream(p: &falkon::cli::Parsed, cfg: &ExperimentConfig, engine: &Engine) -> Result<()> {
     let chunk_rows = p.usize("chunk-rows")?.max(1);
-    let open = || open_source(&cfg.dataset, cfg.n, cfg.falkon.seed, chunk_rows);
+    let nan_policy = NanPolicy::parse(p.str("nan-policy"))?;
+    // sanitize innermost so NaN/Inf rows never reach the z-score stats
+    // pass or the fit (DESIGN.md § Fault tolerance)
+    let open = || -> Result<Box<dyn DataSource>> {
+        let src = open_source(&cfg.dataset, cfg.n, cfg.falkon.seed, chunk_rows)?;
+        Ok(Box::new(SanitizeSource::new(src, nan_policy)))
+    };
     // reject unsupported tasks before any data sweep (the z-score pass
     // below reads the whole stream)
     let mut first = open()?;
@@ -227,6 +241,9 @@ fn train_stream(p: &falkon::cli::Parsed, cfg: &ExperimentConfig, engine: &Engine
     let model = fit_source(engine, source, &cfg.falkon)?;
     let fit_s = timer.elapsed_s();
     println!("fit: {fit_s:.2}s (cg iters: {})\n{}", model.cg_iters, model.phases.report());
+    for line in model.report.lines() {
+        println!("  [degraded] {line}");
+    }
     let mut eval = wrap(open()?);
     let (score, secs) = falkon::util::timer::timed(|| {
         falkon::serve::predict_source(&model, engine, eval.as_mut())
@@ -238,6 +255,9 @@ fn train_stream(p: &falkon::cli::Parsed, cfg: &ExperimentConfig, engine: &Engine
         score.rows as f64 / secs.max(1e-9),
         score.max_chunk_bytes / 1024
     );
+    if score.skipped_rows > 0 {
+        println!("  skipped {} non-finite rows (--nan-policy skip)", score.skipped_rows);
+    }
     println!(
         "train MSE = {:.4}  RMSE = {:.4} (streaming path: no holdout split)",
         metrics::mse(&score.preds, &score.targets),
@@ -252,7 +272,16 @@ fn train_stream(p: &falkon::cli::Parsed, cfg: &ExperimentConfig, engine: &Engine
 
 fn cmd_train(args: &[String]) -> Result<()> {
     let p = train_spec().parse(args)?;
-    let cfg = config_from_flags(&p)?;
+    let mut cfg = config_from_flags(&p)?;
+    if !p.str("checkpoint").is_empty() {
+        cfg.falkon.checkpoint = Some(CheckpointSpec::new(
+            p.str("checkpoint"),
+            p.usize("checkpoint-every")?.max(1),
+            p.flag("resume"),
+        ));
+    } else if p.flag("resume") {
+        bail!("--resume needs --checkpoint <path> to know which sidecar to load");
+    }
     let engine = Engine::by_name(&cfg.engine, cfg.workers)?;
     if p.flag("stream") {
         return train_stream(&p, &cfg, &engine);
@@ -288,6 +317,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
         let preds = model.predict(&engine, &test.x)?;
         println!("fit: {fit_s:.2}s (cg iters: {})", model.cg_iters);
         println!("{}", model.phases.report());
+        for line in model.report.lines() {
+            println!("  [degraded] {line}");
+        }
         if train.n_classes == 2 {
             println!(
                 "c-err = {:.2}%  AUC = {:.4}",
@@ -319,6 +351,7 @@ fn cmd_predict(args: &[String]) -> Result<()> {
         .opt("workers", "1", "rust-engine worker threads")
         .opt("chunk-rows", "8192", "rows per resident chunk for .shard inputs")
         .switch("no-normalize", "skip z-score normalization")
+        .opt("nan-policy", "fail", "streamed rows with NaN/Inf: fail | skip")
         .opt("seed", "0", "rng seed (dataset generation + split)");
     let p = spec.parse(args)?;
     let model = model_io::load(p.str("model"))?;
@@ -328,8 +361,10 @@ fn cmd_predict(args: &[String]) -> Result<()> {
         // Like the in-memory path (prepare_data), features are z-scored
         // by default — a streaming stats pass here — so a model trained
         // on normalized data isn't silently fed raw features.
-        let mut src: Box<dyn DataSource> =
-            Box::new(ShardSource::open(p.str("dataset"), p.usize("chunk-rows")?.max(1))?);
+        let mut src: Box<dyn DataSource> = Box::new(SanitizeSource::new(
+            Box::new(ShardSource::open(p.str("dataset"), p.usize("chunk-rows")?.max(1))?),
+            NanPolicy::parse(p.str("nan-policy"))?,
+        ));
         anyhow::ensure!(
             src.d() == model.centers.cols,
             "model d={} vs shard d={}",
@@ -350,6 +385,9 @@ fn cmd_predict(args: &[String]) -> Result<()> {
             score.rows as f64 / secs.max(1e-9),
             score.max_chunk_bytes / 1024
         );
+        if score.skipped_rows > 0 {
+            println!("  skipped {} non-finite rows (--nan-policy skip)", score.skipped_rows);
+        }
         println!(
             "MSE = {:.4}  AUC = {:.4}",
             metrics::mse(&score.preds, &score.targets),

@@ -60,6 +60,11 @@ pub struct EngineOptions {
     /// crate's client handle is an `Rc` (per-thread) — XLA itself can
     /// still use intra-op threads inside one executable.
     pub workers: usize,
+    /// bounded-retry policy for transient source errors on the streaming
+    /// paths (every [`StreamPlan`] sweep and streaming predict re-reads
+    /// the source, so one flaky read must not kill an O(n√n) fit;
+    /// DESIGN.md §Fault tolerance)
+    pub retry: crate::util::fault::RetryPolicy,
 }
 
 impl Default for EngineOptions {
@@ -67,6 +72,7 @@ impl Default for EngineOptions {
         EngineOptions {
             imp: Impl::Pallas,
             workers: 1,
+            retry: crate::util::fault::RetryPolicy::default(),
         }
     }
 }
@@ -288,6 +294,15 @@ impl Engine {
     /// and finally fall back to the f64 Rust factorization — a fit must
     /// not die on a borderline K_MM.
     pub fn precond(&self, kmm: &Mat, lam: f64, eps: f64) -> Result<(Mat, Mat)> {
+        self.precond_traced(kmm, lam, eps).map(|(t, a, _)| (t, a))
+    }
+
+    /// [`Engine::precond`] plus the number of jitter escalations the
+    /// factorization needed (0 = clean first try) — the degradation
+    /// ladder's observability hook
+    /// ([`crate::falkon::estimator::setup_precond`] records nonzero rungs
+    /// in the fit report).
+    pub fn precond_traced(&self, kmm: &Mat, lam: f64, eps: f64) -> Result<(Mat, Mat, usize)> {
         match self {
             Engine::Rust { pool, .. } => precond_rust(kmm, lam, eps, pool.as_deref()),
             #[cfg(feature = "xla")]
@@ -297,19 +312,20 @@ impl Engine {
                 let kmm_lit = literal_from_f32(&kmm.to_f32(), &[m, m])?;
                 let lam_lit = literal_scalar(lam as f32);
                 let mut eps_try = eps;
-                for _ in 0..3 {
+                for rung in 0..3 {
                     let eps_lit = literal_scalar(eps_try as f32);
                     let outs = exe.call(&[&kmm_lit, &lam_lit, &eps_lit])?;
                     anyhow::ensure!(outs.len() == 2, "precond returned {} outputs", outs.len());
                     let t = Mat::from_f32(m, m, &literal_to_f32(&outs[0])?);
                     let a = Mat::from_f32(m, m, &literal_to_f32(&outs[1])?);
                     if t.is_finite() && a.is_finite() {
-                        return Ok((t, a));
+                        return Ok((t, a, rung));
                     }
                     eps_try *= 100.0;
                 }
                 // last resort: f64 factorization on the coordinator
-                precond_rust(kmm, lam, eps, None)
+                let (t, a, rungs) = precond_rust(kmm, lam, eps, None)?;
+                Ok((t, a, 3 + rungs))
             }
         }
     }
@@ -418,6 +434,7 @@ impl Engine {
             m,
             chunks_seen: Cell::new(n.div_ceil(chunk_rows.max(1))),
             max_chunk_bytes: Cell::new(0),
+            retry: self.opts().retry,
         }))
     }
 
@@ -433,12 +450,13 @@ impl Engine {
         param: f64,
     ) -> Result<Vec<f64>> {
         anyhow::ensure!(source.d() == c.cols, "source/c feature dims differ");
-        source.reset()?;
+        let retry = self.opts().retry;
+        retry.run("streaming predict: reset", || source.reset())?;
         let mut preds = match source.len_hint() {
             Some(n) => Vec::with_capacity(n),
             None => Vec::new(),
         };
-        while let Some(chunk) = source.next_chunk()? {
+        while let Some(chunk) = retry.run("predict: next_chunk", || source.next_chunk())? {
             anyhow::ensure!(chunk.start == preds.len(), "source chunks must be contiguous");
             let p = self.predict(kern, &chunk.x, c, alpha, param)?;
             preds.extend_from_slice(&p);
@@ -604,11 +622,18 @@ fn mat_fingerprint(m: &Mat) -> u64 {
 /// f64 preconditioner factorization with jitter escalation. The O(M³)
 /// pieces — both Cholesky factors and the T·Tᵀ SYRK — run blocked, with
 /// trailing updates and output panels fanned out over the shared pool
-/// (DESIGN.md §Perf "Setup path").
-fn precond_rust(kmm: &Mat, lam: f64, eps: f64, pool: Option<&WorkerPool>) -> Result<(Mat, Mat)> {
+/// (DESIGN.md §Perf "Setup path"). The third tuple element is the jitter
+/// rung that succeeded (0 = first try), surfaced through
+/// [`Engine::precond_traced`] so the degradation ladder can record it.
+fn precond_rust(
+    kmm: &Mat,
+    lam: f64,
+    eps: f64,
+    pool: Option<&WorkerPool>,
+) -> Result<(Mat, Mat, usize)> {
     let m = kmm.rows;
     let mut eps_try = eps;
-    for _ in 0..6 {
+    for rung in 0..6 {
         let mut kj = kmm.clone();
         kj.add_diag(eps_try * m as f64);
         if let Ok(t) = chol::cholesky_upper_blocked(&kj, chol::CHOL_BLOCK, pool) {
@@ -617,7 +642,7 @@ fn precond_rust(kmm: &Mat, lam: f64, eps: f64, pool: Option<&WorkerPool>) -> Res
             tta.scale(1.0 / m as f64);
             tta.add_diag(lam);
             if let Ok(a) = chol::cholesky_upper_blocked(&tta, chol::CHOL_BLOCK, pool) {
-                return Ok((t, a));
+                return Ok((t, a, rung));
             }
         }
         eps_try *= 100.0;
@@ -899,6 +924,9 @@ pub struct StreamPlan {
     /// peak resident chunk bytes across all sweeps — the out-of-core
     /// bench's peak-RSS proxy
     max_chunk_bytes: Cell<usize>,
+    /// bounded retry for transient source errors (every CG iteration is
+    /// one sweep; inherited from [`EngineOptions::retry`])
+    retry: crate::util::fault::RetryPolicy,
 }
 
 impl StreamPlan {
@@ -914,10 +942,10 @@ impl StreamPlan {
         mut per_chunk: impl FnMut(&crate::data::Chunk, &[f64]) -> Result<()>,
     ) -> Result<()> {
         let mut src = self.source.borrow_mut();
-        src.reset()?;
+        self.retry.run("streaming sweep: reset", || src.reset())?;
         let mut seen = 0usize;
         let mut chunks = 0usize;
-        while let Some(chunk) = src.next_chunk()? {
+        while let Some(chunk) = self.retry.run("stream sweep: next_chunk", || src.next_chunk())? {
             anyhow::ensure!(chunk.start == seen, "source chunks must be contiguous");
             seen += chunk.x.rows;
             anyhow::ensure!(seen <= self.n, "source yielded more rows than n = {}", self.n);
@@ -1525,6 +1553,7 @@ mod tests {
         let eng4 = Engine::rust_with(EngineOptions {
             imp: Impl::Pallas,
             workers: 4,
+            ..Default::default()
         });
         let mut rng = Rng::new(4);
         let u = rng.normals(c.rows);
@@ -1549,6 +1578,7 @@ mod tests {
         let eng = Engine::rust_with(EngineOptions {
             imp: Impl::Pallas,
             workers: 3,
+            ..Default::default()
         });
         let eng1 = Engine::rust();
         let plan = eng.matvec_plan(Kernel::Gaussian, &x, &c, 1.0).unwrap();
@@ -1570,6 +1600,7 @@ mod tests {
         let eng = Engine::rust_with(EngineOptions {
             imp: Impl::Pallas,
             workers: 4,
+            ..Default::default()
         });
         let mut rng = Rng::new(7);
         let u = rng.normals(c.rows);
@@ -1617,6 +1648,7 @@ mod tests {
         let eng4 = Engine::rust_with(EngineOptions {
             imp: Impl::Pallas,
             workers: 4,
+            ..Default::default()
         });
         let mut rng = Rng::new(14);
         let k = 6;
@@ -1642,6 +1674,7 @@ mod tests {
         let eng = Engine::rust_with(EngineOptions {
             imp: Impl::Pallas,
             workers: 3,
+            ..Default::default()
         });
         let mut rng = Rng::new(16);
         let k = 4;
@@ -1788,6 +1821,7 @@ mod tests {
         let eng4 = Engine::rust_with(EngineOptions {
             imp: Impl::Pallas,
             workers: 4,
+            ..Default::default()
         });
         let k1 = eng1.kmm(Kernel::Gaussian, &c, 1.2).unwrap();
         let k4 = eng4.kmm(Kernel::Gaussian, &c, 1.2).unwrap();
@@ -1976,6 +2010,7 @@ mod tests {
         let eng4 = Engine::rust_with(EngineOptions {
             imp: Impl::Pallas,
             workers: 4,
+            ..Default::default()
         });
         let mut rng = Rng::new(34);
         let u = rng.normals(c.rows);
@@ -2054,6 +2089,7 @@ mod tests {
             let eng = Engine::rust_with(EngineOptions {
                 imp: Impl::Pallas,
                 workers,
+                ..Default::default()
             });
             let want = eng.predict(Kernel::Gaussian, &x, &c, &alpha, 1.4).unwrap();
             let data = Dataset::new_regression("t", x.clone(), vec![0.0; x.rows]);

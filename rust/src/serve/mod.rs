@@ -19,6 +19,7 @@
 use crate::data::source::DataSource;
 use crate::falkon::{FalkonModel, FalkonMulticlass};
 use crate::linalg::mat::Mat;
+use crate::util::fault::FaultError;
 use anyhow::{anyhow, Result};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
@@ -34,6 +35,9 @@ pub struct BulkScore {
     /// largest resident chunk (feature bytes) during the sweep — the
     /// out-of-core serving path's peak-RSS proxy
     pub max_chunk_bytes: usize,
+    /// non-finite rows dropped by a skip-policy sanitizer upstream
+    /// ([`crate::data::SanitizeSource`]); 0 on clean or fail-fast streams
+    pub skipped_rows: usize,
 }
 
 /// Offline batch serving from a chunked source: sweep the stream once,
@@ -52,11 +56,12 @@ pub fn predict_source(
         source.d(),
         model.centers.cols
     );
-    source.reset()?;
+    let retry = engine.opts().retry;
+    retry.run("bulk predict: reset", || source.reset())?;
     let mut preds = Vec::new();
     let mut targets = Vec::new();
     let mut max_chunk_bytes = 0usize;
-    while let Some(chunk) = source.next_chunk()? {
+    while let Some(chunk) = retry.run("bulk predict: next_chunk", || source.next_chunk())? {
         anyhow::ensure!(chunk.start == preds.len(), "source chunks must be contiguous");
         max_chunk_bytes = max_chunk_bytes.max(chunk.x_bytes());
         let mut p = model.predict(engine, &chunk.x)?;
@@ -69,6 +74,7 @@ pub fn predict_source(
         targets,
         rows,
         max_chunk_bytes,
+        skipped_rows: source.skipped_rows(),
     })
 }
 
@@ -168,9 +174,21 @@ impl Server {
     pub fn stop(mut self) -> ServeStats {
         let _ = self.shutdown.send(());
         // drop our handle so the queue closes once clients are done
-        let join = self.join.take().unwrap();
-        drop(self.handle.tx.clone());
-        join.join().unwrap_or_default()
+        match self.join.take() {
+            Some(join) => join.join().unwrap_or_default(),
+            None => ServeStats::default(),
+        }
+    }
+}
+
+/// Best-effort human-readable payload of a caught panic.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".into()
     }
 }
 
@@ -219,22 +237,44 @@ fn serve_loop(
                 Err(_) => break,
             }
         }
-        // run the batch
-        let rows = pending.len();
+        // validate per request before stacking: [`Handle::predict`]
+        // already checks dims, but the queue is a public boundary — a
+        // malformed request must get a typed error back, not panic the
+        // copy below and take the whole serve thread with it
+        let mut batch: Vec<Request> = Vec::with_capacity(pending.len());
+        for r in pending.drain(..) {
+            if r.features.len() == d {
+                batch.push(r);
+            } else {
+                let _ = r.reply.send(Err(FaultError::fatal(format!(
+                    "feature dim {} != model dim {d}",
+                    r.features.len()
+                ))));
+            }
+        }
+        if batch.is_empty() {
+            continue;
+        }
+        // run the batch; a panic inside the predict path fails this batch,
+        // not the server
+        let rows = batch.len();
         let mut x = Mat::zeros(rows, d);
-        for (i, r) in pending.iter().enumerate() {
+        for (i, r) in batch.iter().enumerate() {
             x.row_mut(i).copy_from_slice(&r.features);
         }
-        let preds = model.predict(&engine, &x);
+        let preds = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            model.predict(&engine, &x)
+        }))
+        .unwrap_or_else(|p| Err(anyhow!("prediction panicked: {}", panic_msg(p.as_ref()))));
         match preds {
             Ok(p) => {
-                for (i, r) in pending.drain(..).enumerate() {
+                for (i, r) in batch.drain(..).enumerate() {
                     let _ = r.reply.send(Ok(p[i]));
                 }
             }
             Err(e) => {
                 let msg = e.to_string();
-                for r in pending.drain(..) {
+                for r in batch.drain(..) {
                     let _ = r.reply.send(Err(anyhow!("{msg}")));
                 }
             }
@@ -327,8 +367,10 @@ impl MulticlassServer {
     /// signal on its next idle poll).
     pub fn stop(mut self) -> ServeStats {
         let _ = self.shutdown.send(());
-        let join = self.join.take().unwrap();
-        join.join().unwrap_or_default()
+        match self.join.take() {
+            Some(join) => join.join().unwrap_or_default(),
+            None => ServeStats::default(),
+        }
     }
 }
 
@@ -376,22 +418,42 @@ fn serve_multiclass_loop(
                 Err(_) => break,
             }
         }
-        let rows = pending.len();
+        // same public-boundary validation as the regression loop: typed
+        // error per malformed request, never a panic in the copy below
+        let mut batch: Vec<ClassRequest> = Vec::with_capacity(pending.len());
+        for r in pending.drain(..) {
+            if r.features.len() == d {
+                batch.push(r);
+            } else {
+                let _ = r.reply.send(Err(FaultError::fatal(format!(
+                    "feature dim {} != model dim {d}",
+                    r.features.len()
+                ))));
+            }
+        }
+        if batch.is_empty() {
+            continue;
+        }
+        let rows = batch.len();
         let mut x = Mat::zeros(rows, d);
-        for (i, r) in pending.iter().enumerate() {
+        for (i, r) in batch.iter().enumerate() {
             x.row_mut(i).copy_from_slice(&r.features);
         }
-        // one panel-amortized predict for the whole (rows × K) batch
-        let scores = engine.predict_multi(
-            model.config.kernel,
-            &x,
-            &model.centers,
-            &alphas,
-            model.config.sigma,
-        );
+        // one panel-amortized predict for the whole (rows × K) batch; a
+        // panic fails the batch, not the server
+        let scores = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.predict_multi(
+                model.config.kernel,
+                &x,
+                &model.centers,
+                &alphas,
+                model.config.sigma,
+            )
+        }))
+        .unwrap_or_else(|p| Err(anyhow!("prediction panicked: {}", panic_msg(p.as_ref()))));
         match scores {
             Ok(sm) => {
-                for (i, r) in pending.drain(..).enumerate() {
+                for (i, r) in batch.drain(..).enumerate() {
                     let row = sm.row(i);
                     // total_cmp: a pathological request whose scores go NaN
                     // must not panic the serve thread for everyone else
@@ -406,7 +468,7 @@ fn serve_multiclass_loop(
             }
             Err(e) => {
                 let msg = e.to_string();
-                for r in pending.drain(..) {
+                for r in batch.drain(..) {
                     let _ = r.reply.send(Err(anyhow!("{msg}")));
                 }
             }
@@ -608,6 +670,61 @@ mod tests {
     }
 
     #[test]
+    fn serve_loop_survives_malformed_queue_request() {
+        // bypass Handle::predict's client-side dim check and push a
+        // malformed request straight into the queue: the serve loop must
+        // reply with a typed error and keep serving everyone else
+        let (model, x, _) = tiny_model();
+        let eng = Engine::rust();
+        let want = model.predict(&eng, &x.slice_rows(0, 1)).unwrap()[0];
+        let server = Server::start(
+            model,
+            ServeConfig {
+                engine: "rust".into(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = server.handle();
+        let (reply_tx, reply_rx) = channel();
+        h.tx.send(Request {
+            features: vec![1.0],
+            reply: reply_tx,
+        })
+        .unwrap();
+        let err = reply_rx.recv().unwrap().unwrap_err();
+        assert!(format!("{err:#}").contains("feature dim"), "{err:#}");
+        let got = h.predict(x.row(0).to_vec()).unwrap();
+        assert!((got - want).abs() < 1e-12, "server must still serve");
+        server.stop();
+    }
+
+    #[test]
+    fn multiclass_serve_loop_survives_malformed_queue_request() {
+        let (model, x, _) = tiny_multiclass();
+        let server = MulticlassServer::start(
+            model,
+            ServeConfig {
+                engine: "rust".into(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = server.handle();
+        let (reply_tx, reply_rx) = channel();
+        h.tx.send(ClassRequest {
+            features: vec![0.5, 0.5],
+            reply: reply_tx,
+        })
+        .unwrap();
+        let err = reply_rx.recv().unwrap().unwrap_err();
+        assert!(format!("{err:#}").contains("feature dim"), "{err:#}");
+        let got = h.predict(x.row(0).to_vec()).unwrap();
+        assert!(got.class < 3, "server must still serve");
+        server.stop();
+    }
+
+    #[test]
     fn bulk_predict_source_matches_in_memory_predict() {
         let (model, x, y) = tiny_model();
         let eng = Engine::rust();
@@ -618,6 +735,7 @@ mod tests {
         assert_eq!(score.preds, want);
         assert_eq!(score.targets, y);
         assert_eq!(score.rows, want.len());
+        assert_eq!(score.skipped_rows, 0);
         // only one 77-row chunk of features was ever resident
         assert_eq!(score.max_chunk_bytes, 77 * model.centers.cols * 8);
         // dimension mismatch is rejected up front

@@ -1,0 +1,564 @@
+//! Fault-tolerance substrate (DESIGN.md §Fault tolerance): a typed
+//! transient/fatal error taxonomy carried through `anyhow` chains, a
+//! bounded-retry policy with exponential backoff, a deterministic
+//! seeded fault-injection [`DataSource`] wrapper so every robustness
+//! claim is exercised by tests and the `--inject-faults` bench mode,
+//! and FNV-1a fingerprints that bind checkpoint sidecars to the run
+//! that wrote them.
+//!
+//! The injector fails **before** touching the inner source, so a
+//! retried read re-delivers exactly the chunk the fault suppressed and
+//! the recovered stream is bit-identical to the fault-free one — which
+//! is what lets the streamed-fit determinism contract survive injected
+//! I/O faults.
+
+use crate::data::source::{Chunk, DataSource};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Whether an error is worth retrying.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// momentary I/O hiccup — a bounded retry may succeed
+    Transient,
+    /// corrupt data, logic error, exhausted budget — fail fast
+    Fatal,
+}
+
+/// A typed fault that travels inside an [`anyhow::Error`] chain so call
+/// sites can classify without string matching.
+#[derive(Debug, Clone)]
+pub struct FaultError {
+    pub class: ErrorClass,
+    pub what: String,
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let tag = match self.class {
+            ErrorClass::Transient => "transient",
+            ErrorClass::Fatal => "fatal",
+        };
+        write!(f, "{tag} fault: {}", self.what)
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+impl FaultError {
+    pub fn transient(what: impl Into<String>) -> anyhow::Error {
+        anyhow::Error::new(FaultError {
+            class: ErrorClass::Transient,
+            what: what.into(),
+        })
+    }
+
+    pub fn fatal(what: impl Into<String>) -> anyhow::Error {
+        anyhow::Error::new(FaultError {
+            class: ErrorClass::Fatal,
+            what: what.into(),
+        })
+    }
+}
+
+/// Classify an error chain: an embedded [`FaultError`] decides directly;
+/// interrupted/timed-out I/O is transient; everything else is fatal
+/// (parse errors, contiguity violations, dimension mismatches must not
+/// be retried — re-reading corrupt data cannot fix it).
+pub fn classify(err: &anyhow::Error) -> ErrorClass {
+    for cause in err.chain() {
+        if let Some(f) = cause.downcast_ref::<FaultError>() {
+            return f.class;
+        }
+        if let Some(io) = cause.downcast_ref::<std::io::Error>() {
+            use std::io::ErrorKind::*;
+            if matches!(io.kind(), Interrupted | WouldBlock | TimedOut) {
+                return ErrorClass::Transient;
+            }
+        }
+    }
+    ErrorClass::Fatal
+}
+
+/// Bounded retry with exponential backoff. `max_retries` is the number
+/// of **re**-attempts after the first failure; backoff doubles from
+/// `base_backoff_ms` and is capped at 1 s per wait.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    pub max_retries: u32,
+    pub base_backoff_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 4,
+            base_backoff_ms: 5,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Never retry (every error is terminal).
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 0,
+            base_backoff_ms: 0,
+        }
+    }
+
+    /// Backoff before re-attempt `attempt` (0-based), in milliseconds.
+    pub fn backoff_ms(&self, attempt: u32) -> u64 {
+        let shifted = self
+            .base_backoff_ms
+            .saturating_mul(1u64 << attempt.min(20));
+        shifted.min(1000)
+    }
+
+    /// Run `f`, retrying transient failures up to `max_retries` times.
+    /// Fatal errors and retry exhaustion return immediately with
+    /// `what` attached for context.
+    pub fn run<T>(&self, what: &str, mut f: impl FnMut() -> Result<T>) -> Result<T> {
+        let mut attempt: u32 = 0;
+        loop {
+            match f() {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    if classify(&e) == ErrorClass::Fatal {
+                        return Err(e.context(format!("{what}: fatal error (not retried)")));
+                    }
+                    if attempt >= self.max_retries {
+                        return Err(e.context(format!(
+                            "{what}: transient error persisted after {} retries",
+                            self.max_retries
+                        )));
+                    }
+                    let ms = self.backoff_ms(attempt);
+                    attempt += 1;
+                    eprintln!(
+                        "[retry] {what}: transient failure, retry {attempt}/{} in {ms} ms ({e:#})",
+                        self.max_retries
+                    );
+                    if ms > 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(ms));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// What to inject at a scheduled chunk index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `next_chunk` fails with a transient error **before** reading the
+    /// inner source (a retry re-delivers the exact suppressed chunk)
+    TransientRead,
+    /// the chunk is delivered with its last row missing — downstream
+    /// contiguity/row-count checks must fail fast, never retry
+    Truncated,
+    /// the chunk is delivered with row 0's features poisoned to NaN
+    NanRow,
+}
+
+/// Deterministic schedule of injected faults, keyed by within-sweep
+/// chunk index. Explicit sites compose with a seeded pseudo-random
+/// transient pattern (a pure hash of `(seed, chunk index)`, so the
+/// schedule is identical on every sweep and every run).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    sites: BTreeMap<usize, (FaultKind, u32)>,
+    seeded: Option<(u64, u32, u32)>, // (seed, rate per mille, fail times)
+    fatal_sweep: Option<usize>,      // kill the whole run on this sweep (0-based)
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Inject `kind` at chunk `idx`, failing `times` consecutive
+    /// attempts per sweep (only meaningful for `TransientRead`).
+    pub fn at(mut self, idx: usize, kind: FaultKind, times: u32) -> FaultPlan {
+        self.sites.insert(idx, (kind, times.max(1)));
+        self
+    }
+
+    /// Seeded transient faults: chunk `i` faults iff
+    /// `fnv(seed, i) % 1000 < rate_per_mille`, failing `times` attempts.
+    pub fn seeded_transient(mut self, seed: u64, rate_per_mille: u32, times: u32) -> FaultPlan {
+        self.seeded = Some((seed, rate_per_mille.min(1000), times.max(1)));
+        self
+    }
+
+    /// Simulate a process kill: every read during sweep `sweep` (0-based,
+    /// counted across [`DataSource::reset`] calls and **not** replayed)
+    /// fails with a fatal error. In a streamed fit the center pass is
+    /// sweep 0, the RHS build sweep 1, and each CG iteration one more
+    /// sweep — so killing sweep `k + 2` dies mid-CG, which is exactly
+    /// what the checkpoint/resume contract has to survive.
+    pub fn kill_at_sweep(mut self, sweep: usize) -> FaultPlan {
+        self.fatal_sweep = Some(sweep);
+        self
+    }
+
+    fn site(&self, idx: usize) -> Option<(FaultKind, u32)> {
+        if let Some(&s) = self.sites.get(&idx) {
+            return Some(s);
+        }
+        if let Some((seed, rate, times)) = self.seeded {
+            let h = fingerprint_u64s(seed, &[idx as u64]);
+            if (h % 1000) < rate as u64 {
+                return Some((FaultKind::TransientRead, times));
+            }
+        }
+        None
+    }
+}
+
+/// Deterministic fault-injection wrapper: presents the inner source
+/// unchanged except at scheduled chunk indices. Per-sweep attempt
+/// counters reset on [`DataSource::reset`], so every sweep replays the
+/// same fault schedule.
+pub struct FaultySource {
+    inner: Box<dyn DataSource>,
+    plan: FaultPlan,
+    idx: usize,
+    remaining: BTreeMap<usize, u32>,
+    injected: usize,
+    /// completed `reset()` calls — the sweep counter for `kill_at_sweep`
+    /// (deliberately *not* cleared by reset)
+    sweeps_started: usize,
+}
+
+impl FaultySource {
+    pub fn new(inner: Box<dyn DataSource>, plan: FaultPlan) -> FaultySource {
+        FaultySource {
+            inner,
+            plan,
+            idx: 0,
+            remaining: BTreeMap::new(),
+            injected: 0,
+            sweeps_started: 0,
+        }
+    }
+
+    /// Total faults injected since construction (across sweeps) — lets
+    /// tests and benches assert the schedule actually fired.
+    pub fn injected(&self) -> usize {
+        self.injected
+    }
+}
+
+impl DataSource for FaultySource {
+    fn d(&self) -> usize {
+        self.inner.d()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.inner.len_hint()
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.idx = 0;
+        self.remaining.clear();
+        self.sweeps_started += 1;
+        self.inner.reset()
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<Chunk>> {
+        if let Some(kill) = self.plan.fatal_sweep {
+            // sweeps_started is 1-based after the first reset()
+            if self.sweeps_started == kill + 1 {
+                self.injected += 1;
+                return Err(FaultError::fatal(format!(
+                    "injected process kill during sweep {kill}"
+                )));
+            }
+        }
+        let i = self.idx;
+        if let Some((kind, times)) = self.plan.site(i) {
+            match kind {
+                FaultKind::TransientRead => {
+                    let rem = self.remaining.entry(i).or_insert(times);
+                    if *rem > 0 {
+                        *rem -= 1;
+                        self.injected += 1;
+                        // fail BEFORE the inner read: the suppressed chunk
+                        // is re-delivered verbatim on retry
+                        return Err(FaultError::transient(format!(
+                            "injected read fault at chunk {i}"
+                        )));
+                    }
+                }
+                FaultKind::Truncated => {
+                    let chunk = self.inner.next_chunk()?;
+                    self.idx += 1;
+                    self.injected += 1;
+                    return Ok(chunk.map(|c| {
+                        let keep = c.rows().saturating_sub(1);
+                        Chunk {
+                            start: c.start,
+                            x: c.x.slice_rows(0, keep),
+                            y: c.y[..keep].to_vec(),
+                            labels: c.labels.map(|l| l[..keep].to_vec()),
+                        }
+                    }));
+                }
+                FaultKind::NanRow => {
+                    let mut chunk = self.inner.next_chunk()?;
+                    self.idx += 1;
+                    self.injected += 1;
+                    if let Some(c) = &mut chunk {
+                        if c.rows() > 0 {
+                            for v in c.x.row_mut(0) {
+                                *v = f64::NAN;
+                            }
+                        }
+                    }
+                    return Ok(chunk);
+                }
+            }
+        }
+        let chunk = self.inner.next_chunk()?;
+        self.idx += 1;
+        Ok(chunk)
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.inner.chunk_rows()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.inner.n_classes()
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn skipped_rows(&self) -> usize {
+        self.inner.skipped_rows()
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over raw u64 words, chained from `seed` — the checkpoint
+/// fingerprint primitive (deterministic across runs and platforms).
+pub fn fingerprint_u64s(seed: u64, words: &[u64]) -> u64 {
+    let mut h = FNV_OFFSET ^ seed;
+    for &w in words {
+        for byte in w.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// FNV-1a over the exact bit patterns of `vals` (bitwise-sensitive:
+/// any ULP change to the data changes the fingerprint).
+pub fn fingerprint_f64s(seed: u64, vals: &[f64]) -> u64 {
+    let mut h = FNV_OFFSET ^ seed;
+    for v in vals {
+        for byte in v.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// FNV-1a over a string (kernel names etc. in checkpoint identity).
+pub fn fingerprint_str(seed: u64, s: &str) -> u64 {
+    let mut h = FNV_OFFSET ^ seed;
+    for byte in s.bytes() {
+        h ^= byte as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::source::{collect, MemSource};
+    use crate::data::synth;
+    use crate::util::rng::Rng;
+
+    fn toy(n: usize) -> crate::data::dataset::Dataset {
+        synth::smooth_regression(&mut Rng::new(5), n, 4, 0.05)
+    }
+
+    fn fast() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 4,
+            base_backoff_ms: 0,
+        }
+    }
+
+    #[test]
+    fn classify_sees_through_context_layers() {
+        let e = FaultError::transient("disk hiccup").context("reading chunk 3");
+        assert_eq!(classify(&e), ErrorClass::Transient);
+        let e = FaultError::fatal("bad magic").context("opening shard");
+        assert_eq!(classify(&e), ErrorClass::Fatal);
+    }
+
+    #[test]
+    fn classify_io_kinds() {
+        let interrupted =
+            anyhow::Error::new(std::io::Error::new(std::io::ErrorKind::Interrupted, "sig"));
+        assert_eq!(classify(&interrupted), ErrorClass::Transient);
+        let missing =
+            anyhow::Error::new(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert_eq!(classify(&missing), ErrorClass::Fatal);
+        assert_eq!(classify(&anyhow::anyhow!("plain")), ErrorClass::Fatal);
+    }
+
+    #[test]
+    fn retry_recovers_after_transient_failures() {
+        let mut calls = 0;
+        let got = fast()
+            .run("op", || {
+                calls += 1;
+                if calls < 3 {
+                    Err(FaultError::transient("flaky"))
+                } else {
+                    Ok(42)
+                }
+            })
+            .unwrap();
+        assert_eq!(got, 42);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn retry_fails_fast_on_fatal() {
+        let mut calls = 0;
+        let err = fast()
+            .run("op", || -> Result<()> {
+                calls += 1;
+                Err(FaultError::fatal("corrupt"))
+            })
+            .unwrap_err();
+        assert_eq!(calls, 1, "fatal errors must not be retried");
+        assert!(format!("{err:#}").contains("not retried"), "{err:#}");
+    }
+
+    #[test]
+    fn retry_exhausts_budget_with_context() {
+        let policy = RetryPolicy {
+            max_retries: 2,
+            base_backoff_ms: 0,
+        };
+        let mut calls = 0;
+        let err = policy
+            .run("read", || -> Result<()> {
+                calls += 1;
+                Err(FaultError::transient("still down"))
+            })
+            .unwrap_err();
+        assert_eq!(calls, 3); // 1 attempt + 2 retries
+        assert!(format!("{err:#}").contains("after 2 retries"), "{err:#}");
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RetryPolicy {
+            max_retries: 20,
+            base_backoff_ms: 5,
+        };
+        assert_eq!(p.backoff_ms(0), 5);
+        assert_eq!(p.backoff_ms(1), 10);
+        assert_eq!(p.backoff_ms(2), 20);
+        assert_eq!(p.backoff_ms(19), 1000); // capped
+    }
+
+    #[test]
+    fn faulty_source_is_transparent_under_retry() {
+        // faults at chunks 0 and 2, each failing twice; the retried
+        // stream must be byte-identical to the clean one
+        let data = toy(100);
+        let plan = FaultPlan::new()
+            .at(0, FaultKind::TransientRead, 2)
+            .at(2, FaultKind::TransientRead, 2);
+        let mut src = FaultySource::new(Box::new(MemSource::new(data.clone(), 17)), plan);
+        let policy = fast();
+        for sweep in 0..2 {
+            src.reset().unwrap();
+            let mut y = Vec::new();
+            let mut xdata = Vec::new();
+            while let Some(c) = policy.run("next_chunk", || src.next_chunk()).unwrap() {
+                assert_eq!(c.start, y.len(), "sweep {sweep} contiguity");
+                xdata.extend_from_slice(&c.x.data);
+                y.extend_from_slice(&c.y);
+            }
+            assert_eq!(xdata, data.x.data, "sweep {sweep}");
+            assert_eq!(y, data.y, "sweep {sweep}");
+        }
+        // 2 sites x 2 fails x 2 sweeps (counters reset per sweep)
+        assert_eq!(src.injected(), 8);
+    }
+
+    #[test]
+    fn faulty_source_without_retry_surfaces_transient_error() {
+        let plan = FaultPlan::new().at(1, FaultKind::TransientRead, 1);
+        let mut src = FaultySource::new(Box::new(MemSource::new(toy(60), 20)), plan);
+        let err = collect(&mut src).unwrap_err();
+        assert_eq!(classify(&err), ErrorClass::Transient);
+    }
+
+    #[test]
+    fn truncated_chunk_breaks_contiguity() {
+        let plan = FaultPlan::new().at(1, FaultKind::Truncated, 1);
+        let mut src = FaultySource::new(Box::new(MemSource::new(toy(60), 20)), plan);
+        let err = collect(&mut src).unwrap_err();
+        // truncation is a data corruption: fatal, never retried
+        assert_eq!(classify(&err), ErrorClass::Fatal);
+    }
+
+    #[test]
+    fn nan_row_injection_poisons_one_row() {
+        let plan = FaultPlan::new().at(0, FaultKind::NanRow, 1);
+        let mut src = FaultySource::new(Box::new(MemSource::new(toy(40), 40)), plan);
+        src.reset().unwrap();
+        let c = src.next_chunk().unwrap().unwrap();
+        assert!(c.x.row(0).iter().all(|v| v.is_nan()));
+        assert!(c.x.row(1).iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn kill_at_sweep_fires_once_then_clears() {
+        let plan = FaultPlan::new().kill_at_sweep(1);
+        let mut src = FaultySource::new(Box::new(MemSource::new(toy(60), 20)), plan);
+        collect(&mut src).expect("sweep 0 must be clean");
+        let err = collect(&mut src).unwrap_err();
+        assert_eq!(classify(&err), ErrorClass::Fatal, "kill is fatal: {err:#}");
+        // the "restarted process" sweeps clean again
+        collect(&mut src).expect("sweep 2 must be clean");
+    }
+
+    #[test]
+    fn seeded_schedule_is_deterministic() {
+        let plan = FaultPlan::new().seeded_transient(7, 300, 1);
+        let a: Vec<usize> = (0..50).filter(|&i| plan.site(i).is_some()).collect();
+        let b: Vec<usize> = (0..50).filter(|&i| plan.site(i).is_some()).collect();
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "rate 30% over 50 chunks should fire");
+        assert!(a.len() < 50, "rate 30% must not fire everywhere");
+    }
+
+    #[test]
+    fn fingerprints_are_bit_sensitive() {
+        let a = fingerprint_f64s(0, &[1.0, 2.0, 3.0]);
+        let b = fingerprint_f64s(0, &[1.0, 2.0, f64::from_bits(3.0f64.to_bits() + 1)]);
+        assert_eq!(a, fingerprint_f64s(0, &[1.0, 2.0, 3.0]));
+        assert_ne!(a, b);
+        assert_ne!(fingerprint_f64s(1, &[1.0]), fingerprint_f64s(2, &[1.0]));
+        assert_ne!(fingerprint_str(0, "gauss"), fingerprint_str(0, "linear"));
+    }
+}

@@ -1,5 +1,6 @@
 //! Foundation substrates built from scratch for the offline environment
 //! (DESIGN.md §3): PRNG, JSON, timing, property-test harness, worker pool.
+pub mod fault;
 pub mod json;
 pub mod pool;
 pub mod ptest;

@@ -1,0 +1,322 @@
+//! Fault-tolerance acceptance tests (pure-Rust engine): the contract is
+//! that a streamed fit under injected *transient* faults is
+//! **bitwise identical** to the fault-free fit (retries re-deliver the
+//! suppressed chunk verbatim), a fit killed mid-CG resumes from its
+//! checkpoint sidecar and reproduces the uninterrupted model, and a
+//! degenerate (non-PD) K_MM walks the jitter → eig degradation ladder
+//! instead of aborting — every recovery recorded in the [`FitReport`].
+
+use falkon::data::shard::{self, ShardSource};
+use falkon::data::source::{collect, Chunk, DataSource, MemSource};
+use falkon::data::{synth, Dataset, NanPolicy, SanitizeSource};
+use falkon::falkon::{fit_source, setup_precond, CheckpointSpec, FalkonConfig, FitReport};
+use falkon::linalg::mat::Mat;
+use falkon::runtime::{Engine, EngineOptions};
+use falkon::util::fault::{FaultKind, FaultPlan, FaultySource, RetryPolicy};
+use falkon::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn tmp(tag: &str, ext: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("falkon_ft_{tag}_{}.{ext}", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn cfg(m: usize, t: usize) -> FalkonConfig {
+    FalkonConfig {
+        sigma: 2.0,
+        lam: 1e-4,
+        m,
+        t,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+/// Rust engine with zero backoff so retry-heavy tests don't sleep.
+fn eng() -> Engine {
+    Engine::rust_with(EngineOptions {
+        retry: RetryPolicy {
+            max_retries: 4,
+            base_backoff_ms: 0,
+        },
+        ..Default::default()
+    })
+}
+
+/// Forwards to a [`FaultySource`] while mirroring its injection counter
+/// into a shared cell — `fit_source` consumes the boxed source, so the
+/// test could not ask it afterwards how many faults actually fired.
+struct CountingFaults {
+    inner: FaultySource,
+    injected: Arc<AtomicUsize>,
+}
+
+impl DataSource for CountingFaults {
+    fn d(&self) -> usize {
+        self.inner.d()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.inner.len_hint()
+    }
+
+    fn reset(&mut self) -> anyhow::Result<()> {
+        self.inner.reset()
+    }
+
+    fn next_chunk(&mut self) -> anyhow::Result<Option<Chunk>> {
+        let r = self.inner.next_chunk();
+        self.injected.store(self.inner.injected(), Ordering::Relaxed);
+        r
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.inner.chunk_rows()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.inner.n_classes()
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn skipped_rows(&self) -> usize {
+        self.inner.skipped_rows()
+    }
+}
+
+#[test]
+fn transient_read_faults_do_not_change_the_fit() {
+    // explicit + seeded transient faults on every sweep; bounded retry
+    // must re-deliver each suppressed chunk verbatim, so the fitted
+    // model is bitwise identical to the fault-free one
+    let n = 2000;
+    let mut rng = Rng::new(21);
+    let data = synth::smooth_regression(&mut rng, n, 5, 0.05);
+    let path = tmp("transient", "shard");
+    shard::write_dataset(&path, &data).unwrap();
+    let e = eng();
+    let config = cfg(48, 10);
+
+    let clean = fit_source(&e, Box::new(ShardSource::open(&path, 250).unwrap()), &config).unwrap();
+
+    let plan = FaultPlan::new()
+        .at(0, FaultKind::TransientRead, 2)
+        .at(3, FaultKind::TransientRead, 4)
+        .seeded_transient(0xFA11, 150, 1);
+    let injected = Arc::new(AtomicUsize::new(0));
+    let faulty = CountingFaults {
+        inner: FaultySource::new(Box::new(ShardSource::open(&path, 250).unwrap()), plan),
+        injected: injected.clone(),
+    };
+    let fitted = fit_source(&e, Box::new(faulty), &config).unwrap();
+
+    assert!(injected.load(Ordering::Relaxed) > 0, "no faults fired");
+    assert_eq!(fitted.centers.data, clean.centers.data);
+    assert_eq!(fitted.alpha, clean.alpha);
+    assert!(fitted.report.is_clean(), "{:?}", fitted.report.lines());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn retry_exhaustion_surfaces_a_typed_error() {
+    let mut rng = Rng::new(22);
+    let data = synth::smooth_regression(&mut rng, 600, 4, 0.05);
+    let e = Engine::rust_with(EngineOptions {
+        retry: RetryPolicy {
+            max_retries: 2,
+            base_backoff_ms: 0,
+        },
+        ..Default::default()
+    });
+    // more consecutive failures at chunk 0 than the policy tolerates
+    let plan = FaultPlan::new().at(0, FaultKind::TransientRead, 8);
+    let src = FaultySource::new(Box::new(MemSource::new(data, 100)), plan);
+    let err = fit_source(&e, Box::new(src), &cfg(24, 6)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("transient error persisted after 2 retries"),
+        "{msg}"
+    );
+}
+
+#[test]
+fn killed_fit_resumes_from_checkpoint_bitwise() {
+    let n = 1600;
+    let mut rng = Rng::new(23);
+    let data = synth::smooth_regression(&mut rng, n, 4, 0.05);
+    let path = tmp("kill", "shard");
+    shard::write_dataset(&path, &data).unwrap();
+    let e = eng();
+    let config = cfg(40, 12);
+
+    let reference =
+        fit_source(&e, Box::new(ShardSource::open(&path, 200).unwrap()), &config).unwrap();
+
+    // run 1: checkpoint every iteration, kill the process mid-CG
+    // (center pass = sweep 0, rhs = sweep 1, CG iter i = sweep i+1)
+    let ck = tmp("kill_ck", "json");
+    let _ = std::fs::remove_file(&ck);
+    let mut config_ck = config.clone();
+    config_ck.checkpoint = Some(CheckpointSpec::new(&ck, 1, false));
+    let plan = FaultPlan::new().kill_at_sweep(5);
+    let src = FaultySource::new(Box::new(ShardSource::open(&path, 200).unwrap()), plan);
+    let err = fit_source(&e, Box::new(src), &config_ck).unwrap_err();
+    assert!(format!("{err:#}").contains("injected process kill"), "{err:#}");
+    assert!(
+        std::path::Path::new(&ck).exists(),
+        "no sidecar survived the kill"
+    );
+
+    // run 2: clean source, resume from the sidecar — the spliced
+    // trajectory must reproduce the uninterrupted model bit for bit
+    let mut config_rs = config.clone();
+    config_rs.checkpoint = Some(CheckpointSpec::new(&ck, 1, true));
+    let resumed = fit_source(
+        &e,
+        Box::new(ShardSource::open(&path, 200).unwrap()),
+        &config_rs,
+    )
+    .unwrap();
+    assert!(
+        resumed
+            .report
+            .lines()
+            .iter()
+            .any(|l| l.contains("resumed from checkpoint")),
+        "{:?}",
+        resumed.report.lines()
+    );
+    assert_eq!(resumed.alpha, reference.alpha);
+    assert_eq!(resumed.cg_iters, reference.cg_iters);
+    assert!(
+        !std::path::Path::new(&ck).exists(),
+        "sidecar not cleaned up after a completed fit"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn indefinite_kmm_escalates_jitter_rungs() {
+    // one mildly negative eigenvalue: the base ε ridge fails, a couple
+    // of ×100 escalations fix it — recorded, not fatal
+    let e = Engine::rust();
+    let m = 6;
+    let mut kmm = Mat::eye(m);
+    kmm[(m - 1, m - 1)] = -1e-4;
+    let config = FalkonConfig {
+        m,
+        lam: 1e-3,
+        ..Default::default()
+    };
+    let mut report = FitReport::default();
+    let (t, a, q) = setup_precond(&e, &kmm, &config, &mut report).unwrap();
+    assert_eq!(t.rows, m);
+    assert_eq!(a.rows, m);
+    assert!(q.is_none(), "jitter success must stay on the Chol route");
+    assert!(
+        report.lines().iter().any(|l| l.contains("jitter escalation")),
+        "{:?}",
+        report.lines()
+    );
+}
+
+#[test]
+fn hopeless_cholesky_falls_back_to_eig() {
+    // a -1e6 eigenvalue is beyond every jitter rung: the ladder must
+    // drop to the rank-revealing eig preconditioner and record why
+    let e = Engine::rust();
+    let m = 6;
+    let mut kmm = Mat::eye(m);
+    kmm[(m - 1, m - 1)] = -1e6;
+    let config = FalkonConfig {
+        m,
+        lam: 1e-3,
+        ..Default::default()
+    };
+    let mut report = FitReport::default();
+    let (t, a, q) = setup_precond(&e, &kmm, &config, &mut report).unwrap();
+    let q = q.expect("eig fallback installs Q");
+    assert_eq!(q.rows, m);
+    assert_eq!(t.rows, a.rows);
+    assert!(t.rows < m, "negative eigenvalue must be truncated");
+    assert!(
+        report.lines().iter().any(|l| l.contains("fell back to eig")),
+        "{:?}",
+        report.lines()
+    );
+}
+
+#[test]
+fn nan_rows_are_skipped_counted_and_reported() {
+    // NaN-poisoned rows under `--nan-policy skip`: the sanitized stream
+    // must fit exactly like the same stream with those rows absent
+    let n = 1000;
+    let d = 4;
+    let mut rng = Rng::new(24);
+    let data = synth::smooth_regression(&mut rng, n, d, 0.05);
+    let e = eng();
+    let config = cfg(32, 8);
+
+    // oracle: the stream minus the two rows the plan poisons below
+    // (row 0 of chunks 0 and 2 = global rows 0 and 500)
+    let mut kept_x = Vec::new();
+    let mut kept_y = Vec::new();
+    for i in 0..n {
+        if i != 0 && i != 500 {
+            kept_x.extend_from_slice(data.x.row(i));
+            kept_y.push(data.y[i]);
+        }
+    }
+    let kept = Dataset::new_regression("kept", Mat::from_vec(n - 2, d, kept_x), kept_y);
+    let oracle_src = SanitizeSource::new(Box::new(MemSource::new(kept, 250)), NanPolicy::Skip);
+    let oracle = fit_source(&e, Box::new(oracle_src), &config).unwrap();
+
+    let plan = FaultPlan::new()
+        .at(0, FaultKind::NanRow, 1)
+        .at(2, FaultKind::NanRow, 1);
+    let poisoned = FaultySource::new(Box::new(MemSource::new(data.clone(), 250)), plan);
+    let sanitized = SanitizeSource::new(Box::new(poisoned), NanPolicy::Skip);
+    let model = fit_source(&e, Box::new(sanitized), &config).unwrap();
+
+    assert!(
+        model.report.lines().iter().any(|l| l.contains("non-finite")),
+        "{:?}",
+        model.report.lines()
+    );
+    assert_eq!(model.centers.data, oracle.centers.data);
+    assert_eq!(model.alpha, oracle.alpha);
+}
+
+#[test]
+fn nan_rows_fail_fast_by_default_with_row_index() {
+    let mut rng = Rng::new(25);
+    let data = synth::smooth_regression(&mut rng, 400, 3, 0.05);
+    let e = eng();
+    let plan = FaultPlan::new().at(1, FaultKind::NanRow, 1);
+    let poisoned = FaultySource::new(Box::new(MemSource::new(data, 100)), plan);
+    let sanitized = SanitizeSource::new(Box::new(poisoned), NanPolicy::FailFast);
+    let err = fit_source(&e, Box::new(sanitized), &cfg(24, 6)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("non-finite value in row 100"), "{msg}");
+    assert!(msg.contains("nan-policy skip"), "{msg}");
+    // data corruption is fatal: the retry layer must not have retried it
+    assert!(msg.contains("not retried"), "{msg}");
+}
+
+#[test]
+fn truncated_chunks_are_caught_not_retried() {
+    // a short chunk breaks stream contiguity: downstream row accounting
+    // must fail loudly rather than fit on silently missing rows
+    let mut rng = Rng::new(26);
+    let data = synth::smooth_regression(&mut rng, 300, 3, 0.05);
+    let plan = FaultPlan::new().at(0, FaultKind::Truncated, 1);
+    let mut src = FaultySource::new(Box::new(MemSource::new(data, 100)), plan);
+    let err = collect(&mut src).unwrap_err();
+    assert!(format!("{err:#}").contains("contiguous"), "{err:#}");
+}

@@ -85,12 +85,14 @@ fn pallas_and_jnp_artifacts_agree() {
     let Ok(pal) = Engine::xla(EngineOptions {
         imp: Impl::Pallas,
         workers: 1,
+        ..Default::default()
     }) else {
         return;
     };
     let jnp = Engine::xla(EngineOptions {
         imp: Impl::Jnp,
         workers: 1,
+        ..Default::default()
     })
     .unwrap();
     let mut rng = Rng::new(12);
