@@ -11,8 +11,10 @@ mod common;
 use falkon::bench::{fmt_secs, time_fn, write_json, BenchArgs, Table};
 use falkon::data::synth;
 use falkon::falkon::{fit, FalkonConfig};
-use falkon::kernels::Kernel;
+use falkon::kernels::{tol, Kernel};
 use falkon::linalg::mat::Mat;
+use falkon::linalg::mat32::{Dtype, MatF32};
+use falkon::linalg::vec_ops::max_abs_diff;
 use falkon::runtime::{Engine, EngineOptions, Impl};
 use falkon::util::json::Value;
 use falkon::util::rng::Rng;
@@ -143,13 +145,84 @@ fn main() -> anyhow::Result<()> {
         wtable.print();
     }
 
+    // mixed-precision leg: rust plans with f32 row-block storage against
+    // the f64 baseline — speedup from halved panel-stream bandwidth, and
+    // max-abs-error against the f64 oracle **on the same rounded values**
+    // asserted within the documented tolerance model (kernels::tol), not
+    // an ad-hoc epsilon. CI gates on the JSON: best speedup ≥ 1.3x.
+    let mut mixed_records: Vec<Value> = Vec::new();
+    {
+        let mut mtable = Table::new(
+            "P1c: mixed precision (rust engine, f32 storage / f64 accumulation)",
+            &["kernel", "d", "M", "t/apply f64", "t/apply f32", "speedup", "max|err|", "bound"],
+        );
+        for (d, m) in [(10usize, 1024usize.min(n / 2)), (128, 1024usize.min(n / 2))] {
+            let mut rng = Rng::new(84);
+            let x = Mat::from_vec(n, d, rng.normals(n * d));
+            let c = x.select_rows(&rng.choose(n, m));
+            let u = rng.normals(m);
+            let eng64 = Engine::rust();
+            let eng32 = Engine::rust_with(EngineOptions {
+                dtype: Dtype::F32,
+                ..Default::default()
+            });
+            let plan64 = eng64.matvec_plan(Kernel::Gaussian, &x, &c, 1.0)?;
+            let plan32 = eng32.matvec_plan(Kernel::Gaussian, &x, &c, 1.0)?;
+            let s64 = time_fn(1, reps, || {
+                let _ = plan64.apply(&u, None).unwrap();
+            });
+            let s32 = time_fn(1, reps, || {
+                let _ = plan32.apply(&u, None).unwrap();
+            });
+            // accuracy: compare against the f64 plan rebuilt on the
+            // rounded-and-widened inputs, so storage rounding (measured
+            // by the e2e RMSE tests) is excluded and the bound applies
+            let xr = MatF32::from_mat(&x);
+            let cr = MatF32::from_mat(&c);
+            let oracle = eng64.matvec_plan(Kernel::Gaussian, &xr.to_mat(), &cr.to_mat(), 1.0)?;
+            let want = oracle.apply(&u, None)?;
+            let got = plan32.apply(&u, None)?;
+            let err = max_abs_diff(&got, &want);
+            let bound = tol::matvec_bound(Kernel::Gaussian, &xr, &cr, x.rows, &u, None);
+            anyhow::ensure!(
+                err <= bound,
+                "f32 apply error {err:.3e} above the documented bound {bound:.3e} (d={d} M={m})"
+            );
+            let speedup = s64.median / s32.median;
+            mtable.row(&[
+                "gaussian".into(),
+                format!("{d}"),
+                format!("{m}"),
+                fmt_secs(s64.median),
+                fmt_secs(s32.median),
+                format!("{speedup:.2}x"),
+                format!("{err:.2e}"),
+                format!("{bound:.2e}"),
+            ]);
+            mixed_records.push(Value::obj(vec![
+                ("kernel", Value::str("gaussian")),
+                ("n", Value::num(n as f64)),
+                ("m", Value::num(m as f64)),
+                ("d", Value::num(d as f64)),
+                ("apply_f64", s64.to_json()),
+                ("apply_f32", s32.to_json()),
+                ("speedup", Value::num(speedup)),
+                ("max_abs_err", Value::num(err)),
+                ("err_bound", Value::num(bound)),
+                ("within_model", Value::Bool(err <= bound)),
+            ]));
+        }
+        mtable.print();
+    }
+
     let report = Value::obj(vec![
-        ("schema", Value::str("falkon/bench_matvec/v2")),
+        ("schema", Value::str("falkon/bench_matvec/v3")),
         ("n", Value::num(n as f64)),
         ("reps", Value::num(reps as f64)),
         ("smoke", Value::Bool(args.flag("--smoke"))),
         ("apply", Value::arr(apply_records)),
         ("workers_sweep", Value::arr(sweep_records)),
+        ("mixed", Value::arr(mixed_records)),
     ]);
     write_json(&json_path, &report)?;
     println!("\nwrote {json_path}");

@@ -13,7 +13,12 @@
 //!   path re-reads the shard every CG iteration — the I/O-for-memory
 //!   trade the paper's O(n) memory claim is about).
 //!
-//! `--inject-faults` adds a third leg: the same streamed fit through a
+//! A third leg re-encodes the shard as f32 (`--dtype f32` storage) and
+//! repeats the streamed fit at the same chunk-row budget: the gate is
+//! peak resident chunk bytes **exactly half** the f64 leg's, with
+//! predictions within storage-rounding distance of the in-memory fit.
+//!
+//! `--inject-faults` adds a fault leg: the same streamed fit through a
 //! deterministic [`FaultySource`] schedule of transient read faults. The
 //! retry layer must absorb every one of them — the gate is that the
 //! faulted coefficients are **bitwise identical** to the fault-free
@@ -175,6 +180,48 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // -- f32-storage leg: re-encode the shard at 4 bytes/element and run
+    //    the same streamed fit at the same chunk-row budget. The peak
+    //    resident chunk must be exactly half the f64 leg's, and the fit
+    //    must land within storage-rounding distance of the in-memory one
+    //    (the per-apply error is pinned by the kernels::tol property
+    //    tests; end-to-end the drift stays far below the noise floor) ----
+    let shard32_path = std::env::temp_dir()
+        .join(format!("falkon_bench_ooc_{}_f32.shard", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    {
+        let mut reencode = ShardSource::open(&shard_path, chunk_rows)?;
+        shard::write_source_dtype(
+            &shard32_path,
+            &mut reencode,
+            falkon::linalg::mat32::Dtype::F32,
+        )?;
+    }
+    let t_32 = Timer::start();
+    let src32 = ShardSource::open(&shard32_path, chunk_rows)?;
+    let (mut state32, y32) = prepare_source(&eng, Box::new(src32), &config)?;
+    let y32_offset = mean(&y32);
+    let y32c: Vec<f64> = y32.iter().map(|v| v - y32_offset).collect();
+    let (alpha32, cg32) = solve(&mut state32, &y32c, None)?;
+    let fit_f32_s = t_32.elapsed_s();
+    let resident32 = state32.plan.resident_x_bytes().unwrap_or(full_bytes);
+    anyhow::ensure!(
+        2 * resident32 == resident,
+        "f32 resident chunk bytes {resident32} not half the f64 leg's {resident}"
+    );
+    let model_f32 = FalkonModel {
+        config: config.clone(),
+        centers: state32.sel.c.clone(),
+        alpha: alpha32,
+        y_offset: y32_offset,
+        phases: state32.phases.clone(),
+        cg_iters: cg32.iters,
+        cg_residuals: cg32.residuals,
+        cg_stop: cg32.stop,
+        report: state32.report.clone(),
+    };
+
     // -- agreement + residency gates --------------------------------------
     let p_mem = model_mem.predict(&eng, &data.x)?;
     let p_ooc = model_ooc.predict(&eng, &data.x)?;
@@ -186,6 +233,12 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(
         resident < full_bytes,
         "resident chunk bytes {resident} not below dataset bytes {full_bytes}"
+    );
+    let p_f32 = model_f32.predict(&eng, &data.x)?;
+    let pred_diff_f32 = max_abs_diff(&p_mem, &p_f32);
+    anyhow::ensure!(
+        pred_diff_f32 < 1e-2,
+        "f32-storage streamed fit drifted from in-memory: {pred_diff_f32}"
     );
 
     // -- bulk predict throughput ------------------------------------------
@@ -218,6 +271,13 @@ fn main() -> anyhow::Result<()> {
         format!("{rows_s_ooc:.0}"),
         format!("{} KiB", resident / 1024),
     ]);
+    table.row(&[
+        "sharded f32".into(),
+        fmt_secs(fit_f32_s),
+        "-".into(),
+        "-".into(),
+        format!("{} KiB", resident32 / 1024),
+    ]);
     if inject_faults {
         table.row(&[
             "sharded+faults".into(),
@@ -230,12 +290,14 @@ fn main() -> anyhow::Result<()> {
     table.print();
     println!(
         "\nn={n} d={d} M={m} t={t} chunk_rows={chunk_rows} | resident/full = {:.3}, \
-         pred diff = {pred_diff:.2e}",
-        resident as f64 / full_bytes as f64
+         pred diff = {pred_diff:.2e} | f32 resident/f64 resident = {:.3}, \
+         f32 pred diff = {pred_diff_f32:.2e}",
+        resident as f64 / full_bytes as f64,
+        resident32 as f64 / resident as f64
     );
 
     let report = Value::obj(vec![
-        ("schema", Value::str("falkon/bench_outofcore/v1")),
+        ("schema", Value::str("falkon/bench_outofcore/v2")),
         ("smoke", Value::Bool(smoke)),
         ("n", Value::num(n as f64)),
         ("d", Value::num(d as f64)),
@@ -261,6 +323,13 @@ fn main() -> anyhow::Result<()> {
         ("predict_rows_s_in_memory", Value::num(rows_s_mem)),
         ("predict_rows_s_outofcore", Value::num(rows_s_ooc)),
         ("pred_max_abs_diff", Value::num(pred_diff)),
+        ("f32_resident_chunk_bytes", Value::num(resident32 as f64)),
+        (
+            "f32_resident_ratio_vs_f64",
+            Value::num(resident32 as f64 / resident as f64),
+        ),
+        ("fit_f32_s", Value::num(fit_f32_s)),
+        ("f32_pred_max_abs_diff", Value::num(pred_diff_f32)),
         ("inject_faults", Value::Bool(inject_faults)),
         ("injected_faults", Value::num(injected_faults as f64)),
         ("fit_faulted_s", Value::num(fit_faulted_s)),
@@ -268,5 +337,6 @@ fn main() -> anyhow::Result<()> {
     write_json(&json_path, &report)?;
     println!("wrote {json_path}");
     let _ = std::fs::remove_file(&shard_path);
+    let _ = std::fs::remove_file(&shard32_path);
     Ok(())
 }

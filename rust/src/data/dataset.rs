@@ -150,6 +150,25 @@ impl ZScore {
         }
     }
 
+    /// Dtype-aware [`ZScore::apply_mut`]: f64 blocks normalize in place;
+    /// f32 blocks normalize through f64 intermediates (the stats are f64)
+    /// and round once back to storage.
+    pub fn apply_block(&self, x: &mut crate::linalg::mat32::XBlock) {
+        use crate::linalg::mat32::XBlock;
+        match x {
+            XBlock::F64(m) => self.apply_mut(m),
+            XBlock::F32(m) => {
+                assert_eq!(m.cols, self.mean.len(), "zscore dim mismatch");
+                for i in 0..m.rows {
+                    let row = m.row_mut(i);
+                    for j in 0..row.len() {
+                        row[j] = ((row[j] as f64 - self.mean[j]) / self.std[j]) as f32;
+                    }
+                }
+            }
+        }
+    }
+
     /// Fit on train, transform both in place.
     pub fn normalize(train: &mut Dataset, test: &mut Dataset) -> ZScore {
         let z = ZScore::fit(&train.x);

@@ -14,4 +14,4 @@ pub mod stream_text;
 pub mod synth;
 
 pub use dataset::{Dataset, ZScore};
-pub use source::{Chunk, DataSource, MemSource, NanPolicy, SanitizeSource, ZScoreSource};
+pub use source::{CastSource, Chunk, DataSource, MemSource, NanPolicy, SanitizeSource, ZScoreSource};

@@ -6,8 +6,18 @@
 //! ```text
 //! header:  magic "FALKSHRD" | version u32 | flags u32 | d u64
 //!          | n_classes u64 | name_len u32 | name (utf-8)
-//! records: rows u64 | x rows·d f64 | y rows f64 | labels rows u64 (flag bit 0)
+//! records: rows u64 | x rows·d f64|f32 | y rows f64 | labels rows u64
 //! ```
+//!
+//! `flags` bit 0 ([`FLAG_LABELS`]) marks a labels block per record;
+//! bit 1 ([`FLAG_F32`]) marks f32 feature storage — the x payload is
+//! 4 bytes/element and [`ShardSource`] serves `Dtype::F32` chunks
+//! straight from disk, so an out-of-core sweep over an f32 shard is
+//! half the bytes end to end. Targets (`y`) and labels always stay
+//! f64/u64: they are O(rows), not O(rows·d), and the CG right-hand
+//! side must not lose precision. Readers reject any flag bit they do
+//! not know (a shard written by a newer falkon must fail loudly, not
+//! be misread at the wrong record stride).
 //!
 //! Records are appended as data arrives, so a conversion from a text
 //! stream is single-pass and never needs the row count up front. The
@@ -22,13 +32,19 @@
 use super::dataset::Dataset;
 use super::source::{Chunk, DataSource, DEFAULT_CHUNK_ROWS};
 use crate::linalg::mat::Mat;
+use crate::linalg::mat32::{Dtype, MatF32, XBlock};
 use anyhow::{Context, Result};
 use std::fs::File;
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 
 const MAGIC: &[u8; 8] = b"FALKSHRD";
 const VERSION: u32 = 1;
-const FLAG_LABELS: u32 = 1;
+/// Header flag bit 0: each record carries a labels block.
+pub const FLAG_LABELS: u32 = 1;
+/// Header flag bit 1: x payloads are f32 (4 bytes/element).
+pub const FLAG_F32: u32 = 2;
+/// Every flag bit this reader understands; anything else is rejected.
+const KNOWN_FLAGS: u32 = FLAG_LABELS | FLAG_F32;
 
 fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
@@ -86,6 +102,15 @@ fn read_u64s(r: &mut impl Read, count: usize) -> Result<Vec<u64>> {
         .collect())
 }
 
+fn read_f32s(r: &mut impl Read, count: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; count * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
 /// Incremental shard writer: create with the schema, append row blocks
 /// as they arrive, `finish` to flush. Single-pass — the total row count
 /// is never needed up front.
@@ -93,10 +118,12 @@ pub struct ShardWriter {
     w: BufWriter<File>,
     d: usize,
     has_labels: bool,
+    dtype: Dtype,
     rows: usize,
 }
 
 impl ShardWriter {
+    /// Create an f64-storage shard (the default format).
     pub fn create(
         path: &str,
         d: usize,
@@ -104,12 +131,31 @@ impl ShardWriter {
         has_labels: bool,
         name: &str,
     ) -> Result<ShardWriter> {
+        ShardWriter::create_with_dtype(path, d, n_classes, has_labels, name, Dtype::F64)
+    }
+
+    /// Create a shard with an explicit feature storage format. `F32`
+    /// sets [`FLAG_F32`] and serializes x payloads at 4 bytes/element —
+    /// incoming f64 blocks are rounded once at write time, which is how
+    /// `falkon convert --dtype f32` produces half-size shards.
+    pub fn create_with_dtype(
+        path: &str,
+        d: usize,
+        n_classes: usize,
+        has_labels: bool,
+        name: &str,
+        dtype: Dtype,
+    ) -> Result<ShardWriter> {
         anyhow::ensure!(d > 0, "shard needs at least one feature");
         let f = File::create(path).with_context(|| format!("creating shard {path}"))?;
         let mut w = BufWriter::new(f);
         w.write_all(MAGIC)?;
         write_u32(&mut w, VERSION)?;
-        write_u32(&mut w, if has_labels { FLAG_LABELS } else { 0 })?;
+        let mut flags = if has_labels { FLAG_LABELS } else { 0 };
+        if dtype == Dtype::F32 {
+            flags |= FLAG_F32;
+        }
+        write_u32(&mut w, flags)?;
         write_u64(&mut w, d as u64)?;
         write_u64(&mut w, n_classes as u64)?;
         let name_bytes = name.as_bytes();
@@ -119,34 +165,85 @@ impl ShardWriter {
             w,
             d,
             has_labels,
+            dtype,
             rows: 0,
         })
     }
 
-    /// Append one record. Empty blocks are skipped (a record's row count
-    /// must be positive so the reader's record scan terminates cleanly).
+    /// Append one record from an `f64` block (cast to the shard dtype on
+    /// write). Empty blocks are skipped (a record's row count must be
+    /// positive so the reader's record scan terminates cleanly).
     pub fn write_chunk(&mut self, x: &Mat, y: &[f64], labels: Option<&[usize]>) -> Result<()> {
-        anyhow::ensure!(x.cols == self.d, "chunk d {} != shard d {}", x.cols, self.d);
-        anyhow::ensure!(x.rows == y.len(), "chunk x rows {} != y len {}", x.rows, y.len());
+        self.write_record(x.rows, x.cols, y, labels, |buf, dtype| match dtype {
+            Dtype::F64 => {
+                for &v in &x.data {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Dtype::F32 => {
+                for &v in &x.data {
+                    buf.extend_from_slice(&(v as f32).to_le_bytes());
+                }
+            }
+        })
+    }
+
+    /// Append one record from either storage format. An f32 block going
+    /// into an f32 shard is serialized bit-exactly (no widen/narrow
+    /// round trip); mixed cases cast once at write time.
+    pub fn write_chunk_block(
+        &mut self,
+        x: &XBlock,
+        y: &[f64],
+        labels: Option<&[usize]>,
+    ) -> Result<()> {
+        match x {
+            XBlock::F64(m) => self.write_chunk(m, y, labels),
+            XBlock::F32(m) => {
+                self.write_record(m.rows, m.cols, y, labels, |buf, dtype| match dtype {
+                    Dtype::F64 => {
+                        for &v in &m.data {
+                            buf.extend_from_slice(&(v as f64).to_le_bytes());
+                        }
+                    }
+                    Dtype::F32 => {
+                        for &v in &m.data {
+                            buf.extend_from_slice(&v.to_le_bytes());
+                        }
+                    }
+                })
+            }
+        }
+    }
+
+    fn write_record(
+        &mut self,
+        rows: usize,
+        cols: usize,
+        y: &[f64],
+        labels: Option<&[usize]>,
+        push_x: impl FnOnce(&mut Vec<u8>, Dtype),
+    ) -> Result<()> {
+        anyhow::ensure!(cols == self.d, "chunk d {} != shard d {}", cols, self.d);
+        anyhow::ensure!(rows == y.len(), "chunk x rows {} != y len {}", rows, y.len());
         anyhow::ensure!(
             labels.is_some() == self.has_labels,
             "chunk labels presence does not match the shard schema"
         );
-        if x.rows == 0 {
+        if rows == 0 {
             return Ok(());
         }
         if let Some(l) = labels {
-            anyhow::ensure!(l.len() == x.rows, "labels len != rows");
+            anyhow::ensure!(l.len() == rows, "labels len != rows");
         }
         // serialize the record into one buffer and write it in a single
         // call — per-value write_all through the BufWriter dominates
         // convert throughput on large chunks
-        let payload = (x.data.len() + y.len() + labels.map_or(0, |l| l.len())) * 8;
+        let payload =
+            rows * cols * self.dtype.size_of() + (y.len() + labels.map_or(0, |l| l.len())) * 8;
         let mut buf = Vec::with_capacity(8 + payload);
-        buf.extend_from_slice(&(x.rows as u64).to_le_bytes());
-        for &v in &x.data {
-            buf.extend_from_slice(&v.to_le_bytes());
-        }
+        buf.extend_from_slice(&(rows as u64).to_le_bytes());
+        push_x(&mut buf, self.dtype);
         for &v in y {
             buf.extend_from_slice(&v.to_le_bytes());
         }
@@ -156,7 +253,7 @@ impl ShardWriter {
             }
         }
         self.w.write_all(&buf)?;
-        self.rows += x.rows;
+        self.rows += rows;
         Ok(())
     }
 
@@ -184,28 +281,48 @@ pub fn write_dataset(path: &str, data: &Dataset) -> Result<()> {
 
 /// Stream-convert any [`DataSource`] into a shard, one record per source
 /// chunk — single pass, O(chunk) memory. Returns the rows written.
-/// Transient source errors are retried with bounded backoff; a retried
-/// read re-delivers the suppressed chunk, so the shard is identical to a
-/// fault-free conversion.
+/// The shard's storage format follows the first chunk's dtype (use
+/// [`write_source_dtype`] to force one). Transient source errors are
+/// retried with bounded backoff; a retried read re-delivers the
+/// suppressed chunk, so the shard is identical to a fault-free
+/// conversion.
 pub fn write_source(path: &str, source: &mut dyn DataSource) -> Result<usize> {
+    write_source_impl(path, source, None)
+}
+
+/// [`write_source`] with an explicit storage format — the engine of
+/// `falkon convert --dtype f32` (each f64 chunk is rounded once on its
+/// way to disk; the shard is half the size and streams as f32).
+pub fn write_source_dtype(path: &str, source: &mut dyn DataSource, dtype: Dtype) -> Result<usize> {
+    write_source_impl(path, source, Some(dtype))
+}
+
+fn write_source_impl(
+    path: &str,
+    source: &mut dyn DataSource,
+    dtype: Option<Dtype>,
+) -> Result<usize> {
     let retry = crate::util::fault::RetryPolicy::default();
     retry.run("convert: reset", || source.reset())?;
-    // peek the first chunk to learn whether the stream carries labels
-    // (the schema flag lives in the header)
+    // peek the first chunk to learn whether the stream carries labels and
+    // (absent an override) which storage format to use — both live in
+    // the header, which must be written before any record
     let first = retry.run("convert: next_chunk", || source.next_chunk())?;
     let has_labels = first.as_ref().map(|c| c.labels.is_some()).unwrap_or(false);
-    let mut w = ShardWriter::create(
+    let dtype = dtype.or_else(|| first.as_ref().map(|c| c.dtype())).unwrap_or_default();
+    let mut w = ShardWriter::create_with_dtype(
         path,
         source.d(),
         source.n_classes(),
         has_labels,
         source.name(),
+        dtype,
     )?;
     if let Some(chunk) = first {
-        w.write_chunk(&chunk.x, &chunk.y, chunk.labels.as_deref())?;
+        w.write_chunk_block(&chunk.x, &chunk.y, chunk.labels.as_deref())?;
     }
     while let Some(chunk) = retry.run("convert: next_chunk", || source.next_chunk())? {
-        w.write_chunk(&chunk.x, &chunk.y, chunk.labels.as_deref())?;
+        w.write_chunk_block(&chunk.x, &chunk.y, chunk.labels.as_deref())?;
     }
     w.finish()
 }
@@ -226,6 +343,7 @@ pub struct ShardSource {
     d: usize,
     n_classes: usize,
     has_labels: bool,
+    dtype: Dtype,
     name: String,
     records: Vec<RecordMeta>,
     n: usize,
@@ -245,7 +363,23 @@ impl ShardSource {
         let version = read_u32(&mut file)?;
         anyhow::ensure!(version == VERSION, "unsupported shard version {version}");
         let flags = read_u32(&mut file)?;
+        // unknown flag bits change the record layout (FLAG_F32 already
+        // does: 4-byte x elements); a reader that ignored them would scan
+        // record headers at the wrong stride and serve garbage rows.
+        // Fatal, not transient — retrying cannot fix a newer format.
+        if flags & !KNOWN_FLAGS != 0 {
+            return Err(crate::util::fault::FaultError::fatal(format!(
+                "shard {path} has unknown flag bits {:#x} (known mask {KNOWN_FLAGS:#x}) — \
+                 written by a newer falkon?",
+                flags & !KNOWN_FLAGS
+            )));
+        }
         let has_labels = flags & FLAG_LABELS != 0;
+        let dtype = if flags & FLAG_F32 != 0 {
+            Dtype::F32
+        } else {
+            Dtype::F64
+        };
         let d = read_u64(&mut file)? as usize;
         anyhow::ensure!(d > 0, "shard has zero feature dim");
         let n_classes = read_u64(&mut file)? as usize;
@@ -257,7 +391,7 @@ impl ShardSource {
         // record scan: headers only, payloads seeked over. `len` bounds
         // every record end, so a corrupt row count (however large) fails
         // the truncation check instead of overflowing the seek offset.
-        let row_bytes = (d + 1 + usize::from(has_labels)) as u64 * 8;
+        let row_bytes = (d * dtype.size_of() + (1 + usize::from(has_labels)) * 8) as u64;
         let len = file.metadata()?.len();
         let mut records = Vec::new();
         let mut n = 0usize;
@@ -282,6 +416,7 @@ impl ShardSource {
             d,
             n_classes,
             has_labels,
+            dtype,
             name,
             records,
             n,
@@ -290,6 +425,11 @@ impl ShardSource {
             row_in_rec: 0,
             row_global: 0,
         })
+    }
+
+    /// Feature storage format of this shard ([`FLAG_F32`] ⇒ `F32`).
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
     }
 }
 
@@ -319,19 +459,30 @@ impl DataSource for ShardSource {
         };
         let take = (rec_rows - self.row_in_rec).min(self.chunk_rows);
         let base = off + 8; // past the rows header
-        // x block
-        self.file
-            .seek(SeekFrom::Start(base + (self.row_in_rec * self.d * 8) as u64))?;
-        let xdata = read_f64s(&mut self.file, take * self.d)?;
-        // y block
+        let esize = self.dtype.size_of();
+        // x block (element width follows the header dtype flag)
         self.file.seek(SeekFrom::Start(
-            base + (rec_rows * self.d * 8) as u64 + (self.row_in_rec * 8) as u64,
+            base + (self.row_in_rec * self.d * esize) as u64,
         ))?;
+        let x = match self.dtype {
+            Dtype::F64 => {
+                let xdata = read_f64s(&mut self.file, take * self.d)?;
+                XBlock::F64(Mat::from_vec(take, self.d, xdata))
+            }
+            Dtype::F32 => {
+                let xdata = read_f32s(&mut self.file, take * self.d)?;
+                XBlock::F32(MatF32::from_vec(take, self.d, xdata))
+            }
+        };
+        // y block (always f64, after the full x payload of the record)
+        let y_base = base + (rec_rows * self.d * esize) as u64;
+        self.file
+            .seek(SeekFrom::Start(y_base + (self.row_in_rec * 8) as u64))?;
         let y = read_f64s(&mut self.file, take)?;
         // labels block
         let labels = if self.has_labels {
             self.file.seek(SeekFrom::Start(
-                base + (rec_rows * (self.d + 1) * 8) as u64 + (self.row_in_rec * 8) as u64,
+                y_base + (rec_rows * 8) as u64 + (self.row_in_rec * 8) as u64,
             ))?;
             Some(
                 read_u64s(&mut self.file, take)?
@@ -349,12 +500,7 @@ impl DataSource for ShardSource {
             self.rec += 1;
             self.row_in_rec = 0;
         }
-        Ok(Some(Chunk {
-            start,
-            x: Mat::from_vec(take, self.d, xdata),
-            y,
-            labels,
-        }))
+        Ok(Some(Chunk { start, x, y, labels }))
     }
 
     fn chunk_rows(&self) -> usize {
@@ -480,6 +626,114 @@ mod tests {
         std::fs::write(&path, &full[..full.len() - 16]).unwrap();
         assert!(ShardSource::open(&path, 64).is_err());
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn f32_shard_roundtrips_rounded_values_at_half_size() {
+        let data = synth::smooth_regression(&mut Rng::new(11), 300, 6, 0.05);
+        let p64 = tmp("d64");
+        let p32 = tmp("d32");
+        write_source(&p64, &mut MemSource::new(data.clone(), 64)).unwrap();
+        write_source_dtype(&p32, &mut MemSource::new(data.clone(), 64), Dtype::F32).unwrap();
+        // the x payload dominates, so the f32 shard is close to half size
+        let s64 = std::fs::metadata(&p64).unwrap().len() as f64;
+        let s32 = std::fs::metadata(&p32).unwrap().len() as f64;
+        assert!(s32 < 0.7 * s64, "f32 shard {s32}B vs f64 {s64}B");
+        let mut src = ShardSource::open(&p32, 77).unwrap();
+        assert_eq!(src.dtype(), Dtype::F32);
+        assert_eq!(src.len_hint(), Some(300));
+        src.reset().unwrap();
+        let c = src.next_chunk().unwrap().unwrap();
+        assert_eq!(c.dtype(), Dtype::F32);
+        // chunks stop at record boundaries (64-row records here)
+        assert_eq!(c.x_bytes(), 64 * 6 * 4, "4 bytes/element resident");
+        // values are the f64 originals rounded exactly once; y bit-exact
+        let back = collect(&mut src).unwrap();
+        let want: Vec<f64> = data.x.data.iter().map(|&v| (v as f32) as f64).collect();
+        assert_eq!(back.x.data, want);
+        assert_eq!(back.y, data.y);
+        let _ = std::fs::remove_file(&p64);
+        let _ = std::fs::remove_file(&p32);
+    }
+
+    #[test]
+    fn f32_chunks_serialize_bit_exactly_into_f32_shards() {
+        // an f32 source converted with no override keeps its dtype and
+        // the payload round-trips without a widen/narrow cycle
+        let data = synth::blobs(&mut Rng::new(12), 80, 4, 3);
+        let path = tmp("f32auto");
+        let mut src = MemSource::with_dtype(data.clone(), 33, Dtype::F32);
+        assert_eq!(write_source(&path, &mut src).unwrap(), 80);
+        let mut shard = ShardSource::open(&path, 19).unwrap();
+        assert_eq!(shard.dtype(), Dtype::F32);
+        let back = collect(&mut shard).unwrap();
+        let want: Vec<f64> = data.x.data.iter().map(|&v| (v as f32) as f64).collect();
+        assert_eq!(back.x.data, want);
+        assert_eq!(back.labels, data.labels);
+        // widening an f32 shard back to f64 records is also lossless
+        let p64 = tmp("widen");
+        let mut up = ShardSource::open(&path, 19).unwrap();
+        write_source_dtype(&p64, &mut up, Dtype::F64).unwrap();
+        let wide = load(&p64).unwrap();
+        assert_eq!(wide.x.data, want);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&p64);
+    }
+
+    #[test]
+    fn rejects_unknown_flag_bits_fatally() {
+        // a shard from a future format version must fail loudly at open,
+        // not be scanned at the wrong record stride. flags is the u32 at
+        // bytes 12..16 (after magic + version).
+        let data = synth::smooth_regression(&mut Rng::new(13), 20, 3, 0.05);
+        let path = tmp("flags");
+        write_dataset(&path, &data).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[12] |= 0x4; // unknown bit 2
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ShardSource::open(&path, 64).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown flag bits"), "{msg}");
+        assert_eq!(
+            crate::util::fault::classify(&err),
+            crate::util::fault::ErrorClass::Fatal,
+            "unknown-format errors must never be retried"
+        );
+        // known bits still open fine after restoring
+        bytes[12] &= !0x4;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ShardSource::open(&path, 64).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn f32_reader_rechunks_at_any_budget() {
+        check("f32 shard rechunk", 8, |g| {
+            let n = g.usize_in(1, 150);
+            let d = g.usize_in(1, 7);
+            let mut rng = Rng::new(g.case as u64 + 500);
+            let data = crate::data::Dataset::new_regression(
+                "p32",
+                crate::linalg::mat::Mat::from_vec(n, d, rng.normals(n * d)),
+                rng.normals(n),
+            );
+            let rec_rows = g.usize_in(1, n + 10);
+            let budget = g.usize_in(1, n + 10);
+            let path = tmp(&format!("prop32_{}", g.case));
+            let mut src = MemSource::with_dtype(data.clone(), rec_rows, Dtype::F32);
+            assert_eq!(write_source(&path, &mut src).unwrap(), n);
+            let mut shard = ShardSource::open(&path, budget).unwrap();
+            let back = collect(&mut shard).unwrap();
+            let want: Vec<f64> = data.x.data.iter().map(|&v| (v as f32) as f64).collect();
+            assert_eq!(back.x.data, want, "x mismatch");
+            assert_eq!(back.y, data.y, "y mismatch");
+            shard.reset().unwrap();
+            while let Some(c) = shard.next_chunk().unwrap() {
+                assert!(c.rows() <= budget);
+                assert_eq!(c.dtype(), Dtype::F32);
+            }
+            let _ = std::fs::remove_file(&path);
+        });
     }
 
     #[test]

@@ -26,25 +26,38 @@
 
 use super::dataset::{Dataset, ZScore};
 use crate::linalg::mat::Mat;
+use crate::linalg::mat32::{Dtype, XBlock};
 use anyhow::Result;
 
-/// Default rows per chunk (8192 rows × d features × 8 bytes resident).
+/// Default rows per chunk (8192 rows × d features × 8 bytes resident at
+/// f64 storage; half that under `--dtype f32`).
 pub const DEFAULT_CHUNK_ROWS: usize = 8192;
 
-/// Rows that fit a byte budget at feature dimension `d` (at least 1).
+/// Rows that fit a byte budget at feature dimension `d` (at least 1),
+/// assuming `f64` feature storage. Dtype-aware callers should use
+/// [`rows_for_budget_dtype`].
 pub fn rows_for_budget(budget_bytes: usize, d: usize) -> usize {
-    (budget_bytes / (8 * d.max(1))).max(1)
+    rows_for_budget_dtype(budget_bytes, d, Dtype::F64)
+}
+
+/// Rows that fit a byte budget at feature dimension `d` and storage
+/// format `dtype` (at least 1) — f32 storage fits twice the rows of f64
+/// in the same budget.
+pub fn rows_for_budget_dtype(budget_bytes: usize, d: usize, dtype: Dtype) -> usize {
+    (budget_bytes / (dtype.size_of() * d.max(1))).max(1)
 }
 
 /// One resident row block of a streamed dataset. `start` is the global
 /// index of the first row; consecutive chunks of a sweep are contiguous
-/// (`next.start == prev.start + prev.x.rows`).
+/// (`next.start == prev.start + prev.rows()`). Features are held in
+/// either storage format ([`XBlock`]); targets/labels stay `f64`/`usize`
+/// — they are O(rows), not O(rows × d).
 #[derive(Debug, Clone)]
 pub struct Chunk {
     /// global index of row 0 of this chunk
     pub start: usize,
-    /// `rows × d` features
-    pub x: Mat,
+    /// `rows × d` features, f64 or f32 storage
+    pub x: XBlock,
     /// regression target / ±1 label / class index per row
     pub y: Vec<f64>,
     /// class indices (multiclass sources only)
@@ -53,12 +66,18 @@ pub struct Chunk {
 
 impl Chunk {
     pub fn rows(&self) -> usize {
-        self.x.rows
+        self.x.rows()
     }
 
-    /// Resident feature bytes of this chunk (the out-of-core memory unit).
+    /// Resident feature bytes of this chunk (the out-of-core memory
+    /// unit) — dtype-aware: 8 bytes/element for f64 storage, 4 for f32.
     pub fn x_bytes(&self) -> usize {
-        self.x.data.len() * std::mem::size_of::<f64>()
+        self.x.bytes()
+    }
+
+    /// Storage format of this chunk's features.
+    pub fn dtype(&self) -> Dtype {
+        self.x.dtype()
     }
 }
 
@@ -114,7 +133,7 @@ pub fn collect(source: &mut dyn DataSource) -> Result<Dataset> {
     let mut any_labels = false;
     while let Some(chunk) = source.next_chunk()? {
         anyhow::ensure!(chunk.start == y.len(), "source chunks must be contiguous");
-        xdata.extend_from_slice(&chunk.x.data);
+        chunk.x.extend_f64(&mut xdata);
         y.extend_from_slice(&chunk.y);
         if let Some(l) = &chunk.labels {
             any_labels = true;
@@ -145,14 +164,22 @@ pub fn collect(source: &mut dyn DataSource) -> Result<Dataset> {
 pub struct MemSource {
     data: Dataset,
     chunk_rows: usize,
+    dtype: Dtype,
     pos: usize,
 }
 
 impl MemSource {
     pub fn new(data: Dataset, chunk_rows: usize) -> MemSource {
+        MemSource::with_dtype(data, chunk_rows, Dtype::F64)
+    }
+
+    /// In-memory source emitting chunks in the given storage format (the
+    /// `F32` arm rounds each chunk's features once at emission).
+    pub fn with_dtype(data: Dataset, chunk_rows: usize, dtype: Dtype) -> MemSource {
         MemSource {
             data,
             chunk_rows: chunk_rows.max(1),
+            dtype,
             pos: 0,
         }
     }
@@ -187,7 +214,7 @@ impl DataSource for MemSource {
         self.pos = end;
         Ok(Some(Chunk {
             start,
-            x: self.data.x.slice_rows(start, end),
+            x: XBlock::from_mat_dtype(self.data.x.slice_rows(start, end), self.dtype),
             y: self.data.y[start..end].to_vec(),
             labels: self.data.labels.as_ref().map(|l| l[start..end].to_vec()),
         }))
@@ -239,7 +266,7 @@ impl DataSource for ZScoreSource {
             Some(c) => c,
             None => return Ok(None),
         };
-        self.z.apply_mut(&mut chunk.x);
+        self.z.apply_block(&mut chunk.x);
         Ok(Some(chunk))
     }
 
@@ -308,7 +335,7 @@ impl SanitizeSource {
 }
 
 fn row_is_finite(chunk: &Chunk, i: usize) -> bool {
-    chunk.y[i].is_finite() && chunk.x.row(i).iter().all(|v| v.is_finite())
+    chunk.y[i].is_finite() && chunk.x.row_is_finite(i)
 }
 
 impl DataSource for SanitizeSource {
@@ -358,12 +385,12 @@ impl DataSource for SanitizeSource {
                     if keep.is_empty() {
                         continue; // whole chunk dropped; pull the next one
                     }
-                    let d = chunk.x.cols;
-                    let mut xdata = Vec::with_capacity(keep.len() * d);
+                    // select_rows preserves the chunk's storage format,
+                    // so a sanitized f32 stream stays f32
+                    let x = chunk.x.select_rows(&keep);
                     let mut y = Vec::with_capacity(keep.len());
                     let mut labels = chunk.labels.as_ref().map(|_| Vec::with_capacity(keep.len()));
                     for &i in &keep {
-                        xdata.extend_from_slice(chunk.x.row(i));
                         y.push(chunk.y[i]);
                         if let (Some(out), Some(src)) = (labels.as_mut(), chunk.labels.as_ref()) {
                             out.push(src[i]);
@@ -371,12 +398,7 @@ impl DataSource for SanitizeSource {
                     }
                     let start = self.emitted;
                     self.emitted += keep.len();
-                    return Ok(Some(Chunk {
-                        start,
-                        x: Mat::from_vec(keep.len(), d, xdata),
-                        y,
-                        labels,
-                    }));
+                    return Ok(Some(Chunk { start, x, y, labels }));
                 }
             }
         }
@@ -399,6 +421,59 @@ impl DataSource for SanitizeSource {
     }
 }
 
+/// Dtype adapter: re-emits every chunk of the wrapped source in a target
+/// storage format, so `--dtype f32` works over any backend (text streams,
+/// shards, in-memory) without each of them knowing about casting. Chunks
+/// already in the target format pass through untouched; f64→f32 rounds
+/// each feature once (the only lossy step of the mixed-precision path).
+pub struct CastSource {
+    inner: Box<dyn DataSource>,
+    dtype: Dtype,
+}
+
+impl CastSource {
+    pub fn new(inner: Box<dyn DataSource>, dtype: Dtype) -> CastSource {
+        CastSource { inner, dtype }
+    }
+}
+
+impl DataSource for CastSource {
+    fn d(&self) -> usize {
+        self.inner.d()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.inner.len_hint()
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.inner.reset()
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<Chunk>> {
+        Ok(self.inner.next_chunk()?.map(|mut c| {
+            c.x = c.x.into_dtype(self.dtype);
+            c
+        }))
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.inner.chunk_rows()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.inner.n_classes()
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn skipped_rows(&self) -> usize {
+        self.inner.skipped_rows()
+    }
+}
+
 impl ZScore {
     /// Fit per-feature mean/std in one streaming pass (Welford's update,
     /// numerically stable at any n) — the out-of-core counterpart of
@@ -410,10 +485,11 @@ impl ZScore {
         let mut n = 0.0f64;
         let mut mean = vec![0.0f64; d];
         let mut m2 = vec![0.0f64; d];
+        let mut row = vec![0.0f64; d];
         while let Some(chunk) = source.next_chunk()? {
-            for i in 0..chunk.x.rows {
+            for i in 0..chunk.rows() {
                 n += 1.0;
-                let row = chunk.x.row(i);
+                chunk.x.row_f64_into(i, &mut row);
                 for j in 0..d {
                     let delta = row[j] - mean[j];
                     mean[j] += delta / n;
@@ -589,6 +665,123 @@ mod tests {
         }
         assert_eq!(seen, 20);
         assert_eq!(src.skipped_rows(), 10);
+    }
+
+    #[test]
+    fn f32_mem_source_halves_bytes_and_rounds_once() {
+        let data = toy(100);
+        let mut src = MemSource::with_dtype(data.clone(), 33, Dtype::F32);
+        src.reset().unwrap();
+        let mut widened: Vec<f64> = Vec::new();
+        while let Some(c) = src.next_chunk().unwrap() {
+            assert_eq!(c.dtype(), Dtype::F32);
+            assert_eq!(c.x_bytes(), c.rows() * 4 * 4, "4 bytes/element");
+            c.x.extend_f64(&mut widened);
+        }
+        // every element is the f64 value rounded once to f32
+        let want: Vec<f64> = data.x.data.iter().map(|&v| (v as f32) as f64).collect();
+        assert_eq!(widened, want);
+    }
+
+    #[test]
+    fn cast_source_converts_either_way() {
+        let data = toy(60);
+        // f64 -> f32
+        let mut down = CastSource::new(Box::new(MemSource::new(data.clone(), 25)), Dtype::F32);
+        down.reset().unwrap();
+        let c = down.next_chunk().unwrap().unwrap();
+        assert_eq!(c.dtype(), Dtype::F32);
+        assert_eq!(c.x_bytes(), 25 * 4 * 4);
+        // f32 -> f64 widens exactly back to the rounded values
+        let mut up = CastSource::new(
+            Box::new(MemSource::with_dtype(data.clone(), 25, Dtype::F32)),
+            Dtype::F64,
+        );
+        let back = collect(&mut up).unwrap();
+        let want: Vec<f64> = data.x.data.iter().map(|&v| (v as f32) as f64).collect();
+        assert_eq!(back.x.data, want);
+        // identity cast passes chunks through untouched
+        let mut same = CastSource::new(Box::new(MemSource::new(data.clone(), 25)), Dtype::F64);
+        let same_back = collect(&mut same).unwrap();
+        assert_eq!(same_back.x.data, data.x.data);
+    }
+
+    #[test]
+    fn zscore_source_normalizes_f32_chunks_within_rounding() {
+        let data = toy(120);
+        let z = ZScore::fit(&data.x);
+        let want = z.apply(&data.x);
+        let (mean, std) = (z.mean.clone(), z.std.clone());
+        let mut src = ZScoreSource::new(
+            Box::new(MemSource::with_dtype(data, 31, Dtype::F32)),
+            z,
+        );
+        src.reset().unwrap();
+        let mut seen = 0;
+        while let Some(c) = src.next_chunk().unwrap() {
+            assert_eq!(c.dtype(), Dtype::F32, "zscore keeps the storage format");
+            for i in 0..c.rows() {
+                for j in 0..4 {
+                    let got = c.x.element(i, j);
+                    let w = want[(seen + i, j)];
+                    // storage rounding propagated through the affine map
+                    // (eps32·|x|/std) plus the rounding back to f32 storage
+                    // (eps32·|w|): |Δ| ≤ eps32·(|mean|/std + 2|w|)
+                    let eps32 = f32::EPSILON as f64;
+                    let tol = eps32 * (mean[j].abs() / std[j] + 2.0 * w.abs()) + 1e-9;
+                    assert!((got - w).abs() < tol, "({i},{j}): {got} vs {w}");
+                }
+            }
+            seen += c.rows();
+        }
+        assert_eq!(seen, 120);
+    }
+
+    #[test]
+    fn sanitize_skip_preserves_f32_dtype() {
+        let dirty = poison(toy(50), &[7, 8], false);
+        let mut src = SanitizeSource::new(
+            Box::new(MemSource::with_dtype(dirty, 20, Dtype::F32)),
+            NanPolicy::Skip,
+        );
+        src.reset().unwrap();
+        let mut seen = 0;
+        while let Some(c) = src.next_chunk().unwrap() {
+            assert_eq!(c.dtype(), Dtype::F32);
+            assert_eq!(c.start, seen);
+            seen += c.rows();
+        }
+        assert_eq!(seen, 48);
+        assert_eq!(src.skipped_rows(), 2);
+    }
+
+    #[test]
+    fn streaming_zscore_fit_handles_f32_chunks() {
+        // stats over an f32 stream = stats of the rounded values
+        let data = toy(200);
+        let mut rounded = data.clone();
+        for v in &mut rounded.x.data {
+            *v = (*v as f32) as f64;
+        }
+        let want = ZScore::fit(&rounded.x);
+        let mut src = MemSource::with_dtype(data, 37, Dtype::F32);
+        let got = ZScore::fit_source(&mut src).unwrap();
+        for j in 0..4 {
+            assert!((got.mean[j] - want.mean[j]).abs() < 1e-10, "mean {j}");
+            assert!((got.std[j] - want.std[j]).abs() < 1e-10, "std {j}");
+        }
+    }
+
+    #[test]
+    fn budget_helper_is_dtype_aware() {
+        // f32 fits exactly twice the rows of f64 in the same budget
+        assert_eq!(rows_for_budget_dtype(8 * 10 * 64, 10, Dtype::F32), 128);
+        assert_eq!(rows_for_budget_dtype(8 * 10 * 64, 10, Dtype::F64), 64);
+        assert_eq!(
+            rows_for_budget(8 * 10 * 64, 10),
+            rows_for_budget_dtype(8 * 10 * 64, 10, Dtype::F64)
+        );
+        assert_eq!(rows_for_budget_dtype(0, 10, Dtype::F32), 1);
     }
 
     #[test]

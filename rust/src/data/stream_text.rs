@@ -12,6 +12,7 @@
 
 use super::source::{Chunk, DataSource};
 use crate::linalg::mat::Mat;
+use crate::linalg::mat32::{Dtype, XBlock};
 use anyhow::{Context, Result};
 use std::fs::File;
 use std::io::{BufRead, BufReader};
@@ -25,12 +26,20 @@ pub struct LibsvmSource {
     d: usize,
     n: usize,
     chunk_rows: usize,
+    dtype: Dtype,
     reader: Option<BufReader<File>>,
     lineno: usize,
     row: usize,
 }
 
 impl LibsvmSource {
+    /// Emit chunks in the given storage format (parsing stays f64; the
+    /// `F32` arm rounds each chunk once at emission).
+    pub fn with_dtype(mut self, dtype: Dtype) -> LibsvmSource {
+        self.dtype = dtype;
+        self
+    }
+
     /// Open + validation scan. `dim = Some(d)` pins the feature count
     /// (indices beyond it error); `None` infers it as the max index seen.
     pub fn open(path: &str, dim: Option<usize>, chunk_rows: usize) -> Result<LibsvmSource> {
@@ -74,6 +83,7 @@ impl LibsvmSource {
             d,
             n,
             chunk_rows: chunk_rows.max(1),
+            dtype: Dtype::F64,
             reader: None,
             lineno: 0,
             row: 0,
@@ -139,7 +149,7 @@ impl DataSource for LibsvmSource {
         self.row += rows;
         Ok(Some(Chunk {
             start,
-            x: Mat::from_vec(rows, self.d, xdata),
+            x: XBlock::from_mat_dtype(Mat::from_vec(rows, self.d, xdata), self.dtype),
             y,
             labels: None,
         }))
@@ -163,12 +173,20 @@ pub struct CsvSource {
     d: usize,
     n: usize,
     chunk_rows: usize,
+    dtype: Dtype,
     reader: Option<BufReader<File>>,
     lineno: usize,
     row: usize,
 }
 
 impl CsvSource {
+    /// Emit chunks in the given storage format (parsing stays f64; the
+    /// `F32` arm rounds each chunk once at emission).
+    pub fn with_dtype(mut self, dtype: Dtype) -> CsvSource {
+        self.dtype = dtype;
+        self
+    }
+
     /// Open + validation scan (counts rows, checks a consistent width).
     pub fn open(path: &str, has_header: bool, chunk_rows: usize) -> Result<CsvSource> {
         let f = File::open(path).with_context(|| format!("opening csv file {path}"))?;
@@ -210,6 +228,7 @@ impl CsvSource {
             d,
             n,
             chunk_rows: chunk_rows.max(1),
+            dtype: Dtype::F64,
             reader: None,
             lineno: 0,
             row: 0,
@@ -274,7 +293,7 @@ impl DataSource for CsvSource {
         self.row += rows;
         Ok(Some(Chunk {
             start,
-            x: Mat::from_vec(rows, self.d, xdata),
+            x: XBlock::from_mat_dtype(Mat::from_vec(rows, self.d, xdata), self.dtype),
             y,
             labels: None,
         }))
@@ -363,6 +382,33 @@ mod tests {
         let empty = tmp("emp", "\n\n");
         assert!(CsvSource::open(&empty, false, 4).is_err());
         let _ = std::fs::remove_file(&empty);
+    }
+
+    #[test]
+    fn f32_stream_rounds_once_and_halves_bytes() {
+        let src = "1.0,0.1,3.0\n-1.0,4.5,5.5\n2.0,0.2,0.3\n";
+        let path = tmp("csv32", src);
+        let mut s = CsvSource::open(&path, false, 2).unwrap().with_dtype(Dtype::F32);
+        s.reset().unwrap();
+        let c = s.next_chunk().unwrap().unwrap();
+        assert_eq!(c.dtype(), Dtype::F32);
+        assert_eq!(c.x_bytes(), 2 * 2 * 4, "f32 chunk is 4 bytes/element");
+        // values are the f64 parse rounded once to f32
+        assert_eq!(c.x.element(0, 0), 0.1f32 as f64);
+        assert_eq!(c.x.element(1, 1), 5.5);
+        // y stays f64 exactly
+        assert_eq!(c.y, vec![1.0, -1.0]);
+        // libsvm twin
+        let lpath = tmp("lsvm32", "1 1:0.1 2:2.0\n");
+        let mut ls = LibsvmSource::open(&lpath, None, 4)
+            .unwrap()
+            .with_dtype(Dtype::F32);
+        ls.reset().unwrap();
+        let lc = ls.next_chunk().unwrap().unwrap();
+        assert_eq!(lc.dtype(), Dtype::F32);
+        assert_eq!(lc.x.element(0, 0), 0.1f32 as f64);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&lpath);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! approximate-leverage-score sampling with the Def. 2 reweighting matrix D.
 
 use crate::linalg::mat::Mat;
+use crate::linalg::mat32::XBlock;
 use crate::runtime::Engine;
 use crate::util::rng::{CategoricalSampler, Rng};
 use anyhow::Result;
@@ -208,7 +209,19 @@ impl CenterGather {
     /// Offer a chunk of rows starting at global row `start`. Chunks must
     /// arrive in stream order (contiguous, ascending).
     pub fn offer(&mut self, start: usize, x: &Mat) {
-        let end = start + x.rows;
+        self.offer_rows(start, x.rows, |i, out| out.copy_from_slice(x.row(i)));
+    }
+
+    /// [`CenterGather::offer`] for a chunk in either storage format: only
+    /// the wanted rows are widened. The gathered centers stay `f64` — they
+    /// are M×d coordinator state (K_MM, preconditioner), not streamed
+    /// panel data, so the mixed-precision storage saving does not apply.
+    pub fn offer_block(&mut self, start: usize, x: &XBlock) {
+        self.offer_rows(start, x.rows(), |i, out| x.row_f64_into(i, out));
+    }
+
+    fn offer_rows(&mut self, start: usize, rows: usize, mut copy: impl FnMut(usize, &mut [f64])) {
+        let end = start + rows;
         while self.cursor < self.slots.len() {
             let (idx, slot) = self.slots[self.cursor];
             if idx >= end {
@@ -218,7 +231,7 @@ impl CenterGather {
                 idx >= start,
                 "chunk starting at {start} skipped wanted row {idx} (chunks out of order?)"
             );
-            self.c.row_mut(slot).copy_from_slice(x.row(idx - start));
+            copy(idx - start, self.c.row_mut(slot));
             self.cursor += 1;
         }
     }

@@ -1,0 +1,900 @@
+//! Mixed-precision kernel tier (DESIGN.md §"Precision model"): the same
+//! tiled panel machinery as the parent module, reading **`f32` feature
+//! storage** instead of `f64`. Every dot product, norm and panel
+//! reduction widens to `f64` in registers — `f32` is a *storage* format
+//! here, never an arithmetic one — so against the f64 tier on the same
+//! (rounded) inputs the only new error sources are:
+//!
+//! 1. one rounding of each Kr entry's exponential argument (or linear
+//!    dot) to `f32`,
+//! 2. the [`fast_exp_f32`] polynomial, and
+//! 3. one rounding of the stored Kr entry to `f32`,
+//!
+//! all bounded per-kernel by [`super::tol`]. The two fused stages of the
+//! matvec/matmat keep their accumulators in `f64`
+//! ([`vec_ops::dot_mixed`], [`vec_ops::axpy_f32`]), so CG recurrences,
+//! `Bᵀ(...)B` applies and the preconditioner never see single precision.
+//!
+//! Products of two `f32` values are **exact** in `f64` (24 + 24 ≤ 53
+//! mantissa bits), which is why the norm expansion ‖x‖²+‖c‖²−2x·c
+//! computed here from `f64`-widened norms and dots carries only
+//! `O(d·eps64)` accumulation error — negligible against the `eps32`-scale
+//! terms above.
+
+use crate::linalg::mat::Mat;
+use crate::linalg::mat32::MatF32;
+use crate::linalg::vec_ops::{self, fast_exp_f32};
+use crate::util::pool::{chunk_ranges, fan_out, WorkerPool};
+
+use super::{Kernel, TileScratch, DEFAULT_TILE};
+
+/// Squared L2 norm of every row, accumulated in `f64` — the f32-storage
+/// sibling of [`super::row_sq_norms`]. The returned norms are `f64` so
+/// the Gaussian norm expansion is exact-to-double given the stored
+/// values.
+pub fn row_sq_norms_f32(x: &MatF32) -> Vec<f64> {
+    (0..x.rows)
+        .map(|i| {
+            let r = x.row(i);
+            vec_ops::dot_f32(r, r)
+        })
+        .collect()
+}
+
+/// Fill a panel of kernel values K(X_panel, C[j0..]) into the `f32` tile
+/// `out` — the mixed-precision sibling of [`super::kernel_panel`] with
+/// the same layout contract (`ldo`, `j0`). The 1×4 register tile of dot
+/// products accumulates in `f64`; the exponential argument (or linear
+/// dot) is computed in `f64` and rounded **once** to `f32`, then the
+/// exponential arms run a separate vectorizable [`fast_exp_f32`] pass
+/// over the finished row.
+#[allow(clippy::too_many_arguments)]
+fn kernel_panel_f32(
+    kern: Kernel,
+    xb: &[f32],
+    d: usize,
+    rows: usize,
+    xn: &[f64],
+    c: &MatF32,
+    cn: &[f64],
+    j0: usize,
+    param: f64,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    let m = c.rows;
+    let w = m - j0;
+    debug_assert_eq!(xb.len(), rows * d);
+    debug_assert_eq!(c.cols, d);
+    debug_assert!(rows == 0 || out.len() >= (rows - 1) * ldo + w);
+    debug_assert!(ldo >= w);
+    match kern {
+        Kernel::Gaussian => {
+            debug_assert_eq!(xn.len(), rows);
+            debug_assert_eq!(cn.len(), m);
+            let inv = 1.0 / (2.0 * param * param);
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let xni = xn[i];
+                let orow = &mut out[i * ldo..i * ldo + w];
+                let mut j = j0;
+                while j + 4 <= m {
+                    let c0 = c.row(j);
+                    let c1 = c.row(j + 1);
+                    let c2 = c.row(j + 2);
+                    let c3 = c.row(j + 3);
+                    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                    for k in 0..d {
+                        let xv = xr[k] as f64;
+                        a0 += xv * c0[k] as f64;
+                        a1 += xv * c1[k] as f64;
+                        a2 += xv * c2[k] as f64;
+                        a3 += xv * c3[k] as f64;
+                    }
+                    orow[j - j0] = (-(xni + cn[j] - 2.0 * a0).max(0.0) * inv) as f32;
+                    orow[j - j0 + 1] = (-(xni + cn[j + 1] - 2.0 * a1).max(0.0) * inv) as f32;
+                    orow[j - j0 + 2] = (-(xni + cn[j + 2] - 2.0 * a2).max(0.0) * inv) as f32;
+                    orow[j - j0 + 3] = (-(xni + cn[j + 3] - 2.0 * a3).max(0.0) * inv) as f32;
+                    j += 4;
+                }
+                while j < m {
+                    let dotv = vec_ops::dot_f32(xr, c.row(j));
+                    orow[j - j0] = (-(xni + cn[j] - 2.0 * dotv).max(0.0) * inv) as f32;
+                    j += 1;
+                }
+                for v in orow.iter_mut() {
+                    *v = fast_exp_f32(*v);
+                }
+            }
+        }
+        Kernel::Laplacian => {
+            let inv = 1.0 / param;
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let orow = &mut out[i * ldo..i * ldo + w];
+                for j in j0..m {
+                    let cr = c.row(j);
+                    let mut l1 = 0.0f64;
+                    for k in 0..d {
+                        l1 += (xr[k] as f64 - cr[k] as f64).abs();
+                    }
+                    orow[j - j0] = (-l1 * inv) as f32;
+                }
+                for v in orow.iter_mut() {
+                    *v = fast_exp_f32(*v);
+                }
+            }
+        }
+        Kernel::Linear => {
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let orow = &mut out[i * ldo..i * ldo + w];
+                let mut j = j0;
+                while j + 4 <= m {
+                    let c0 = c.row(j);
+                    let c1 = c.row(j + 1);
+                    let c2 = c.row(j + 2);
+                    let c3 = c.row(j + 3);
+                    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                    for k in 0..d {
+                        let xv = xr[k] as f64;
+                        a0 += xv * c0[k] as f64;
+                        a1 += xv * c1[k] as f64;
+                        a2 += xv * c2[k] as f64;
+                        a3 += xv * c3[k] as f64;
+                    }
+                    orow[j - j0] = a0 as f32;
+                    orow[j - j0 + 1] = a1 as f32;
+                    orow[j - j0 + 2] = a2 as f32;
+                    orow[j - j0 + 3] = a3 as f32;
+                    j += 4;
+                }
+                while j < m {
+                    orow[j - j0] = vec_ops::dot_f32(xr, c.row(j)) as f32;
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Dense kernel block K(X, C) on the f32 panel machinery (serial) —
+/// kernel values computed tile-by-tile straight into an `n × m` `f32`
+/// matrix. Used by the property tests (entry-level pinning against the
+/// f64 oracle) and by the panel-throughput leg of `perf_matvec`.
+pub fn kernel_block_f32(kern: Kernel, x: &MatF32, c: &MatF32, param: f64) -> MatF32 {
+    assert_eq!(x.cols, c.cols, "feature dims differ");
+    let (n, m, d) = (x.rows, c.rows, x.cols);
+    let mut out = MatF32::zeros(n, m);
+    if n == 0 || m == 0 {
+        return out;
+    }
+    let xn = match kern {
+        Kernel::Gaussian => row_sq_norms_f32(x),
+        _ => Vec::new(),
+    };
+    let cn = match kern {
+        Kernel::Gaussian => row_sq_norms_f32(c),
+        _ => Vec::new(),
+    };
+    let mut s = 0;
+    while s < n {
+        let rows = (n - s).min(DEFAULT_TILE);
+        let xb = &x.data[s * d..(s + rows) * d];
+        let xnr = match kern {
+            Kernel::Gaussian => &xn[s..s + rows],
+            _ => &[] as &[f64],
+        };
+        kernel_panel_f32(
+            kern,
+            xb,
+            d,
+            rows,
+            xnr,
+            c,
+            &cn,
+            0,
+            param,
+            &mut out.data[s * m..],
+            m,
+        );
+        s += rows;
+    }
+    out
+}
+
+/// Tiled/fused w += Krᵀ(mask ⊙ (Kr·u + v)) over the rows of an **f32**
+/// `x` — the mixed-precision sibling of [`super::knm_matvec_blocked`]
+/// with the identical mask/v/accumulate contract. Kr is staged in `f32`
+/// (half the tile bytes), both fused stages accumulate in `f64`
+/// ([`vec_ops::dot_mixed`] / [`vec_ops::axpy_f32`]), and `u`/`v`/`w`
+/// stay `f64` — the CG coordinator never sees single precision.
+#[allow(clippy::too_many_arguments)]
+pub fn knm_matvec_blocked_f32(
+    kern: Kernel,
+    x: &MatF32,
+    c: &MatF32,
+    xn: &[f64],
+    cn: &[f64],
+    u: &[f64],
+    v: Option<&[f64]>,
+    mask: Option<&[f64]>,
+    param: f64,
+    scratch: &mut TileScratch,
+    w: &mut [f64],
+) {
+    knm_matvec_ranged_f32(kern, x, c, xn, cn, u, v, mask, param, scratch, w, 0, x.rows)
+}
+
+/// [`knm_matvec_blocked_f32`] restricted to rows `[start, end)` of `x` —
+/// the mixed-precision sibling of [`super::knm_matvec_ranged`], same
+/// pooled fan-out contract (each worker sweeps a disjoint row range of
+/// the same resident chunk).
+#[allow(clippy::too_many_arguments)]
+pub fn knm_matvec_ranged_f32(
+    kern: Kernel,
+    x: &MatF32,
+    c: &MatF32,
+    xn: &[f64],
+    cn: &[f64],
+    u: &[f64],
+    v: Option<&[f64]>,
+    mask: Option<&[f64]>,
+    param: f64,
+    scratch: &mut TileScratch,
+    w: &mut [f64],
+    start: usize,
+    end: usize,
+) {
+    let (n, m, d) = (x.rows, c.rows, x.cols);
+    assert_eq!(c.cols, d, "feature dims differ");
+    assert!(start <= end && end <= n, "row range {start}..{end} of {n}");
+    assert_eq!(u.len(), m);
+    assert_eq!(w.len(), m);
+    assert_eq!(xn.len(), n);
+    assert_eq!(cn.len(), m);
+    if let Some(v) = v {
+        assert_eq!(v.len(), n);
+    }
+    if let Some(mk) = mask {
+        assert_eq!(mk.len(), n);
+    }
+    scratch.ensure32(m);
+    let tile = scratch.tile;
+    let mut s = start;
+    while s < end {
+        let rows = (end - s).min(tile);
+        let kr = &mut scratch.kr32[..rows * m];
+        let xb = &x.data[s * d..(s + rows) * d];
+        kernel_panel_f32(kern, xb, d, rows, &xn[s..s + rows], c, cn, 0, param, kr, m);
+        // fused stage 1: y = mask ⊙ (Kr·u + v), f64 accumulators
+        for i in 0..rows {
+            let gi = s + i;
+            let mi = mask.map(|mk| mk[gi]).unwrap_or(1.0);
+            if mi == 0.0 {
+                scratch.y[i] = 0.0;
+                continue;
+            }
+            let dotu = vec_ops::dot_mixed(&kr[i * m..(i + 1) * m], u);
+            let vi = v.map(|vf| vf[gi]).unwrap_or(0.0);
+            scratch.y[i] = mi * (dotu + vi);
+        }
+        // fused stage 2: w += Krᵀ·y (masked / zero-weight rows skipped)
+        for i in 0..rows {
+            let yi = scratch.y[i];
+            if yi != 0.0 {
+                vec_ops::axpy_f32(yi, &kr[i * m..(i + 1) * m], w);
+            }
+        }
+        s += rows;
+    }
+}
+
+/// `out[i·K .. (i+1)·K] += Kr[i,:]·U` for every f32 panel row — the
+/// mixed-precision sibling of [`super::panel_times_mat`]: four `f32` Kr
+/// entries widen to `f64` and scale contiguous K-rows of `U` into the
+/// `f64` accumulator.
+fn panel_times_mat_f32(kr: &[f32], rows: usize, m: usize, u: &Mat, out: &mut [f64]) {
+    let k = u.cols;
+    debug_assert_eq!(u.rows, m);
+    debug_assert!(out.len() >= rows * k);
+    for i in 0..rows {
+        let kri = &kr[i * m..(i + 1) * m];
+        let orow = &mut out[i * k..(i + 1) * k];
+        let mut j = 0;
+        while j + 4 <= m {
+            let (a0, a1, a2, a3) = (
+                kri[j] as f64,
+                kri[j + 1] as f64,
+                kri[j + 2] as f64,
+                kri[j + 3] as f64,
+            );
+            let u0 = u.row(j);
+            let u1 = u.row(j + 1);
+            let u2 = u.row(j + 2);
+            let u3 = u.row(j + 3);
+            for t in 0..k {
+                orow[t] += a0 * u0[t] + a1 * u1[t] + a2 * u2[t] + a3 * u3[t];
+            }
+            j += 4;
+        }
+        while j < m {
+            vec_ops::axpy(kri[j] as f64, u.row(j), orow);
+            j += 1;
+        }
+    }
+}
+
+/// Tiled/fused W += Krᵀ(mask ⊙ (Kr·U + V)) over the rows of an **f32**
+/// `x` — the mixed-precision sibling of [`super::knm_matmat_blocked`]
+/// (multi-RHS: one f32 Kr panel serves all K right-hand sides; U, V, W
+/// and the fused Y stay `f64`).
+#[allow(clippy::too_many_arguments)]
+pub fn knm_matmat_blocked_f32(
+    kern: Kernel,
+    x: &MatF32,
+    c: &MatF32,
+    xn: &[f64],
+    cn: &[f64],
+    u: &Mat,
+    v: Option<&[f64]>,
+    mask: Option<&[f64]>,
+    param: f64,
+    scratch: &mut TileScratch,
+    w: &mut Mat,
+) {
+    knm_matmat_ranged_f32(kern, x, c, xn, cn, u, v, mask, param, scratch, w, 0, x.rows)
+}
+
+/// [`knm_matmat_blocked_f32`] restricted to rows `[start, end)` of `x` —
+/// the mixed-precision sibling of [`super::knm_matmat_ranged`].
+#[allow(clippy::too_many_arguments)]
+pub fn knm_matmat_ranged_f32(
+    kern: Kernel,
+    x: &MatF32,
+    c: &MatF32,
+    xn: &[f64],
+    cn: &[f64],
+    u: &Mat,
+    v: Option<&[f64]>,
+    mask: Option<&[f64]>,
+    param: f64,
+    scratch: &mut TileScratch,
+    w: &mut Mat,
+    start: usize,
+    end: usize,
+) {
+    let (n, m, d) = (x.rows, c.rows, x.cols);
+    let k = u.cols;
+    assert_eq!(c.cols, d, "feature dims differ");
+    assert!(start <= end && end <= n, "row range {start}..{end} of {n}");
+    assert_eq!(u.rows, m, "u rows != centers");
+    assert_eq!((w.rows, w.cols), (m, k), "w shape");
+    assert_eq!(xn.len(), n);
+    assert_eq!(cn.len(), m);
+    if let Some(v) = v {
+        assert_eq!(v.len(), n * k, "v length != n·K");
+    }
+    if let Some(mk) = mask {
+        assert_eq!(mk.len(), n);
+    }
+    if k == 0 {
+        return;
+    }
+    scratch.ensure_multi32(m, k);
+    let tile = scratch.tile;
+    let TileScratch { kr32, y, .. } = scratch;
+    let mut s = start;
+    while s < end {
+        let rows = (end - s).min(tile);
+        let kr = &mut kr32[..rows * m];
+        let xb = &x.data[s * d..(s + rows) * d];
+        kernel_panel_f32(kern, xb, d, rows, &xn[s..s + rows], c, cn, 0, param, kr, m);
+        // fused stage 1: Y = mask ⊙ (Kr·U + V)   (rows × K, f64)
+        let y = &mut y[..rows * k];
+        for i in 0..rows {
+            let gi = s + i;
+            let yrow = &mut y[i * k..(i + 1) * k];
+            let mi = mask.map(|mk| mk[gi]).unwrap_or(1.0);
+            if mi == 0.0 {
+                yrow.fill(0.0);
+                continue;
+            }
+            match v {
+                Some(vf) => yrow.copy_from_slice(&vf[gi * k..(gi + 1) * k]),
+                None => yrow.fill(0.0),
+            }
+        }
+        panel_times_mat_f32(kr, rows, m, u, y);
+        // masked rows were initialized to zero, but stage 1 added Kr·U to
+        // them too — re-zero them (and apply non-trivial mask weights) so
+        // the accumulation pass honors the mask contract exactly.
+        if let Some(mk) = mask {
+            for i in 0..rows {
+                let mi = mk[s + i];
+                if mi != 1.0 {
+                    let yrow = &mut y[i * k..(i + 1) * k];
+                    if mi == 0.0 {
+                        yrow.fill(0.0);
+                    } else {
+                        vec_ops::scale(mi, yrow);
+                    }
+                }
+            }
+        }
+        // fused stage 2: W += Krᵀ·Y (masked / zero rows skipped)
+        for i in 0..rows {
+            let yrow = &y[i * k..(i + 1) * k];
+            if yrow.iter().all(|&t| t == 0.0) {
+                continue;
+            }
+            let kri = &kr[i * m..(i + 1) * m];
+            for j in 0..m {
+                vec_ops::axpy(kri[j] as f64, yrow, w.row_mut(j));
+            }
+        }
+        s += rows;
+    }
+}
+
+/// Tiled predictions f(x_i) = Σ_j α_j K(x_i, c_j) over **f32** storage —
+/// the mixed-precision sibling of [`super::predict_blocked`]. α and the
+/// returned scores are `f64`; each score is an f64-accumulated dot of an
+/// f32 Kr row against α.
+pub fn predict_blocked_f32(
+    kern: Kernel,
+    x: &MatF32,
+    c: &MatF32,
+    alpha: &[f64],
+    param: f64,
+) -> Vec<f64> {
+    predict_blocked_pool_f32(kern, x, c, alpha, param, None)
+}
+
+/// [`predict_blocked_f32`] fanned out over the shared worker pool — the
+/// f32 serving path. Each output row is written by exactly one task with
+/// the same per-row arithmetic as the serial tiling, so pooled results
+/// are bitwise identical to serial.
+pub fn predict_blocked_pool_f32(
+    kern: Kernel,
+    x: &MatF32,
+    c: &MatF32,
+    alpha: &[f64],
+    param: f64,
+    pool: Option<&WorkerPool>,
+) -> Vec<f64> {
+    let (n, m) = (x.rows, c.rows);
+    assert_eq!(c.cols, x.cols, "feature dims differ");
+    assert_eq!(alpha.len(), m);
+    let cn = row_sq_norms_f32(c);
+    let mut out = vec![0.0; n];
+    if n == 0 {
+        return out;
+    }
+    let workers = pool
+        .map(|p| p.workers())
+        .unwrap_or(1)
+        .min(n.div_ceil(DEFAULT_TILE).max(1));
+    let ranges = chunk_ranges(n, workers);
+    let cn = cn.as_slice();
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+    let mut rest = out.as_mut_slice();
+    for &(lo, hi) in &ranges {
+        let (chunk, tail) = rest.split_at_mut(hi - lo);
+        rest = tail;
+        tasks.push(Box::new(move || {
+            predict_range_f32(kern, x, c, cn, alpha, param, lo, hi, chunk);
+        }));
+    }
+    fan_out(pool, tasks);
+    out
+}
+
+/// Serial tiled f32 predict over rows [start, end) of `x`, writing into
+/// `out` (length `end - start`).
+#[allow(clippy::too_many_arguments)]
+fn predict_range_f32(
+    kern: Kernel,
+    x: &MatF32,
+    c: &MatF32,
+    cn: &[f64],
+    alpha: &[f64],
+    param: f64,
+    start: usize,
+    end: usize,
+    out: &mut [f64],
+) {
+    let (m, d) = (c.rows, x.cols);
+    debug_assert_eq!(out.len(), end - start);
+    if start == end {
+        return;
+    }
+    let mut scratch = TileScratch::new32(DEFAULT_TILE.min(end - start), m);
+    let xn: Vec<f64> = (start..end)
+        .map(|i| {
+            let r = x.row(i);
+            vec_ops::dot_f32(r, r)
+        })
+        .collect();
+    let mut s = start;
+    while s < end {
+        let rows = (end - s).min(scratch.tile);
+        let kr = &mut scratch.kr32[..rows * m];
+        let xb = &x.data[s * d..(s + rows) * d];
+        let xnr = &xn[s - start..s - start + rows];
+        kernel_panel_f32(kern, xb, d, rows, xnr, c, cn, 0, param, kr, m);
+        for i in 0..rows {
+            out[s - start + i] = vec_ops::dot_mixed(&kr[i * m..(i + 1) * m], alpha);
+        }
+        s += rows;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tol;
+    use super::super::{
+        kernel_block, knm_matmat_blocked, knm_matvec_blocked, predict_blocked, row_sq_norms,
+    };
+    use super::*;
+    use crate::util::ptest::check;
+
+    const KERNELS: [Kernel; 3] = [Kernel::Gaussian, Kernel::Laplacian, Kernel::Linear];
+
+    /// Round f64 data to f32 storage and hand back both the stored block
+    /// and its exact f64 widening — the oracle input. Rounding happens
+    /// once, here: both tiers then see the *same* values, so observed
+    /// differences are purely compute-path error (the tol model), not
+    /// storage error.
+    fn round_pair(rows: usize, cols: usize, data: &[f64]) -> (MatF32, Mat) {
+        let x32 = MatF32::from_f64s(rows, cols, data);
+        let x64 = x32.to_mat();
+        (x32, x64)
+    }
+
+    #[test]
+    fn f32_row_norms_accumulate_in_f64() {
+        let mut rng = crate::util::rng::Rng::new(71);
+        let (n, d) = (37, 9);
+        let (x32, x64) = round_pair(n, d, &rng.normals(n * d));
+        let got = row_sq_norms_f32(&x32);
+        let want = row_sq_norms(&x64);
+        for i in 0..n {
+            // products of f32s are exact in f64; only summation order may
+            // differ between the two dot kernels
+            assert!(
+                (got[i] - want[i]).abs() <= 1e-12 * (1.0 + want[i].abs()),
+                "row {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn f32_panel_entries_stay_within_the_entry_bound() {
+        // satellite: every kernel arm pinned entry-by-entry against the
+        // f64 oracle on identical (rounded) inputs, asserting the
+        // *documented* per-kernel bound from kernels::tol — no ad-hoc eps
+        check("kernel_block_f32 entries within tol::entry_bound", 20, |g| {
+            let (n, m, d) = (g.usize_in(1, 40), g.usize_in(1, 17), g.usize_in(1, 9));
+            let (x32, x64) = round_pair(n, d, &g.normal_vec(n * d));
+            let (c32, c64) = round_pair(m, d, &g.normal_vec(m * d));
+            let p = g.f64_in(0.5, 3.0);
+            for kern in KERNELS {
+                let bound = tol::entry_bound(kern, &x32, &c32);
+                let got = kernel_block_f32(kern, &x32, &c32, p);
+                let want = kernel_block(kern, &x64, &c64, p);
+                for i in 0..n {
+                    for j in 0..m {
+                        let diff = (got.row(i)[j] as f64 - want[(i, j)]).abs();
+                        assert!(
+                            diff <= bound,
+                            "{kern:?} entry ({i},{j}): diff {diff:.3e} > bound {bound:.3e}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn f32_matvec_matches_f64_oracle_within_model() {
+        check("knm_matvec_blocked_f32 within tol::matvec_bound", 20, |g| {
+            let (n, m, d) = (g.usize_in(1, 60), g.usize_in(1, 14), g.usize_in(1, 7));
+            let (x32, x64) = round_pair(n, d, &g.normal_vec(n * d));
+            let (c32, c64) = round_pair(m, d, &g.normal_vec(m * d));
+            let u = g.normal_vec(m);
+            let v = g.normal_vec(n);
+            let p = g.f64_in(0.5, 3.0);
+            let xn64 = row_sq_norms(&x64);
+            let cn64 = row_sq_norms(&c64);
+            let xn32 = row_sq_norms_f32(&x32);
+            let cn32 = row_sq_norms_f32(&c32);
+            for kern in KERNELS {
+                let mut want = vec![0.0; m];
+                let mut scratch = TileScratch::new(DEFAULT_TILE, m);
+                knm_matvec_blocked(
+                    kern, &x64, &c64, &xn64, &cn64, &u, Some(&v), None, p, &mut scratch, &mut want,
+                );
+                let bound = tol::matvec_bound(kern, &x32, &c32, n, &u, Some(&v));
+                // ragged tiles: 1, a middle size, larger-than-n
+                for tile in [1usize, 3, 64] {
+                    let mut got = vec![0.0; m];
+                    let mut s32 = TileScratch::new32(tile, m);
+                    knm_matvec_blocked_f32(
+                        kern, &x32, &c32, &xn32, &cn32, &u, Some(&v), None, p, &mut s32, &mut got,
+                    );
+                    let diff = vec_ops::max_abs_diff(&got, &want);
+                    assert!(
+                        diff <= bound,
+                        "{kern:?} tile={tile}: diff {diff:.3e} > bound {bound:.3e}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn f32_ranged_sweeps_cover_the_blocked_sweep_bitwise() {
+        // the pooled fan-out contract, f32 edition: disjoint row ranges
+        // summed into one w must equal the full blocked sweep bitwise
+        check("ranged_f32 = blocked_f32", 10, |g| {
+            let (n, m, d) = (g.usize_in(1, 300), g.usize_in(1, 12), g.usize_in(1, 5));
+            let k = g.usize_in(1, 4);
+            let (x32, _) = round_pair(n, d, &g.normal_vec(n * d));
+            let (c32, _) = round_pair(m, d, &g.normal_vec(m * d));
+            let xn = row_sq_norms_f32(&x32);
+            let cn = row_sq_norms_f32(&c32);
+            let u = g.normal_vec(m);
+            let v = g.normal_vec(n);
+            let um = Mat::from_vec(m, k, g.normal_vec(m * k));
+            let vm = g.normal_vec(n * k);
+            let split = g.usize_in(0, n + 1);
+            let p = g.f64_in(0.5, 2.5);
+            for kern in KERNELS {
+                let mut scratch = TileScratch::new32(DEFAULT_TILE, m);
+                let mut want = vec![0.0; m];
+                knm_matvec_blocked_f32(
+                    kern, &x32, &c32, &xn, &cn, &u, Some(&v), None, p, &mut scratch, &mut want,
+                );
+                let mut got = vec![0.0; m];
+                for (lo, hi) in [(0, split), (split, n)] {
+                    knm_matvec_ranged_f32(
+                        kern, &x32, &c32, &xn, &cn, &u, Some(&v), None, p, &mut scratch, &mut got,
+                        lo, hi,
+                    );
+                }
+                assert_eq!(got, want, "{kern:?} vector split at {split}");
+
+                let mut want_m = Mat::zeros(m, k);
+                knm_matmat_blocked_f32(
+                    kern, &x32, &c32, &xn, &cn, &um, Some(&vm), None, p, &mut scratch, &mut want_m,
+                );
+                let mut got_m = Mat::zeros(m, k);
+                for (lo, hi) in [(0, split), (split, n)] {
+                    knm_matmat_ranged_f32(
+                        kern, &x32, &c32, &xn, &cn, &um, Some(&vm), None, p, &mut scratch,
+                        &mut got_m, lo, hi,
+                    );
+                }
+                assert_eq!(got_m.data, want_m.data, "{kern:?} multi split at {split}");
+            }
+        });
+    }
+
+    #[test]
+    fn f32_matvec_honors_mask_contract() {
+        check("f32 matvec mask contract", 15, |g| {
+            let (n, m, d) = (g.usize_in(2, 24), g.usize_in(1, 10), g.usize_in(1, 5));
+            let (x32, x64) = round_pair(n, d, &g.normal_vec(n * d));
+            let (c32, c64) = round_pair(m, d, &g.normal_vec(m * d));
+            let u = g.normal_vec(m);
+            let v = g.normal_vec(n);
+            let mask: Vec<f64> = (0..n).map(|_| if g.bool() { 1.0 } else { 0.0 }).collect();
+            let p = 1.1;
+            let kern = *g.pick(&KERNELS);
+            let xn64 = row_sq_norms(&x64);
+            let cn64 = row_sq_norms(&c64);
+            let mut want = vec![0.0; m];
+            let mut scratch = TileScratch::new(4, m);
+            knm_matvec_blocked(
+                kern,
+                &x64,
+                &c64,
+                &xn64,
+                &cn64,
+                &u,
+                Some(&v),
+                Some(&mask),
+                p,
+                &mut scratch,
+                &mut want,
+            );
+            let xn32 = row_sq_norms_f32(&x32);
+            let cn32 = row_sq_norms_f32(&c32);
+            let mut got = vec![0.0; m];
+            let mut s32 = TileScratch::new32(4, m);
+            knm_matvec_blocked_f32(
+                kern,
+                &x32,
+                &c32,
+                &xn32,
+                &cn32,
+                &u,
+                Some(&v),
+                Some(&mask),
+                p,
+                &mut s32,
+                &mut got,
+            );
+            let bound = tol::matvec_bound(kern, &x32, &c32, n, &u, Some(&v));
+            let diff = vec_ops::max_abs_diff(&got, &want);
+            assert!(diff <= bound, "{kern:?} diff {diff:.3e} > bound {bound:.3e}");
+            // and the v = None path (the CG iteration shape)
+            let mut want0 = vec![0.0; m];
+            knm_matvec_blocked(
+                kern,
+                &x64,
+                &c64,
+                &xn64,
+                &cn64,
+                &u,
+                None,
+                Some(&mask),
+                p,
+                &mut scratch,
+                &mut want0,
+            );
+            let mut got0 = vec![0.0; m];
+            knm_matvec_blocked_f32(
+                kern,
+                &x32,
+                &c32,
+                &xn32,
+                &cn32,
+                &u,
+                None,
+                Some(&mask),
+                p,
+                &mut s32,
+                &mut got0,
+            );
+            let bound0 = tol::matvec_bound(kern, &x32, &c32, n, &u, None);
+            assert!(vec_ops::max_abs_diff(&got0, &want0) <= bound0);
+        });
+    }
+
+    #[test]
+    fn f32_matmat_matches_f64_oracle_within_model() {
+        check("knm_matmat_blocked_f32 within tol::matmat_bound", 15, |g| {
+            let (n, m, d) = (g.usize_in(1, 40), g.usize_in(1, 12), g.usize_in(1, 6));
+            let k = *g.pick(&[1usize, 2, 3, 5, 8]);
+            let (x32, x64) = round_pair(n, d, &g.normal_vec(n * d));
+            let (c32, c64) = round_pair(m, d, &g.normal_vec(m * d));
+            let u = Mat::from_vec(m, k, g.normal_vec(m * k));
+            let v = g.normal_vec(n * k);
+            let mask: Vec<f64> = (0..n).map(|_| if g.bool() { 1.0 } else { 0.0 }).collect();
+            let p = g.f64_in(0.5, 3.0);
+            let xn64 = row_sq_norms(&x64);
+            let cn64 = row_sq_norms(&c64);
+            let xn32 = row_sq_norms_f32(&x32);
+            let cn32 = row_sq_norms_f32(&c32);
+            for kern in KERNELS {
+                for (vopt, maskopt) in [(Some(&v), None), (Some(&v), Some(&mask)), (None, None)] {
+                    let mut want = Mat::zeros(m, k);
+                    let mut scratch = TileScratch::new(DEFAULT_TILE, m);
+                    knm_matmat_blocked(
+                        kern,
+                        &x64,
+                        &c64,
+                        &xn64,
+                        &cn64,
+                        &u,
+                        vopt.map(|t| t.as_slice()),
+                        maskopt.map(|t| t.as_slice()),
+                        p,
+                        &mut scratch,
+                        &mut want,
+                    );
+                    let bound =
+                        tol::matmat_bound(kern, &x32, &c32, n, &u, vopt.map(|t| t.as_slice()));
+                    for tile in [1usize, 5, 64] {
+                        let mut got = Mat::zeros(m, k);
+                        let mut s32 = TileScratch::new32(tile, m);
+                        knm_matmat_blocked_f32(
+                            kern,
+                            &x32,
+                            &c32,
+                            &xn32,
+                            &cn32,
+                            &u,
+                            vopt.map(|t| t.as_slice()),
+                            maskopt.map(|t| t.as_slice()),
+                            p,
+                            &mut s32,
+                            &mut got,
+                        );
+                        let diff = got.max_abs_diff(&want);
+                        assert!(
+                            diff <= bound,
+                            "{kern:?} k={k} tile={tile}: diff {diff:.3e} > bound {bound:.3e}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn f32_predict_matches_f64_oracle_within_model() {
+        check("predict_blocked_f32 within tol::predict_bound", 20, |g| {
+            let (n, m, d) = (g.usize_in(1, 30), g.usize_in(1, 12), g.usize_in(1, 6));
+            let (x32, x64) = round_pair(n, d, &g.normal_vec(n * d));
+            let (c32, c64) = round_pair(m, d, &g.normal_vec(m * d));
+            let alpha = g.normal_vec(m);
+            let p = g.f64_in(0.5, 3.0);
+            for kern in KERNELS {
+                let want = predict_blocked(kern, &x64, &c64, &alpha, p);
+                let got = predict_blocked_f32(kern, &x32, &c32, &alpha, p);
+                let bound = tol::predict_bound(kern, &x32, &c32, &alpha);
+                let diff = vec_ops::max_abs_diff(&got, &want);
+                assert!(diff <= bound, "{kern:?} diff {diff:.3e} > bound {bound:.3e}");
+            }
+        });
+    }
+
+    #[test]
+    fn f32_predict_crosses_default_tile_and_pools_bitwise() {
+        let pool = crate::util::pool::WorkerPool::new("test-mixed", 4).unwrap();
+        let mut rng = crate::util::rng::Rng::new(83);
+        let (n, m, d) = (3 * DEFAULT_TILE + 19, 29, 5);
+        let (x32, x64) = round_pair(n, d, &rng.normals(n * d));
+        let (c32, c64) = round_pair(m, d, &rng.normals(m * d));
+        let alpha = rng.normals(m);
+        for kern in KERNELS {
+            let serial = predict_blocked_f32(kern, &x32, &c32, &alpha, 1.2);
+            let pooled = predict_blocked_pool_f32(kern, &x32, &c32, &alpha, 1.2, Some(&pool));
+            assert_eq!(serial, pooled, "{kern:?} pooled must be bitwise equal");
+            let no_pool = predict_blocked_pool_f32(kern, &x32, &c32, &alpha, 1.2, None);
+            assert_eq!(serial, no_pool, "{kern:?} inline");
+            // and within the model against the f64 oracle across tiles
+            let want = predict_blocked(kern, &x64, &c64, &alpha, 1.2);
+            let bound = tol::predict_bound(kern, &x32, &c32, &alpha);
+            let diff = vec_ops::max_abs_diff(&serial, &want);
+            assert!(diff <= bound, "{kern:?} diff {diff:.3e} > bound {bound:.3e}");
+        }
+    }
+
+    #[test]
+    fn f32_matmat_matches_k1_vector_path() {
+        // K = 1 degeneracy: the f32 multi-RHS tiling must agree with the
+        // f32 vector hot path to f64-accumulation roundoff
+        let mut rng = crate::util::rng::Rng::new(89);
+        let (n, m, d) = (2 * DEFAULT_TILE + 13, 33, 7);
+        let (x32, _) = round_pair(n, d, &rng.normals(n * d));
+        let (c32, _) = round_pair(m, d, &rng.normals(m * d));
+        let uv = rng.normals(m);
+        let u = Mat::from_vec(m, 1, uv.clone());
+        let vv = rng.normals(n);
+        let xn = row_sq_norms_f32(&x32);
+        let cn = row_sq_norms_f32(&c32);
+        for kern in KERNELS {
+            let mut scratch = TileScratch::new32(DEFAULT_TILE, m);
+            let mut want = vec![0.0; m];
+            knm_matvec_blocked_f32(
+                kern, &x32, &c32, &xn, &cn, &uv, Some(&vv), None, 1.4, &mut scratch, &mut want,
+            );
+            let mut got = Mat::zeros(m, 1);
+            knm_matmat_blocked_f32(
+                kern, &x32, &c32, &xn, &cn, &u, Some(&vv), None, 1.4, &mut scratch, &mut got,
+            );
+            for j in 0..m {
+                assert!(
+                    (got[(j, 0)] - want[j]).abs() < 1e-9 * (1.0 + want[j].abs()),
+                    "{kern:?} j={j}"
+                );
+            }
+        }
+    }
+}

@@ -28,10 +28,18 @@
 //! is computed once per tile and streamed through a K-column GEMM
 //! (`Y = Kr·U + V`, `W += Krᵀ·Y`) instead of K separate GEMV sweeps —
 //! K·t panel sweeps per fit become t.
+//!
+//! The **mixed-precision tier** lives in [`mixed`]: the same tilings
+//! reading `f32` feature storage with every reduction accumulated in
+//! `f64`, under the documented error model of [`tol`] (DESIGN.md
+//! §"Precision model"). This module stays the property-test oracle.
 
 use crate::linalg::mat::Mat;
 use crate::linalg::vec_ops::{self, fast_exp};
 use crate::util::pool::{chunk_ranges, chunk_ranges_weighted, fan_out, WorkerPool};
+
+pub mod mixed;
+pub mod tol;
 
 /// Row tile height of the fused matvec: one Kr panel is `TILE × M` f64s
 /// (1 MiB at M = 1024), sized to stay L2-resident across its two passes.
@@ -420,6 +428,11 @@ pub fn predict_multi(kern: Kernel, x: &Mat, c: &Mat, alpha: &Mat, param: f64) ->
 pub struct TileScratch {
     tile: usize,
     kr: Vec<f64>,
+    /// f32 Kr tile for the mixed-precision panels ([`mixed`]); empty until
+    /// the first f32 apply so f64-only plans allocate nothing extra. The
+    /// fused Y stays `f64` for both tiers (stage-1 results accumulate in
+    /// double).
+    kr32: Vec<f32>,
     y: Vec<f64>,
 }
 
@@ -429,6 +442,20 @@ impl TileScratch {
         TileScratch {
             tile,
             kr: vec![0.0; tile * m],
+            kr32: Vec::new(),
+            y: vec![0.0; tile],
+        }
+    }
+
+    /// [`TileScratch::new`] for the mixed-precision tier: allocates the
+    /// f32 Kr tile up front and leaves the f64 one empty (it grows on
+    /// demand if the same scratch later serves an f64 sweep).
+    pub(crate) fn new32(tile: usize, m: usize) -> TileScratch {
+        let tile = tile.max(1);
+        TileScratch {
+            tile,
+            kr: Vec::new(),
+            kr32: vec![0.0; tile * m],
             y: vec![0.0; tile],
         }
     }
@@ -448,6 +475,22 @@ impl TileScratch {
     fn ensure_multi(&mut self, m: usize, k: usize) {
         if self.kr.len() < self.tile * m {
             self.kr.resize(self.tile * m, 0.0);
+        }
+        if self.y.len() < self.tile * k {
+            self.y.resize(self.tile * k, 0.0);
+        }
+    }
+
+    /// [`TileScratch::ensure`] for the f32 Kr tile.
+    fn ensure32(&mut self, m: usize) {
+        self.ensure_multi32(m, 1);
+    }
+
+    /// [`TileScratch::ensure_multi`] for the f32 Kr tile (Y is shared —
+    /// stage-1 results are `f64` on both tiers).
+    fn ensure_multi32(&mut self, m: usize, k: usize) {
+        if self.kr32.len() < self.tile * m {
+            self.kr32.resize(self.tile * m, 0.0);
         }
         if self.y.len() < self.tile * k {
             self.y.resize(self.tile * k, 0.0);

@@ -1,0 +1,179 @@
+//! Error model of the mixed-precision tier ([`super::mixed`]) — the
+//! *documented* per-kernel bounds the property tests assert, instead of
+//! ad-hoc epsilons (DESIGN.md §"Precision model").
+//!
+//! All bounds compare the f32 path against the **f64 oracle on the same
+//! rounded inputs** (both tiers read identical `f32`-representable
+//! values, so storage rounding is not part of these bounds — it is the
+//! separate, data-dependent term the e2e accuracy tests measure as RMSE
+//! drift). Because every reduction accumulates in `f64` and products of
+//! two `f32`s are exact in `f64`, the only `eps32`-scale error sources
+//! per Kr entry are:
+//!
+//! - one rounding of the exponential argument a (or linear dot) to
+//!   `f32`: relative error ≤ eps32/2;
+//! - the [`crate::linalg::vec_ops::fast_exp_f32`] polynomial: relative
+//!   error ≤ [`EXP32_RELERR`];
+//! - one rounding of the stored entry to `f32`: ≤ eps32/2 for the
+//!   exponential kernels (K ≤ 1).
+//!
+//! **Exponential kernels** (Gaussian, Laplacian): an argument
+//! perturbation δa changes exp(−a) by exp(−a)·δa ≤ exp(−a)·a·eps32/2,
+//! and a·exp(−a) ≤ 1/e over a ≥ 0 — so the entry error is bounded by
+//! `(1/e + 1/2)·eps32 + EXP32_RELERR ≤ EPS32 + EXP32_RELERR`
+//! *independent of the data and bandwidth*.
+//!
+//! **Linear kernel**: the single rounding of the f64 dot gives
+//! `|δK| ≤ |x·c|·eps32/2 ≤ Rx·Rc·eps32/2` with `Rx`, `Rc` the largest
+//! row norms of the two operands.
+//!
+//! Entry bounds then propagate through the fused stages (all-`f64`
+//! accumulation, so no further `eps32` terms):
+//!
+//! - matvec  w = Krᵀ(Kr·u + v):  `|δw|∞ ≤ n·δ·(2·kmax·‖u‖₁ + ‖v‖∞)`,
+//!   where kmax bounds |K| entries (1 for the exponential kernels,
+//!   Rx·Rc for linear);
+//! - matmat: the matvec bound with the worst column's ‖u_col‖₁ and the
+//!   global `‖V‖max`;
+//! - predict f = Kr·α:  `|δf|∞ ≤ δ·‖α‖₁`.
+//!
+//! Every bound carries a [`SAFETY`] factor of 4 so it is robust to the
+//! worst-case alignment of independent roundings while staying ~2–3
+//! orders of magnitude below what an (incorrect) f32-accumulated path
+//! would produce — tight enough to catch a missing widening.
+
+use crate::linalg::mat::Mat;
+use crate::linalg::mat32::MatF32;
+
+use super::mixed::row_sq_norms_f32;
+use super::Kernel;
+
+/// `f32` machine epsilon, widened (2⁻²³ ≈ 1.19e-7).
+pub const EPS32: f64 = f32::EPSILON as f64;
+
+/// Relative error bound of [`crate::linalg::vec_ops::fast_exp_f32`] on
+/// the non-saturated domain (measured max ≈ 1.0e-7; documented with 3×
+/// headroom).
+pub const EXP32_RELERR: f64 = 3.0e-7;
+
+/// Worst-case-alignment headroom applied to every bound.
+pub const SAFETY: f64 = 4.0;
+
+/// Largest row L2 norm of an f32 block, accumulated in f64.
+fn max_row_norm(x: &MatF32) -> f64 {
+    row_sq_norms_f32(x)
+        .into_iter()
+        .fold(0.0f64, f64::max)
+        .sqrt()
+}
+
+/// Bound on |K(x,c)| over the data: 1 for the exponential kernels, the
+/// Cauchy–Schwarz bound Rx·Rc for linear.
+pub fn kmax(kern: Kernel, x: &MatF32, c: &MatF32) -> f64 {
+    match kern {
+        Kernel::Gaussian | Kernel::Laplacian => 1.0,
+        Kernel::Linear => max_row_norm(x) * max_row_norm(c),
+    }
+}
+
+/// Per-entry bound |K32(x,c) − K64(x,c)| on identical (rounded) inputs —
+/// see the module docs for the derivation. Bandwidth-independent for the
+/// exponential kernels; `SAFETY·Rx·Rc·EPS32/2` for linear.
+pub fn entry_bound(kern: Kernel, x: &MatF32, c: &MatF32) -> f64 {
+    match kern {
+        Kernel::Gaussian | Kernel::Laplacian => SAFETY * (EPS32 + EXP32_RELERR),
+        Kernel::Linear => SAFETY * max_row_norm(x) * max_row_norm(c) * 0.5 * EPS32,
+    }
+}
+
+/// Bound on `|δw|∞` for the fused w = Krᵀ(mask ⊙ (Kr·u + v)) over
+/// `rows` rows of `x` (pass the sweep's total row count when summing
+/// several blocks/chunks into one `w`). Masks only shrink the error, so
+/// the unmasked bound is used.
+pub fn matvec_bound(
+    kern: Kernel,
+    x: &MatF32,
+    c: &MatF32,
+    rows: usize,
+    u: &[f64],
+    v: Option<&[f64]>,
+) -> f64 {
+    let u_l1: f64 = u.iter().map(|t| t.abs()).sum();
+    let v_inf = v
+        .map(|vf| vf.iter().fold(0.0f64, |a, t| a.max(t.abs())))
+        .unwrap_or(0.0);
+    let delta = entry_bound(kern, x, c);
+    let km = kmax(kern, x, c);
+    (rows as f64) * delta * (2.0 * km * u_l1 + v_inf)
+}
+
+/// Multi-RHS [`matvec_bound`]: the worst column's ‖u_col‖₁ against the
+/// global max |V| (v is the row-major `rows × K` offset block).
+pub fn matmat_bound(
+    kern: Kernel,
+    x: &MatF32,
+    c: &MatF32,
+    rows: usize,
+    u: &Mat,
+    v: Option<&[f64]>,
+) -> f64 {
+    let mut u_l1 = 0.0f64;
+    for kc in 0..u.cols {
+        let col: f64 = (0..u.rows).map(|j| u[(j, kc)].abs()).sum();
+        u_l1 = u_l1.max(col);
+    }
+    let v_inf = v
+        .map(|vf| vf.iter().fold(0.0f64, |a, t| a.max(t.abs())))
+        .unwrap_or(0.0);
+    let delta = entry_bound(kern, x, c);
+    let km = kmax(kern, x, c);
+    (rows as f64) * delta * (2.0 * km * u_l1 + v_inf)
+}
+
+/// Bound on `|δf|∞` for predictions f = Kr·α.
+pub fn predict_bound(kern: Kernel, x: &MatF32, c: &MatF32, alpha: &[f64]) -> f64 {
+    let a_l1: f64 = alpha.iter().map(|t| t.abs()).sum();
+    entry_bound(kern, x, c) * a_l1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_entry_bound_is_data_independent() {
+        let small = MatF32::from_f64s(1, 1, &[0.1]);
+        let big = MatF32::from_f64s(2, 1, &[100.0, -250.0]);
+        for kern in [Kernel::Gaussian, Kernel::Laplacian] {
+            assert_eq!(
+                entry_bound(kern, &small, &small),
+                entry_bound(kern, &big, &big),
+                "{kern:?}"
+            );
+            assert!(entry_bound(kern, &small, &small) < 2e-6);
+            assert_eq!(kmax(kern, &big, &big), 1.0);
+        }
+        // linear scales with the data
+        assert!(
+            entry_bound(Kernel::Linear, &big, &big) > entry_bound(Kernel::Linear, &small, &small)
+        );
+        let rmax = (100.0f64 * 100.0 + 0.0).sqrt().max(250.0);
+        assert!((kmax(Kernel::Linear, &big, &big) - rmax * rmax).abs() < 1e-9);
+    }
+
+    #[test]
+    fn propagation_bounds_scale_with_the_sweep() {
+        let x = MatF32::from_f64s(2, 2, &[0.5, -1.0, 2.0, 0.25]);
+        let c = MatF32::from_f64s(1, 2, &[1.0, 1.0]);
+        let u = [2.0, -3.0];
+        let b1 = matvec_bound(Kernel::Gaussian, &x, &c, 10, &u, None);
+        let b2 = matvec_bound(Kernel::Gaussian, &x, &c, 20, &u, None);
+        assert!((b2 - 2.0 * b1).abs() < 1e-18);
+        // a v offset only adds error
+        assert!(matvec_bound(Kernel::Gaussian, &x, &c, 10, &u, Some(&[5.0, -1.0])) > b1);
+        // predict bound is row-count free and ‖α‖₁-linear
+        let p1 = predict_bound(Kernel::Gaussian, &x, &c, &[1.0]);
+        let p2 = predict_bound(Kernel::Gaussian, &x, &c, &[1.0, -1.0]);
+        assert!((p2 - 2.0 * p1).abs() < 1e-18);
+    }
+}

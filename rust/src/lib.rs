@@ -46,6 +46,18 @@
 //! shards, lazy libsvm/CSV) with O(chunk) resident features — see
 //! `examples/outofcore_stream.rs` and DESIGN.md § "Out-of-core path".
 //!
+//! # Mixed precision (`--dtype f32`)
+//!
+//! Feature **storage** can be `f32` while every reduction accumulates in
+//! `f64`: shards ([`data::shard`]), streamed chunks ([`data::Chunk`]
+//! carries an [`linalg::mat32::XBlock`] of either dtype), and the rust
+//! plan's resident row blocks ([`runtime::EngineOptions::dtype`]) — CG,
+//! `Bhb` and the preconditioner stay f64. Precision is lost exactly once
+//! at storage time; [`kernels::tol`] documents the per-kernel error
+//! bounds the property tests assert. CLI: `convert --dtype f32` (half-
+//! size shards), `train`/`predict --dtype f32` (half the resident
+//! bytes). See DESIGN.md §Perf "Precision model".
+//!
 //! See also `examples/quickstart.rs` and the `falkon` CLI (`train`,
 //! `predict`, `convert`, `serve`, `tune`, `lscores`, `info`).
 

@@ -1,0 +1,377 @@
+//! Single-precision row-major storage for the mixed-precision path
+//! (DESIGN.md §"Precision model"): `MatF32` holds feature panels and
+//! center blocks in `f32` — half the resident bytes of [`Mat`] — while
+//! every reduction that reads them (kernel dots, panel sums, CG
+//! recurrences) widens to `f64` before accumulating. `Dtype` is the tag
+//! threaded through `Chunk`/`DataSource`/`EngineOptions` that selects
+//! between the two storage formats.
+
+use super::mat::Mat;
+
+/// Element storage format of a feature block. `F64` is the default and
+/// the property-test oracle; `F32` halves resident bytes and roughly
+/// doubles panel throughput on memory-bound sweeps, with the per-kernel
+/// error bounds of [`crate::kernels::tol`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Dtype {
+    #[default]
+    F64,
+    F32,
+}
+
+impl Dtype {
+    /// Bytes per stored feature element (8 or 4).
+    pub fn size_of(self) -> usize {
+        match self {
+            Dtype::F64 => std::mem::size_of::<f64>(),
+            Dtype::F32 => std::mem::size_of::<f32>(),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F64 => "f64",
+            Dtype::F32 => "f32",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Dtype> {
+        match s {
+            "f64" | "double" => Ok(Dtype::F64),
+            "f32" | "float" | "single" => Ok(Dtype::F32),
+            other => anyhow::bail!("unknown dtype {other:?} (expected f64|f32)"),
+        }
+    }
+}
+
+/// Dense row-major `f32` matrix — the storage-only sibling of [`Mat`].
+/// It deliberately has no arithmetic of its own: consumers read rows and
+/// widen to `f64` (see `kernels::kernel_panel_f32`), so precision is lost
+/// exactly once, at storage time.
+#[derive(Clone, PartialEq)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    /// row-major contiguous storage, `data[i*cols + j]`
+    pub data: Vec<f32>,
+}
+
+impl MatF32 {
+    pub fn zeros(rows: usize, cols: usize) -> MatF32 {
+        MatF32 {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> MatF32 {
+        assert_eq!(data.len(), rows * cols, "data length != rows*cols");
+        MatF32 { rows, cols, data }
+    }
+
+    /// Round an `f64` matrix to `f32` storage (the one lossy step of the
+    /// mixed-precision path).
+    pub fn from_mat(m: &Mat) -> MatF32 {
+        MatF32 {
+            rows: m.rows,
+            cols: m.cols,
+            data: m.data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// Round an `f64` buffer to `f32` storage.
+    pub fn from_f64s(rows: usize, cols: usize, data: &[f64]) -> MatF32 {
+        assert_eq!(data.len(), rows * cols, "data length != rows*cols");
+        MatF32 {
+            rows,
+            cols,
+            data: data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// Widen back to `f64` (exact — every `f32` is representable).
+    pub fn to_mat(&self) -> Mat {
+        Mat::from_f32(self.rows, self.cols, &self.data)
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of rows [a, b).
+    pub fn slice_rows(&self, a: usize, b: usize) -> MatF32 {
+        assert!(a <= b && b <= self.rows);
+        MatF32 {
+            rows: b - a,
+            cols: self.cols,
+            data: self.data[a * self.cols..b * self.cols].to_vec(),
+        }
+    }
+
+    /// Gather a row subset (order given by `idx`).
+    pub fn select_rows(&self, idx: &[usize]) -> MatF32 {
+        let mut out = MatF32::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for MatF32 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MatF32({}x{})", self.rows, self.cols)
+    }
+}
+
+/// A feature row block in either storage format — the payload of
+/// [`crate::data::source::Chunk`] and of the in-memory matvec plan's row
+/// panels. Consumers on hot paths match on the variant and call the
+/// dtype-specific kernels; everything else reads rows through the
+/// widening accessors below.
+#[derive(Debug, Clone)]
+pub enum XBlock {
+    F64(Mat),
+    F32(MatF32),
+}
+
+impl XBlock {
+    pub fn rows(&self) -> usize {
+        match self {
+            XBlock::F64(m) => m.rows,
+            XBlock::F32(m) => m.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            XBlock::F64(m) => m.cols,
+            XBlock::F32(m) => m.cols,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            XBlock::F64(_) => Dtype::F64,
+            XBlock::F32(_) => Dtype::F32,
+        }
+    }
+
+    /// Resident feature bytes — dtype-aware, so the out-of-core memory
+    /// accounting reports what is actually held (4 bytes/element for f32).
+    pub fn bytes(&self) -> usize {
+        match self {
+            XBlock::F64(m) => m.data.len() * std::mem::size_of::<f64>(),
+            XBlock::F32(m) => m.data.len() * std::mem::size_of::<f32>(),
+        }
+    }
+
+    /// Build a block from an `f64` matrix in the requested storage format
+    /// (rounding once if `F32`).
+    pub fn from_mat_dtype(m: Mat, dtype: Dtype) -> XBlock {
+        match dtype {
+            Dtype::F64 => XBlock::F64(m),
+            Dtype::F32 => XBlock::F32(MatF32::from_mat(&m)),
+        }
+    }
+
+    /// Convert to the requested storage format (identity when it already
+    /// matches; widening f32→f64 is exact, narrowing rounds once).
+    pub fn into_dtype(self, dtype: Dtype) -> XBlock {
+        match (self, dtype) {
+            (XBlock::F64(m), Dtype::F32) => XBlock::F32(MatF32::from_mat(&m)),
+            (XBlock::F32(m), Dtype::F64) => XBlock::F64(m.to_mat()),
+            (other, _) => other,
+        }
+    }
+
+    /// Borrow as `f64` storage, if that is the variant (the hot f64 paths
+    /// use this to avoid any copy).
+    pub fn as_mat(&self) -> Option<&Mat> {
+        match self {
+            XBlock::F64(m) => Some(m),
+            XBlock::F32(_) => None,
+        }
+    }
+
+    /// Widen to an owned `f64` matrix (clone for f64, exact widening for
+    /// f32) — the cold-path escape hatch.
+    pub fn to_mat(&self) -> Mat {
+        match self {
+            XBlock::F64(m) => m.clone(),
+            XBlock::F32(m) => m.to_mat(),
+        }
+    }
+
+    pub fn element(&self, i: usize, j: usize) -> f64 {
+        match self {
+            XBlock::F64(m) => m[(i, j)],
+            XBlock::F32(m) => m.row(i)[j] as f64,
+        }
+    }
+
+    /// Copy row `i` into an `f64` buffer (widening if needed).
+    pub fn row_f64_into(&self, i: usize, out: &mut [f64]) {
+        match self {
+            XBlock::F64(m) => out.copy_from_slice(m.row(i)),
+            XBlock::F32(m) => {
+                for (o, v) in out.iter_mut().zip(m.row(i)) {
+                    *o = *v as f64;
+                }
+            }
+        }
+    }
+
+    /// Append row-major `f64` values of all rows to `out` (widening).
+    pub fn extend_f64(&self, out: &mut Vec<f64>) {
+        match self {
+            XBlock::F64(m) => out.extend_from_slice(&m.data),
+            XBlock::F32(m) => out.extend(m.data.iter().map(|&v| v as f64)),
+        }
+    }
+
+    pub fn row_is_finite(&self, i: usize) -> bool {
+        match self {
+            XBlock::F64(m) => m.row(i).iter().all(|v| v.is_finite()),
+            XBlock::F32(m) => m.row(i).iter().all(|v| v.is_finite()),
+        }
+    }
+
+    /// Overwrite every element of row `i` (fault-injection poison path).
+    pub fn fill_row(&mut self, i: usize, v: f64) {
+        match self {
+            XBlock::F64(m) => m.row_mut(i).fill(v),
+            XBlock::F32(m) => m.row_mut(i).fill(v as f32),
+        }
+    }
+
+    /// Copy of rows [a, b), preserving the storage format.
+    pub fn slice_rows(&self, a: usize, b: usize) -> XBlock {
+        match self {
+            XBlock::F64(m) => XBlock::F64(m.slice_rows(a, b)),
+            XBlock::F32(m) => XBlock::F32(m.slice_rows(a, b)),
+        }
+    }
+
+    /// Gather a row subset, preserving the storage format.
+    pub fn select_rows(&self, idx: &[usize]) -> XBlock {
+        match self {
+            XBlock::F64(m) => XBlock::F64(m.select_rows(idx)),
+            XBlock::F32(m) => XBlock::F32(m.select_rows(idx)),
+        }
+    }
+}
+
+impl From<Mat> for XBlock {
+    fn from(m: Mat) -> XBlock {
+        XBlock::F64(m)
+    }
+}
+
+impl From<MatF32> for XBlock {
+    fn from(m: MatF32) -> XBlock {
+        XBlock::F32(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse_and_sizes() {
+        assert_eq!(Dtype::parse("f64").unwrap(), Dtype::F64);
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("float").unwrap(), Dtype::F32);
+        assert!(Dtype::parse("f16").is_err());
+        assert_eq!(Dtype::F64.size_of(), 8);
+        assert_eq!(Dtype::F32.size_of(), 4);
+        assert_eq!(Dtype::default(), Dtype::F64);
+        assert_eq!(Dtype::F32.name(), "f32");
+    }
+
+    #[test]
+    fn roundtrip_is_exact_for_f32_values() {
+        // f64 -> f32 -> f64 is the identity when the values are already
+        // representable in f32 (the invariant the shard roundtrip relies on)
+        let m = Mat::from_rows(&[vec![1.5, -2.25], vec![0.125, 3.0]]);
+        let m32 = MatF32::from_mat(&m);
+        assert_eq!(m32.to_mat().data, m.data);
+        assert_eq!(m32.row(1), &[0.125f32, 3.0]);
+    }
+
+    #[test]
+    fn rounding_is_nearest() {
+        let v = 0.1f64; // not representable in f32
+        let m32 = MatF32::from_f64s(1, 1, &[v]);
+        let back = m32.to_mat().data[0];
+        assert!(back != v);
+        assert!((back - v).abs() <= v * f32::EPSILON as f64);
+    }
+
+    #[test]
+    fn slice_and_select() {
+        let m = MatF32::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let s = m.slice_rows(1, 3);
+        assert_eq!(s.data, vec![3., 4., 5., 6.]);
+        let g = m.select_rows(&[2, 0]);
+        assert_eq!(g.data, vec![5., 6., 1., 2.]);
+    }
+
+    #[test]
+    fn xblock_bytes_are_dtype_aware() {
+        let m = Mat::zeros(10, 4);
+        let b64: XBlock = m.clone().into();
+        let b32 = XBlock::from_mat_dtype(m, Dtype::F32);
+        assert_eq!(b64.bytes(), 10 * 4 * 8);
+        assert_eq!(b32.bytes(), 10 * 4 * 4);
+        assert_eq!(b32.bytes() * 2, b64.bytes(), "f32 halves resident bytes");
+        assert_eq!(b64.dtype(), Dtype::F64);
+        assert_eq!(b32.dtype(), Dtype::F32);
+        assert_eq!(b32.rows(), 10);
+        assert_eq!(b32.cols(), 4);
+    }
+
+    #[test]
+    fn xblock_accessors_widen_consistently() {
+        let m = Mat::from_rows(&[vec![1.5, -2.0], vec![0.25, 8.0]]);
+        let b = XBlock::from_mat_dtype(m.clone(), Dtype::F32);
+        assert_eq!(b.element(1, 0), 0.25);
+        let mut row = vec![0.0; 2];
+        b.row_f64_into(0, &mut row);
+        assert_eq!(row, vec![1.5, -2.0]);
+        let mut all = Vec::new();
+        b.extend_f64(&mut all);
+        assert_eq!(all, m.data, "f32-exact values widen losslessly");
+        assert_eq!(b.to_mat().data, m.data);
+        assert!(b.as_mat().is_none());
+        assert!(XBlock::F64(m.clone()).as_mat().is_some());
+        // round-trip through into_dtype
+        let back = b.clone().into_dtype(Dtype::F64);
+        assert_eq!(back.dtype(), Dtype::F64);
+        assert_eq!(back.to_mat().data, m.data);
+    }
+
+    #[test]
+    fn xblock_poison_and_finite_checks() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let mut b = XBlock::from_mat_dtype(m, Dtype::F32);
+        assert!(b.row_is_finite(0));
+        b.fill_row(0, f64::NAN);
+        assert!(!b.row_is_finite(0));
+        assert!(b.row_is_finite(1));
+        let kept = b.select_rows(&[1]);
+        assert_eq!(kept.rows(), 1);
+        assert!(kept.row_is_finite(0));
+        assert_eq!(kept.dtype(), Dtype::F32);
+        let sl = b.slice_rows(1, 2);
+        assert_eq!(sl.element(0, 1), 4.0);
+    }
+}

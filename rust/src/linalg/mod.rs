@@ -5,7 +5,9 @@ pub mod chol;
 pub mod eig;
 pub mod gemm;
 pub mod mat;
+pub mod mat32;
 pub mod tri;
 pub mod vec_ops;
 
 pub use mat::Mat;
+pub use mat32::{Dtype, MatF32, XBlock};

@@ -28,6 +28,63 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
+/// Widening dot product over `f32` storage: every product is formed and
+/// accumulated in `f64` (four independent accumulators, like [`dot`]), so
+/// the only error vs. the f64 oracle is the one-time rounding of the
+/// inputs to f32 — the core contract of the mixed-precision path
+/// (DESIGN.md §"Precision model").
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let quads = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+    for q in 0..quads {
+        let k = 4 * q;
+        s0 += a[k] as f64 * b[k] as f64;
+        s1 += a[k + 1] as f64 * b[k + 1] as f64;
+        s2 += a[k + 2] as f64 * b[k + 2] as f64;
+        s3 += a[k + 3] as f64 * b[k + 3] as f64;
+    }
+    let mut s = (s0 + s2) + (s1 + s3);
+    for k in 4 * quads..n {
+        s += a[k] as f64 * b[k] as f64;
+    }
+    s
+}
+
+/// Mixed dot: `f32` panel row against an `f64` coordinator vector,
+/// accumulated in `f64` (stage 1 of the f32 streamed matvec).
+#[inline]
+pub fn dot_mixed(a: &[f32], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let quads = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+    for q in 0..quads {
+        let k = 4 * q;
+        s0 += a[k] as f64 * b[k];
+        s1 += a[k + 1] as f64 * b[k + 1];
+        s2 += a[k + 2] as f64 * b[k + 2];
+        s3 += a[k + 3] as f64 * b[k + 3];
+    }
+    let mut s = (s0 + s2) + (s1 + s3);
+    for k in 4 * quads..n {
+        s += a[k] as f64 * b[k];
+    }
+    s
+}
+
+/// y += alpha * x with an `f32` x panel widened per element — the f64
+/// accumulator (y) never loses the low bits (stage 2 of the f32 matvec).
+#[inline]
+pub fn axpy_f32(alpha: f64, x: &[f32], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i] as f64;
+    }
+}
+
 /// y += alpha * x
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
@@ -112,6 +169,59 @@ pub fn fast_exp(x: f64) -> f64 {
         0.0
     } else if x > 708.0 {
         f64::INFINITY
+    } else {
+        out
+    }
+}
+
+/// Negative-saturation threshold of [`fast_exp_f32`]: below this, exp(x)
+/// is subnormal in f32 and the routine reports exact 0.0 (the f32 twin of
+/// fast_exp's -709 cutoff).
+pub const FAST_EXP_F32_NEG_CUTOFF: f32 = -87.3;
+/// Positive clamp of [`fast_exp_f32`]; above it the result saturates to
+/// +inf (true f32 overflow is at ~88.72).
+pub const FAST_EXP_F32_POS_CUTOFF: f32 = 88.0;
+
+/// Single-precision twin of [`fast_exp`] for the f32 kernel panels: same
+/// branch-free shape (clamp, floor range reduction with a split ln2,
+/// Horner, exponent-bit scaling) but in f32 arithmetic with a degree-7
+/// polynomial — f32 only carries 24 bits, so the shorter Horner chain is
+/// both sufficient (truncation < 6e-9 relative on |r| ≤ ln2/2) and
+/// meaningfully cheaper than the f64 degree-12 chain.
+///
+/// Accuracy: |rel err| < ~3e-7 on the clamp range — inside the EPS32
+/// tolerance model of `kernels::tol`. Tails mirror [`fast_exp`]:
+///
+/// - x < [`FAST_EXP_F32_NEG_CUTOFF`]: exact 0.0 (true value subnormal),
+///   never subnormal garbage
+/// - x > [`FAST_EXP_F32_POS_CUTOFF`]: +inf (kernel arms only pass x ≤ 0,
+///   so this tail is reachable only on pathological inputs)
+/// - NaN passes through as NaN
+#[inline]
+pub fn fast_exp_f32(x: f32) -> f32 {
+    const LOG2E: f32 = std::f32::consts::LOG2_E;
+    // ln(2) split hi/lo (cephes pair): hi is exact in f32, lo restores
+    // the remaining bits of x - k*ln2
+    const LN2_HI: f32 = 0.693_359_375;
+    const LN2_LO: f32 = -2.121_944_4e-4;
+    let clamped = x.clamp(FAST_EXP_F32_NEG_CUTOFF, FAST_EXP_F32_POS_CUTOFF);
+    let kf = (clamped * LOG2E + 0.5).floor();
+    let r = (clamped - kf * LN2_HI) - kf * LN2_LO; // |r| <= ~0.3466
+    // exp(r) by degree-7 Taylor/Horner
+    let p = 1.0
+        + r * (1.0
+            + r * (0.5
+                + r * (1.0 / 6.0
+                    + r * (1.0 / 24.0
+                        + r * (1.0 / 120.0 + r * (1.0 / 720.0 + r * (1.0 / 5040.0)))))));
+    // 2^k via the exponent field; k in [-126, 127] by the clamp. NaN
+    // reaches here as kf = NaN -> cast 0 -> scale = 1, p stays NaN.
+    let scale = f32::from_bits(((127i32 + kf as i32) as u32) << 23);
+    let out = p * scale;
+    if x < FAST_EXP_F32_NEG_CUTOFF {
+        0.0
+    } else if x > FAST_EXP_F32_POS_CUTOFF {
+        f32::INFINITY
     } else {
         out
     }
@@ -241,6 +351,89 @@ mod tests {
     fn fast_exp_nan_passthrough() {
         assert!(fast_exp(f64::NAN).is_nan());
         assert!(fast_exp(-f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn fast_exp_negative_saturation_is_exact_zero() {
+        // every x below the -709 cutoff must report bit-exact +0.0 — no
+        // subnormal garbage from the exponent-bit assembly wrapping around
+        for i in 0..200 {
+            let x = -709.001 - 2.3 * i as f64;
+            let got = fast_exp(x);
+            assert_eq!(got.to_bits(), 0.0f64.to_bits(), "x={x}: got {got:e}");
+        }
+        // and the boundary itself stays accurate & normal on the live side
+        let near = fast_exp(-708.9);
+        assert!(near > 0.0 && near.is_normal(), "{near:e}");
+    }
+
+    #[test]
+    fn fast_exp_f32_negative_saturation_is_exact_zero() {
+        // same contract as the f64 arm, at the f32 subnormal boundary
+        for i in 0..200 {
+            let x = FAST_EXP_F32_NEG_CUTOFF - 0.001 - 0.7 * i as f32;
+            let got = fast_exp_f32(x);
+            assert_eq!(got.to_bits(), 0.0f32.to_bits(), "x={x}: got {got:e}");
+        }
+        let near = fast_exp_f32(FAST_EXP_F32_NEG_CUTOFF + 0.1);
+        assert!(near > 0.0 && near.is_normal(), "{near:e}");
+        assert_eq!(fast_exp_f32(f32::NEG_INFINITY), 0.0);
+    }
+
+    #[test]
+    fn fast_exp_f32_matches_libm() {
+        check("fast_exp_f32 ≈ exp", 60, |g| {
+            let x = g.f64_in(-80.0, 4.0) as f32;
+            let want = (x as f64).exp();
+            let got = fast_exp_f32(x) as f64;
+            let rel = (got - want).abs() / want.max(1e-300);
+            assert!(rel < 1e-6, "x={x}: {got} vs {want} (rel {rel})");
+        });
+        // kernel range dense sweep
+        for i in 0..400 {
+            let x = -0.1 * i as f32;
+            let (got, want) = (fast_exp_f32(x) as f64, (x as f64).exp());
+            assert!(
+                (got - want).abs() < 1e-6 * want.max(1e-30) + 1e-45,
+                "x={x}: {got} vs {want}"
+            );
+        }
+        assert_eq!(fast_exp_f32(0.0), 1.0);
+    }
+
+    #[test]
+    fn fast_exp_f32_tails() {
+        assert_eq!(fast_exp_f32(89.0), f32::INFINITY);
+        assert_eq!(fast_exp_f32(f32::INFINITY), f32::INFINITY);
+        assert_eq!(fast_exp_f32(f32::MAX), f32::INFINITY);
+        assert!(fast_exp_f32(f32::NAN).is_nan());
+        assert!(fast_exp_f32(-f32::NAN).is_nan());
+        let near = fast_exp_f32(87.0) as f64;
+        let want = 87.0f64.exp();
+        assert!((near - want).abs() / want < 1e-6, "{near} vs {want}");
+    }
+
+    #[test]
+    fn f32_dots_and_axpy_accumulate_in_f64() {
+        check("dot_f32/dot_mixed = f64 dot of widened inputs", 30, |g| {
+            let n = g.usize_in(1, 64);
+            let a64 = g.normal_vec(n);
+            let b64 = g.normal_vec(n);
+            let a32: Vec<f32> = a64.iter().map(|&v| v as f32).collect();
+            let b32: Vec<f32> = b64.iter().map(|&v| v as f32).collect();
+            // oracle: exact f64 dot of the *rounded* values — the widening
+            // dot must introduce no accumulation error of its own
+            let aw: Vec<f64> = a32.iter().map(|&v| v as f64).collect();
+            let bw: Vec<f64> = b32.iter().map(|&v| v as f64).collect();
+            let want = dot(&aw, &bw);
+            assert!((dot_f32(&a32, &b32) - want).abs() < 1e-12, "n={n}");
+            assert!((dot_mixed(&a32, &bw) - want).abs() < 1e-12, "n={n}");
+            let mut y1 = vec![0.0; n];
+            let mut y2 = vec![0.0; n];
+            axpy_f32(1.5, &a32, &mut y1);
+            axpy(1.5, &aw, &mut y2);
+            assert_eq!(y1, y2, "axpy_f32 must equal axpy on widened x");
+        });
     }
 
     #[test]

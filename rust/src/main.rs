@@ -16,12 +16,14 @@ use falkon::config::ExperimentConfig;
 use falkon::data::shard::ShardSource;
 use falkon::data::stream_text::{CsvSource, LibsvmSource};
 use falkon::data::{
-    synth, DataSource, Dataset, MemSource, NanPolicy, SanitizeSource, ZScore, ZScoreSource,
+    synth, CastSource, DataSource, Dataset, MemSource, NanPolicy, SanitizeSource, ZScore,
+    ZScoreSource,
 };
 use falkon::falkon::{
     fit, fit_multiclass, fit_source, model_io, Centers, CheckpointSpec, FalkonConfig,
 };
 use falkon::kernels::Kernel;
+use falkon::linalg::mat32::{Dtype, XBlock};
 use falkon::metrics;
 use falkon::runtime::Engine;
 use falkon::util::rng::Rng;
@@ -142,6 +144,12 @@ fn train_spec() -> Command {
         .opt("checkpoint-every", "5", "snapshot the CG state every k iterations")
         .switch("resume", "resume from an existing compatible --checkpoint sidecar")
         .opt("nan-policy", "fail", "streamed rows with NaN/Inf: fail | skip")
+        .opt(
+            "dtype",
+            "f64",
+            "feature storage: f32 halves resident row-block/chunk bytes \
+             (kernel panels still accumulate in f64; DESIGN.md §Precision model)",
+        )
 }
 
 fn config_from_flags(p: &falkon::cli::Parsed) -> Result<ExperimentConfig> {
@@ -195,10 +203,17 @@ fn prepare_data(cfg: &ExperimentConfig) -> Result<(Dataset, Dataset)> {
 fn train_stream(p: &falkon::cli::Parsed, cfg: &ExperimentConfig, engine: &Engine) -> Result<()> {
     let chunk_rows = p.usize("chunk-rows")?.max(1);
     let nan_policy = NanPolicy::parse(p.str("nan-policy"))?;
+    let dtype = Dtype::parse(p.str("dtype"))?;
     // sanitize innermost so NaN/Inf rows never reach the z-score stats
-    // pass or the fit (DESIGN.md § Fault tolerance)
+    // pass or the fit (DESIGN.md § Fault tolerance). `--dtype f32` casts
+    // right above the backend, so every downstream stage (stats pass,
+    // z-score, the fit's sweeps) holds 4-byte chunks; the default leaves
+    // chunks in the stream's native format (an f32 shard stays f32).
     let open = || -> Result<Box<dyn DataSource>> {
-        let src = open_source(&cfg.dataset, cfg.n, cfg.falkon.seed, chunk_rows)?;
+        let mut src = open_source(&cfg.dataset, cfg.n, cfg.falkon.seed, chunk_rows)?;
+        if dtype == Dtype::F32 {
+            src = Box::new(CastSource::new(src, dtype));
+        }
         Ok(Box::new(SanitizeSource::new(src, nan_policy)))
     };
     // reject unsupported tasks before any data sweep (the z-score pass
@@ -282,7 +297,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     } else if p.flag("resume") {
         bail!("--resume needs --checkpoint <path> to know which sidecar to load");
     }
-    let engine = Engine::by_name(&cfg.engine, cfg.workers)?;
+    // `--dtype f32` makes the rust plan slice its resident row blocks as
+    // f32 (the XLA engine ignores the knob and stays f64)
+    let engine = Engine::by_name_dtype(&cfg.engine, cfg.workers, Dtype::parse(p.str("dtype"))?)?;
     if p.flag("stream") {
         return train_stream(&p, &cfg, &engine);
     }
@@ -352,17 +369,32 @@ fn cmd_predict(args: &[String]) -> Result<()> {
         .opt("chunk-rows", "8192", "rows per resident chunk for .shard inputs")
         .switch("no-normalize", "skip z-score normalization")
         .opt("nan-policy", "fail", "streamed rows with NaN/Inf: fail | skip")
+        .opt(
+            "dtype",
+            "f64",
+            "feature storage for scoring: f32 halves resident chunk bytes \
+             (predictions stay within the documented tolerance model)",
+        )
         .opt("seed", "0", "rng seed (dataset generation + split)");
     let p = spec.parse(args)?;
     let model = model_io::load(p.str("model"))?;
+    let dtype = Dtype::parse(p.str("dtype"))?;
     let engine = Engine::by_name(p.str("engine"), p.usize("workers")?)?;
     if p.str("dataset").ends_with(".shard") {
         // out-of-core scoring: stream the shard, never materialize it.
         // Like the in-memory path (prepare_data), features are z-scored
         // by default — a streaming stats pass here — so a model trained
         // on normalized data isn't silently fed raw features.
+        // `--dtype f32` casts innermost, so the stats pass and the
+        // scoring sweep both hold 4-byte chunks; native f32 shards
+        // stream as f32 either way (per-chunk dtype dispatch).
+        let mut inner: Box<dyn DataSource> =
+            Box::new(ShardSource::open(p.str("dataset"), p.usize("chunk-rows")?.max(1))?);
+        if dtype == Dtype::F32 {
+            inner = Box::new(CastSource::new(inner, dtype));
+        }
         let mut src: Box<dyn DataSource> = Box::new(SanitizeSource::new(
-            Box::new(ShardSource::open(p.str("dataset"), p.usize("chunk-rows")?.max(1))?),
+            inner,
             NanPolicy::parse(p.str("nan-policy"))?,
         ));
         anyhow::ensure!(
@@ -411,7 +443,13 @@ fn cmd_predict(args: &[String]) -> Result<()> {
         model.centers.cols,
         test.d()
     );
-    let (preds, secs) = falkon::util::timer::timed(|| model.predict(&engine, &test.x));
+    let (preds, secs) = falkon::util::timer::timed(|| match dtype {
+        Dtype::F64 => model.predict(&engine, &test.x),
+        // round the features once and score through the mixed tier
+        Dtype::F32 => {
+            model.predict_block(&engine, &XBlock::from_mat_dtype(test.x.clone(), dtype))
+        }
+    });
     let preds = preds?;
     println!(
         "n={} in {:.3}s ({:.0} rows/s)",
@@ -438,31 +476,50 @@ fn cmd_convert(args: &[String]) -> Result<()> {
         .opt("chunk-rows", "8192", "rows per streamed record")
         .opt("dim", "0", "pin the libsvm feature dim (0 = infer from the data)")
         .switch("no-header", "csv input has no header row")
+        .opt(
+            "dtype",
+            "f64",
+            "shard feature storage: f32 writes half-size shards \
+             (each value rounded exactly once)",
+        )
         .opt("seed", "0", "rng seed for synthetic datasets");
     let p = spec.parse(args)?;
     let input = p.str("input");
     let output = p.str("output");
     let chunk_rows = p.usize("chunk-rows")?.max(1);
+    let dtype = Dtype::parse(p.str("dtype"))?;
     let timer = Timer::start();
     let rows = if let Some(data) =
         synth::by_name(input, &mut Rng::new(p.u64("seed")? ^ 0xDA7A), p.usize("n")?)
     {
-        falkon::data::shard::write_dataset(output, &data)?;
-        data.n()
+        let n_rows = data.n();
+        match dtype {
+            // single record: lets the reader re-chunk at any budget
+            Dtype::F64 => falkon::data::shard::write_dataset(output, &data)?,
+            Dtype::F32 => {
+                let mut src = MemSource::new(data, n_rows.max(1));
+                falkon::data::shard::write_source_dtype(output, &mut src, dtype)?;
+            }
+        };
+        n_rows
     } else if input.ends_with(".csv") {
         let mut src = CsvSource::open(input, !p.flag("no-header"), chunk_rows)?;
-        falkon::data::shard::write_source(output, &mut src)?
+        falkon::data::shard::write_source_dtype(output, &mut src, dtype)?
     } else if input.ends_with(".libsvm") || input.ends_with(".svm") || input.ends_with(".txt") {
         let dim = match p.usize("dim")? {
             0 => None,
             d => Some(d),
         };
         let mut src = LibsvmSource::open(input, dim, chunk_rows)?;
-        falkon::data::shard::write_source(output, &mut src)?
+        falkon::data::shard::write_source_dtype(output, &mut src, dtype)?
     } else {
         bail!("unknown input {input:?} — a .csv/.libsvm path or a synthetic dataset name")
     };
-    println!("wrote {rows} rows to {output} in {:.2}s", timer.elapsed_s());
+    println!(
+        "wrote {rows} rows ({}) to {output} in {:.2}s",
+        dtype.name(),
+        timer.elapsed_s()
+    );
     Ok(())
 }
 

@@ -27,6 +27,7 @@
 use crate::data::source::DataSource;
 use crate::kernels::{self, Kernel};
 use crate::linalg::mat::Mat;
+use crate::linalg::mat32::{Dtype, MatF32, XBlock};
 use crate::linalg::{chol, gemm, tri};
 #[cfg(feature = "xla")]
 use crate::runtime::exe::{literal_from_f32, literal_scalar, literal_to_f32, Exe};
@@ -65,6 +66,14 @@ pub struct EngineOptions {
     /// the source, so one flaky read must not kill an O(n√n) fit;
     /// DESIGN.md §Fault tolerance)
     pub retry: crate::util::fault::RetryPolicy,
+    /// storage format for the Rust plan's row blocks (DESIGN.md
+    /// §"Precision model"): `F32` rounds each sliced block once at plan
+    /// build and serves it with the mixed-precision kernels
+    /// ([`kernels::mixed`]) — half the resident bytes, f64 accumulation,
+    /// error within [`kernels::tol`]. The coordinator math (CG, [`Bhb`],
+    /// preconditioner) stays f64 either way. The XLA engine ignores this
+    /// knob: its artifacts already stage blocks as f32 literals.
+    pub dtype: Dtype,
 }
 
 impl Default for EngineOptions {
@@ -73,6 +82,7 @@ impl Default for EngineOptions {
             imp: Impl::Pallas,
             workers: 1,
             retry: crate::util::fault::RetryPolicy::default(),
+            dtype: Dtype::F64,
         }
     }
 }
@@ -164,8 +174,16 @@ impl Engine {
 
     /// Parse "xla", "xla-jnp", "rust" (CLI `--engine`).
     pub fn by_name(name: &str, workers: usize) -> Result<Engine> {
+        Engine::by_name_dtype(name, workers, Dtype::F64)
+    }
+
+    /// [`Engine::by_name`] with an explicit block storage format (CLI
+    /// `--dtype`). Effective on the Rust engine; the XLA path stages
+    /// blocks as f32 literals regardless.
+    pub fn by_name_dtype(name: &str, workers: usize, dtype: Dtype) -> Result<Engine> {
         let mut opts = EngineOptions {
             workers,
+            dtype,
             ..Default::default()
         };
         match name {
@@ -340,11 +358,12 @@ impl Engine {
     pub fn matvec_plan(&self, kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Result<MatvecPlan> {
         anyhow::ensure!(x.cols == c.cols, "x/c feature dims differ");
         match self {
-            Engine::Rust { pool, .. } => Ok(MatvecPlan::Rust(RustPlan::build(
+            Engine::Rust { opts, pool } => Ok(MatvecPlan::Rust(RustPlan::build(
                 kern,
                 x,
                 c,
                 param,
+                opts.dtype,
                 pool.clone(),
             )?)),
             #[cfg(feature = "xla")]
@@ -425,8 +444,7 @@ impl Engine {
         Ok(MatvecPlan::Stream(StreamPlan {
             kern,
             param,
-            c: c.clone(),
-            cn: kernels::row_sq_norms(c),
+            centers: CenterSet::build(c),
             source: RefCell::new(source),
             scratch: RefCell::new(kernels::TileScratch::new(kernels::DEFAULT_TILE, m)),
             pool,
@@ -458,7 +476,7 @@ impl Engine {
         };
         while let Some(chunk) = retry.run("predict: next_chunk", || source.next_chunk())? {
             anyhow::ensure!(chunk.start == preds.len(), "source chunks must be contiguous");
-            let p = self.predict(kern, &chunk.x, c, alpha, param)?;
+            let p = self.predict_block(kern, &chunk.x, c, alpha, param)?;
             preds.extend_from_slice(&p);
         }
         Ok(preds)
@@ -527,6 +545,46 @@ impl Engine {
         }
     }
 
+    /// [`Engine::predict`] for a feature block in either storage format —
+    /// the streaming-predict / serving dispatch point. f64 blocks take the
+    /// usual path; f32 blocks run the mixed-precision blocked predict
+    /// ([`kernels::mixed::predict_blocked_pool_f32`]) against a
+    /// once-rounded f32 copy of the centers (O(M·d) per call, negligible
+    /// next to the O(rows·M·d) panel work). On the XLA engine an f32
+    /// block is widened and served by the artifact path (which stages f32
+    /// internally anyway).
+    pub fn predict_block(
+        &self,
+        kern: Kernel,
+        x: &XBlock,
+        c: &Mat,
+        alpha: &[f64],
+        param: f64,
+    ) -> Result<Vec<f64>> {
+        match x {
+            XBlock::F64(xm) => self.predict(kern, xm, c, alpha, param),
+            XBlock::F32(xm) => {
+                anyhow::ensure!(alpha.len() == c.rows, "alpha length");
+                anyhow::ensure!(xm.cols == c.cols, "x/c feature dims differ");
+                match self {
+                    Engine::Rust { pool, .. } => {
+                        let c32 = MatF32::from_mat(c);
+                        Ok(kernels::mixed::predict_blocked_pool_f32(
+                            kern,
+                            xm,
+                            &c32,
+                            alpha,
+                            param,
+                            pool.as_deref(),
+                        ))
+                    }
+                    #[cfg(feature = "xla")]
+                    Engine::Xla { .. } => self.predict(kern, &xm.to_mat(), c, alpha, param),
+                }
+            }
+        }
+    }
+
     /// Multi-output prediction F = Kr·A for an `M×K` coefficient block
     /// (column k = class k's α) — the multiclass serving path. Each
     /// kernel panel/block is computed once and serves all K classes on
@@ -568,6 +626,25 @@ impl Engine {
                 })?;
                 Ok(preds)
             }
+        }
+    }
+
+    /// [`Engine::predict_multi`] for a feature block in either storage
+    /// format. An f32 block is widened (exact) and served by the f64
+    /// panel-amortized path: multiclass serving is bound by the K-column
+    /// fan-out, so a dedicated f32 matmat-predict tier is not worth its
+    /// surface — the storage rounding already happened at chunk emission.
+    pub fn predict_multi_block(
+        &self,
+        kern: Kernel,
+        x: &XBlock,
+        c: &Mat,
+        alphas: &Mat,
+        param: f64,
+    ) -> Result<Mat> {
+        match x {
+            XBlock::F64(xm) => self.predict_multi(kern, xm, c, alphas, param),
+            XBlock::F32(xm) => self.predict_multi(kern, &xm.to_mat(), c, alphas, param),
         }
     }
 
@@ -688,11 +765,104 @@ pub struct XlaPlan {
 
 /// One Rust-engine row block, sliced and norm-precomputed at plan build.
 struct RustBlock {
-    /// owned copy of rows [start, start + x.rows) of the dataset
-    x: Mat,
-    /// squared row norms of `x` (read by the Gaussian panel)
+    /// owned copy of rows [start, start + rows) of the dataset, in the
+    /// plan's storage format (f32 blocks were rounded once at build)
+    x: XBlock,
+    /// squared row norms of `x`, accumulated in f64 from the *stored*
+    /// values (read by the Gaussian panel)
     xn: Vec<f64>,
     start: usize,
+}
+
+/// Both storage tiers of a plan's centers with their squared row norms,
+/// so per-block/per-chunk dtype dispatch picks the matching tier without
+/// re-deriving anything. The f32 copy is M×d — negligible next to the row
+/// blocks — and its norms are recomputed from the *rounded* values, as
+/// the mixed-precision kernels require (a norm from unrounded centers
+/// would reintroduce an O(eps32) argument error the tolerance model does
+/// not budget for).
+struct CenterSet {
+    c: Mat,
+    cn: Vec<f64>,
+    c32: MatF32,
+    cn32: Vec<f64>,
+}
+
+impl CenterSet {
+    fn build(c: &Mat) -> CenterSet {
+        let c32 = MatF32::from_mat(c);
+        CenterSet {
+            cn: kernels::row_sq_norms(c),
+            cn32: kernels::mixed::row_sq_norms_f32(&c32),
+            c: c.clone(),
+            c32,
+        }
+    }
+}
+
+/// Squared row norms of a block in either storage format (f64
+/// accumulation on both tiers).
+fn block_sq_norms(x: &XBlock) -> Vec<f64> {
+    match x {
+        XBlock::F64(m) => kernels::row_sq_norms(m),
+        XBlock::F32(m) => kernels::mixed::row_sq_norms_f32(m),
+    }
+}
+
+/// Fused `w += Krᵀ(Kr·u + v)` over rows `[start, end)` of a block in
+/// either storage format — the single dtype-dispatch point of every
+/// matvec apply path (inline, pooled, in-memory, streaming). Both arms
+/// read the matching center tier of `cs`; `(0, rows)` reproduces the
+/// blocked sweep bitwise (the blocked entry points delegate to the ranged
+/// ones).
+#[allow(clippy::too_many_arguments)]
+fn matvec_ranged_any(
+    kern: Kernel,
+    x: &XBlock,
+    cs: &CenterSet,
+    xn: &[f64],
+    u: &[f64],
+    v: Option<&[f64]>,
+    param: f64,
+    scratch: &mut kernels::TileScratch,
+    w: &mut [f64],
+    start: usize,
+    end: usize,
+) {
+    match x {
+        XBlock::F64(xm) => kernels::knm_matvec_ranged(
+            kern, xm, &cs.c, xn, &cs.cn, u, v, None, param, scratch, w, start, end,
+        ),
+        XBlock::F32(xm) => kernels::mixed::knm_matvec_ranged_f32(
+            kern, xm, &cs.c32, xn, &cs.cn32, u, v, None, param, scratch, w, start, end,
+        ),
+    }
+}
+
+/// Multi-RHS sibling of [`matvec_ranged_any`]:
+/// `W += Krᵀ(Kr·U + V_block)` with per-block dtype dispatch.
+#[allow(clippy::too_many_arguments)]
+fn matmat_ranged_any(
+    kern: Kernel,
+    x: &XBlock,
+    cs: &CenterSet,
+    xn: &[f64],
+    u: &Mat,
+    v: Option<&[f64]>,
+    param: f64,
+    scratch: &mut kernels::TileScratch,
+    w: &mut Mat,
+    start: usize,
+    end: usize,
+) {
+    match x {
+        XBlock::F64(xm) => kernels::knm_matmat_ranged(
+            kern, xm, &cs.c, xn, &cs.cn, u, v, None, param, scratch, w, start, end,
+        ),
+        XBlock::F32(xm) => kernels::mixed::knm_matmat_ranged_f32(
+            kern, xm, &cs.c32, xn, &cs.cn32, u, v, None, param, scratch, w, start, end,
+        ),
+    }
 }
 
 thread_local! {
@@ -707,8 +877,7 @@ thread_local! {
 pub struct RustPlan {
     kern: Kernel,
     param: f64,
-    c: Mat,
-    cn: Vec<f64>,
+    centers: CenterSet,
     blocks: Vec<RustBlock>,
     /// scratch for the inline (single-worker) path
     scratch: RefCell<kernels::TileScratch>,
@@ -724,24 +893,25 @@ impl RustPlan {
         x: &Mat,
         c: &Mat,
         param: f64,
+        dtype: Dtype,
         pool: Option<Arc<WorkerPool>>,
     ) -> Result<RustPlan> {
         let (n, m) = (x.rows, c.rows);
-        let cn = kernels::row_sq_norms(c);
         let mut blocks = Vec::with_capacity(n.div_ceil(ROW_BLOCK.max(1)));
         let mut start = 0;
         while start < n {
             let end = (start + ROW_BLOCK).min(n);
-            let xb = x.slice_rows(start, end);
-            let xn = kernels::row_sq_norms(&xb);
+            // round once at build (when dtype = F32), then derive the
+            // norms from the stored values
+            let xb = XBlock::from_mat_dtype(x.slice_rows(start, end), dtype);
+            let xn = block_sq_norms(&xb);
             blocks.push(RustBlock { x: xb, xn, start });
             start = end;
         }
         Ok(RustPlan {
             kern,
             param,
-            c: c.clone(),
-            cn,
+            centers: CenterSet::build(c),
             blocks,
             scratch: RefCell::new(kernels::TileScratch::new(kernels::DEFAULT_TILE, m)),
             pool,
@@ -765,8 +935,7 @@ impl RustPlan {
                 let mut scratch = self.scratch.borrow_mut();
                 apply_blocks(
                     self.kern,
-                    &self.c,
-                    &self.cn,
+                    &self.centers,
                     &self.blocks,
                     u,
                     v,
@@ -785,7 +954,7 @@ impl RustPlan {
                 let tile = kernels::DEFAULT_TILE;
                 let m = self.m;
                 let (kern, param) = (self.kern, self.param);
-                let (c, cn, blocks) = (&self.c, self.cn.as_slice(), self.blocks.as_slice());
+                let (cs, blocks) = (&self.centers, self.blocks.as_slice());
                 let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
                     .iter()
                     .zip(parts.iter_mut())
@@ -797,8 +966,7 @@ impl RustPlan {
                                     .get_or_insert_with(|| kernels::TileScratch::new(tile, m));
                                 apply_blocks(
                                     kern,
-                                    c,
-                                    cn,
+                                    cs,
                                     &blocks[lo..hi],
                                     u,
                                     v,
@@ -844,8 +1012,7 @@ impl RustPlan {
                 let mut scratch = self.scratch.borrow_mut();
                 apply_blocks_multi(
                     self.kern,
-                    &self.c,
-                    &self.cn,
+                    &self.centers,
                     &self.blocks,
                     u,
                     v,
@@ -860,7 +1027,7 @@ impl RustPlan {
                 let tile = kernels::DEFAULT_TILE;
                 let m = self.m;
                 let (kern, param) = (self.kern, self.param);
-                let (c, cn, blocks) = (&self.c, self.cn.as_slice(), self.blocks.as_slice());
+                let (cs, blocks) = (&self.centers, self.blocks.as_slice());
                 let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
                     .iter()
                     .zip(parts.iter_mut())
@@ -872,8 +1039,7 @@ impl RustPlan {
                                     .get_or_insert_with(|| kernels::TileScratch::new(tile, m));
                                 apply_blocks_multi(
                                     kern,
-                                    c,
-                                    cn,
+                                    cs,
                                     &blocks[lo..hi],
                                     u,
                                     v,
@@ -909,8 +1075,10 @@ impl RustPlan {
 pub struct StreamPlan {
     kern: Kernel,
     param: f64,
-    c: Mat,
-    cn: Vec<f64>,
+    /// both center tiers — the source may yield f64 *or* f32 chunks (even
+    /// mixed across one sweep), and each resident chunk dispatches to the
+    /// kernels matching its own storage
+    centers: CenterSet,
     /// the rewindable chunk stream; `RefCell` because applies take `&self`
     source: RefCell<Box<dyn DataSource>>,
     /// scratch for the inline (single-worker) path
@@ -947,10 +1115,10 @@ impl StreamPlan {
         let mut chunks = 0usize;
         while let Some(chunk) = self.retry.run("stream sweep: next_chunk", || src.next_chunk())? {
             anyhow::ensure!(chunk.start == seen, "source chunks must be contiguous");
-            seen += chunk.x.rows;
+            seen += chunk.x.rows();
             anyhow::ensure!(seen <= self.n, "source yielded more rows than n = {}", self.n);
             self.max_chunk_bytes.set(self.max_chunk_bytes.get().max(chunk.x_bytes()));
-            let xn = kernels::row_sq_norms(&chunk.x);
+            let xn = block_sq_norms(&chunk.x);
             per_chunk(&chunk, &xn)?;
             chunks += 1;
         }
@@ -968,15 +1136,15 @@ impl StreamPlan {
         let tile = kernels::DEFAULT_TILE;
         let m = self.m;
         let (kern, param) = (self.kern, self.param);
-        let (c, cn) = (&self.c, self.cn.as_slice());
+        let cs = &self.centers;
         self.sweep(|chunk, xn| {
-            let rows = chunk.x.rows;
+            let rows = chunk.x.rows();
             let vb = v.map(|vf| &vf[chunk.start..chunk.start + rows]);
             match self.pool.as_deref() {
                 None => {
                     let mut scratch = self.scratch.borrow_mut();
-                    kernels::knm_matvec_blocked(
-                        kern, &chunk.x, c, xn, cn, u, vb, None, param, &mut scratch, &mut w,
+                    matvec_ranged_any(
+                        kern, &chunk.x, cs, xn, u, vb, param, &mut scratch, &mut w, 0, rows,
                     );
                 }
                 Some(pool) => {
@@ -996,20 +1164,8 @@ impl StreamPlan {
                                     let mut cell = cell.borrow_mut();
                                     let scratch = cell
                                         .get_or_insert_with(|| kernels::TileScratch::new(tile, m));
-                                    kernels::knm_matvec_ranged(
-                                        kern,
-                                        x,
-                                        c,
-                                        xn,
-                                        cn,
-                                        u,
-                                        vb,
-                                        None,
-                                        param,
-                                        scratch,
-                                        part,
-                                        lo,
-                                        hi,
+                                    matvec_ranged_any(
+                                        kern, x, cs, xn, u, vb, param, scratch, part, lo, hi,
                                     );
                                 });
                             });
@@ -1046,15 +1202,15 @@ impl StreamPlan {
         let tile = kernels::DEFAULT_TILE;
         let m = self.m;
         let (kern, param) = (self.kern, self.param);
-        let (c, cn) = (&self.c, self.cn.as_slice());
+        let cs = &self.centers;
         self.sweep(|chunk, xn| {
-            let rows = chunk.x.rows;
+            let rows = chunk.x.rows();
             let vb = v.map(|vf| &vf.data[chunk.start * k..(chunk.start + rows) * k]);
             match self.pool.as_deref() {
                 None => {
                     let mut scratch = self.scratch.borrow_mut();
-                    kernels::knm_matmat_blocked(
-                        kern, &chunk.x, c, xn, cn, u, vb, None, param, &mut scratch, &mut w,
+                    matmat_ranged_any(
+                        kern, &chunk.x, cs, xn, u, vb, param, &mut scratch, &mut w, 0, rows,
                     );
                 }
                 Some(pool) => {
@@ -1071,20 +1227,8 @@ impl StreamPlan {
                                     let mut cell = cell.borrow_mut();
                                     let scratch = cell
                                         .get_or_insert_with(|| kernels::TileScratch::new(tile, m));
-                                    kernels::knm_matmat_ranged(
-                                        kern,
-                                        x,
-                                        c,
-                                        xn,
-                                        cn,
-                                        u,
-                                        vb,
-                                        None,
-                                        param,
-                                        scratch,
-                                        part,
-                                        lo,
-                                        hi,
+                                    matmat_ranged_any(
+                                        kern, x, cs, xn, u, vb, param, scratch, part, lo, hi,
                                     );
                                 });
                             });
@@ -1109,8 +1253,7 @@ impl StreamPlan {
 #[allow(clippy::too_many_arguments)]
 fn apply_blocks(
     kern: Kernel,
-    c: &Mat,
-    cn: &[f64],
+    cs: &CenterSet,
     blocks: &[RustBlock],
     u: &[f64],
     v: Option<&[f64]>,
@@ -1119,10 +1262,9 @@ fn apply_blocks(
     w: &mut [f64],
 ) {
     for blk in blocks {
-        let vb = v.map(|vf| &vf[blk.start..blk.start + blk.x.rows]);
-        kernels::knm_matvec_blocked(
-            kern, &blk.x, c, &blk.xn, cn, u, vb, None, param, scratch, w,
-        );
+        let rows = blk.x.rows();
+        let vb = v.map(|vf| &vf[blk.start..blk.start + rows]);
+        matvec_ranged_any(kern, &blk.x, cs, &blk.xn, u, vb, param, scratch, w, 0, rows);
     }
 }
 
@@ -1132,8 +1274,7 @@ fn apply_blocks(
 #[allow(clippy::too_many_arguments)]
 fn apply_blocks_multi(
     kern: Kernel,
-    c: &Mat,
-    cn: &[f64],
+    cs: &CenterSet,
     blocks: &[RustBlock],
     u: &Mat,
     v: Option<&Mat>,
@@ -1143,10 +1284,9 @@ fn apply_blocks_multi(
 ) {
     let k = u.cols;
     for blk in blocks {
-        let vb = v.map(|vf| &vf.data[blk.start * k..(blk.start + blk.x.rows) * k]);
-        kernels::knm_matmat_blocked(
-            kern, &blk.x, c, &blk.xn, cn, u, vb, None, param, scratch, w,
-        );
+        let rows = blk.x.rows();
+        let vb = v.map(|vf| &vf.data[blk.start * k..(blk.start + rows) * k]);
+        matmat_ranged_any(kern, &blk.x, cs, &blk.xn, u, vb, param, scratch, w, 0, rows);
     }
 }
 
@@ -1219,12 +1359,8 @@ impl MatvecPlan {
     /// plan (blocks live device-side as literals).
     pub fn resident_x_bytes(&self) -> Option<usize> {
         match self {
-            MatvecPlan::Rust(p) => Some(
-                p.blocks
-                    .iter()
-                    .map(|b| b.x.data.len() * std::mem::size_of::<f64>())
-                    .sum(),
-            ),
+            // dtype-aware: 4 bytes/element for f32 blocks, 8 for f64
+            MatvecPlan::Rust(p) => Some(p.blocks.iter().map(|b| b.x.bytes()).sum()),
             MatvecPlan::Stream(p) => Some(p.max_resident_bytes()),
             #[cfg(feature = "xla")]
             MatvecPlan::Xla(_) => None,
@@ -2099,5 +2235,161 @@ mod tests {
                 .unwrap();
             assert_eq!(got, want, "workers {workers}");
         }
+    }
+
+    // -- mixed precision (f32 storage, f64 accumulation) ----------------
+
+    use crate::kernels::tol;
+
+    fn rust_f32(workers: usize) -> Engine {
+        Engine::rust_with(EngineOptions {
+            imp: Impl::Pallas,
+            workers,
+            dtype: Dtype::F32,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn f32_plan_matches_f64_oracle_within_model() {
+        // an f32-storage plan against the f64 plan built on the SAME
+        // rounded values, every kernel family, within the documented
+        // tolerance model — not an ad-hoc epsilon
+        let mut rng = Rng::new(41);
+        let (n, d, m) = (2300, 5, 16);
+        let x = Mat::from_vec(n, d, rng.normals(n * d));
+        let c = x.select_rows(&rng.choose(n, m));
+        let u = rng.normals(m);
+        let v = rng.normals(n);
+        let x32 = MatF32::from_mat(&x);
+        let c32 = MatF32::from_mat(&c);
+        let (xr, cr) = (x32.to_mat(), c32.to_mat());
+        let eng32 = rust_f32(1);
+        let eng64 = Engine::rust();
+        for kern in [Kernel::Gaussian, Kernel::Laplacian, Kernel::Linear] {
+            let p32 = eng32.matvec_plan(kern, &x, &c, 1.3).unwrap();
+            let p64 = eng64.matvec_plan(kern, &xr, &cr, 1.3).unwrap();
+            for vopt in [None, Some(v.as_slice())] {
+                let got = p32.apply(&u, vopt).unwrap();
+                let want = p64.apply(&u, vopt).unwrap();
+                let diff = crate::linalg::vec_ops::max_abs_diff(&got, &want);
+                let bound = tol::matvec_bound(kern, &x32, &c32, n, &u, vopt);
+                assert!(diff <= bound, "{kern:?} diff={diff} bound={bound}");
+            }
+            // multi-RHS: K columns through the panel-amortized f32 path
+            let k = 3;
+            let um = Mat::from_vec(m, k, rng.normals(m * k));
+            let got = p32.apply_multi(&um, None).unwrap();
+            let want = p64.apply_multi(&um, None).unwrap();
+            let bound = tol::matmat_bound(kern, &x32, &c32, n, &um, None);
+            assert!(got.max_abs_diff(&want) <= bound, "{kern:?} multi");
+        }
+    }
+
+    #[test]
+    fn f32_plan_halves_resident_bytes_and_pools_deterministically() {
+        // satellite: memory accounting must report 4 bytes/element for
+        // f32 blocks, and pooled f32 applies stay bitwise deterministic
+        let (x, c, _) = toy(2500, 4, 43);
+        let p1 = rust_f32(1).matvec_plan(Kernel::Gaussian, &x, &c, 1.2).unwrap();
+        let p4 = rust_f32(4).matvec_plan(Kernel::Gaussian, &x, &c, 1.2).unwrap();
+        let p64 = Engine::rust().matvec_plan(Kernel::Gaussian, &x, &c, 1.2).unwrap();
+        assert_eq!(p1.resident_x_bytes().unwrap(), x.rows * x.cols * 4);
+        assert_eq!(p64.resident_x_bytes().unwrap(), 2 * p1.resident_x_bytes().unwrap());
+        let mut rng = Rng::new(44);
+        let u = rng.normals(c.rows);
+        let w1 = p1.apply(&u, None).unwrap();
+        let w4 = p4.apply(&u, None).unwrap();
+        let w4b = p4.apply(&u, None).unwrap();
+        assert_eq!(w4, w4b, "pooled f32 apply must be bitwise deterministic");
+        let diff = crate::linalg::vec_ops::max_abs_diff(&w1, &w4);
+        assert!(diff < 1e-9, "pooled vs serial f32: {diff}");
+    }
+
+    #[test]
+    fn f32_stream_plan_matches_f32_in_memory_bitwise() {
+        // an f32 chunk stream and an f32 in-memory plan store identically
+        // rounded values and accumulate per-row in global row order —
+        // bitwise equal, like the f64 pair; and the peak-chunk proxy is
+        // dtype-aware (satellite: half the resident bytes at equal rows)
+        let (x, c, y) = toy(1700, 4, 45);
+        let eng32 = rust_f32(1);
+        let plan_mem = eng32.matvec_plan(Kernel::Gaussian, &x, &c, 1.1).unwrap();
+        let mut rng = Rng::new(46);
+        let u = rng.normals(c.rows);
+        let want = plan_mem.apply(&u, Some(&y)).unwrap();
+        let data = Dataset::new_regression("t", x.clone(), vec![0.0; x.rows]);
+        let src = MemSource::with_dtype(data, 450, Dtype::F32);
+        let plan = eng32
+            .matvec_plan_source(Kernel::Gaussian, Box::new(src), &c, 1.1, x.rows)
+            .unwrap();
+        let got = plan.apply(&u, Some(&y)).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(plan.resident_x_bytes().unwrap(), 450 * x.cols * 4);
+        // multi-RHS over the same stream
+        let k = 2;
+        let um = Mat::from_vec(c.rows, k, rng.normals(c.rows * k));
+        let gm = plan.apply_multi(&um, None).unwrap();
+        let wm = plan_mem.apply_multi(&um, None).unwrap();
+        assert_eq!(gm.data, wm.data);
+    }
+
+    #[test]
+    fn predict_block_dispatches_both_dtypes() {
+        let (x, c, _) = toy(900, 4, 47);
+        let mut rng = Rng::new(48);
+        let alpha = rng.normals(c.rows);
+        let eng = Engine::rust();
+        // f64 arm is exactly Engine::predict
+        let want64 = eng.predict(Kernel::Gaussian, &x, &c, &alpha, 1.1).unwrap();
+        let got64 = eng
+            .predict_block(Kernel::Gaussian, &XBlock::F64(x.clone()), &c, &alpha, 1.1)
+            .unwrap();
+        assert_eq!(got64, want64);
+        // f32 arm: within the predict bound of the f64 oracle on the same
+        // rounded values; pooled == serial bitwise
+        let x32 = MatF32::from_mat(&x);
+        let c32 = MatF32::from_mat(&c);
+        let blk = XBlock::F32(x32.clone());
+        let got32 = eng
+            .predict_block(Kernel::Gaussian, &blk, &c, &alpha, 1.1)
+            .unwrap();
+        let oracle = eng
+            .predict(Kernel::Gaussian, &x32.to_mat(), &c32.to_mat(), &alpha, 1.1)
+            .unwrap();
+        let diff = crate::linalg::vec_ops::max_abs_diff(&got32, &oracle);
+        let bound = tol::predict_bound(Kernel::Gaussian, &x32, &c32, &alpha);
+        assert!(diff <= bound, "diff={diff} bound={bound}");
+        let eng3 = Engine::rust_with(EngineOptions {
+            imp: Impl::Pallas,
+            workers: 3,
+            ..Default::default()
+        });
+        let pooled = eng3
+            .predict_block(Kernel::Gaussian, &blk, &c, &alpha, 1.1)
+            .unwrap();
+        assert_eq!(pooled, got32);
+    }
+
+    #[test]
+    fn predict_source_serves_f32_chunks_within_model() {
+        let (x, c, _) = toy(1100, 5, 49);
+        let mut rng = Rng::new(50);
+        let alpha = rng.normals(c.rows);
+        let eng = Engine::rust();
+        let data = Dataset::new_regression("t", x.clone(), vec![0.0; x.rows]);
+        let mut src = MemSource::with_dtype(data, 256, Dtype::F32);
+        let got = eng
+            .predict_source(Kernel::Gaussian, &mut src, &c, &alpha, 1.2)
+            .unwrap();
+        let x32 = MatF32::from_mat(&x);
+        let c32 = MatF32::from_mat(&c);
+        let oracle = eng
+            .predict(Kernel::Gaussian, &x32.to_mat(), &c32.to_mat(), &alpha, 1.2)
+            .unwrap();
+        let diff = crate::linalg::vec_ops::max_abs_diff(&got, &oracle);
+        let bound = tol::predict_bound(Kernel::Gaussian, &x32, &c32, &alpha);
+        assert!(diff <= bound, "diff={diff} bound={bound}");
+        assert_eq!(got.len(), x.rows);
     }
 }

@@ -64,7 +64,9 @@ pub fn predict_source(
     while let Some(chunk) = retry.run("bulk predict: next_chunk", || source.next_chunk())? {
         anyhow::ensure!(chunk.start == preds.len(), "source chunks must be contiguous");
         max_chunk_bytes = max_chunk_bytes.max(chunk.x_bytes());
-        let mut p = model.predict(engine, &chunk.x)?;
+        // dtype-aware per-chunk dispatch: f32 chunks stay f32 through the
+        // kernel panels (f64-accumulated), f64 chunks take the exact path
+        let mut p = model.predict_block(engine, &chunk.x)?;
         preds.append(&mut p);
         targets.extend_from_slice(&chunk.y);
     }
@@ -746,5 +748,33 @@ mod tests {
         );
         let mut bad_src = crate::data::MemSource::new(bad, 4);
         assert!(predict_source(&model, &eng, &mut bad_src).is_err());
+    }
+
+    #[test]
+    fn bulk_predict_f32_source_halves_resident_bytes_within_model() {
+        use crate::kernels::tol;
+        use crate::linalg::mat32::{Dtype, MatF32};
+        let (model, x, y) = tiny_model();
+        let eng = Engine::rust();
+        // oracle: f64 predict on the rounded-and-widened features, so the
+        // comparison isolates the compute tier from storage rounding
+        let xr = MatF32::from_mat(&x);
+        let want = model.predict(&eng, &xr.to_mat()).unwrap();
+        let bound = tol::predict_bound(
+            model.config.kernel,
+            &xr,
+            &MatF32::from_mat(&model.centers),
+            &model.alpha,
+        );
+        let data = crate::data::Dataset::new_regression("bulk32", x, y.clone());
+        let mut src = crate::data::MemSource::with_dtype(data, 77, Dtype::F32);
+        let score = predict_source(&model, &eng, &mut src).unwrap();
+        assert_eq!(score.targets, y);
+        assert_eq!(score.rows, want.len());
+        for (i, (&got, &w)) in score.preds.iter().zip(&want).enumerate() {
+            assert!((got - w).abs() <= bound, "row {i}: {got} vs {w} (bound {bound:.3e})");
+        }
+        // the peak-chunk proxy must report 4 bytes/element, not 8
+        assert_eq!(score.max_chunk_bytes, 77 * model.centers.cols * 4);
     }
 }

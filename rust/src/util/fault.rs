@@ -312,9 +312,8 @@ impl DataSource for FaultySource {
                     self.injected += 1;
                     if let Some(c) = &mut chunk {
                         if c.rows() > 0 {
-                            for v in c.x.row_mut(0) {
-                                *v = f64::NAN;
-                            }
+                            // dtype-preserving poison (NaN rounds to NaN)
+                            c.x.fill_row(0, f64::NAN);
                         }
                     }
                     return Ok(chunk);
@@ -494,7 +493,7 @@ mod tests {
             let mut xdata = Vec::new();
             while let Some(c) = policy.run("next_chunk", || src.next_chunk()).unwrap() {
                 assert_eq!(c.start, y.len(), "sweep {sweep} contiguity");
-                xdata.extend_from_slice(&c.x.data);
+                c.x.extend_f64(&mut xdata);
                 y.extend_from_slice(&c.y);
             }
             assert_eq!(xdata, data.x.data, "sweep {sweep}");
@@ -527,8 +526,31 @@ mod tests {
         let mut src = FaultySource::new(Box::new(MemSource::new(toy(40), 40)), plan);
         src.reset().unwrap();
         let c = src.next_chunk().unwrap().unwrap();
-        assert!(c.x.row(0).iter().all(|v| v.is_nan()));
-        assert!(c.x.row(1).iter().all(|v| v.is_finite()));
+        let mut row = vec![0.0f64; c.x.cols()];
+        c.x.row_f64_into(0, &mut row);
+        assert!(row.iter().all(|v| v.is_nan()));
+        c.x.row_f64_into(1, &mut row);
+        assert!(row.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn faults_preserve_chunk_dtype() {
+        use crate::linalg::mat32::Dtype;
+        let plan = FaultPlan::new()
+            .at(0, FaultKind::NanRow, 1)
+            .at(1, FaultKind::Truncated, 1);
+        let mut src = FaultySource::new(
+            Box::new(MemSource::with_dtype(toy(40), 20, Dtype::F32)),
+            plan,
+        );
+        src.reset().unwrap();
+        let c = src.next_chunk().unwrap().unwrap();
+        assert_eq!(c.dtype(), Dtype::F32, "poisoned chunk keeps f32 storage");
+        assert!(!c.x.row_is_finite(0));
+        assert!(c.x.row_is_finite(1));
+        let t = src.next_chunk().unwrap().unwrap();
+        assert_eq!(t.dtype(), Dtype::F32, "truncated chunk keeps f32 storage");
+        assert_eq!(t.rows(), 19);
     }
 
     #[test]
