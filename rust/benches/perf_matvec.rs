@@ -15,7 +15,7 @@ use falkon::kernels::{tol, Kernel};
 use falkon::linalg::mat::Mat;
 use falkon::linalg::mat32::{Dtype, MatF32};
 use falkon::linalg::vec_ops::max_abs_diff;
-use falkon::runtime::{Engine, EngineOptions, Impl};
+use falkon::runtime::{Engine, EngineOptions, Impl, Isa, SimdMode};
 use falkon::util::json::Value;
 use falkon::util::rng::Rng;
 
@@ -215,14 +215,109 @@ fn main() -> anyhow::Result<()> {
         mtable.print();
     }
 
+    // SIMD leg: the best runtime-detected panel arm against the forced
+    // scalar tiles, on both storage tiers — speedup from the explicit
+    // AVX2/NEON panels, max-abs-error asserted within the documented
+    // SIMD tolerance model (kernels::tol). CI gates on the JSON: best
+    // f32 speedup ≥ 1.5x (≥ 1.15x f64 when no f32 records exist); the
+    // leg records but does not gate when the host has no vector arm.
+    let simd_isa = Isa::detect_best();
+    let mut simd_records: Vec<Value> = Vec::new();
+    {
+        let force = match simd_isa {
+            Isa::Scalar => SimdMode::Scalar,
+            Isa::Avx2 => SimdMode::Avx2,
+            Isa::Neon => SimdMode::Neon,
+        };
+        let mut stable = Table::new(
+            "P1d: SIMD panels vs scalar tiles (rust engine)",
+            &["dtype", "d", "M", "t/apply scalar", "t/apply simd", "speedup", "max|err|", "bound"],
+        );
+        for (dtype, dname) in [(Dtype::F64, "f64"), (Dtype::F32, "f32")] {
+            for (d, m) in [(10usize, 1024usize.min(n / 2)), (128, 1024usize.min(n / 2))] {
+                let mut rng = Rng::new(85);
+                let x = Mat::from_vec(n, d, rng.normals(n * d));
+                let c = x.select_rows(&rng.choose(n, m));
+                let u = rng.normals(m);
+                let eng_simd = Engine::rust_with(EngineOptions {
+                    dtype,
+                    simd: force,
+                    ..Default::default()
+                });
+                let eng_scalar = Engine::rust_with(EngineOptions {
+                    dtype,
+                    simd: SimdMode::Scalar,
+                    ..Default::default()
+                });
+                let plan_simd = eng_simd.matvec_plan(Kernel::Gaussian, &x, &c, 1.0)?;
+                let plan_scalar = eng_scalar.matvec_plan(Kernel::Gaussian, &x, &c, 1.0)?;
+                let t_simd = time_fn(1, reps, || {
+                    let _ = plan_simd.apply(&u, None).unwrap();
+                });
+                let t_scalar = time_fn(1, reps, || {
+                    let _ = plan_scalar.apply(&u, None).unwrap();
+                });
+                let got = plan_simd.apply(&u, None)?;
+                let want = plan_scalar.apply(&u, None)?;
+                let err = max_abs_diff(&got, &want);
+                // f64 tier: the dedicated SIMD-vs-scalar reassociation
+                // bound; f32 tier: both arms round identically staged
+                // arguments to f32, so the (larger) f32-vs-f64 compute
+                // bound is a valid conservative ceiling
+                let bound = match dtype {
+                    Dtype::F64 => tol::simd_matvec_bound(Kernel::Gaussian, &x, &c, 1.0, &u, None),
+                    Dtype::F32 => {
+                        let xr = MatF32::from_mat(&x);
+                        let cr = MatF32::from_mat(&c);
+                        tol::matvec_bound(Kernel::Gaussian, &xr, &cr, x.rows, &u, None)
+                    }
+                };
+                anyhow::ensure!(
+                    err <= bound,
+                    "SIMD {dname} apply error {err:.3e} above the documented bound \
+                     {bound:.3e} (d={d} M={m}, isa={})",
+                    simd_isa.name()
+                );
+                let speedup = t_scalar.median / t_simd.median;
+                stable.row(&[
+                    dname.into(),
+                    format!("{d}"),
+                    format!("{m}"),
+                    fmt_secs(t_scalar.median),
+                    fmt_secs(t_simd.median),
+                    format!("{speedup:.2}x"),
+                    format!("{err:.2e}"),
+                    format!("{bound:.2e}"),
+                ]);
+                simd_records.push(Value::obj(vec![
+                    ("kernel", Value::str("gaussian")),
+                    ("isa", Value::str(simd_isa.name())),
+                    ("dtype", Value::str(dname)),
+                    ("n", Value::num(n as f64)),
+                    ("m", Value::num(m as f64)),
+                    ("d", Value::num(d as f64)),
+                    ("apply_scalar", t_scalar.to_json()),
+                    ("apply_simd", t_simd.to_json()),
+                    ("speedup", Value::num(speedup)),
+                    ("max_abs_err", Value::num(err)),
+                    ("err_bound", Value::num(bound)),
+                    ("within_model", Value::Bool(err <= bound)),
+                ]));
+            }
+        }
+        stable.print();
+    }
+
     let report = Value::obj(vec![
-        ("schema", Value::str("falkon/bench_matvec/v3")),
+        ("schema", Value::str("falkon/bench_matvec/v4")),
         ("n", Value::num(n as f64)),
         ("reps", Value::num(reps as f64)),
         ("smoke", Value::Bool(args.flag("--smoke"))),
+        ("simd_isa", Value::str(simd_isa.name())),
         ("apply", Value::arr(apply_records)),
         ("workers_sweep", Value::arr(sweep_records)),
         ("mixed", Value::arr(mixed_records)),
+        ("simd", Value::arr(simd_records)),
     ]);
     write_json(&json_path, &report)?;
     println!("\nwrote {json_path}");

@@ -12,7 +12,7 @@ use falkon::bench::{fmt_secs, time_fn, write_json, BenchArgs, Table};
 use falkon::kernels::{self, Kernel};
 use falkon::linalg::mat::Mat;
 use falkon::linalg::{chol, tri};
-use falkon::runtime::{Engine, EngineOptions, Impl};
+use falkon::runtime::{Engine, EngineOptions, Impl, Isa};
 use falkon::util::json::Value;
 use falkon::util::pool::WorkerPool;
 use falkon::util::rng::Rng;
@@ -68,7 +68,7 @@ fn main() -> anyhow::Result<()> {
             let _ = kernels::kmm(Kernel::Gaussian, &c, 1.0);
         });
         let kmm_pool_stats = time_fn(1, reps, || {
-            let _ = kernels::kmm_par(Kernel::Gaussian, &c, 1.0, Some(&pool));
+            let _ = kernels::kmm_par(Kernel::Gaussian, &c, 1.0, Some(&pool), Isa::global());
         });
         let kmm_ref_stats = (m <= ref_cap).then(|| {
             time_fn(0, reps, || {
@@ -194,7 +194,7 @@ fn main() -> anyhow::Result<()> {
                 let _ = chol::cholesky_upper_blocked(&kj, chol::CHOL_BLOCK, p).unwrap();
             });
             let kmm_stats = time_fn(1, reps, || {
-                let _ = kernels::kmm_par(Kernel::Gaussian, &c, 1.0, p);
+                let _ = kernels::kmm_par(Kernel::Gaussian, &c, 1.0, p, Isa::global());
             });
             if w == 1 {
                 chol_base = chol_stats.median;

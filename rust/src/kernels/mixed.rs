@@ -26,6 +26,7 @@ use crate::linalg::mat32::MatF32;
 use crate::linalg::vec_ops::{self, fast_exp_f32};
 use crate::util::pool::{chunk_ranges, fan_out, WorkerPool};
 
+use super::simd::{self, Isa};
 use super::{Kernel, TileScratch, DEFAULT_TILE};
 
 /// Squared L2 norm of every row, accumulated in `f64` — the f32-storage
@@ -42,14 +43,49 @@ pub fn row_sq_norms_f32(x: &MatF32) -> Vec<f64> {
 }
 
 /// Fill a panel of kernel values K(X_panel, C[j0..]) into the `f32` tile
-/// `out` — the mixed-precision sibling of [`super::kernel_panel`] with
-/// the same layout contract (`ldo`, `j0`). The 1×4 register tile of dot
+/// `out` through the selected instruction-set arm — the mixed-precision
+/// sibling of the parent module's `kernel_panel` dispatcher. Every arm
+/// keeps the tier's precision contract: f32 storage widened to f64 for
+/// all reductions, the exponential argument rounded once to f32.
+#[allow(clippy::too_many_arguments)]
+fn kernel_panel_f32(
+    kern: Kernel,
+    xb: &[f32],
+    d: usize,
+    rows: usize,
+    xn: &[f64],
+    c: &MatF32,
+    cn: &[f64],
+    j0: usize,
+    param: f64,
+    out: &mut [f32],
+    ldo: usize,
+    isa: Isa,
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Isa::Avx2 is only produced by simd::resolve()/detect_best()
+        // after runtime detection confirmed avx2+fma on this host.
+        Isa::Avx2 => unsafe {
+            simd::avx2::kernel_panel_f32_avx2(kern, xb, d, rows, xn, c, cn, j0, param, out, ldo)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is a baseline feature of every aarch64 target.
+        Isa::Neon => unsafe {
+            simd::neon::kernel_panel_f32_neon(kern, xb, d, rows, xn, c, cn, j0, param, out, ldo)
+        },
+        _ => kernel_panel_f32_scalar(kern, xb, d, rows, xn, c, cn, j0, param, out, ldo),
+    }
+}
+
+/// Scalar arm of [`kernel_panel_f32`], same layout contract (`ldo`, `j0`)
+/// as [`super::kernel_panel_scalar`]. The 1×4 register tile of dot
 /// products accumulates in `f64`; the exponential argument (or linear
 /// dot) is computed in `f64` and rounded **once** to `f32`, then the
 /// exponential arms run a separate vectorizable [`fast_exp_f32`] pass
 /// over the finished row.
 #[allow(clippy::too_many_arguments)]
-fn kernel_panel_f32(
+fn kernel_panel_f32_scalar(
     kern: Kernel,
     xb: &[f32],
     d: usize,
@@ -197,6 +233,7 @@ pub fn kernel_block_f32(kern: Kernel, x: &MatF32, c: &MatF32, param: f64) -> Mat
             param,
             &mut out.data[s * m..],
             m,
+            Isa::global(),
         );
         s += rows;
     }
@@ -223,7 +260,22 @@ pub fn knm_matvec_blocked_f32(
     scratch: &mut TileScratch,
     w: &mut [f64],
 ) {
-    knm_matvec_ranged_f32(kern, x, c, xn, cn, u, v, mask, param, scratch, w, 0, x.rows)
+    knm_matvec_ranged_f32(
+        kern,
+        x,
+        c,
+        xn,
+        cn,
+        u,
+        v,
+        mask,
+        param,
+        scratch,
+        w,
+        0,
+        x.rows,
+        Isa::global(),
+    )
 }
 
 /// [`knm_matvec_blocked_f32`] restricted to rows `[start, end)` of `x` —
@@ -245,6 +297,7 @@ pub fn knm_matvec_ranged_f32(
     w: &mut [f64],
     start: usize,
     end: usize,
+    isa: Isa,
 ) {
     let (n, m, d) = (x.rows, c.rows, x.cols);
     assert_eq!(c.cols, d, "feature dims differ");
@@ -266,7 +319,7 @@ pub fn knm_matvec_ranged_f32(
         let rows = (end - s).min(tile);
         let kr = &mut scratch.kr32[..rows * m];
         let xb = &x.data[s * d..(s + rows) * d];
-        kernel_panel_f32(kern, xb, d, rows, &xn[s..s + rows], c, cn, 0, param, kr, m);
+        kernel_panel_f32(kern, xb, d, rows, &xn[s..s + rows], c, cn, 0, param, kr, m, isa);
         // fused stage 1: y = mask ⊙ (Kr·u + v), f64 accumulators
         for i in 0..rows {
             let gi = s + i;
@@ -343,7 +396,22 @@ pub fn knm_matmat_blocked_f32(
     scratch: &mut TileScratch,
     w: &mut Mat,
 ) {
-    knm_matmat_ranged_f32(kern, x, c, xn, cn, u, v, mask, param, scratch, w, 0, x.rows)
+    knm_matmat_ranged_f32(
+        kern,
+        x,
+        c,
+        xn,
+        cn,
+        u,
+        v,
+        mask,
+        param,
+        scratch,
+        w,
+        0,
+        x.rows,
+        Isa::global(),
+    )
 }
 
 /// [`knm_matmat_blocked_f32`] restricted to rows `[start, end)` of `x` —
@@ -363,6 +431,7 @@ pub fn knm_matmat_ranged_f32(
     w: &mut Mat,
     start: usize,
     end: usize,
+    isa: Isa,
 ) {
     let (n, m, d) = (x.rows, c.rows, x.cols);
     let k = u.cols;
@@ -389,7 +458,7 @@ pub fn knm_matmat_ranged_f32(
         let rows = (end - s).min(tile);
         let kr = &mut kr32[..rows * m];
         let xb = &x.data[s * d..(s + rows) * d];
-        kernel_panel_f32(kern, xb, d, rows, &xn[s..s + rows], c, cn, 0, param, kr, m);
+        kernel_panel_f32(kern, xb, d, rows, &xn[s..s + rows], c, cn, 0, param, kr, m, isa);
         // fused stage 1: Y = mask ⊙ (Kr·U + V)   (rows × K, f64)
         let y = &mut y[..rows * k];
         for i in 0..rows {
@@ -448,7 +517,7 @@ pub fn predict_blocked_f32(
     alpha: &[f64],
     param: f64,
 ) -> Vec<f64> {
-    predict_blocked_pool_f32(kern, x, c, alpha, param, None)
+    predict_blocked_pool_f32(kern, x, c, alpha, param, None, Isa::global())
 }
 
 /// [`predict_blocked_f32`] fanned out over the shared worker pool — the
@@ -462,6 +531,7 @@ pub fn predict_blocked_pool_f32(
     alpha: &[f64],
     param: f64,
     pool: Option<&WorkerPool>,
+    isa: Isa,
 ) -> Vec<f64> {
     let (n, m) = (x.rows, c.rows);
     assert_eq!(c.cols, x.cols, "feature dims differ");
@@ -483,7 +553,7 @@ pub fn predict_blocked_pool_f32(
         let (chunk, tail) = rest.split_at_mut(hi - lo);
         rest = tail;
         tasks.push(Box::new(move || {
-            predict_range_f32(kern, x, c, cn, alpha, param, lo, hi, chunk);
+            predict_range_f32(kern, x, c, cn, alpha, param, lo, hi, chunk, isa);
         }));
     }
     fan_out(pool, tasks);
@@ -503,6 +573,7 @@ fn predict_range_f32(
     start: usize,
     end: usize,
     out: &mut [f64],
+    isa: Isa,
 ) {
     let (m, d) = (c.rows, x.cols);
     debug_assert_eq!(out.len(), end - start);
@@ -522,7 +593,7 @@ fn predict_range_f32(
         let kr = &mut scratch.kr32[..rows * m];
         let xb = &x.data[s * d..(s + rows) * d];
         let xnr = &xn[s - start..s - start + rows];
-        kernel_panel_f32(kern, xb, d, rows, xnr, c, cn, 0, param, kr, m);
+        kernel_panel_f32(kern, xb, d, rows, xnr, c, cn, 0, param, kr, m, isa);
         for i in 0..rows {
             out[s - start + i] = vec_ops::dot_mixed(&kr[i * m..(i + 1) * m], alpha);
         }
@@ -661,8 +732,20 @@ mod tests {
                 let mut got = vec![0.0; m];
                 for (lo, hi) in [(0, split), (split, n)] {
                     knm_matvec_ranged_f32(
-                        kern, &x32, &c32, &xn, &cn, &u, Some(&v), None, p, &mut scratch, &mut got,
-                        lo, hi,
+                        kern,
+                        &x32,
+                        &c32,
+                        &xn,
+                        &cn,
+                        &u,
+                        Some(&v),
+                        None,
+                        p,
+                        &mut scratch,
+                        &mut got,
+                        lo,
+                        hi,
+                        Isa::global(),
                     );
                 }
                 assert_eq!(got, want, "{kern:?} vector split at {split}");
@@ -674,8 +757,20 @@ mod tests {
                 let mut got_m = Mat::zeros(m, k);
                 for (lo, hi) in [(0, split), (split, n)] {
                     knm_matmat_ranged_f32(
-                        kern, &x32, &c32, &xn, &cn, &um, Some(&vm), None, p, &mut scratch,
-                        &mut got_m, lo, hi,
+                        kern,
+                        &x32,
+                        &c32,
+                        &xn,
+                        &cn,
+                        &um,
+                        Some(&vm),
+                        None,
+                        p,
+                        &mut scratch,
+                        &mut got_m,
+                        lo,
+                        hi,
+                        Isa::global(),
                     );
                 }
                 assert_eq!(got_m.data, want_m.data, "{kern:?} multi split at {split}");
@@ -854,9 +949,11 @@ mod tests {
         let alpha = rng.normals(m);
         for kern in KERNELS {
             let serial = predict_blocked_f32(kern, &x32, &c32, &alpha, 1.2);
-            let pooled = predict_blocked_pool_f32(kern, &x32, &c32, &alpha, 1.2, Some(&pool));
+            let pooled =
+                predict_blocked_pool_f32(kern, &x32, &c32, &alpha, 1.2, Some(&pool), Isa::global());
             assert_eq!(serial, pooled, "{kern:?} pooled must be bitwise equal");
-            let no_pool = predict_blocked_pool_f32(kern, &x32, &c32, &alpha, 1.2, None);
+            let no_pool =
+                predict_blocked_pool_f32(kern, &x32, &c32, &alpha, 1.2, None, Isa::global());
             assert_eq!(serial, no_pool, "{kern:?} inline");
             // and within the model against the f64 oracle across tiles
             let want = predict_blocked(kern, &x64, &c64, &alpha, 1.2);
@@ -896,5 +993,151 @@ mod tests {
                 );
             }
         }
+    }
+
+    // -- SIMD-vs-scalar arms, f32 tier -------------------------------------
+    //
+    // Same contract as the f64 tests in the parent module: detect_best()
+    // (immune to FALKON_SIMD) pinned against an explicit Isa::Scalar.
+
+    #[test]
+    fn f32_simd_panels_match_scalar_within_tol_model() {
+        let isa = Isa::detect_best();
+        if isa == Isa::Scalar {
+            eprintln!("[simd] no vector arm on this host; f32 SIMD panel test is vacuous");
+        }
+        check("f32 SIMD panels = scalar within tol", 20, |g| {
+            let (n, m, d) = (g.usize_in(1, 40), g.usize_in(1, 17), g.usize_in(1, 9));
+            let (x32, _) = round_pair(n, d, &g.normal_vec(n * d));
+            let (c32, _) = round_pair(m, d, &g.normal_vec(m * d));
+            let p = g.f64_in(0.5, 3.0);
+            let xn = row_sq_norms_f32(&x32);
+            let cn = row_sq_norms_f32(&c32);
+            for kern in KERNELS {
+                // drive the panel entry point directly through both arms
+                // (whole block as one panel, j0 = 0, ldo = m) so the
+                // 4-center groups, ragged tails and exp pass all run
+                let run = |arm: Isa| {
+                    let mut out = vec![0.0f32; n * m];
+                    let xnr: &[f64] = match kern {
+                        Kernel::Gaussian => &xn,
+                        _ => &[],
+                    };
+                    kernel_panel_f32(
+                        kern, &x32.data, d, n, xnr, &c32, &cn, 0, p, &mut out, m, arm,
+                    );
+                    out
+                };
+                let got = run(isa);
+                let want = run(Isa::Scalar);
+                let bound = tol::simd_entry_bound_f32(kern, &x32, &c32);
+                for (i, (gv, wv)) in got.iter().zip(&want).enumerate() {
+                    let diff = (*gv as f64 - *wv as f64).abs();
+                    assert!(
+                        diff <= bound,
+                        "{kern:?} {isa:?} entry {i}: diff={diff:e} > bound={bound:e}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn f32_simd_sweeps_and_predict_match_scalar_within_model() {
+        let isa = Isa::detect_best();
+        if isa == Isa::Scalar {
+            eprintln!("[simd] no vector arm on this host; f32 SIMD sweep test is vacuous");
+        }
+        let pool = crate::util::pool::WorkerPool::new("test-mixed-simd", 4).unwrap();
+        check("f32 SIMD sweeps = scalar within tol", 10, |g| {
+            let (n, m, d) = (g.usize_in(1, 60), g.usize_in(1, 14), g.usize_in(1, 7));
+            let k = g.usize_in(1, 4);
+            let (x32, _) = round_pair(n, d, &g.normal_vec(n * d));
+            let (c32, _) = round_pair(m, d, &g.normal_vec(m * d));
+            let xn = row_sq_norms_f32(&x32);
+            let cn = row_sq_norms_f32(&c32);
+            let u = g.normal_vec(m);
+            let v = g.normal_vec(n);
+            let um = Mat::from_vec(m, k, g.normal_vec(m * k));
+            let vm = g.normal_vec(n * k);
+            let alpha = g.normal_vec(m);
+            let p = g.f64_in(0.5, 2.5);
+            let tile = *g.pick(&[1usize, 5, 7, DEFAULT_TILE]);
+            for kern in KERNELS {
+                // SIMD-f32 vs scalar-f32 differs by strictly less than
+                // either differs from the f64 oracle, so the documented
+                // f32-tier bounds are valid (conservative) here too
+                let run_vec = |arm: Isa| {
+                    let mut scratch = TileScratch::new32(tile, m);
+                    let mut w = vec![0.0; m];
+                    knm_matvec_ranged_f32(
+                        kern,
+                        &x32,
+                        &c32,
+                        &xn,
+                        &cn,
+                        &u,
+                        Some(&v),
+                        None,
+                        p,
+                        &mut scratch,
+                        &mut w,
+                        0,
+                        n,
+                        arm,
+                    );
+                    w
+                };
+                let bound = tol::matvec_bound(kern, &x32, &c32, n, &u, Some(&v));
+                let diff = vec_ops::max_abs_diff(&run_vec(isa), &run_vec(Isa::Scalar));
+                assert!(
+                    diff <= bound,
+                    "{kern:?} {isa:?} f32 matvec tile={tile}: diff={diff:e} > bound={bound:e}"
+                );
+
+                let run_mat = |arm: Isa| {
+                    let mut scratch = TileScratch::new32(tile, m);
+                    let mut w = Mat::zeros(m, k);
+                    knm_matmat_ranged_f32(
+                        kern,
+                        &x32,
+                        &c32,
+                        &xn,
+                        &cn,
+                        &um,
+                        Some(&vm),
+                        None,
+                        p,
+                        &mut scratch,
+                        &mut w,
+                        0,
+                        n,
+                        arm,
+                    );
+                    w
+                };
+                let bound_m = tol::matmat_bound(kern, &x32, &c32, n, &um, Some(&vm));
+                let diff_m = run_mat(isa).max_abs_diff(&run_mat(Isa::Scalar));
+                assert!(
+                    diff_m <= bound_m,
+                    "{kern:?} {isa:?} f32 matmat tile={tile}: diff={diff_m:e} > bound={bound_m:e}"
+                );
+
+                // predict: pooled bitwise within the SIMD arm, tol-bounded
+                // against the scalar arm
+                let serial = predict_blocked_pool_f32(kern, &x32, &c32, &alpha, p, None, isa);
+                let pooled =
+                    predict_blocked_pool_f32(kern, &x32, &c32, &alpha, p, Some(&pool), isa);
+                assert_eq!(serial, pooled, "{kern:?} pooled vs serial under {isa:?}");
+                let scalar =
+                    predict_blocked_pool_f32(kern, &x32, &c32, &alpha, p, None, Isa::Scalar);
+                let bound_p = tol::predict_bound(kern, &x32, &c32, &alpha);
+                let diff_p = vec_ops::max_abs_diff(&serial, &scalar);
+                assert!(
+                    diff_p <= bound_p,
+                    "{kern:?} {isa:?} f32 predict: diff={diff_p:e} > bound={bound_p:e}"
+                );
+            }
+        });
     }
 }

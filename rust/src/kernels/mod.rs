@@ -39,11 +39,13 @@ use crate::linalg::vec_ops::{self, fast_exp};
 use crate::util::pool::{chunk_ranges, chunk_ranges_weighted, fan_out, WorkerPool};
 
 pub mod mixed;
+pub mod simd;
+pub mod tile;
 pub mod tol;
 
-/// Row tile height of the fused matvec: one Kr panel is `TILE × M` f64s
-/// (1 MiB at M = 1024), sized to stay L2-resident across its two passes.
-pub const DEFAULT_TILE: usize = 128;
+pub use tile::{TileScratch, DEFAULT_TILE};
+
+use simd::Isa;
 
 /// Kernel families supported end-to-end (python oracle, Pallas kernels,
 /// artifacts and this module must stay in sync — tested both sides).
@@ -160,9 +162,10 @@ pub fn kernel_block_ref(kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Mat {
     out
 }
 
-/// Dense kernel block K(X, C) on the tiled panel machinery (serial).
+/// Dense kernel block K(X, C) on the tiled panel machinery (serial,
+/// process-default ISA).
 pub fn kernel_block(kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Mat {
-    kernel_block_par(kern, x, c, param, None)
+    kernel_block_par(kern, x, c, param, None, Isa::global())
 }
 
 /// [`kernel_block`] with row blocks fanned out over the shared worker
@@ -176,6 +179,7 @@ pub fn kernel_block_par(
     c: &Mat,
     param: f64,
     pool: Option<&WorkerPool>,
+    isa: Isa,
 ) -> Mat {
     assert_eq!(x.cols, c.cols, "feature dims differ");
     let (n, m, d) = (x.rows, c.rows, x.cols);
@@ -220,6 +224,7 @@ pub fn kernel_block_par(
                     param,
                     &mut chunk[(s - lo) * m..],
                     m,
+                    isa,
                 );
                 s += rows;
             }
@@ -229,9 +234,9 @@ pub fn kernel_block_par(
     out
 }
 
-/// K_MM over the centers (tiled, serial).
+/// K_MM over the centers (tiled, serial, process-default ISA).
 pub fn kmm(kern: Kernel, c: &Mat, param: f64) -> Mat {
-    kmm_par(kern, c, param, None)
+    kmm_par(kern, c, param, None, Isa::global())
 }
 
 /// K_MM on the panel machinery, exploiting symmetry: each row block
@@ -240,7 +245,7 @@ pub fn kmm(kern: Kernel, c: &Mat, param: f64) -> Mat {
 /// is mirrored from the upper. Row blocks fan out over the pool; the
 /// mirror pass makes K_MM exactly symmetric, which the reference
 /// (computing both sides independently) only is to rounding.
-pub fn kmm_par(kern: Kernel, c: &Mat, param: f64, pool: Option<&WorkerPool>) -> Mat {
+pub fn kmm_par(kern: Kernel, c: &Mat, param: f64, pool: Option<&WorkerPool>, isa: Isa) -> Mat {
     let (m, d) = (c.rows, c.cols);
     let mut out = Mat::zeros(m, m);
     if m == 0 {
@@ -290,6 +295,7 @@ pub fn kmm_par(kern: Kernel, c: &Mat, param: f64, pool: Option<&WorkerPool>) -> 
                     param,
                     &mut chunk[(s - rlo) * m + s..],
                     m,
+                    isa,
                 );
                 s += rows;
             }
@@ -421,84 +427,46 @@ pub fn predict_multi(kern: Kernel, x: &Mat, c: &Mat, alpha: &Mat, param: f64) ->
 // tiled hot path
 // ---------------------------------------------------------------------
 
-/// Reusable per-thread buffers for the tiled kernels: one Kr tile
-/// (`tile × M`) plus the fused intermediate Y (`tile × K`; K = 1 on the
-/// vector path). Built once per plan/worker; the apply loop performs no
-/// X-block heap allocation.
-pub struct TileScratch {
-    tile: usize,
-    kr: Vec<f64>,
-    /// f32 Kr tile for the mixed-precision panels ([`mixed`]); empty until
-    /// the first f32 apply so f64-only plans allocate nothing extra. The
-    /// fused Y stays `f64` for both tiers (stage-1 results accumulate in
-    /// double).
-    kr32: Vec<f32>,
-    y: Vec<f64>,
-}
-
-impl TileScratch {
-    pub fn new(tile: usize, m: usize) -> TileScratch {
-        let tile = tile.max(1);
-        TileScratch {
-            tile,
-            kr: vec![0.0; tile * m],
-            kr32: Vec::new(),
-            y: vec![0.0; tile],
-        }
-    }
-
-    /// [`TileScratch::new`] for the mixed-precision tier: allocates the
-    /// f32 Kr tile up front and leaves the f64 one empty (it grows on
-    /// demand if the same scratch later serves an f64 sweep).
-    pub(crate) fn new32(tile: usize, m: usize) -> TileScratch {
-        let tile = tile.max(1);
-        TileScratch {
-            tile,
-            kr: Vec::new(),
-            kr32: vec![0.0; tile * m],
-            y: vec![0.0; tile],
-        }
-    }
-
-    pub fn tile(&self) -> usize {
-        self.tile
-    }
-
-    /// Grow the Kr buffer if a caller re-uses the scratch with a larger M.
-    fn ensure(&mut self, m: usize) {
-        self.ensure_multi(m, 1);
-    }
-
-    /// Grow both buffers for a multi-RHS apply: Kr to `tile × M`, Y to
-    /// `tile × K`. A pool worker's scratch is sized to the widest K it has
-    /// served — a later plan with more classes grows it once, in place.
-    fn ensure_multi(&mut self, m: usize, k: usize) {
-        if self.kr.len() < self.tile * m {
-            self.kr.resize(self.tile * m, 0.0);
-        }
-        if self.y.len() < self.tile * k {
-            self.y.resize(self.tile * k, 0.0);
-        }
-    }
-
-    /// [`TileScratch::ensure`] for the f32 Kr tile.
-    fn ensure32(&mut self, m: usize) {
-        self.ensure_multi32(m, 1);
-    }
-
-    /// [`TileScratch::ensure_multi`] for the f32 Kr tile (Y is shared —
-    /// stage-1 results are `f64` on both tiers).
-    fn ensure_multi32(&mut self, m: usize, k: usize) {
-        if self.kr32.len() < self.tile * m {
-            self.kr32.resize(self.tile * m, 0.0);
-        }
-        if self.y.len() < self.tile * k {
-            self.y.resize(self.tile * k, 0.0);
-        }
+/// Fill a panel of kernel values K(X_panel, C[j0..]) into `out` through
+/// the selected instruction-set arm. The tiling geometry and the layout
+/// contract (`j0`, `ldo`, see [`kernel_panel_scalar`]) are identical on
+/// every arm; the SIMD arms differ from scalar only by FMA contraction
+/// and lane-order reassociation in the dot products ([`tol`]'s SIMD
+/// bounds), while their exponential lanes stay bitwise equal to
+/// `fast_exp`.
+#[allow(clippy::too_many_arguments)]
+fn kernel_panel(
+    kern: Kernel,
+    xb: &[f64],
+    d: usize,
+    rows: usize,
+    xn: &[f64],
+    c: &Mat,
+    cn: &[f64],
+    j0: usize,
+    param: f64,
+    out: &mut [f64],
+    ldo: usize,
+    isa: Isa,
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Isa::Avx2 is only produced by simd::resolve()/detect_best()
+        // after runtime detection confirmed avx2+fma on this host.
+        Isa::Avx2 => unsafe {
+            simd::avx2::kernel_panel_avx2(kern, xb, d, rows, xn, c, cn, j0, param, out, ldo)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is a baseline feature of every aarch64 target.
+        Isa::Neon => unsafe {
+            simd::neon::kernel_panel_neon(kern, xb, d, rows, xn, c, cn, j0, param, out, ldo)
+        },
+        _ => kernel_panel_scalar(kern, xb, d, rows, xn, c, cn, j0, param, out, ldo),
     }
 }
 
-/// Fill a panel of kernel values K(X_panel, C[j0..]) into `out`. `xb` is
+/// Scalar arm of [`kernel_panel`] — and the oracle the SIMD arms are
+/// property-tested against. `xb` is
 /// the row-major `rows × d` panel, `xn`/`cn` the precomputed squared row
 /// norms (only read by the Gaussian kernel). Row `i` of the panel is
 /// written at `out[i*ldo .. i*ldo + (M - j0)]` — `ldo` lets callers
@@ -509,7 +477,7 @@ impl TileScratch {
 /// run in a separate branch-free pass over the finished row so LLVM can
 /// vectorize them (`fast_exp`).
 #[allow(clippy::too_many_arguments)]
-fn kernel_panel(
+fn kernel_panel_scalar(
     kern: Kernel,
     xb: &[f64],
     d: usize,
@@ -641,7 +609,22 @@ pub fn knm_matvec_blocked(
     scratch: &mut TileScratch,
     w: &mut [f64],
 ) {
-    knm_matvec_ranged(kern, x, c, xn, cn, u, v, mask, param, scratch, w, 0, x.rows)
+    knm_matvec_ranged(
+        kern,
+        x,
+        c,
+        xn,
+        cn,
+        u,
+        v,
+        mask,
+        param,
+        scratch,
+        w,
+        0,
+        x.rows,
+        Isa::global(),
+    )
 }
 
 /// [`knm_matvec_blocked`] restricted to rows `[start, end)` of `x`
@@ -664,6 +647,7 @@ pub fn knm_matvec_ranged(
     w: &mut [f64],
     start: usize,
     end: usize,
+    isa: Isa,
 ) {
     let (n, m, d) = (x.rows, c.rows, x.cols);
     assert_eq!(c.cols, d, "feature dims differ");
@@ -685,7 +669,7 @@ pub fn knm_matvec_ranged(
         let rows = (end - s).min(tile);
         let kr = &mut scratch.kr[..rows * m];
         let xb = &x.data[s * d..(s + rows) * d];
-        kernel_panel(kern, xb, d, rows, &xn[s..s + rows], c, cn, 0, param, kr, m);
+        kernel_panel(kern, xb, d, rows, &xn[s..s + rows], c, cn, 0, param, kr, m, isa);
         // fused stage 1: y = mask ⊙ (Kr·u + v)
         for i in 0..rows {
             let gi = s + i;
@@ -764,7 +748,22 @@ pub fn knm_matmat_blocked(
     scratch: &mut TileScratch,
     w: &mut Mat,
 ) {
-    knm_matmat_ranged(kern, x, c, xn, cn, u, v, mask, param, scratch, w, 0, x.rows)
+    knm_matmat_ranged(
+        kern,
+        x,
+        c,
+        xn,
+        cn,
+        u,
+        v,
+        mask,
+        param,
+        scratch,
+        w,
+        0,
+        x.rows,
+        Isa::global(),
+    )
 }
 
 /// [`knm_matmat_blocked`] restricted to rows `[start, end)` of `x` — the
@@ -786,6 +785,7 @@ pub fn knm_matmat_ranged(
     w: &mut Mat,
     start: usize,
     end: usize,
+    isa: Isa,
 ) {
     let (n, m, d) = (x.rows, c.rows, x.cols);
     let k = u.cols;
@@ -812,7 +812,7 @@ pub fn knm_matmat_ranged(
         let rows = (end - s).min(tile);
         let kr = &mut kr[..rows * m];
         let xb = &x.data[s * d..(s + rows) * d];
-        kernel_panel(kern, xb, d, rows, &xn[s..s + rows], c, cn, 0, param, kr, m);
+        kernel_panel(kern, xb, d, rows, &xn[s..s + rows], c, cn, 0, param, kr, m, isa);
         // fused stage 1: Y = mask ⊙ (Kr·U + V)   (rows × K)
         let y = &mut y[..rows * k];
         for i in 0..rows {
@@ -864,7 +864,7 @@ pub fn knm_matmat_ranged(
 /// row tile, then a dot against α — the serving analogue of
 /// [`knm_matvec_blocked`].
 pub fn predict_blocked(kern: Kernel, x: &Mat, c: &Mat, alpha: &[f64], param: f64) -> Vec<f64> {
-    predict_blocked_pool(kern, x, c, alpha, param, None)
+    predict_blocked_pool(kern, x, c, alpha, param, None, Isa::global())
 }
 
 /// [`predict_blocked`] fanned out over the shared worker pool — the
@@ -879,6 +879,7 @@ pub fn predict_blocked_pool(
     alpha: &[f64],
     param: f64,
     pool: Option<&WorkerPool>,
+    isa: Isa,
 ) -> Vec<f64> {
     let (n, m) = (x.rows, c.rows);
     assert_eq!(c.cols, x.cols, "feature dims differ");
@@ -901,7 +902,7 @@ pub fn predict_blocked_pool(
         let (chunk, tail) = rest.split_at_mut(hi - lo);
         rest = tail;
         tasks.push(Box::new(move || {
-            predict_range(kern, x, c, cn, alpha, param, lo, hi, chunk);
+            predict_range(kern, x, c, cn, alpha, param, lo, hi, chunk, isa);
         }));
     }
     fan_out(pool, tasks);
@@ -922,6 +923,7 @@ fn predict_range(
     start: usize,
     end: usize,
     out: &mut [f64],
+    isa: Isa,
 ) {
     let (m, d) = (c.rows, x.cols);
     debug_assert_eq!(out.len(), end - start);
@@ -941,7 +943,7 @@ fn predict_range(
         let kr = &mut scratch.kr[..rows * m];
         let xb = &x.data[s * d..(s + rows) * d];
         let xnr = &xn[s - start..s - start + rows];
-        kernel_panel(kern, xb, d, rows, xnr, c, cn, 0, param, kr, m);
+        kernel_panel(kern, xb, d, rows, xnr, c, cn, 0, param, kr, m, isa);
         for i in 0..rows {
             out[s - start + i] = vec_ops::dot(&kr[i * m..(i + 1) * m], alpha);
         }
@@ -953,7 +955,7 @@ fn predict_range(
 /// one kernel panel per row tile serves all K classes at once — the
 /// serving analogue of [`knm_matmat_blocked`]. Returns `n×K`.
 pub fn predict_multi_blocked(kern: Kernel, x: &Mat, c: &Mat, alpha: &Mat, param: f64) -> Mat {
-    predict_multi_blocked_pool(kern, x, c, alpha, param, None)
+    predict_multi_blocked_pool(kern, x, c, alpha, param, None, Isa::global())
 }
 
 /// [`predict_multi_blocked`] with row chunks fanned out over the shared
@@ -967,6 +969,7 @@ pub fn predict_multi_blocked_pool(
     alpha: &Mat,
     param: f64,
     pool: Option<&WorkerPool>,
+    isa: Isa,
 ) -> Mat {
     let (n, m) = (x.rows, c.rows);
     let k = alpha.cols;
@@ -989,7 +992,7 @@ pub fn predict_multi_blocked_pool(
         let (chunk, tail) = rest.split_at_mut((hi - lo) * k);
         rest = tail;
         tasks.push(Box::new(move || {
-            predict_multi_range(kern, x, c, cn, alpha, param, lo, hi, chunk);
+            predict_multi_range(kern, x, c, cn, alpha, param, lo, hi, chunk, isa);
         }));
     }
     fan_out(pool, tasks);
@@ -1009,6 +1012,7 @@ fn predict_multi_range(
     start: usize,
     end: usize,
     out: &mut [f64],
+    isa: Isa,
 ) {
     let (m, d) = (c.rows, x.cols);
     let k = alpha.cols;
@@ -1029,7 +1033,7 @@ fn predict_multi_range(
         let kr = &mut scratch.kr[..rows * m];
         let xb = &x.data[s * d..(s + rows) * d];
         let xnr = &xn[s - start..s - start + rows];
-        kernel_panel(kern, xb, d, rows, xnr, c, cn, 0, param, kr, m);
+        kernel_panel(kern, xb, d, rows, xnr, c, cn, 0, param, kr, m, isa);
         panel_times_mat(kr, rows, m, alpha, &mut out[(s - start) * k..]);
         s += rows;
     }
@@ -1083,6 +1087,7 @@ mod tests {
                         &mut got,
                         lo,
                         hi,
+                        Isa::global(),
                     );
                 }
                 assert_eq!(got, want, "{kern:?} vector split at {split}");
@@ -1107,6 +1112,7 @@ mod tests {
                         &mut got_m,
                         lo,
                         hi,
+                        Isa::global(),
                     );
                 }
                 assert_eq!(got_m.data, want_m.data, "{kern:?} multi split at {split}");
@@ -1206,13 +1212,13 @@ mod tests {
         let c = Mat::from_vec(m, d, rng.normals(m * d));
         for kern in KERNELS {
             let serial = kernel_block(kern, &x, &c, 1.1);
-            let pooled = kernel_block_par(kern, &x, &c, 1.1, Some(&pool));
+            let pooled = kernel_block_par(kern, &x, &c, 1.1, Some(&pool), Isa::global());
             assert_eq!(serial.data, pooled.data, "{kern:?} kernel_block");
         }
         let big_c = Mat::from_vec(n, d, rng.normals(n * d));
         for kern in KERNELS {
             let serial = kmm(kern, &big_c, 0.9);
-            let pooled = kmm_par(kern, &big_c, 0.9, Some(&pool));
+            let pooled = kmm_par(kern, &big_c, 0.9, Some(&pool), Isa::global());
             assert_eq!(serial.data, pooled.data, "{kern:?} kmm");
         }
     }
@@ -1385,9 +1391,9 @@ mod tests {
         let alpha = rng.normals(m);
         for kern in KERNELS {
             let serial = predict_blocked(kern, &x, &c, &alpha, 1.2);
-            let pooled = predict_blocked_pool(kern, &x, &c, &alpha, 1.2, Some(&pool));
+            let pooled = predict_blocked_pool(kern, &x, &c, &alpha, 1.2, Some(&pool), Isa::global());
             assert_eq!(serial, pooled, "{kern:?}");
-            let no_pool = predict_blocked_pool(kern, &x, &c, &alpha, 1.2, None);
+            let no_pool = predict_blocked_pool(kern, &x, &c, &alpha, 1.2, None, Isa::global());
             assert_eq!(serial, no_pool, "{kern:?} inline");
         }
     }
@@ -1404,14 +1410,14 @@ mod tests {
             let serial = predict_blocked(kern, &x, &c, &alpha, 1.2);
             for workers in [2, 3, 8] {
                 let pool = crate::util::pool::WorkerPool::new("test-predict", workers).unwrap();
-                let par = predict_blocked_pool(kern, &x, &c, &alpha, 1.2, Some(&pool));
+                let par = predict_blocked_pool(kern, &x, &c, &alpha, 1.2, Some(&pool), Isa::global());
                 assert_eq!(par, serial, "{kern:?} workers={workers} must be bitwise equal");
             }
         }
         // and against the row-at-a-time reference
         let want = predict(Kernel::Gaussian, &x, &c, &alpha, 1.2);
         let pool = crate::util::pool::WorkerPool::new("test-predict", 4).unwrap();
-        let got = predict_blocked_pool(Kernel::Gaussian, &x, &c, &alpha, 1.2, Some(&pool));
+        let got = predict_blocked_pool(Kernel::Gaussian, &x, &c, &alpha, 1.2, Some(&pool), Isa::global());
         assert!(vec_ops::max_abs_diff(&got, &want) < 1e-10);
     }
 
@@ -1583,7 +1589,7 @@ mod tests {
         let a = Mat::from_vec(m, k, rng.normals(m * k));
         for kern in KERNELS {
             let serial = predict_multi_blocked(kern, &x, &c, &a, 1.2);
-            let pooled = predict_multi_blocked_pool(kern, &x, &c, &a, 1.2, Some(&pool));
+            let pooled = predict_multi_blocked_pool(kern, &x, &c, &a, 1.2, Some(&pool), Isa::global());
             assert_eq!(serial.data, pooled.data, "{kern:?}");
         }
     }
@@ -1596,6 +1602,194 @@ mod tests {
         for i in 0..5 {
             let want: f64 = x.row(i).iter().map(|v| v * v).sum();
             assert!((n[i] - want).abs() < 1e-12);
+        }
+    }
+
+    // -- SIMD-vs-scalar arms (the runtime-dispatch acceptance contract) ----
+    //
+    // Every test pins Isa::detect_best() (pure feature detection, immune
+    // to FALKON_SIMD) against an explicit Isa::Scalar, so the default and
+    // FALKON_SIMD=scalar CI legs run identical arithmetic. On a host with
+    // no vector arm the comparisons are scalar-vs-scalar and vacuous.
+
+    #[test]
+    fn simd_panels_match_scalar_within_tol_model() {
+        let isa = Isa::detect_best();
+        if isa == Isa::Scalar {
+            eprintln!("[simd] no vector arm on this host; SIMD panel test is vacuous");
+        }
+        check("SIMD kernel_block = scalar within tol", 20, |g| {
+            let (b, m, d) = (g.usize_in(1, 40), g.usize_in(1, 20), g.usize_in(1, 12));
+            let x = Mat::from_vec(b, d, g.normal_vec(b * d));
+            let c = Mat::from_vec(m, d, g.normal_vec(m * d));
+            let p = g.f64_in(0.5, 3.0);
+            for kern in KERNELS {
+                let simd_blk = kernel_block_par(kern, &x, &c, p, None, isa);
+                let scal_blk = kernel_block_par(kern, &x, &c, p, None, Isa::Scalar);
+                let bound = tol::simd_entry_bound(kern, &x, &c, p);
+                let diff = simd_blk.max_abs_diff(&scal_blk);
+                assert!(
+                    diff <= bound,
+                    "{kern:?} {isa:?} b={b} m={m} d={d}: diff={diff:e} > bound={bound:e}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn simd_ranged_sweeps_match_scalar_within_tol_model() {
+        let isa = Isa::detect_best();
+        if isa == Isa::Scalar {
+            eprintln!("[simd] no vector arm on this host; SIMD sweep test is vacuous");
+        }
+        check("SIMD matvec/matmat = scalar within tol", 15, |g| {
+            let (n, m, d) = (g.usize_in(1, 60), g.usize_in(1, 16), g.usize_in(1, 9));
+            let k = g.usize_in(1, 4);
+            let x = Mat::from_vec(n, d, g.normal_vec(n * d));
+            let c = Mat::from_vec(m, d, g.normal_vec(m * d));
+            let xn = row_sq_norms(&x);
+            let cn = row_sq_norms(&c);
+            let u = g.normal_vec(m);
+            let v = g.normal_vec(n);
+            let um = Mat::from_vec(m, k, g.normal_vec(m * k));
+            let vm = g.normal_vec(n * k);
+            let p = g.f64_in(0.5, 2.5);
+            // ragged tile so vector groups, tails and tile seams all run
+            let tile = *g.pick(&[1usize, 5, 7, DEFAULT_TILE]);
+            for kern in KERNELS {
+                let run_vec = |arm: Isa| {
+                    let mut scratch = TileScratch::new(tile, m);
+                    let mut w = vec![0.0; m];
+                    knm_matvec_ranged(
+                        kern,
+                        &x,
+                        &c,
+                        &xn,
+                        &cn,
+                        &u,
+                        Some(&v),
+                        None,
+                        p,
+                        &mut scratch,
+                        &mut w,
+                        0,
+                        n,
+                        arm,
+                    );
+                    w
+                };
+                let got = run_vec(isa);
+                let want = run_vec(Isa::Scalar);
+                let bound = tol::simd_matvec_bound(kern, &x, &c, p, &u, Some(&v));
+                let diff = vec_ops::max_abs_diff(&got, &want);
+                assert!(
+                    diff <= bound,
+                    "{kern:?} {isa:?} matvec tile={tile}: diff={diff:e} > bound={bound:e}"
+                );
+
+                let run_mat = |arm: Isa| {
+                    let mut scratch = TileScratch::new(tile, m);
+                    let mut w = Mat::zeros(m, k);
+                    knm_matmat_ranged(
+                        kern,
+                        &x,
+                        &c,
+                        &xn,
+                        &cn,
+                        &um,
+                        Some(&vm),
+                        None,
+                        p,
+                        &mut scratch,
+                        &mut w,
+                        0,
+                        n,
+                        arm,
+                    );
+                    w
+                };
+                let got_m = run_mat(isa);
+                let want_m = run_mat(Isa::Scalar);
+                let bound_m = tol::simd_matmat_bound(kern, &x, &c, p, &um, Some(&vm));
+                let diff_m = got_m.max_abs_diff(&want_m);
+                assert!(
+                    diff_m <= bound_m,
+                    "{kern:?} {isa:?} matmat tile={tile}: diff={diff_m:e} > bound={bound_m:e}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn simd_predict_is_pooled_deterministic_and_tol_close_to_scalar() {
+        let isa = Isa::detect_best();
+        if isa == Isa::Scalar {
+            eprintln!("[simd] no vector arm on this host; SIMD predict test is vacuous");
+        }
+        let pool = crate::util::pool::WorkerPool::new("test-simd-predict", 4).unwrap();
+        let mut rng = crate::util::rng::Rng::new(83);
+        let (b, m, d, k) = (2 * DEFAULT_TILE + 31, 29, 7, 3);
+        let x = Mat::from_vec(b, d, rng.normals(b * d));
+        let c = Mat::from_vec(m, d, rng.normals(m * d));
+        let alpha = rng.normals(m);
+        let am = Mat::from_vec(m, k, rng.normals(m * k));
+        for kern in KERNELS {
+            // within one arm, pooled must stay bitwise equal to serial —
+            // the ISA is picked once, never per task
+            let serial = predict_blocked_pool(kern, &x, &c, &alpha, 1.2, None, isa);
+            let pooled = predict_blocked_pool(kern, &x, &c, &alpha, 1.2, Some(&pool), isa);
+            assert_eq!(serial, pooled, "{kern:?} pooled vs serial under {isa:?}");
+            // across arms, tol-bounded
+            let scalar = predict_blocked_pool(kern, &x, &c, &alpha, 1.2, None, Isa::Scalar);
+            let bound = tol::simd_predict_bound(kern, &x, &c, 1.2, &alpha);
+            let diff = vec_ops::max_abs_diff(&serial, &scalar);
+            assert!(
+                diff <= bound,
+                "{kern:?} {isa:?} predict: diff={diff:e} > bound={bound:e}"
+            );
+
+            let serial_m = predict_multi_blocked_pool(kern, &x, &c, &am, 1.2, None, isa);
+            let pooled_m = predict_multi_blocked_pool(kern, &x, &c, &am, 1.2, Some(&pool), isa);
+            assert_eq!(
+                serial_m.data, pooled_m.data,
+                "{kern:?} pooled multi vs serial under {isa:?}"
+            );
+            let scalar_m = predict_multi_blocked_pool(kern, &x, &c, &am, 1.2, None, Isa::Scalar);
+            // ‖α‖₁ over the whole block upper-bounds every column's ‖·‖₁
+            let bound_m = tol::simd_predict_bound(kern, &x, &c, 1.2, &am.data);
+            let diff_m = serial_m.max_abs_diff(&scalar_m);
+            assert!(
+                diff_m <= bound_m,
+                "{kern:?} {isa:?} predict_multi: diff={diff_m:e} > bound={bound_m:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn simd_kmm_is_symmetric_and_tol_close_to_scalar() {
+        let isa = Isa::detect_best();
+        if isa == Isa::Scalar {
+            eprintln!("[simd] no vector arm on this host; SIMD kmm test is vacuous");
+        }
+        let mut rng = crate::util::rng::Rng::new(89);
+        for m in [1usize, 5, 37, DEFAULT_TILE + 9] {
+            let d = 6;
+            let c = Mat::from_vec(m, d, rng.normals(m * d));
+            for kern in KERNELS {
+                let got = kmm_par(kern, &c, 1.3, None, isa);
+                for i in 0..m {
+                    for j in 0..m {
+                        assert_eq!(got[(i, j)], got[(j, i)], "{kern:?} mirror at {i},{j}");
+                    }
+                }
+                let want = kmm_par(kern, &c, 1.3, None, Isa::Scalar);
+                let bound = tol::simd_entry_bound(kern, &c, &c, 1.3);
+                let diff = got.max_abs_diff(&want);
+                assert!(
+                    diff <= bound,
+                    "{kern:?} {isa:?} kmm m={m}: diff={diff:e} > bound={bound:e}"
+                );
+            }
         }
     }
 }

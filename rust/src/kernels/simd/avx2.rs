@@ -1,0 +1,332 @@
+//! AVX2/FMA arm of the kernel panel engine: the register-tiled dot
+//! products and norm-expansion staging of `kernel_panel` /
+//! `mixed::kernel_panel_f32`, hand-vectorized with `std::arch`.
+//!
+//! Structure mirrors the scalar tiles exactly — same `j0`-aligned
+//! groups of four centers, same staging expressions, same separate
+//! exponential pass — so the only numerical differences from the scalar
+//! arm are FMA contraction and lane-order reassociation inside the dot
+//! products, bounded by the `tol::simd_*` model. The f32 panels widen
+//! storage to f64 lanes (`_mm256_cvtps_pd`) and accumulate in double,
+//! preserving the PR 7 precision model: products of two f32s are exact
+//! in f64, so FMA is even *exact* there. Exponentials go through the
+//! bitwise-pinned lanes of [`super::exp`].
+
+use std::arch::x86_64::*;
+
+use crate::kernels::Kernel;
+use crate::linalg::mat::Mat;
+use crate::linalg::mat32::MatF32;
+use crate::linalg::vec_ops;
+
+use super::exp;
+
+/// Four simultaneous dot products xr·c0..c3 in f64 lanes: one shared
+/// load of xr per step, four FMA accumulators, horizontal combine, and
+/// a scalar k-tail added per center.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot4(xr: &[f64], c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64]) -> __m256d {
+    let d = xr.len();
+    let (mut a0, mut a1, mut a2, mut a3) = (
+        _mm256_setzero_pd(),
+        _mm256_setzero_pd(),
+        _mm256_setzero_pd(),
+        _mm256_setzero_pd(),
+    );
+    let mut k = 0;
+    while k + 4 <= d {
+        let vx = _mm256_loadu_pd(xr.as_ptr().add(k));
+        a0 = _mm256_fmadd_pd(vx, _mm256_loadu_pd(c0.as_ptr().add(k)), a0);
+        a1 = _mm256_fmadd_pd(vx, _mm256_loadu_pd(c1.as_ptr().add(k)), a1);
+        a2 = _mm256_fmadd_pd(vx, _mm256_loadu_pd(c2.as_ptr().add(k)), a2);
+        a3 = _mm256_fmadd_pd(vx, _mm256_loadu_pd(c3.as_ptr().add(k)), a3);
+        k += 4;
+    }
+    // hadd pairs lanes within each 128-bit half; the two permutes gather
+    // the low/high halves so the sum lands as [Σa0, Σa1, Σa2, Σa3]
+    let t0 = _mm256_hadd_pd(a0, a1);
+    let t1 = _mm256_hadd_pd(a2, a3);
+    let mut dots = _mm256_add_pd(
+        _mm256_permute2f128_pd::<0x20>(t0, t1),
+        _mm256_permute2f128_pd::<0x31>(t0, t1),
+    );
+    if k < d {
+        let mut t = [0.0f64; 4];
+        _mm256_storeu_pd(t.as_mut_ptr(), dots);
+        while k < d {
+            let xv = xr[k];
+            t[0] += xv * c0[k];
+            t[1] += xv * c1[k];
+            t[2] += xv * c2[k];
+            t[3] += xv * c3[k];
+            k += 1;
+        }
+        dots = _mm256_loadu_pd(t.as_ptr());
+    }
+    dots
+}
+
+/// [`dot4`] over f32 storage: each step widens four f32s of every
+/// operand to f64 lanes before the FMA, so the accumulation is pure
+/// f64 (and exact per product — 24+24 ≤ 53 mantissa bits).
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot4_f32(xr: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> __m256d {
+    let d = xr.len();
+    let (mut a0, mut a1, mut a2, mut a3) = (
+        _mm256_setzero_pd(),
+        _mm256_setzero_pd(),
+        _mm256_setzero_pd(),
+        _mm256_setzero_pd(),
+    );
+    let mut k = 0;
+    while k + 4 <= d {
+        let vx = _mm256_cvtps_pd(_mm_loadu_ps(xr.as_ptr().add(k)));
+        a0 = _mm256_fmadd_pd(vx, _mm256_cvtps_pd(_mm_loadu_ps(c0.as_ptr().add(k))), a0);
+        a1 = _mm256_fmadd_pd(vx, _mm256_cvtps_pd(_mm_loadu_ps(c1.as_ptr().add(k))), a1);
+        a2 = _mm256_fmadd_pd(vx, _mm256_cvtps_pd(_mm_loadu_ps(c2.as_ptr().add(k))), a2);
+        a3 = _mm256_fmadd_pd(vx, _mm256_cvtps_pd(_mm_loadu_ps(c3.as_ptr().add(k))), a3);
+        k += 4;
+    }
+    let t0 = _mm256_hadd_pd(a0, a1);
+    let t1 = _mm256_hadd_pd(a2, a3);
+    let mut dots = _mm256_add_pd(
+        _mm256_permute2f128_pd::<0x20>(t0, t1),
+        _mm256_permute2f128_pd::<0x31>(t0, t1),
+    );
+    if k < d {
+        let mut t = [0.0f64; 4];
+        _mm256_storeu_pd(t.as_mut_ptr(), dots);
+        while k < d {
+            let xv = xr[k] as f64;
+            t[0] += xv * c0[k] as f64;
+            t[1] += xv * c1[k] as f64;
+            t[2] += xv * c2[k] as f64;
+            t[3] += xv * c3[k] as f64;
+            k += 1;
+        }
+        dots = _mm256_loadu_pd(t.as_ptr());
+    }
+    dots
+}
+
+/// Horizontal sum of a 4-lane f64 accumulator.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hsum4(v: __m256d) -> f64 {
+    let s = _mm_add_pd(_mm256_castpd256_pd128(v), _mm256_extractf128_pd::<1>(v));
+    _mm_cvtsd_f64(_mm_add_sd(s, _mm_unpackhi_pd(s, s)))
+}
+
+/// AVX2 arm of `kernel_panel`: same layout contract (`j0`, `ldo`), same
+/// tiling, vectorized dots/staging/exp.
+///
+/// # Safety
+/// Caller must ensure avx2 and fma are available on this CPU.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn kernel_panel_avx2(
+    kern: Kernel,
+    xb: &[f64],
+    d: usize,
+    rows: usize,
+    xn: &[f64],
+    c: &Mat,
+    cn: &[f64],
+    j0: usize,
+    param: f64,
+    out: &mut [f64],
+    ldo: usize,
+) {
+    let m = c.rows;
+    let w = m - j0;
+    debug_assert_eq!(xb.len(), rows * d);
+    debug_assert_eq!(c.cols, d);
+    debug_assert!(rows == 0 || out.len() >= (rows - 1) * ldo + w);
+    debug_assert!(ldo >= w);
+    match kern {
+        Kernel::Gaussian => {
+            debug_assert_eq!(xn.len(), rows);
+            debug_assert_eq!(cn.len(), m);
+            let inv = 1.0 / (2.0 * param * param);
+            let two = _mm256_set1_pd(2.0);
+            let zero = _mm256_setzero_pd();
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let xni = xn[i];
+                let xniv = _mm256_set1_pd(xni);
+                let orow = &mut out[i * ldo..i * ldo + w];
+                let mut j = j0;
+                while j + 4 <= m {
+                    let dots = dot4(xr, c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
+                    let cnv = _mm256_loadu_pd(cn.as_ptr().add(j));
+                    // (xni + cn[j] - 2·dot).max(0): max_pd returns its
+                    // second operand on NaN, matching scalar f64::max
+                    let sq = _mm256_max_pd(
+                        _mm256_sub_pd(_mm256_add_pd(xniv, cnv), _mm256_mul_pd(two, dots)),
+                        zero,
+                    );
+                    _mm256_storeu_pd(orow.as_mut_ptr().add(j - j0), sq);
+                    j += 4;
+                }
+                while j < m {
+                    let dotv = vec_ops::dot(xr, c.row(j));
+                    orow[j - j0] = (xni + cn[j] - 2.0 * dotv).max(0.0);
+                    j += 1;
+                }
+                exp::fast_exp_neg_scale_slice_avx2(orow, inv);
+            }
+        }
+        Kernel::Laplacian => {
+            let inv = 1.0 / param;
+            let neg0 = _mm256_set1_pd(-0.0);
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let orow = &mut out[i * ldo..i * ldo + w];
+                for j in j0..m {
+                    let cr = c.row(j);
+                    let mut acc = _mm256_setzero_pd();
+                    let mut k = 0;
+                    while k + 4 <= d {
+                        let diff = _mm256_sub_pd(
+                            _mm256_loadu_pd(xr.as_ptr().add(k)),
+                            _mm256_loadu_pd(cr.as_ptr().add(k)),
+                        );
+                        acc = _mm256_add_pd(acc, _mm256_andnot_pd(neg0, diff));
+                        k += 4;
+                    }
+                    let mut l1 = hsum4(acc);
+                    while k < d {
+                        l1 += (xr[k] - cr[k]).abs();
+                        k += 1;
+                    }
+                    orow[j - j0] = -l1 * inv;
+                }
+                exp::fast_exp_slice_avx2(orow);
+            }
+        }
+        Kernel::Linear => {
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let orow = &mut out[i * ldo..i * ldo + w];
+                let mut j = j0;
+                while j + 4 <= m {
+                    let dots = dot4(xr, c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
+                    _mm256_storeu_pd(orow.as_mut_ptr().add(j - j0), dots);
+                    j += 4;
+                }
+                while j < m {
+                    orow[j - j0] = vec_ops::dot(xr, c.row(j));
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+/// AVX2 arm of `mixed::kernel_panel_f32`: f32 storage widened to f64
+/// lanes, exponential argument rounded once to f32 (the
+/// `_mm256_cvtpd_ps` narrowing rounds to nearest, exactly like `as
+/// f32`), then the 8-lane f32 exp pass.
+///
+/// # Safety
+/// Caller must ensure avx2 and fma are available on this CPU.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn kernel_panel_f32_avx2(
+    kern: Kernel,
+    xb: &[f32],
+    d: usize,
+    rows: usize,
+    xn: &[f64],
+    c: &MatF32,
+    cn: &[f64],
+    j0: usize,
+    param: f64,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    let m = c.rows;
+    let w = m - j0;
+    debug_assert_eq!(xb.len(), rows * d);
+    debug_assert_eq!(c.cols, d);
+    debug_assert!(rows == 0 || out.len() >= (rows - 1) * ldo + w);
+    debug_assert!(ldo >= w);
+    match kern {
+        Kernel::Gaussian => {
+            debug_assert_eq!(xn.len(), rows);
+            debug_assert_eq!(cn.len(), m);
+            let inv = 1.0 / (2.0 * param * param);
+            let invv = _mm256_set1_pd(inv);
+            let neg0 = _mm256_set1_pd(-0.0);
+            let two = _mm256_set1_pd(2.0);
+            let zero = _mm256_setzero_pd();
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let xni = xn[i];
+                let xniv = _mm256_set1_pd(xni);
+                let orow = &mut out[i * ldo..i * ldo + w];
+                let mut j = j0;
+                while j + 4 <= m {
+                    let dots = dot4_f32(xr, c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
+                    let cnv = _mm256_loadu_pd(cn.as_ptr().add(j));
+                    let sq = _mm256_max_pd(
+                        _mm256_sub_pd(_mm256_add_pd(xniv, cnv), _mm256_mul_pd(two, dots)),
+                        zero,
+                    );
+                    let arg = _mm256_mul_pd(_mm256_xor_pd(sq, neg0), invv);
+                    _mm_storeu_ps(orow.as_mut_ptr().add(j - j0), _mm256_cvtpd_ps(arg));
+                    j += 4;
+                }
+                while j < m {
+                    let dotv = vec_ops::dot_f32(xr, c.row(j));
+                    orow[j - j0] = (-(xni + cn[j] - 2.0 * dotv).max(0.0) * inv) as f32;
+                    j += 1;
+                }
+                exp::fast_exp_slice_f32_avx2(orow);
+            }
+        }
+        Kernel::Laplacian => {
+            let inv = 1.0 / param;
+            let neg0 = _mm256_set1_pd(-0.0);
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let orow = &mut out[i * ldo..i * ldo + w];
+                for j in j0..m {
+                    let cr = c.row(j);
+                    let mut acc = _mm256_setzero_pd();
+                    let mut k = 0;
+                    while k + 4 <= d {
+                        let diff = _mm256_sub_pd(
+                            _mm256_cvtps_pd(_mm_loadu_ps(xr.as_ptr().add(k))),
+                            _mm256_cvtps_pd(_mm_loadu_ps(cr.as_ptr().add(k))),
+                        );
+                        acc = _mm256_add_pd(acc, _mm256_andnot_pd(neg0, diff));
+                        k += 4;
+                    }
+                    let mut l1 = hsum4(acc);
+                    while k < d {
+                        l1 += (xr[k] as f64 - cr[k] as f64).abs();
+                        k += 1;
+                    }
+                    orow[j - j0] = (-l1 * inv) as f32;
+                }
+                exp::fast_exp_slice_f32_avx2(orow);
+            }
+        }
+        Kernel::Linear => {
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let orow = &mut out[i * ldo..i * ldo + w];
+                let mut j = j0;
+                while j + 4 <= m {
+                    let dots = dot4_f32(xr, c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
+                    _mm_storeu_ps(orow.as_mut_ptr().add(j - j0), _mm256_cvtpd_ps(dots));
+                    j += 4;
+                }
+                while j < m {
+                    orow[j - j0] = vec_ops::dot_f32(xr, c.row(j)) as f32;
+                    j += 1;
+                }
+            }
+        }
+    }
+}

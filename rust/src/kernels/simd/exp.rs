@@ -1,0 +1,175 @@
+//! AVX2 lanes of [`fast_exp`] / [`fast_exp_f32`] — 4-wide f64 and
+//! 8-wide f32 evaluations of the *identical* constant and operation
+//! sequence as the scalar routines (`FAST_EXP_*` constants hoisted in
+//! `linalg::vec_ops`), so every non-NaN lane is **bitwise equal** to the
+//! scalar result:
+//!
+//! - clamp, `floor(x·log2e + 0.5)` range reduction, split-ln2
+//!   remainder, Horner from the top coefficient — all as separate
+//!   mul/add pairs. No FMA inside the polynomial: contracting
+//!   `c + r·p` would round differently from the scalar chain and break
+//!   the bitwise pin (FMA is reserved for the panel dot products, which
+//!   are tol-bounded, not bitwise).
+//! - `2^k` assembled in the exponent field via integer lanes
+//!   (`cvt → +bias → shift`), exactly like the scalar
+//!   `f64::from_bits` path; the conversions round-to-nearest, which is
+//!   exact on the integral `kf`.
+//! - tails as blends: `x < lo → 0`, `x > hi → +inf`, and an unordered
+//!   self-compare restores NaN inputs — `_mm256_min_pd`/`_mm256_max_pd`
+//!   return their *second* operand on NaN, so the clamp mangles NaN
+//!   lanes and the explicit blend is load-bearing. The restored NaN is
+//!   the input value, so only the payload may differ from the scalar
+//!   arm's propagated NaN (the property tests compare `is_nan`, not
+//!   bits, on NaN lanes).
+//!
+//! [`fast_exp`]: crate::linalg::vec_ops::fast_exp
+//! [`fast_exp_f32`]: crate::linalg::vec_ops::fast_exp_f32
+
+use std::arch::x86_64::*;
+
+use crate::linalg::vec_ops::{
+    self, FAST_EXP_COEFFS, FAST_EXP_F32_COEFFS, FAST_EXP_F32_LN2_HI, FAST_EXP_F32_LN2_LO,
+    FAST_EXP_F32_LOG2E, FAST_EXP_F32_NEG_CUTOFF, FAST_EXP_F32_POS_CUTOFF, FAST_EXP_LN2_HI,
+    FAST_EXP_LN2_LO, FAST_EXP_LOG2E,
+};
+
+/// 4 × f64 `fast_exp`, bitwise equal to the scalar on non-NaN lanes.
+///
+/// # Safety
+/// Caller must ensure avx2 and fma are available on this CPU.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn fast_exp4(x: __m256d) -> __m256d {
+    let lo = _mm256_set1_pd(-709.0);
+    let hi = _mm256_set1_pd(708.0);
+    let clamped = _mm256_max_pd(_mm256_min_pd(x, hi), lo);
+    let kf = _mm256_floor_pd(_mm256_add_pd(
+        _mm256_mul_pd(clamped, _mm256_set1_pd(FAST_EXP_LOG2E)),
+        _mm256_set1_pd(0.5),
+    ));
+    let r = _mm256_sub_pd(
+        _mm256_sub_pd(clamped, _mm256_mul_pd(kf, _mm256_set1_pd(FAST_EXP_LN2_HI))),
+        _mm256_mul_pd(kf, _mm256_set1_pd(FAST_EXP_LN2_LO)),
+    );
+    let mut p = _mm256_set1_pd(FAST_EXP_COEFFS[FAST_EXP_COEFFS.len() - 1]);
+    let mut i = FAST_EXP_COEFFS.len() - 1;
+    while i > 0 {
+        i -= 1;
+        p = _mm256_add_pd(_mm256_set1_pd(FAST_EXP_COEFFS[i]), _mm256_mul_pd(r, p));
+    }
+    // 2^k via the exponent field; kf ∈ [-1023, 1021] after the clamp, so
+    // the i32 conversion is exact and the biased exponent fits
+    let ki = _mm256_cvtepi32_epi64(_mm256_cvtpd_epi32(kf));
+    let scale = _mm256_castsi256_pd(_mm256_slli_epi64::<52>(_mm256_add_epi64(
+        ki,
+        _mm256_set1_epi64x(1023),
+    )));
+    let out = _mm256_mul_pd(p, scale);
+    let neg_tail = _mm256_cmp_pd::<_CMP_LT_OQ>(x, lo);
+    let pos_tail = _mm256_cmp_pd::<_CMP_GT_OQ>(x, hi);
+    let nan = _mm256_cmp_pd::<_CMP_UNORD_Q>(x, x);
+    let out = _mm256_blendv_pd(out, _mm256_setzero_pd(), neg_tail);
+    let out = _mm256_blendv_pd(out, _mm256_set1_pd(f64::INFINITY), pos_tail);
+    _mm256_blendv_pd(out, x, nan)
+}
+
+/// 8 × f32 `fast_exp_f32`, bitwise equal to the scalar on non-NaN lanes.
+///
+/// # Safety
+/// Caller must ensure avx2 and fma are available on this CPU.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn fast_exp8(x: __m256) -> __m256 {
+    let lo = _mm256_set1_ps(FAST_EXP_F32_NEG_CUTOFF);
+    let hi = _mm256_set1_ps(FAST_EXP_F32_POS_CUTOFF);
+    let clamped = _mm256_max_ps(_mm256_min_ps(x, hi), lo);
+    let kf = _mm256_floor_ps(_mm256_add_ps(
+        _mm256_mul_ps(clamped, _mm256_set1_ps(FAST_EXP_F32_LOG2E)),
+        _mm256_set1_ps(0.5),
+    ));
+    let r = _mm256_sub_ps(
+        _mm256_sub_ps(clamped, _mm256_mul_ps(kf, _mm256_set1_ps(FAST_EXP_F32_LN2_HI))),
+        _mm256_mul_ps(kf, _mm256_set1_ps(FAST_EXP_F32_LN2_LO)),
+    );
+    let mut p = _mm256_set1_ps(FAST_EXP_F32_COEFFS[FAST_EXP_F32_COEFFS.len() - 1]);
+    let mut i = FAST_EXP_F32_COEFFS.len() - 1;
+    while i > 0 {
+        i -= 1;
+        p = _mm256_add_ps(_mm256_set1_ps(FAST_EXP_F32_COEFFS[i]), _mm256_mul_ps(r, p));
+    }
+    // 2^k via the exponent field; kf ∈ [-126, 127] by the clamp
+    let ki = _mm256_cvtps_epi32(kf);
+    let scale = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+        ki,
+        _mm256_set1_epi32(127),
+    )));
+    let out = _mm256_mul_ps(p, scale);
+    let neg_tail = _mm256_cmp_ps::<_CMP_LT_OQ>(x, lo);
+    let pos_tail = _mm256_cmp_ps::<_CMP_GT_OQ>(x, hi);
+    let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(x, x);
+    let out = _mm256_blendv_ps(out, _mm256_setzero_ps(), neg_tail);
+    let out = _mm256_blendv_ps(out, _mm256_set1_ps(f32::INFINITY), pos_tail);
+    _mm256_blendv_ps(out, x, nan)
+}
+
+/// In-place `xs[i] = fast_exp(xs[i])`: 4-lane body, scalar tail (the
+/// scalar routine is bitwise identical to a lane, so tail entries are
+/// indistinguishable from vectorized ones).
+///
+/// # Safety
+/// Caller must ensure avx2 and fma are available on this CPU.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn fast_exp_slice_avx2(xs: &mut [f64]) {
+    let n = xs.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = _mm256_loadu_pd(xs.as_ptr().add(i));
+        _mm256_storeu_pd(xs.as_mut_ptr().add(i), fast_exp4(v));
+        i += 4;
+    }
+    while i < n {
+        xs[i] = vec_ops::fast_exp(xs[i]);
+        i += 1;
+    }
+}
+
+/// In-place `xs[i] = fast_exp(-xs[i] * inv)` — the Gaussian panel pass.
+/// The sign flip is an exact xor with the sign bit and the scale a
+/// single multiply, matching the scalar `-v * inv` bit for bit.
+///
+/// # Safety
+/// Caller must ensure avx2 and fma are available on this CPU.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn fast_exp_neg_scale_slice_avx2(xs: &mut [f64], inv: f64) {
+    let invv = _mm256_set1_pd(inv);
+    let neg0 = _mm256_set1_pd(-0.0);
+    let n = xs.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = _mm256_loadu_pd(xs.as_ptr().add(i));
+        let arg = _mm256_mul_pd(_mm256_xor_pd(v, neg0), invv);
+        _mm256_storeu_pd(xs.as_mut_ptr().add(i), fast_exp4(arg));
+        i += 4;
+    }
+    while i < n {
+        xs[i] = vec_ops::fast_exp(-xs[i] * inv);
+        i += 1;
+    }
+}
+
+/// In-place `xs[i] = fast_exp_f32(xs[i])`: 8-lane body, scalar tail.
+///
+/// # Safety
+/// Caller must ensure avx2 and fma are available on this CPU.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn fast_exp_slice_f32_avx2(xs: &mut [f32]) {
+    let n = xs.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(xs.as_ptr().add(i));
+        _mm256_storeu_ps(xs.as_mut_ptr().add(i), fast_exp8(v));
+        i += 8;
+    }
+    while i < n {
+        xs[i] = vec_ops::fast_exp_f32(xs[i]);
+        i += 1;
+    }
+}

@@ -1,0 +1,448 @@
+//! Runtime ISA dispatch for the kernel panel engine (DESIGN.md §Perf
+//! "SIMD panels") — the pure-Rust analogue of the artifact registry in
+//! `runtime/spec.rs`: detect the fastest admissible instruction set once
+//! at plan/engine construction, then run every panel sweep through that
+//! arm for the lifetime of the plan.
+//!
+//! Three arms exist:
+//!
+//! - **scalar** — the autovectorizer-friendly tiles in [`super`] and
+//!   [`super::mixed`]; always available, and the oracle every SIMD arm
+//!   is property-tested against.
+//! - **avx2** (`simd::avx2`, x86_64 only) — explicit AVX2/FMA panels: 4
+//!   centers per register group, FMA dot products, and 4-lane (f64) /
+//!   8-lane (f32) polynomial `exp` (`simd::exp`).
+//! - **neon** (`simd::neon`, aarch64 only) — 2-lane f64 / 4-lane f32
+//!   NEON panels with the same structure.
+//!
+//! Determinism contract: within one arm, pooled results stay bitwise
+//! equal to serial (job order and per-row arithmetic are unchanged —
+//! the ISA is picked once, not per task). *Across* arms, panel values
+//! differ by the documented [`super::tol`] SIMD bounds (FMA contraction
+//! and lane-order reassociation in the dot products); the vectorized
+//! `exp` itself is pinned **bitwise** to the scalar [`fast_exp`] /
+//! [`fast_exp_f32`] on every non-NaN input, because both evaluate the
+//! identical constant/operation sequence (`linalg::vec_ops`'s hoisted
+//! `FAST_EXP_*` constants, no FMA inside the polynomial).
+//!
+//! Selection precedence: explicit [`SimdMode`] on `EngineOptions` (CLI
+//! `--simd`) > the `FALKON_SIMD` environment variable > auto-detection.
+//! A forced arm that the host cannot run degrades loudly to scalar.
+
+use crate::linalg::vec_ops::{fast_exp, fast_exp_f32};
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+#[cfg(target_arch = "x86_64")]
+pub mod exp;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+/// The instruction-set arm a plan's panel sweeps run on. Resolved once
+/// (from a [`SimdMode`]) and threaded through `RustPlan` / `StreamPlan`
+/// / the predict fan-outs; `Copy` so pooled closures capture it freely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Autovectorized scalar tiles — always available.
+    Scalar,
+    /// AVX2 + FMA panels (x86_64, runtime-detected).
+    Avx2,
+    /// NEON panels (aarch64; baseline feature of the target).
+    Neon,
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+fn neon_available() -> bool {
+    cfg!(target_arch = "aarch64")
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Pure feature detection, ignoring `FALKON_SIMD`: the best arm this
+    /// host can run. The SIMD-vs-scalar property tests pin this arm
+    /// against [`Isa::Scalar`] so both CI legs (default and
+    /// `FALKON_SIMD=scalar`) exercise identical arithmetic.
+    pub fn detect_best() -> Isa {
+        if avx2_available() {
+            Isa::Avx2
+        } else if neon_available() {
+            Isa::Neon
+        } else {
+            Isa::Scalar
+        }
+    }
+
+    /// The process-wide default arm: `FALKON_SIMD` (if set) resolved
+    /// once, else [`Isa::detect_best`]. Used by the serial convenience
+    /// entry points (`kernel_block`, `kmm`, `predict_blocked`, …) that
+    /// don't belong to a plan carrying an explicit choice.
+    pub fn global() -> Isa {
+        use std::sync::OnceLock;
+        static GLOBAL: OnceLock<Isa> = OnceLock::new();
+        *GLOBAL.get_or_init(|| resolve(SimdMode::from_env()))
+    }
+}
+
+/// User-facing dispatch override: `FALKON_SIMD=auto|scalar|avx2|neon`,
+/// also settable per engine via `EngineOptions::simd` / CLI `--simd`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Pick the fastest available arm at construction (the default).
+    Auto,
+    /// Force the scalar tiles (the CI fallback leg).
+    Scalar,
+    /// Force AVX2/FMA; degrades loudly to scalar if unavailable.
+    Avx2,
+    /// Force NEON; degrades loudly to scalar if unavailable.
+    Neon,
+}
+
+impl SimdMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Scalar => "scalar",
+            SimdMode::Avx2 => "avx2",
+            SimdMode::Neon => "neon",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SimdMode> {
+        match s {
+            "auto" => Some(SimdMode::Auto),
+            "scalar" => Some(SimdMode::Scalar),
+            "avx2" => Some(SimdMode::Avx2),
+            "neon" => Some(SimdMode::Neon),
+            _ => None,
+        }
+    }
+
+    /// Read `FALKON_SIMD`; unknown values warn and fall back to auto so
+    /// a typo never silently changes numerics *and* never aborts a fit.
+    pub fn from_env() -> SimdMode {
+        match std::env::var("FALKON_SIMD") {
+            Ok(s) => SimdMode::parse(&s).unwrap_or_else(|| {
+                eprintln!(
+                    "[simd] unknown FALKON_SIMD={s:?} (expected auto|scalar|avx2|neon); using auto"
+                );
+                SimdMode::Auto
+            }),
+            Err(_) => SimdMode::Auto,
+        }
+    }
+}
+
+/// Resolve a requested mode against what the host supports. A forced
+/// arm the host cannot run degrades to scalar with a `[simd]` line —
+/// same policy as the engine's `[degraded]` fallbacks: never wrong,
+/// never silent.
+pub fn resolve(mode: SimdMode) -> Isa {
+    match mode {
+        SimdMode::Auto => Isa::detect_best(),
+        SimdMode::Scalar => Isa::Scalar,
+        SimdMode::Avx2 if avx2_available() => Isa::Avx2,
+        SimdMode::Neon if neon_available() => Isa::Neon,
+        forced => {
+            eprintln!(
+                "[simd] {} requested but unavailable on this host; using scalar tiles",
+                forced.name()
+            );
+            Isa::Scalar
+        }
+    }
+}
+
+/// [`resolve`] plus a one-time log line recording which arm the process
+/// dispatched — so bench JSONs and CI logs show what actually ran.
+pub fn resolve_logged(mode: SimdMode) -> Isa {
+    use std::sync::Once;
+    static LOGGED: Once = Once::new();
+    let isa = resolve(mode);
+    LOGGED.call_once(|| {
+        eprintln!(
+            "[simd] kernel panels: {} (override with FALKON_SIMD=auto|scalar|avx2|neon)",
+            isa.name()
+        );
+    });
+    isa
+}
+
+/// `xs[i] = fast_exp(xs[i])` through the selected arm (the Laplacian
+/// panel pass). Lanes are bitwise identical to the scalar loop on
+/// non-NaN inputs; NaN lanes stay NaN (payload may differ).
+pub fn fast_exp_slice(isa: Isa, xs: &mut [f64]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Isa::Avx2 is only handed out by resolve()/detect_best()
+        // after is_x86_feature_detected! confirmed avx2+fma on this host.
+        Isa::Avx2 => unsafe { exp::fast_exp_slice_avx2(xs) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is a baseline feature of every aarch64 target.
+        Isa::Neon => unsafe { neon::fast_exp_slice_neon(xs) },
+        _ => {
+            for v in xs.iter_mut() {
+                *v = fast_exp(*v);
+            }
+        }
+    }
+}
+
+/// `xs[i] = fast_exp(-xs[i] * inv)` through the selected arm (the
+/// Gaussian panel pass over staged squared distances). The negate-scale
+/// prologue is exact (sign-bit flip + one multiply, identical to the
+/// scalar expression), so the bitwise-lane contract of
+/// [`fast_exp_slice`] carries over.
+pub fn fast_exp_neg_scale_slice(isa: Isa, xs: &mut [f64], inv: f64) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see fast_exp_slice.
+        Isa::Avx2 => unsafe { exp::fast_exp_neg_scale_slice_avx2(xs, inv) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is a baseline feature of every aarch64 target.
+        Isa::Neon => unsafe { neon::fast_exp_neg_scale_slice_neon(xs, inv) },
+        _ => {
+            for v in xs.iter_mut() {
+                *v = fast_exp(-*v * inv);
+            }
+        }
+    }
+}
+
+/// `xs[i] = fast_exp_f32(xs[i])` through the selected arm — the f32
+/// panel pass ([`super::mixed`] stages exponential arguments in f64 and
+/// rounds once to f32 before this call, so a plain f32 exp suffices).
+pub fn fast_exp_slice_f32(isa: Isa, xs: &mut [f32]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see fast_exp_slice.
+        Isa::Avx2 => unsafe { exp::fast_exp_slice_f32_avx2(xs) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is a baseline feature of every aarch64 target.
+        Isa::Neon => unsafe { neon::fast_exp_slice_f32_neon(xs) },
+        _ => {
+            for v in xs.iter_mut() {
+                *v = fast_exp_f32(*v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::check;
+
+    const MODES: [SimdMode; 4] = [
+        SimdMode::Auto,
+        SimdMode::Scalar,
+        SimdMode::Avx2,
+        SimdMode::Neon,
+    ];
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for m in MODES {
+            assert_eq!(SimdMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(SimdMode::parse("avx512"), None);
+        assert_eq!(SimdMode::parse(""), None);
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+            assert!(!isa.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn resolve_is_total_and_scalar_is_always_honored() {
+        // every mode resolves to *something* runnable on this host
+        for m in MODES {
+            let isa = resolve(m);
+            match isa {
+                Isa::Scalar => {}
+                Isa::Avx2 => assert!(cfg!(target_arch = "x86_64")),
+                Isa::Neon => assert!(cfg!(target_arch = "aarch64")),
+            }
+        }
+        assert_eq!(resolve(SimdMode::Scalar), Isa::Scalar);
+        // auto resolves to the detected best
+        assert_eq!(resolve(SimdMode::Auto), Isa::detect_best());
+        // global() is stable across calls (OnceLock)
+        assert_eq!(Isa::global(), Isa::global());
+    }
+
+    /// The saturation/edge lattice of the satellite task: both tails,
+    /// both boundaries, denormal inputs, ±inf and NaN, for f64 and f32.
+    fn edge_lattice_f64() -> Vec<f64> {
+        vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            -45.3,
+            -300.0,
+            700.0,
+            708.0,
+            708.5,
+            709.0,
+            709.5,
+            1000.0,
+            -708.0,
+            -708.4,
+            -708.9,
+            -709.0,
+            -709.5,
+            -710.0,
+            -1000.0,
+            1e-320,
+            -1e-320,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            f64::MIN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+        ]
+    }
+
+    fn edge_lattice_f32() -> Vec<f32> {
+        vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            -40.5,
+            86.0,
+            88.0,
+            88.5,
+            89.0,
+            200.0,
+            -87.0,
+            -87.3,
+            -87.4,
+            -88.0,
+            -200.0,
+            1e-44,
+            -1e-44,
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            f32::MIN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+        ]
+    }
+
+    fn assert_bitwise_f64(got: &[f64], want: &[f64], tag: &str) {
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            if w.is_nan() {
+                // NaN lanes stay NaN; the payload may differ between the
+                // scalar polynomial and the blend-restored input
+                assert!(g.is_nan(), "{tag}[{i}]: expected NaN, got {g:e}");
+            } else {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "{tag}[{i}]: {g:e} vs {w:e} (not bitwise)"
+                );
+            }
+        }
+    }
+
+    fn assert_bitwise_f32(got: &[f32], want: &[f32], tag: &str) {
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            if w.is_nan() {
+                assert!(g.is_nan(), "{tag}[{i}]: expected NaN, got {g:e}");
+            } else {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "{tag}[{i}]: {g:e} vs {w:e} (not bitwise)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_exp_lanes_are_bitwise_scalar_on_the_edge_lattice() {
+        let isa = Isa::detect_best();
+        if isa == Isa::Scalar {
+            eprintln!("[simd] no vector arm on this host; edge-lattice test is vacuous");
+        }
+        // f64: lattice + ragged tails (lengths not multiples of the lane
+        // width) so both the vector groups and the scalar tail run
+        let lattice = edge_lattice_f64();
+        for len in [1usize, 3, 4, 5, 7, lattice.len()] {
+            let base: Vec<f64> = lattice.iter().cycle().take(len).copied().collect();
+            let mut got = base.clone();
+            fast_exp_slice(isa, &mut got);
+            let want: Vec<f64> = base.iter().map(|&x| fast_exp(x)).collect();
+            assert_bitwise_f64(&got, &want, "exp64");
+        }
+        let lattice = edge_lattice_f32();
+        for len in [1usize, 5, 8, 9, 11, lattice.len()] {
+            let base: Vec<f32> = lattice.iter().cycle().take(len).copied().collect();
+            let mut got = base.clone();
+            fast_exp_slice_f32(isa, &mut got);
+            let want: Vec<f32> = base.iter().map(|&x| fast_exp_f32(x)).collect();
+            assert_bitwise_f32(&got, &want, "exp32");
+        }
+    }
+
+    #[test]
+    fn simd_exp_lanes_are_bitwise_scalar_on_random_slices() {
+        let isa = Isa::detect_best();
+        check("simd exp = scalar exp (bitwise)", 25, |g| {
+            let n = g.usize_in(1, 40);
+            let base: Vec<f64> = (0..n).map(|_| g.f64_in(-750.0, 750.0)).collect();
+            let mut got = base.clone();
+            fast_exp_slice(isa, &mut got);
+            let want: Vec<f64> = base.iter().map(|&x| fast_exp(x)).collect();
+            assert_bitwise_f64(&got, &want, "exp64");
+
+            // the Gaussian pass shape: nonnegative squared distances
+            let sq: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 200.0)).collect();
+            let inv = g.f64_in(0.01, 4.0);
+            let mut got = sq.clone();
+            fast_exp_neg_scale_slice(isa, &mut got, inv);
+            let want: Vec<f64> = sq.iter().map(|&v| fast_exp(-v * inv)).collect();
+            assert_bitwise_f64(&got, &want, "neg-scale");
+
+            let base32: Vec<f32> = (0..n).map(|_| g.f64_in(-100.0, 100.0) as f32).collect();
+            let mut got = base32.clone();
+            fast_exp_slice_f32(isa, &mut got);
+            let want: Vec<f32> = base32.iter().map(|&x| fast_exp_f32(x)).collect();
+            assert_bitwise_f32(&got, &want, "exp32");
+        });
+    }
+
+    #[test]
+    fn forced_scalar_slices_match_direct_scalar() {
+        // the FALKON_SIMD=scalar leg: dispatching Scalar must be the
+        // plain loop, bit for bit, on every edge input
+        let mut a = edge_lattice_f64();
+        let want: Vec<f64> = a.iter().map(|&x| fast_exp(x)).collect();
+        fast_exp_slice(Isa::Scalar, &mut a);
+        assert_bitwise_f64(&a, &want, "scalar64");
+        let mut b = edge_lattice_f32();
+        let want: Vec<f32> = b.iter().map(|&x| fast_exp_f32(x)).collect();
+        fast_exp_slice_f32(Isa::Scalar, &mut b);
+        assert_bitwise_f32(&b, &want, "scalar32");
+    }
+}

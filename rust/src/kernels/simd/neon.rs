@@ -1,0 +1,368 @@
+//! NEON arm of the kernel panel engine (aarch64): 2-lane f64 / 4-lane
+//! f32 versions of the panel dot products, norm-expansion staging and
+//! polynomial `exp`. Same contracts as the AVX2 arm in `simd::avx2` /
+//! `simd::exp`: panel values differ from scalar only by FMA contraction
+//! and lane reassociation in the dots (tol-bounded), while the `exp`
+//! lanes evaluate the identical `FAST_EXP_*` constant/operation
+//! sequence and stay bitwise equal to the scalar on non-NaN inputs. One
+//! NaN wrinkle differs from x86: NEON `FMIN`/`FMAX` *propagate* NaN, so
+//! the clamp keeps NaN lanes NaN and no explicit unordered blend is
+//! needed (the payload may still differ from the scalar arm's — tests
+//! compare `is_nan`, not bits, on NaN lanes).
+
+use std::arch::aarch64::*;
+
+use crate::kernels::Kernel;
+use crate::linalg::mat::Mat;
+use crate::linalg::mat32::MatF32;
+use crate::linalg::vec_ops;
+use crate::linalg::vec_ops::{
+    FAST_EXP_COEFFS, FAST_EXP_F32_COEFFS, FAST_EXP_F32_LN2_HI, FAST_EXP_F32_LN2_LO,
+    FAST_EXP_F32_LOG2E, FAST_EXP_F32_NEG_CUTOFF, FAST_EXP_F32_POS_CUTOFF, FAST_EXP_LN2_HI,
+    FAST_EXP_LN2_LO, FAST_EXP_LOG2E,
+};
+
+/// 2 × f64 `fast_exp`, bitwise equal to the scalar on non-NaN lanes.
+///
+/// # Safety
+/// NEON is a baseline feature of every aarch64 target; callers reach
+/// this only through an [`super::Isa::Neon`] dispatch.
+#[target_feature(enable = "neon")]
+unsafe fn fast_exp2(x: float64x2_t) -> float64x2_t {
+    let lo = vdupq_n_f64(-709.0);
+    let hi = vdupq_n_f64(708.0);
+    // FMIN/FMAX propagate NaN, so NaN lanes flow through untouched
+    let clamped = vmaxq_f64(vminq_f64(x, hi), lo);
+    let kf = vrndmq_f64(vaddq_f64(
+        vmulq_f64(clamped, vdupq_n_f64(FAST_EXP_LOG2E)),
+        vdupq_n_f64(0.5),
+    ));
+    let r = vsubq_f64(
+        vsubq_f64(clamped, vmulq_f64(kf, vdupq_n_f64(FAST_EXP_LN2_HI))),
+        vmulq_f64(kf, vdupq_n_f64(FAST_EXP_LN2_LO)),
+    );
+    let mut p = vdupq_n_f64(FAST_EXP_COEFFS[FAST_EXP_COEFFS.len() - 1]);
+    let mut i = FAST_EXP_COEFFS.len() - 1;
+    while i > 0 {
+        i -= 1;
+        p = vaddq_f64(vdupq_n_f64(FAST_EXP_COEFFS[i]), vmulq_f64(r, p));
+    }
+    // 2^k through the exponent field; the truncating convert is exact on
+    // the integral kf ∈ [-1023, 1021] (NaN lanes convert to 0 — their
+    // polynomial value is already NaN, so the scale is irrelevant)
+    let ki = vcvtq_s64_f64(kf);
+    let scale = vreinterpretq_f64_s64(vshlq_n_s64::<52>(vaddq_s64(ki, vdupq_n_s64(1023))));
+    let out = vmulq_f64(p, scale);
+    let neg_tail = vcltq_f64(x, lo);
+    let pos_tail = vcgtq_f64(x, hi);
+    let out = vbslq_f64(neg_tail, vdupq_n_f64(0.0), out);
+    vbslq_f64(pos_tail, vdupq_n_f64(f64::INFINITY), out)
+}
+
+/// 4 × f32 `fast_exp_f32`, bitwise equal to the scalar on non-NaN lanes.
+///
+/// # Safety
+/// NEON is a baseline feature of every aarch64 target.
+#[target_feature(enable = "neon")]
+unsafe fn fast_exp4_f32(x: float32x4_t) -> float32x4_t {
+    let lo = vdupq_n_f32(FAST_EXP_F32_NEG_CUTOFF);
+    let hi = vdupq_n_f32(FAST_EXP_F32_POS_CUTOFF);
+    let clamped = vmaxq_f32(vminq_f32(x, hi), lo);
+    let kf = vrndmq_f32(vaddq_f32(
+        vmulq_f32(clamped, vdupq_n_f32(FAST_EXP_F32_LOG2E)),
+        vdupq_n_f32(0.5),
+    ));
+    let r = vsubq_f32(
+        vsubq_f32(clamped, vmulq_f32(kf, vdupq_n_f32(FAST_EXP_F32_LN2_HI))),
+        vmulq_f32(kf, vdupq_n_f32(FAST_EXP_F32_LN2_LO)),
+    );
+    let mut p = vdupq_n_f32(FAST_EXP_F32_COEFFS[FAST_EXP_F32_COEFFS.len() - 1]);
+    let mut i = FAST_EXP_F32_COEFFS.len() - 1;
+    while i > 0 {
+        i -= 1;
+        p = vaddq_f32(vdupq_n_f32(FAST_EXP_F32_COEFFS[i]), vmulq_f32(r, p));
+    }
+    let ki = vcvtq_s32_f32(kf);
+    let scale = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(ki, vdupq_n_s32(127))));
+    let out = vmulq_f32(p, scale);
+    let neg_tail = vcltq_f32(x, lo);
+    let pos_tail = vcgtq_f32(x, hi);
+    let out = vbslq_f32(neg_tail, vdupq_n_f32(0.0), out);
+    vbslq_f32(pos_tail, vdupq_n_f32(f32::INFINITY), out)
+}
+
+/// In-place `xs[i] = fast_exp(xs[i])`: 2-lane body, scalar tail.
+///
+/// # Safety
+/// NEON is a baseline feature of every aarch64 target.
+#[target_feature(enable = "neon")]
+pub unsafe fn fast_exp_slice_neon(xs: &mut [f64]) {
+    let n = xs.len();
+    let mut i = 0;
+    while i + 2 <= n {
+        let v = vld1q_f64(xs.as_ptr().add(i));
+        vst1q_f64(xs.as_mut_ptr().add(i), fast_exp2(v));
+        i += 2;
+    }
+    while i < n {
+        xs[i] = vec_ops::fast_exp(xs[i]);
+        i += 1;
+    }
+}
+
+/// In-place `xs[i] = fast_exp(-xs[i] * inv)` — the Gaussian panel pass.
+///
+/// # Safety
+/// NEON is a baseline feature of every aarch64 target.
+#[target_feature(enable = "neon")]
+pub unsafe fn fast_exp_neg_scale_slice_neon(xs: &mut [f64], inv: f64) {
+    let invv = vdupq_n_f64(inv);
+    let n = xs.len();
+    let mut i = 0;
+    while i + 2 <= n {
+        let v = vld1q_f64(xs.as_ptr().add(i));
+        let arg = vmulq_f64(vnegq_f64(v), invv);
+        vst1q_f64(xs.as_mut_ptr().add(i), fast_exp2(arg));
+        i += 2;
+    }
+    while i < n {
+        xs[i] = vec_ops::fast_exp(-xs[i] * inv);
+        i += 1;
+    }
+}
+
+/// In-place `xs[i] = fast_exp_f32(xs[i])`: 4-lane body, scalar tail.
+///
+/// # Safety
+/// NEON is a baseline feature of every aarch64 target.
+#[target_feature(enable = "neon")]
+pub unsafe fn fast_exp_slice_f32_neon(xs: &mut [f32]) {
+    let n = xs.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = vld1q_f32(xs.as_ptr().add(i));
+        vst1q_f32(xs.as_mut_ptr().add(i), fast_exp4_f32(v));
+        i += 4;
+    }
+    while i < n {
+        xs[i] = vec_ops::fast_exp_f32(xs[i]);
+        i += 1;
+    }
+}
+
+/// f64 dot product with 2-lane FMA accumulation and a scalar tail.
+///
+/// # Safety
+/// NEON is a baseline feature of every aarch64 target.
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(a: &[f64], b: &[f64]) -> f64 {
+    let d = a.len();
+    let mut acc = vdupq_n_f64(0.0);
+    let mut k = 0;
+    while k + 2 <= d {
+        acc = vfmaq_f64(acc, vld1q_f64(a.as_ptr().add(k)), vld1q_f64(b.as_ptr().add(k)));
+        k += 2;
+    }
+    let mut s = vaddvq_f64(acc);
+    while k < d {
+        s += a[k] * b[k];
+        k += 1;
+    }
+    s
+}
+
+/// [`dot_neon`] over f32 storage: lanes widened to f64 before the FMA,
+/// so accumulation is pure f64 and each product is exact.
+///
+/// # Safety
+/// NEON is a baseline feature of every aarch64 target.
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon_f32(a: &[f32], b: &[f32]) -> f64 {
+    let d = a.len();
+    let mut acc = vdupq_n_f64(0.0);
+    let mut k = 0;
+    while k + 2 <= d {
+        acc = vfmaq_f64(
+            acc,
+            vcvt_f64_f32(vld1_f32(a.as_ptr().add(k))),
+            vcvt_f64_f32(vld1_f32(b.as_ptr().add(k))),
+        );
+        k += 2;
+    }
+    let mut s = vaddvq_f64(acc);
+    while k < d {
+        s += a[k] as f64 * b[k] as f64;
+        k += 1;
+    }
+    s
+}
+
+/// f64 L1 distance with 2-lane abs accumulation and a scalar tail.
+///
+/// # Safety
+/// NEON is a baseline feature of every aarch64 target.
+#[target_feature(enable = "neon")]
+unsafe fn l1_neon(a: &[f64], b: &[f64]) -> f64 {
+    let d = a.len();
+    let mut acc = vdupq_n_f64(0.0);
+    let mut k = 0;
+    while k + 2 <= d {
+        let diff = vsubq_f64(vld1q_f64(a.as_ptr().add(k)), vld1q_f64(b.as_ptr().add(k)));
+        acc = vaddq_f64(acc, vabsq_f64(diff));
+        k += 2;
+    }
+    let mut s = vaddvq_f64(acc);
+    while k < d {
+        s += (a[k] - b[k]).abs();
+        k += 1;
+    }
+    s
+}
+
+/// NEON arm of `kernel_panel`: same layout contract (`j0`, `ldo`) and
+/// staging expressions as the scalar tiles, with the dot/L1 inner loops
+/// vectorized and the exponential pass through the NEON lanes.
+///
+/// # Safety
+/// NEON is a baseline feature of every aarch64 target.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub unsafe fn kernel_panel_neon(
+    kern: Kernel,
+    xb: &[f64],
+    d: usize,
+    rows: usize,
+    xn: &[f64],
+    c: &Mat,
+    cn: &[f64],
+    j0: usize,
+    param: f64,
+    out: &mut [f64],
+    ldo: usize,
+) {
+    let m = c.rows;
+    let w = m - j0;
+    debug_assert_eq!(xb.len(), rows * d);
+    debug_assert_eq!(c.cols, d);
+    debug_assert!(rows == 0 || out.len() >= (rows - 1) * ldo + w);
+    debug_assert!(ldo >= w);
+    match kern {
+        Kernel::Gaussian => {
+            debug_assert_eq!(xn.len(), rows);
+            debug_assert_eq!(cn.len(), m);
+            let inv = 1.0 / (2.0 * param * param);
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let xni = xn[i];
+                let orow = &mut out[i * ldo..i * ldo + w];
+                for j in j0..m {
+                    let dotv = dot_neon(xr, c.row(j));
+                    orow[j - j0] = (xni + cn[j] - 2.0 * dotv).max(0.0);
+                }
+                fast_exp_neg_scale_slice_neon(orow, inv);
+            }
+        }
+        Kernel::Laplacian => {
+            let inv = 1.0 / param;
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let orow = &mut out[i * ldo..i * ldo + w];
+                for j in j0..m {
+                    orow[j - j0] = -l1_neon(xr, c.row(j)) * inv;
+                }
+                fast_exp_slice_neon(orow);
+            }
+        }
+        Kernel::Linear => {
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let orow = &mut out[i * ldo..i * ldo + w];
+                for j in j0..m {
+                    orow[j - j0] = dot_neon(xr, c.row(j));
+                }
+            }
+        }
+    }
+}
+
+/// NEON arm of `mixed::kernel_panel_f32`: f32 storage widened to f64
+/// lanes, staged in f64, rounded once to f32, then the 4-lane f32 exp.
+///
+/// # Safety
+/// NEON is a baseline feature of every aarch64 target.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub unsafe fn kernel_panel_f32_neon(
+    kern: Kernel,
+    xb: &[f32],
+    d: usize,
+    rows: usize,
+    xn: &[f64],
+    c: &MatF32,
+    cn: &[f64],
+    j0: usize,
+    param: f64,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    let m = c.rows;
+    let w = m - j0;
+    debug_assert_eq!(xb.len(), rows * d);
+    debug_assert_eq!(c.cols, d);
+    debug_assert!(rows == 0 || out.len() >= (rows - 1) * ldo + w);
+    debug_assert!(ldo >= w);
+    match kern {
+        Kernel::Gaussian => {
+            debug_assert_eq!(xn.len(), rows);
+            debug_assert_eq!(cn.len(), m);
+            let inv = 1.0 / (2.0 * param * param);
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let xni = xn[i];
+                let orow = &mut out[i * ldo..i * ldo + w];
+                for j in j0..m {
+                    let dotv = dot_neon_f32(xr, c.row(j));
+                    orow[j - j0] = (-(xni + cn[j] - 2.0 * dotv).max(0.0) * inv) as f32;
+                }
+                fast_exp_slice_f32_neon(orow);
+            }
+        }
+        Kernel::Laplacian => {
+            let inv = 1.0 / param;
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let orow = &mut out[i * ldo..i * ldo + w];
+                for j in j0..m {
+                    let mut l1 = 0.0f64;
+                    let mut k = 0;
+                    let mut acc = vdupq_n_f64(0.0);
+                    let cr = c.row(j);
+                    while k + 2 <= d {
+                        let diff = vsubq_f64(
+                            vcvt_f64_f32(vld1_f32(xr.as_ptr().add(k))),
+                            vcvt_f64_f32(vld1_f32(cr.as_ptr().add(k))),
+                        );
+                        acc = vaddq_f64(acc, vabsq_f64(diff));
+                        k += 2;
+                    }
+                    l1 += vaddvq_f64(acc);
+                    while k < d {
+                        l1 += (xr[k] as f64 - cr[k] as f64).abs();
+                        k += 1;
+                    }
+                    orow[j - j0] = (-l1 * inv) as f32;
+                }
+                fast_exp_slice_f32_neon(orow);
+            }
+        }
+        Kernel::Linear => {
+            for i in 0..rows {
+                let xr = &xb[i * d..(i + 1) * d];
+                let orow = &mut out[i * ldo..i * ldo + w];
+                for j in j0..m {
+                    orow[j - j0] = dot_neon_f32(xr, c.row(j)) as f32;
+                }
+            }
+        }
+    }
+}

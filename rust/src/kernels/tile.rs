@@ -1,0 +1,89 @@
+//! Shared panel tiling geometry for the scalar, SIMD and mixed-precision
+//! kernel arms: the row tile height and the reusable Kr/Y scratch layout
+//! that every tiled sweep ([`super::knm_matvec_blocked`],
+//! [`super::knm_matmat_blocked`], the `_f32` twins in [`super::mixed`],
+//! and the `kernels/simd` panels) consumes. Keeping the geometry in one
+//! place guarantees the SIMD and scalar arms tile identically — the
+//! SIMD-vs-scalar property tests compare sweeps panel-for-panel, which
+//! is only meaningful if both sides cut the same panels.
+
+/// Row tile height of the fused matvec: one Kr panel is `TILE × M` f64s
+/// (1 MiB at M = 1024), sized to stay L2-resident across its two passes.
+pub const DEFAULT_TILE: usize = 128;
+
+/// Reusable per-thread buffers for the tiled kernels: one Kr tile
+/// (`tile × M`) plus the fused intermediate Y (`tile × K`; K = 1 on the
+/// vector path). Built once per plan/worker; the apply loop performs no
+/// X-block heap allocation.
+pub struct TileScratch {
+    pub(crate) tile: usize,
+    pub(crate) kr: Vec<f64>,
+    /// f32 Kr tile for the mixed-precision panels ([`super::mixed`]);
+    /// empty until the first f32 apply so f64-only plans allocate nothing
+    /// extra. The fused Y stays `f64` for both tiers (stage-1 results
+    /// accumulate in double).
+    pub(crate) kr32: Vec<f32>,
+    pub(crate) y: Vec<f64>,
+}
+
+impl TileScratch {
+    pub fn new(tile: usize, m: usize) -> TileScratch {
+        let tile = tile.max(1);
+        TileScratch {
+            tile,
+            kr: vec![0.0; tile * m],
+            kr32: Vec::new(),
+            y: vec![0.0; tile],
+        }
+    }
+
+    /// [`TileScratch::new`] for the mixed-precision tier: allocates the
+    /// f32 Kr tile up front and leaves the f64 one empty (it grows on
+    /// demand if the same scratch later serves an f64 sweep).
+    pub(crate) fn new32(tile: usize, m: usize) -> TileScratch {
+        let tile = tile.max(1);
+        TileScratch {
+            tile,
+            kr: Vec::new(),
+            kr32: vec![0.0; tile * m],
+            y: vec![0.0; tile],
+        }
+    }
+
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Grow the Kr buffer if a caller re-uses the scratch with a larger M.
+    pub(crate) fn ensure(&mut self, m: usize) {
+        self.ensure_multi(m, 1);
+    }
+
+    /// Grow both buffers for a multi-RHS apply: Kr to `tile × M`, Y to
+    /// `tile × K`. A pool worker's scratch is sized to the widest K it has
+    /// served — a later plan with more classes grows it once, in place.
+    pub(crate) fn ensure_multi(&mut self, m: usize, k: usize) {
+        if self.kr.len() < self.tile * m {
+            self.kr.resize(self.tile * m, 0.0);
+        }
+        if self.y.len() < self.tile * k {
+            self.y.resize(self.tile * k, 0.0);
+        }
+    }
+
+    /// [`TileScratch::ensure`] for the f32 Kr tile.
+    pub(crate) fn ensure32(&mut self, m: usize) {
+        self.ensure_multi32(m, 1);
+    }
+
+    /// [`TileScratch::ensure_multi`] for the f32 Kr tile (Y is shared —
+    /// stage-1 results are `f64` on both tiers).
+    pub(crate) fn ensure_multi32(&mut self, m: usize, k: usize) {
+        if self.kr32.len() < self.tile * m {
+            self.kr32.resize(self.tile * m, 0.0);
+        }
+        if self.y.len() < self.tile * k {
+            self.y.resize(self.tile * k, 0.0);
+        }
+    }
+}

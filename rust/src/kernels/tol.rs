@@ -46,7 +46,7 @@ use crate::linalg::mat::Mat;
 use crate::linalg::mat32::MatF32;
 
 use super::mixed::row_sq_norms_f32;
-use super::Kernel;
+use super::{row_sq_norms, Kernel};
 
 /// `f32` machine epsilon, widened (2⁻²³ ≈ 1.19e-7).
 pub const EPS32: f64 = f32::EPSILON as f64;
@@ -136,6 +136,142 @@ pub fn predict_bound(kern: Kernel, x: &MatF32, c: &MatF32, alpha: &[f64]) -> f64
     entry_bound(kern, x, c) * a_l1
 }
 
+// --------------------------------------------------------------------------
+// SIMD-vs-scalar model (f64 tier)
+// --------------------------------------------------------------------------
+//
+// The SIMD panel arms (kernels::simd) change *only* the association order
+// of the f64 dot/L1 reductions — the staging expressions and the
+// exponential pass are operation-for-operation identical to the scalar
+// arm (the exp lanes are bitwise-pinned by the simd module's own tests).
+// So the SIMD-vs-scalar entry difference is two independently-rounded
+// f64 reductions of the same data feeding an exp whose *argument* moved:
+//
+// - an f64 dot of length d carries |fl(x·c) − x·c| ≤ γ_d·|x|·|c| with
+//   γ_d ≈ d·eps64; two arms differ by ≤ 2·d·eps64·Rx·Rc.
+// - the Gaussian norm expansion ‖x‖² + ‖c‖² − 2x·c adds a handful of
+//   roundings at magnitude (Rx+Rc)², and the argument is scaled by
+//   inv = 1/(2p²); exp(−a)·δa ≤ δa since a ≥ 0.
+// - the Laplacian L1 sum of length d (2d − 1 adds plus d abs/subs, each
+//   exact-or-one-rounding) differs across arms by
+//   ≤ (2d+2)·eps64·Σ|x−c| ≤ (2d+2)·eps64·√d·(Rx+Rc), scaled by 1/p.
+// - [`EXP64_RELERR`] is added as slack for the exponential kernels even
+//   though the lanes are bitwise, so the bound stays valid if a future
+//   arm relaxes the pin to "within the measured polynomial error".
+//
+// Each carries the same [`SAFETY`] factor and propagates through the
+// fused sweeps exactly like the f32-tier bounds above.
+
+/// `f64` machine epsilon (2⁻⁵² ≈ 2.22e-16).
+pub const EPS64: f64 = f64::EPSILON;
+
+/// Relative error bound of [`crate::linalg::vec_ops::fast_exp`] against
+/// libm on the non-saturated domain (measured max ≈ 4e-14 in the
+/// `fast_exp_matches_libm` property test; documented with headroom).
+/// SIMD lanes are bitwise equal to the scalar polynomial, so this enters
+/// the SIMD-vs-scalar bounds only as slack — see the module docs.
+pub const EXP64_RELERR: f64 = 1.0e-13;
+
+/// Largest row L2 norm of an f64 block.
+fn max_row_norm_f64(x: &Mat) -> f64 {
+    row_sq_norms(x).into_iter().fold(0.0f64, f64::max).sqrt()
+}
+
+/// Bound on |K(x,c)| over f64 data: 1 for the exponential kernels,
+/// Cauchy–Schwarz Rx·Rc for linear.
+fn kmax_f64(kern: Kernel, x: &Mat, c: &Mat) -> f64 {
+    match kern {
+        Kernel::Gaussian | Kernel::Laplacian => 1.0,
+        Kernel::Linear => max_row_norm_f64(x) * max_row_norm_f64(c),
+    }
+}
+
+/// Per-entry bound |K_simd(x,c) − K_scalar(x,c)| for the f64 panel arms
+/// — reassociation of the f64 reductions only; see the section comment
+/// for the derivation.
+pub fn simd_entry_bound(kern: Kernel, x: &Mat, c: &Mat, param: f64) -> f64 {
+    let d = x.cols as f64;
+    let rx = max_row_norm_f64(x);
+    let rc = max_row_norm_f64(c);
+    match kern {
+        Kernel::Gaussian => {
+            let inv = 1.0 / (2.0 * param * param);
+            let cancel = 4.0 * d * rx * rc + 2.0 * (rx + rc) * (rx + rc);
+            SAFETY * (inv * EPS64 * cancel + EXP64_RELERR)
+        }
+        Kernel::Laplacian => {
+            let l1 = (2.0 * d + 2.0) * d.sqrt() * (rx + rc);
+            SAFETY * ((1.0 / param) * EPS64 * l1 + EXP64_RELERR)
+        }
+        Kernel::Linear => SAFETY * (2.0 * d + 2.0) * EPS64 * rx * rc,
+    }
+}
+
+/// SIMD-vs-scalar `|δw|∞` bound for the fused f64 matvec
+/// w = Krᵀ(Kr·u + v) over all of `x`'s rows — the entry bound propagated
+/// exactly like [`matvec_bound`].
+pub fn simd_matvec_bound(
+    kern: Kernel,
+    x: &Mat,
+    c: &Mat,
+    param: f64,
+    u: &[f64],
+    v: Option<&[f64]>,
+) -> f64 {
+    let u_l1: f64 = u.iter().map(|t| t.abs()).sum();
+    let v_inf = v
+        .map(|vf| vf.iter().fold(0.0f64, |a, t| a.max(t.abs())))
+        .unwrap_or(0.0);
+    let delta = simd_entry_bound(kern, x, c, param);
+    let km = kmax_f64(kern, x, c);
+    (x.rows as f64) * delta * (2.0 * km * u_l1 + v_inf)
+}
+
+/// Multi-RHS [`simd_matvec_bound`]: worst column ‖u_col‖₁ against the
+/// global max |V|.
+pub fn simd_matmat_bound(
+    kern: Kernel,
+    x: &Mat,
+    c: &Mat,
+    param: f64,
+    u: &Mat,
+    v: Option<&[f64]>,
+) -> f64 {
+    let mut u_l1 = 0.0f64;
+    for kc in 0..u.cols {
+        let col: f64 = (0..u.rows).map(|j| u[(j, kc)].abs()).sum();
+        u_l1 = u_l1.max(col);
+    }
+    let v_inf = v
+        .map(|vf| vf.iter().fold(0.0f64, |a, t| a.max(t.abs())))
+        .unwrap_or(0.0);
+    let delta = simd_entry_bound(kern, x, c, param);
+    let km = kmax_f64(kern, x, c);
+    (x.rows as f64) * delta * (2.0 * km * u_l1 + v_inf)
+}
+
+/// SIMD-vs-scalar `|δf|∞` bound for predictions f = Kr·α (per output:
+/// passing a flattened multi-output α is a conservative upper bound for
+/// every column).
+pub fn simd_predict_bound(kern: Kernel, x: &Mat, c: &Mat, param: f64, alpha: &[f64]) -> f64 {
+    let a_l1: f64 = alpha.iter().map(|t| t.abs()).sum();
+    simd_entry_bound(kern, x, c, param) * a_l1
+}
+
+/// SIMD-vs-scalar per-entry bound for the **f32** panel arms. Both arms
+/// accumulate in f64 and round the staged argument (or linear dot) to
+/// `f32` once, so the eps64-scale reassociation drift can flip at most
+/// the last bit of each of the two f32 roundings: the exponential
+/// kernels stay at the data-independent `EPS32 + EXP32_RELERR` scale and
+/// the linear kernel at `Rx·Rc·EPS32` (one full ulp32 to cover both
+/// arms' independent roundings).
+pub fn simd_entry_bound_f32(kern: Kernel, x: &MatF32, c: &MatF32) -> f64 {
+    match kern {
+        Kernel::Gaussian | Kernel::Laplacian => SAFETY * (EPS32 + EXP32_RELERR),
+        Kernel::Linear => SAFETY * max_row_norm(x) * max_row_norm(c) * EPS32,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,5 +311,42 @@ mod tests {
         let p1 = predict_bound(Kernel::Gaussian, &x, &c, &[1.0]);
         let p2 = predict_bound(Kernel::Gaussian, &x, &c, &[1.0, -1.0]);
         assert!((p2 - 2.0 * p1).abs() < 1e-18);
+    }
+
+    #[test]
+    fn simd_bounds_are_positive_and_track_their_knobs() {
+        let x = Mat::from_vec(3, 2, vec![0.5, -1.0, 2.0, 0.25, -0.75, 1.5]);
+        let c = Mat::from_vec(2, 2, vec![1.0, 1.0, -0.5, 2.0]);
+        for kern in [Kernel::Gaussian, Kernel::Laplacian, Kernel::Linear] {
+            let b = simd_entry_bound(kern, &x, &c, 1.3);
+            assert!(b > 0.0 && b < 1e-9, "{kern:?}: {b:e}");
+        }
+        // exponential bounds never fall below the EXP64_RELERR floor
+        assert!(simd_entry_bound(Kernel::Gaussian, &x, &c, 1.3) >= SAFETY * EXP64_RELERR);
+        // Gaussian bound tightens as the bandwidth grows (inv = 1/(2p²))
+        assert!(
+            simd_entry_bound(Kernel::Gaussian, &x, &c, 4.0)
+                < simd_entry_bound(Kernel::Gaussian, &x, &c, 0.5)
+        );
+        // propagation scales with the sweep exactly like the f32 tier
+        let u = [2.0, -3.0];
+        let x2 = {
+            let mut dat = x.data.clone();
+            dat.extend_from_slice(&x.data);
+            Mat::from_vec(6, 2, dat)
+        };
+        let b1 = simd_matvec_bound(Kernel::Laplacian, &x, &c, 1.3, &u, None);
+        let b2 = simd_matvec_bound(Kernel::Laplacian, &x2, &c, 1.3, &u, None);
+        assert!((b2 - 2.0 * b1).abs() < 1e-24);
+        // predict is row-count free and ‖α‖₁-linear
+        let p1 = simd_predict_bound(Kernel::Gaussian, &x, &c, 1.3, &[1.0]);
+        let p2 = simd_predict_bound(Kernel::Gaussian, &x, &c, 1.3, &[1.0, -1.0]);
+        assert!((p2 - 2.0 * p1).abs() < 1e-18);
+        // the f32 arm bound dominates eps32-scale flips
+        let x32 = MatF32::from_f64s(3, 2, &x.data);
+        let c32 = MatF32::from_f64s(2, 2, &c.data);
+        for kern in [Kernel::Gaussian, Kernel::Laplacian, Kernel::Linear] {
+            assert!(simd_entry_bound_f32(kern, &x32, &c32) >= EPS32, "{kern:?}");
+        }
     }
 }

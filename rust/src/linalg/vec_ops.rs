@@ -115,12 +115,57 @@ pub fn norm2(x: &[f64]) -> f64 {
     dot(x, x).sqrt()
 }
 
+// Range-reduction constants of `fast_exp` / `fast_exp_f32`, shared with
+// the explicit SIMD lanes in `kernels::simd`: the scalar and vectorized
+// arms must read the *same* constants (and apply them in the same
+// operation order) so every non-NaN lane agrees bitwise across arms.
+pub(crate) const FAST_EXP_LOG2E: f64 = std::f64::consts::LOG2_E;
+// ln(2) split hi/lo so `x - k*ln2` keeps full precision
+pub(crate) const FAST_EXP_LN2_HI: f64 = 6.931471803691238165e-1;
+pub(crate) const FAST_EXP_LN2_LO: f64 = 1.908214929270587700e-10;
+/// Degree-12 Taylor coefficients of exp, lowest order first — Horner
+/// evaluation from the top (`p = c[i] + r·p`) reproduces the nested
+/// expression in [`fast_exp`] operation for operation.
+pub(crate) const FAST_EXP_COEFFS: [f64; 13] = [
+    1.0,
+    1.0,
+    0.5,
+    1.0 / 6.0,
+    1.0 / 24.0,
+    1.0 / 120.0,
+    1.0 / 720.0,
+    1.0 / 5040.0,
+    1.0 / 40320.0,
+    1.0 / 362880.0,
+    1.0 / 3628800.0,
+    1.0 / 39916800.0,
+    1.0 / 479001600.0,
+];
+pub(crate) const FAST_EXP_F32_LOG2E: f32 = std::f32::consts::LOG2_E;
+// ln(2) split hi/lo (cephes pair): hi is exact in f32, lo restores the
+// remaining bits of x - k*ln2
+pub(crate) const FAST_EXP_F32_LN2_HI: f32 = 0.693_359_375;
+pub(crate) const FAST_EXP_F32_LN2_LO: f32 = -2.121_944_4e-4;
+/// Degree-7 Taylor coefficients of the f32 twin, lowest order first.
+pub(crate) const FAST_EXP_F32_COEFFS: [f32; 8] = [
+    1.0,
+    1.0,
+    0.5,
+    1.0 / 6.0,
+    1.0 / 24.0,
+    1.0 / 120.0,
+    1.0 / 720.0,
+    1.0 / 5040.0,
+];
+
 /// Branch-free exp for the tiled kernel panels (DESIGN.md §Perf).
 ///
 /// libm's `exp` is an opaque call, so a panel of kernel values cannot be
 /// SIMD-vectorized through it; this routine is straight-line arithmetic
 /// (clamp, floor-based range reduction, degree-12 Horner, exponent-bit
 /// scaling), which LLVM auto-vectorizes across a row of the Kr tile.
+/// `kernels::simd` additionally carries hand-vectorized AVX2/NEON lanes
+/// of the same sequence, pinned bitwise to this scalar arm.
 ///
 /// Accuracy: |rel err| < ~5e-15 on [-708, 708] — far inside the 1e-10
 /// agreement budget the property tests enforce against the libm-based
@@ -135,14 +180,10 @@ pub fn norm2(x: &[f64]) -> f64 {
 /// - NaN passes through as NaN
 #[inline]
 pub fn fast_exp(x: f64) -> f64 {
-    const LOG2E: f64 = std::f64::consts::LOG2_E;
-    // ln(2) split hi/lo so `x - k*ln2` keeps full precision
-    const LN2_HI: f64 = 6.931471803691238165e-1;
-    const LN2_LO: f64 = 1.908214929270587700e-10;
     let clamped = x.clamp(-709.0, 708.0);
     // k = round(x / ln 2) via floor (floor lowers to a single SIMD op)
-    let kf = (clamped * LOG2E + 0.5).floor();
-    let r = (clamped - kf * LN2_HI) - kf * LN2_LO; // |r| <= ~0.3466
+    let kf = (clamped * FAST_EXP_LOG2E + 0.5).floor();
+    let r = (clamped - kf * FAST_EXP_LN2_HI) - kf * FAST_EXP_LN2_LO; // |r| <= ~0.3466
     // exp(r) by degree-12 Taylor/Horner: truncation < 2e-16 relative
     let p = 1.0
         + r * (1.0
@@ -199,14 +240,9 @@ pub const FAST_EXP_F32_POS_CUTOFF: f32 = 88.0;
 /// - NaN passes through as NaN
 #[inline]
 pub fn fast_exp_f32(x: f32) -> f32 {
-    const LOG2E: f32 = std::f32::consts::LOG2_E;
-    // ln(2) split hi/lo (cephes pair): hi is exact in f32, lo restores
-    // the remaining bits of x - k*ln2
-    const LN2_HI: f32 = 0.693_359_375;
-    const LN2_LO: f32 = -2.121_944_4e-4;
     let clamped = x.clamp(FAST_EXP_F32_NEG_CUTOFF, FAST_EXP_F32_POS_CUTOFF);
-    let kf = (clamped * LOG2E + 0.5).floor();
-    let r = (clamped - kf * LN2_HI) - kf * LN2_LO; // |r| <= ~0.3466
+    let kf = (clamped * FAST_EXP_F32_LOG2E + 0.5).floor();
+    let r = (clamped - kf * FAST_EXP_F32_LN2_HI) - kf * FAST_EXP_F32_LN2_LO; // |r| <= ~0.3466
     // exp(r) by degree-7 Taylor/Horner
     let p = 1.0
         + r * (1.0
@@ -362,8 +398,10 @@ mod tests {
             let got = fast_exp(x);
             assert_eq!(got.to_bits(), 0.0f64.to_bits(), "x={x}: got {got:e}");
         }
-        // and the boundary itself stays accurate & normal on the live side
-        let near = fast_exp(-708.9);
+        // and the live side near the boundary stays positive and normal
+        // (below ≈ -708.4 the exponent-bit assembly pins scale to zero,
+        // so probe at -708.0 where 2^kf is still representable)
+        let near = fast_exp(-708.0);
         assert!(near > 0.0 && near.is_normal(), "{near:e}");
     }
 
@@ -411,6 +449,36 @@ mod tests {
         let near = fast_exp_f32(87.0) as f64;
         let want = 87.0f64.exp();
         assert!((near - want).abs() / want < 1e-6, "{near} vs {want}");
+    }
+
+    #[test]
+    fn coeff_array_horner_is_bitwise_the_nested_expression() {
+        // the SIMD arms evaluate the polynomial from FAST_EXP_COEFFS with
+        // `p = c[i] + r·p`; that must reproduce the nested scalar Horner
+        // bit for bit, or the bitwise SIMD-vs-scalar exp pin is vacuous
+        check("array Horner = nested Horner", 40, |g| {
+            let x = g.f64_in(-700.0, 700.0);
+            let clamped = x.clamp(-709.0, 708.0);
+            let kf = (clamped * FAST_EXP_LOG2E + 0.5).floor();
+            let r = (clamped - kf * FAST_EXP_LN2_HI) - kf * FAST_EXP_LN2_LO;
+            let mut p = FAST_EXP_COEFFS[FAST_EXP_COEFFS.len() - 1];
+            for i in (0..FAST_EXP_COEFFS.len() - 1).rev() {
+                p = FAST_EXP_COEFFS[i] + r * p;
+            }
+            let scale = f64::from_bits(((1023i64 + kf as i64) as u64) << 52);
+            assert_eq!((p * scale).to_bits(), fast_exp(x).to_bits(), "x={x}");
+
+            let x32 = g.f64_in(-85.0, 85.0) as f32;
+            let clamped = x32.clamp(FAST_EXP_F32_NEG_CUTOFF, FAST_EXP_F32_POS_CUTOFF);
+            let kf = (clamped * FAST_EXP_F32_LOG2E + 0.5).floor();
+            let r = (clamped - kf * FAST_EXP_F32_LN2_HI) - kf * FAST_EXP_F32_LN2_LO;
+            let mut p = FAST_EXP_F32_COEFFS[FAST_EXP_F32_COEFFS.len() - 1];
+            for i in (0..FAST_EXP_F32_COEFFS.len() - 1).rev() {
+                p = FAST_EXP_F32_COEFFS[i] + r * p;
+            }
+            let scale = f32::from_bits(((127i32 + kf as i32) as u32) << 23);
+            assert_eq!((p * scale).to_bits(), fast_exp_f32(x32).to_bits(), "x={x32}");
+        });
     }
 
     #[test]

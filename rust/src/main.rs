@@ -25,7 +25,7 @@ use falkon::falkon::{
 use falkon::kernels::Kernel;
 use falkon::linalg::mat32::{Dtype, XBlock};
 use falkon::metrics;
-use falkon::runtime::Engine;
+use falkon::runtime::{Engine, SimdMode};
 use falkon::util::rng::Rng;
 use falkon::util::timer::Timer;
 
@@ -150,6 +150,23 @@ fn train_spec() -> Command {
             "feature storage: f32 halves resident row-block/chunk bytes \
              (kernel panels still accumulate in f64; DESIGN.md §Precision model)",
         )
+        .opt(
+            "simd",
+            "auto",
+            "kernel panel ISA: auto | scalar | avx2 | neon (auto defers to \
+             FALKON_SIMD, then runtime detection; rust engine)",
+        )
+}
+
+/// Parse the `--simd` flag (an explicit flag beats `FALKON_SIMD`;
+/// `auto` defers to it).
+fn parse_simd(p: &falkon::cli::Parsed) -> Result<SimdMode> {
+    SimdMode::parse(p.str("simd")).ok_or_else(|| {
+        anyhow!(
+            "unknown --simd {:?} (expected auto | scalar | avx2 | neon)",
+            p.str("simd")
+        )
+    })
 }
 
 fn config_from_flags(p: &falkon::cli::Parsed) -> Result<ExperimentConfig> {
@@ -298,8 +315,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
         bail!("--resume needs --checkpoint <path> to know which sidecar to load");
     }
     // `--dtype f32` makes the rust plan slice its resident row blocks as
-    // f32 (the XLA engine ignores the knob and stays f64)
-    let engine = Engine::by_name_dtype(&cfg.engine, cfg.workers, Dtype::parse(p.str("dtype"))?)?;
+    // f32 (the XLA engine ignores the knob and stays f64); `--simd`
+    // pins the panel ISA for the whole fit
+    let engine = Engine::by_name_dtype(
+        &cfg.engine,
+        cfg.workers,
+        Dtype::parse(p.str("dtype"))?,
+        parse_simd(&p)?,
+    )?;
     if p.flag("stream") {
         return train_stream(&p, &cfg, &engine);
     }
@@ -375,11 +398,21 @@ fn cmd_predict(args: &[String]) -> Result<()> {
             "feature storage for scoring: f32 halves resident chunk bytes \
              (predictions stay within the documented tolerance model)",
         )
+        .opt(
+            "simd",
+            "auto",
+            "kernel panel ISA: auto | scalar | avx2 | neon (rust engine)",
+        )
         .opt("seed", "0", "rng seed (dataset generation + split)");
     let p = spec.parse(args)?;
     let model = model_io::load(p.str("model"))?;
     let dtype = Dtype::parse(p.str("dtype"))?;
-    let engine = Engine::by_name(p.str("engine"), p.usize("workers")?)?;
+    let engine = Engine::by_name_dtype(
+        p.str("engine"),
+        p.usize("workers")?,
+        Dtype::F64,
+        parse_simd(&p)?,
+    )?;
     if p.str("dataset").ends_with(".shard") {
         // out-of-core scoring: stream the shard, never materialize it.
         // Like the in-memory path (prepare_data), features are z-scored

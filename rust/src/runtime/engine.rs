@@ -25,6 +25,7 @@
 //! it as a loop over columns (the artifact contract is vector-shaped).
 
 use crate::data::source::DataSource;
+use crate::kernels::simd::{Isa, SimdMode};
 use crate::kernels::{self, Kernel};
 use crate::linalg::mat::Mat;
 use crate::linalg::mat32::{Dtype, MatF32, XBlock};
@@ -74,6 +75,13 @@ pub struct EngineOptions {
     /// preconditioner) stays f64 either way. The XLA engine ignores this
     /// knob: its artifacts already stage blocks as f32 literals.
     pub dtype: Dtype,
+    /// instruction-set arm for the Rust kernel panels (CLI `--simd`;
+    /// DESIGN.md §Perf "SIMD panels"). `Auto` defers to `FALKON_SIMD`,
+    /// then runtime feature detection; an explicit mode here beats the
+    /// environment. Resolved **once** at engine construction
+    /// ([`kernels::simd::resolve_logged`]) and threaded through every
+    /// plan and predict sweep, so one engine never mixes arms.
+    pub simd: SimdMode,
 }
 
 impl Default for EngineOptions {
@@ -83,6 +91,7 @@ impl Default for EngineOptions {
             workers: 1,
             retry: crate::util::fault::RetryPolicy::default(),
             dtype: Dtype::F64,
+            simd: SimdMode::Auto,
         }
     }
 }
@@ -98,6 +107,10 @@ pub enum Engine {
     Rust {
         opts: EngineOptions,
         pool: Option<Arc<WorkerPool>>,
+        /// panel ISA resolved once at construction from `opts.simd` /
+        /// `FALKON_SIMD` / feature detection — every plan built by this
+        /// engine inherits it (see `kernels::simd`)
+        isa: Isa,
     },
     /// AOT XLA artifacts via PJRT (production).
     #[cfg(feature = "xla")]
@@ -169,21 +182,29 @@ impl Engine {
         } else {
             None
         };
-        Engine::Rust { opts, pool }
+        let isa = resolve_engine_simd(opts.simd);
+        Engine::Rust { opts, pool, isa }
     }
 
     /// Parse "xla", "xla-jnp", "rust" (CLI `--engine`).
     pub fn by_name(name: &str, workers: usize) -> Result<Engine> {
-        Engine::by_name_dtype(name, workers, Dtype::F64)
+        Engine::by_name_dtype(name, workers, Dtype::F64, SimdMode::Auto)
     }
 
     /// [`Engine::by_name`] with an explicit block storage format (CLI
-    /// `--dtype`). Effective on the Rust engine; the XLA path stages
-    /// blocks as f32 literals regardless.
-    pub fn by_name_dtype(name: &str, workers: usize, dtype: Dtype) -> Result<Engine> {
+    /// `--dtype`) and panel ISA override (CLI `--simd`). Both effective
+    /// on the Rust engine; the XLA path stages blocks as f32 literals
+    /// and serves panels from its artifacts regardless.
+    pub fn by_name_dtype(
+        name: &str,
+        workers: usize,
+        dtype: Dtype,
+        simd: SimdMode,
+    ) -> Result<Engine> {
         let mut opts = EngineOptions {
             workers,
             dtype,
+            simd,
             ..Default::default()
         };
         match name {
@@ -291,7 +312,9 @@ impl Engine {
     /// blocks fanned out over the shared pool).
     pub fn kmm(&self, kern: Kernel, c: &Mat, param: f64) -> Result<Mat> {
         match self {
-            Engine::Rust { pool, .. } => Ok(kernels::kmm_par(kern, c, param, pool.as_deref())),
+            Engine::Rust { pool, isa, .. } => {
+                Ok(kernels::kmm_par(kern, c, param, pool.as_deref(), *isa))
+            }
             #[cfg(feature = "xla")]
             Engine::Xla { .. } => {
                 let m = c.rows;
@@ -358,13 +381,14 @@ impl Engine {
     pub fn matvec_plan(&self, kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Result<MatvecPlan> {
         anyhow::ensure!(x.cols == c.cols, "x/c feature dims differ");
         match self {
-            Engine::Rust { opts, pool } => Ok(MatvecPlan::Rust(RustPlan::build(
+            Engine::Rust { opts, pool, isa } => Ok(MatvecPlan::Rust(RustPlan::build(
                 kern,
                 x,
                 c,
                 param,
                 opts.dtype,
                 pool.clone(),
+                *isa,
             )?)),
             #[cfg(feature = "xla")]
             Engine::Xla { opts, .. } => {
@@ -434,16 +458,19 @@ impl Engine {
         if let Some(hint) = source.len_hint() {
             anyhow::ensure!(hint == n, "source len_hint {hint} != n {n}");
         }
-        let pool = match self {
-            Engine::Rust { pool, .. } => pool.clone(),
+        let (pool, isa) = match self {
+            Engine::Rust { pool, isa, .. } => (pool.clone(), *isa),
+            // the XLA engine's streaming sweeps run the coordinator's
+            // Rust tiled kernels too — resolve its arm the same way
             #[cfg(feature = "xla")]
-            Engine::Xla { .. } => None,
+            Engine::Xla { opts, .. } => (None, resolve_engine_simd(opts.simd)),
         };
         let m = c.rows;
         let chunk_rows = source.chunk_rows();
         Ok(MatvecPlan::Stream(StreamPlan {
             kern,
             param,
+            isa,
             centers: CenterSet::build(c),
             source: RefCell::new(source),
             scratch: RefCell::new(kernels::TileScratch::new(kernels::DEFAULT_TILE, m)),
@@ -490,9 +517,14 @@ impl Engine {
     /// XLA path through the kernel_block artifact.
     pub fn kernel_block(&self, kern: Kernel, x: &Mat, c: &Mat, param: f64) -> Result<Mat> {
         match self {
-            Engine::Rust { pool, .. } => {
-                Ok(kernels::kernel_block_par(kern, x, c, param, pool.as_deref()))
-            }
+            Engine::Rust { pool, isa, .. } => Ok(kernels::kernel_block_par(
+                kern,
+                x,
+                c,
+                param,
+                pool.as_deref(),
+                *isa,
+            )),
             #[cfg(feature = "xla")]
             Engine::Xla { .. } => {
                 let mut out = Mat::zeros(x.rows, c.rows);
@@ -520,13 +552,14 @@ impl Engine {
         anyhow::ensure!(alpha.len() == c.rows, "alpha length");
         anyhow::ensure!(x.cols == c.cols, "x/c feature dims differ");
         match self {
-            Engine::Rust { pool, .. } => Ok(kernels::predict_blocked_pool(
+            Engine::Rust { pool, isa, .. } => Ok(kernels::predict_blocked_pool(
                 kern,
                 x,
                 c,
                 alpha,
                 param,
                 pool.as_deref(),
+                *isa,
             )),
             #[cfg(feature = "xla")]
             Engine::Xla { .. } => {
@@ -567,7 +600,7 @@ impl Engine {
                 anyhow::ensure!(alpha.len() == c.rows, "alpha length");
                 anyhow::ensure!(xm.cols == c.cols, "x/c feature dims differ");
                 match self {
-                    Engine::Rust { pool, .. } => {
+                    Engine::Rust { pool, isa, .. } => {
                         let c32 = MatF32::from_mat(c);
                         Ok(kernels::mixed::predict_blocked_pool_f32(
                             kern,
@@ -576,6 +609,7 @@ impl Engine {
                             alpha,
                             param,
                             pool.as_deref(),
+                            *isa,
                         ))
                     }
                     #[cfg(feature = "xla")]
@@ -601,13 +635,14 @@ impl Engine {
         anyhow::ensure!(alphas.rows == c.rows, "alphas rows != centers");
         anyhow::ensure!(x.cols == c.cols, "x/c feature dims differ");
         match self {
-            Engine::Rust { pool, .. } => Ok(kernels::predict_multi_blocked_pool(
+            Engine::Rust { pool, isa, .. } => Ok(kernels::predict_multi_blocked_pool(
                 kern,
                 x,
                 c,
                 alphas,
                 param,
                 pool.as_deref(),
+                *isa,
             )),
             #[cfg(feature = "xla")]
             Engine::Xla { .. } => {
@@ -694,6 +729,18 @@ fn mat_fingerprint(m: &Mat) -> u64 {
         h = h.wrapping_mul(0x100000001b3);
     }
     h
+}
+
+/// Resolve an engine's panel ISA: an explicit [`SimdMode`] on the
+/// options wins, `Auto` defers to `FALKON_SIMD`, and the result is
+/// feature-checked (a forced-but-unavailable arm degrades loudly to
+/// scalar). Logged once per process so CI logs and bench JSONs record
+/// which arm actually ran.
+fn resolve_engine_simd(mode: SimdMode) -> Isa {
+    kernels::simd::resolve_logged(match mode {
+        SimdMode::Auto => SimdMode::from_env(),
+        explicit => explicit,
+    })
 }
 
 /// f64 preconditioner factorization with jitter escalation. The O(M³)
@@ -828,13 +875,14 @@ fn matvec_ranged_any(
     w: &mut [f64],
     start: usize,
     end: usize,
+    isa: Isa,
 ) {
     match x {
         XBlock::F64(xm) => kernels::knm_matvec_ranged(
-            kern, xm, &cs.c, xn, &cs.cn, u, v, None, param, scratch, w, start, end,
+            kern, xm, &cs.c, xn, &cs.cn, u, v, None, param, scratch, w, start, end, isa,
         ),
         XBlock::F32(xm) => kernels::mixed::knm_matvec_ranged_f32(
-            kern, xm, &cs.c32, xn, &cs.cn32, u, v, None, param, scratch, w, start, end,
+            kern, xm, &cs.c32, xn, &cs.cn32, u, v, None, param, scratch, w, start, end, isa,
         ),
     }
 }
@@ -854,13 +902,14 @@ fn matmat_ranged_any(
     w: &mut Mat,
     start: usize,
     end: usize,
+    isa: Isa,
 ) {
     match x {
         XBlock::F64(xm) => kernels::knm_matmat_ranged(
-            kern, xm, &cs.c, xn, &cs.cn, u, v, None, param, scratch, w, start, end,
+            kern, xm, &cs.c, xn, &cs.cn, u, v, None, param, scratch, w, start, end, isa,
         ),
         XBlock::F32(xm) => kernels::mixed::knm_matmat_ranged_f32(
-            kern, xm, &cs.c32, xn, &cs.cn32, u, v, None, param, scratch, w, start, end,
+            kern, xm, &cs.c32, xn, &cs.cn32, u, v, None, param, scratch, w, start, end, isa,
         ),
     }
 }
@@ -883,6 +932,10 @@ pub struct RustPlan {
     scratch: RefCell<kernels::TileScratch>,
     /// shared engine pool (None = inline applies)
     pool: Option<Arc<WorkerPool>>,
+    /// panel ISA inherited from the engine at build — every apply (inline
+    /// or pooled) runs this one arm, preserving pooled-vs-serial bitwise
+    /// determinism
+    isa: Isa,
     n: usize,
     m: usize,
 }
@@ -895,6 +948,7 @@ impl RustPlan {
         param: f64,
         dtype: Dtype,
         pool: Option<Arc<WorkerPool>>,
+        isa: Isa,
     ) -> Result<RustPlan> {
         let (n, m) = (x.rows, c.rows);
         let mut blocks = Vec::with_capacity(n.div_ceil(ROW_BLOCK.max(1)));
@@ -915,6 +969,7 @@ impl RustPlan {
             blocks,
             scratch: RefCell::new(kernels::TileScratch::new(kernels::DEFAULT_TILE, m)),
             pool,
+            isa,
             n,
             m,
         })
@@ -942,6 +997,7 @@ impl RustPlan {
                     self.param,
                     &mut scratch,
                     &mut w,
+                    self.isa,
                 );
             }
             Some(pool) => {
@@ -953,7 +1009,7 @@ impl RustPlan {
                 let mut parts: Vec<Vec<f64>> = vec![vec![0.0f64; self.m]; ranges.len()];
                 let tile = kernels::DEFAULT_TILE;
                 let m = self.m;
-                let (kern, param) = (self.kern, self.param);
+                let (kern, param, isa) = (self.kern, self.param, self.isa);
                 let (cs, blocks) = (&self.centers, self.blocks.as_slice());
                 let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
                     .iter()
@@ -973,6 +1029,7 @@ impl RustPlan {
                                     param,
                                     scratch,
                                     part,
+                                    isa,
                                 );
                             });
                         });
@@ -1019,6 +1076,7 @@ impl RustPlan {
                     self.param,
                     &mut scratch,
                     &mut w,
+                    self.isa,
                 );
             }
             Some(pool) => {
@@ -1026,7 +1084,7 @@ impl RustPlan {
                 let mut parts: Vec<Mat> = vec![Mat::zeros(self.m, k); ranges.len()];
                 let tile = kernels::DEFAULT_TILE;
                 let m = self.m;
-                let (kern, param) = (self.kern, self.param);
+                let (kern, param, isa) = (self.kern, self.param, self.isa);
                 let (cs, blocks) = (&self.centers, self.blocks.as_slice());
                 let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
                     .iter()
@@ -1046,6 +1104,7 @@ impl RustPlan {
                                     param,
                                     scratch,
                                     part,
+                                    isa,
                                 );
                             });
                         });
@@ -1075,6 +1134,8 @@ impl RustPlan {
 pub struct StreamPlan {
     kern: Kernel,
     param: f64,
+    /// panel ISA inherited from the engine at build (see [`RustPlan`])
+    isa: Isa,
     /// both center tiers — the source may yield f64 *or* f32 chunks (even
     /// mixed across one sweep), and each resident chunk dispatches to the
     /// kernels matching its own storage
@@ -1135,7 +1196,7 @@ impl StreamPlan {
         let mut w = vec![0.0f64; self.m];
         let tile = kernels::DEFAULT_TILE;
         let m = self.m;
-        let (kern, param) = (self.kern, self.param);
+        let (kern, param, isa) = (self.kern, self.param, self.isa);
         let cs = &self.centers;
         self.sweep(|chunk, xn| {
             let rows = chunk.x.rows();
@@ -1144,7 +1205,7 @@ impl StreamPlan {
                 None => {
                     let mut scratch = self.scratch.borrow_mut();
                     matvec_ranged_any(
-                        kern, &chunk.x, cs, xn, u, vb, param, &mut scratch, &mut w, 0, rows,
+                        kern, &chunk.x, cs, xn, u, vb, param, &mut scratch, &mut w, 0, rows, isa,
                     );
                 }
                 Some(pool) => {
@@ -1165,7 +1226,7 @@ impl StreamPlan {
                                     let scratch = cell
                                         .get_or_insert_with(|| kernels::TileScratch::new(tile, m));
                                     matvec_ranged_any(
-                                        kern, x, cs, xn, u, vb, param, scratch, part, lo, hi,
+                                        kern, x, cs, xn, u, vb, param, scratch, part, lo, hi, isa,
                                     );
                                 });
                             });
@@ -1201,7 +1262,7 @@ impl StreamPlan {
         }
         let tile = kernels::DEFAULT_TILE;
         let m = self.m;
-        let (kern, param) = (self.kern, self.param);
+        let (kern, param, isa) = (self.kern, self.param, self.isa);
         let cs = &self.centers;
         self.sweep(|chunk, xn| {
             let rows = chunk.x.rows();
@@ -1210,7 +1271,7 @@ impl StreamPlan {
                 None => {
                     let mut scratch = self.scratch.borrow_mut();
                     matmat_ranged_any(
-                        kern, &chunk.x, cs, xn, u, vb, param, &mut scratch, &mut w, 0, rows,
+                        kern, &chunk.x, cs, xn, u, vb, param, &mut scratch, &mut w, 0, rows, isa,
                     );
                 }
                 Some(pool) => {
@@ -1228,7 +1289,7 @@ impl StreamPlan {
                                     let scratch = cell
                                         .get_or_insert_with(|| kernels::TileScratch::new(tile, m));
                                     matmat_ranged_any(
-                                        kern, x, cs, xn, u, vb, param, scratch, part, lo, hi,
+                                        kern, x, cs, xn, u, vb, param, scratch, part, lo, hi, isa,
                                     );
                                 });
                             });
@@ -1260,11 +1321,12 @@ fn apply_blocks(
     param: f64,
     scratch: &mut kernels::TileScratch,
     w: &mut [f64],
+    isa: Isa,
 ) {
     for blk in blocks {
         let rows = blk.x.rows();
         let vb = v.map(|vf| &vf[blk.start..blk.start + rows]);
-        matvec_ranged_any(kern, &blk.x, cs, &blk.xn, u, vb, param, scratch, w, 0, rows);
+        matvec_ranged_any(kern, &blk.x, cs, &blk.xn, u, vb, param, scratch, w, 0, rows, isa);
     }
 }
 
@@ -1281,12 +1343,13 @@ fn apply_blocks_multi(
     param: f64,
     scratch: &mut kernels::TileScratch,
     w: &mut Mat,
+    isa: Isa,
 ) {
     let k = u.cols;
     for blk in blocks {
         let rows = blk.x.rows();
         let vb = v.map(|vf| &vf.data[blk.start * k..(blk.start + rows) * k]);
-        matmat_ranged_any(kern, &blk.x, cs, &blk.xn, u, vb, param, scratch, w, 0, rows);
+        matmat_ranged_any(kern, &blk.x, cs, &blk.xn, u, vb, param, scratch, w, 0, rows, isa);
     }
 }
 

@@ -14,5 +14,6 @@ pub mod engine;
 pub mod exe;
 pub mod spec;
 
+pub use crate::kernels::simd::{Isa, SimdMode};
 pub use engine::{Bhb, Engine, EngineOptions, MatvecPlan};
 pub use spec::{ArtifactSpec, Impl, Op, Registry};
