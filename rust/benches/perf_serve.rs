@@ -1,0 +1,311 @@
+//! **Network serving bench** (DESIGN.md §Serving) — stand up the TCP
+//! front door on a loopback ephemeral port, fire an open-loop storm of
+//! concurrent clients, and measure the request path end to end: wire
+//! protocol, cross-connection admission batching, panel-amortized
+//! predict sweeps. Emits `BENCH_serve.json` (override with `--json`).
+//!
+//! Three phases, each a gate the JSON re-checks in CI:
+//!
+//! 1. **Correctness** — network predictions must be **bitwise equal** to
+//!    direct `model.predict` (f64s travel as raw IEEE-754 bits).
+//! 2. **Latency/throughput storm** — C clients × R single-row requests;
+//!    reports p50/p99 latency, rows/s, and the mean executed batch size
+//!    (must exceed 1: concurrent sockets coalesce into shared sweeps).
+//! 3. **Hot swap under load** — a swapper thread flips the served model
+//!    between two checkpoints while clients hammer 8-row batch
+//!    requests. Gates: zero request errors (swap drops nothing) and
+//!    every reply vector bitwise-matches *one* model's oracle whole —
+//!    answers are never mixed across a swap within a request.
+
+use falkon::bench::{write_json, BenchArgs, Table};
+use falkon::data::synth;
+use falkon::falkon::{fit, model_io, FalkonConfig};
+use falkon::runtime::Engine;
+use falkon::serve::net::{Client, NetServer};
+use falkon::serve::registry::ModelRegistry;
+use falkon::serve::ServeConfig;
+use falkon::util::json::Value;
+use falkon::util::rng::Rng;
+use falkon::util::timer::Timer;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn train_and_save(
+    seed: u64,
+    n: usize,
+    d: usize,
+    m: usize,
+    t: usize,
+    path: &str,
+) -> anyhow::Result<falkon::falkon::FalkonModel> {
+    let mut rng = Rng::new(seed);
+    let data = synth::smooth_regression(&mut rng, n, d, 0.05);
+    let eng = Engine::rust();
+    let cfg = FalkonConfig {
+        sigma: 2.0,
+        lam: 1e-4,
+        m,
+        t,
+        seed,
+        ..Default::default()
+    };
+    let model = fit(&eng, &data.x, &data.y, &cfg)?;
+    model_io::save(&model, path)?;
+    // serve-side truth is the file: return the loaded model so oracles
+    // match the served coefficients bit for bit
+    model_io::load(path)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::from_env();
+    let smoke = args.flag("--smoke");
+    let json_path = args.get("--json").unwrap_or("BENCH_serve.json").to_string();
+    let (n, d, m, t) = if smoke {
+        (4_000usize, 8usize, 128usize, 8usize)
+    } else {
+        (20_000, 10, 512, 15)
+    };
+    let clients = args.usize_or("--clients", if smoke { 4 } else { 8 });
+    let per_client = args.usize_or("--requests", if smoke { 150 } else { 1000 });
+    let max_batch = args.usize_or("--max-batch", 64);
+
+    let pid = std::process::id();
+    let tmp = std::env::temp_dir();
+    let path_a = tmp.join(format!("falkon_serve_bench_a_{pid}.json"));
+    let path_a = path_a.to_str().unwrap().to_string();
+    let path_b = tmp.join(format!("falkon_serve_bench_b_{pid}.json"));
+    let path_b = path_b.to_str().unwrap().to_string();
+
+    println!("training two checkpoints (n={n} d={d} M={m} t={t})…");
+    let model_a = train_and_save(11, n, d, m, t, &path_a)?;
+    let model_b = train_and_save(12, n, d, m, t, &path_b)?;
+
+    // request features, shared by every phase
+    let mut rng = Rng::new(99);
+    let probe = synth::smooth_regression(&mut rng, 2_000.min(n), d, 0.05);
+    let eng = Engine::rust();
+    let oracle_a = model_a.predict(&eng, &probe.x)?;
+    let oracle_b = model_b.predict(&eng, &probe.x)?;
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.load_file("default", &path_a)?;
+    let server = NetServer::start(
+        registry,
+        ServeConfig {
+            max_batch,
+            max_wait: Duration::from_millis(2),
+            engine: "rust".into(),
+            workers: 1,
+        },
+        "127.0.0.1:0",
+    )?;
+    let addr = server.addr().to_string();
+    println!("serving on {addr}");
+
+    // -- phase 1: bitwise correctness over the wire -----------------------
+    {
+        let mut c = Client::connect(&addr)?;
+        for i in 0..32 {
+            let got = c.predict_one("default", probe.x.row(i))?;
+            anyhow::ensure!(
+                got.to_bits() == oracle_a[i].to_bits(),
+                "row {i}: network {got} != direct {}",
+                oracle_a[i]
+            );
+        }
+        let rows = 50;
+        let got = c.predict_batch("default", rows, &probe.x.data[..rows * d])?;
+        anyhow::ensure!(
+            got.iter()
+                .zip(&oracle_a[..rows])
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "batch predictions diverge from direct predict"
+        );
+        anyhow::ensure!(
+            c.predict_one("nope", probe.x.row(0)).is_err(),
+            "unknown model must be a typed error"
+        );
+        println!("correctness: network == direct predict (bitwise)");
+    }
+
+    // -- phase 2: open-loop storm, single-row latency ---------------------
+    let timer = Timer::start();
+    let lat_all: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|ci| {
+                let addr = addr.clone();
+                let x = &probe.x;
+                let oracle = &oracle_a;
+                s.spawn(move || -> anyhow::Result<Vec<f64>> {
+                    let mut c = Client::connect(&addr)?;
+                    let mut lats = Vec::with_capacity(per_client);
+                    for i in 0..per_client {
+                        let row = (ci * per_client + i) % x.rows;
+                        let t = Timer::start();
+                        let got = c.predict_one("default", x.row(row))?;
+                        lats.push(t.elapsed_s());
+                        anyhow::ensure!(
+                            got.to_bits() == oracle[row].to_bits(),
+                            "storm row {row} diverged"
+                        );
+                    }
+                    Ok(lats)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread panicked"))
+            .collect::<anyhow::Result<Vec<_>>>()
+            .map(|v| v.into_iter().flatten().collect())
+    })?;
+    let storm_wall = timer.elapsed_s();
+    let total_requests = (clients * per_client) as f64;
+    let rows_s = total_requests / storm_wall;
+    let mut lats = lat_all;
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| lats[((lats.len() as f64 - 1.0) * q) as usize] * 1e3;
+    let (p50_ms, p99_ms) = (pct(0.5), pct(0.99));
+    let storm_stats = {
+        let mut c = Client::connect(&addr)?;
+        c.stats("default")?
+    };
+
+    // -- phase 3: hot swap under load -------------------------------------
+    let stop_swapping = Arc::new(AtomicBool::new(false));
+    let swap_errors = Arc::new(AtomicU64::new(0));
+    let mixed_replies = Arc::new(AtomicU64::new(0));
+    let swap_rows = 8usize;
+    let swap_per_client = per_client / 4;
+    let swaps_done = std::thread::scope(|s| -> anyhow::Result<u64> {
+        let swapper = {
+            let addr = addr.clone();
+            let stop = stop_swapping.clone();
+            let (pa, pb) = (path_a.clone(), path_b.clone());
+            s.spawn(move || -> anyhow::Result<u64> {
+                let mut c = Client::connect(&addr)?;
+                let mut count = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    let path = if count % 2 == 0 { &pb } else { &pa };
+                    c.swap("default", path)?;
+                    count += 1;
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Ok(count)
+            })
+        };
+        let loaders: Vec<_> = (0..clients)
+            .map(|ci| {
+                let addr = addr.clone();
+                let x = &probe.x;
+                let (oa, ob) = (&oracle_a, &oracle_b);
+                let errors = swap_errors.clone();
+                let mixed = mixed_replies.clone();
+                s.spawn(move || -> anyhow::Result<()> {
+                    let mut c = Client::connect(&addr)?;
+                    for i in 0..swap_per_client {
+                        let start = (ci * 61 + i * 7) % (x.rows - swap_rows);
+                        match c.predict_batch(
+                            "default",
+                            swap_rows,
+                            &x.data[start * x.cols..(start + swap_rows) * x.cols],
+                        ) {
+                            Ok(got) => {
+                                let all_a = got
+                                    .iter()
+                                    .zip(&oa[start..start + swap_rows])
+                                    .all(|(g, o)| g.to_bits() == o.to_bits());
+                                let all_b = got
+                                    .iter()
+                                    .zip(&ob[start..start + swap_rows])
+                                    .all(|(g, o)| g.to_bits() == o.to_bits());
+                                if !(all_a || all_b) {
+                                    mixed.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            Err(_) => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in loaders {
+            h.join().expect("load thread panicked")?;
+        }
+        stop_swapping.store(true, Ordering::SeqCst);
+        swapper.join().expect("swapper thread panicked")
+    })?;
+    let swap_errs = swap_errors.load(Ordering::Relaxed);
+    let mixed = mixed_replies.load(Ordering::Relaxed);
+    let swap_ok = swap_errs == 0 && mixed == 0 && swaps_done >= 1;
+    anyhow::ensure!(
+        swap_ok,
+        "hot swap under load: {swap_errs} request errors, {mixed} mixed replies, {swaps_done} swaps"
+    );
+
+    let final_stats = {
+        let mut c = Client::connect(&addr)?;
+        c.stats("default")?
+    };
+    server.stop();
+    let _ = std::fs::remove_file(&path_a);
+    let _ = std::fs::remove_file(&path_b);
+
+    // -- report -----------------------------------------------------------
+    anyhow::ensure!(p99_ms.is_finite() && p99_ms > 0.0, "p99 not finite");
+    anyhow::ensure!(rows_s > 0.0, "rows/s not positive");
+    anyhow::ensure!(
+        storm_stats.serve.mean_batch > 1.0,
+        "concurrent sockets never coalesced (mean_batch {:.2})",
+        storm_stats.serve.mean_batch
+    );
+    let mut table = Table::new(
+        "network serving (loopback TCP, rust engine)",
+        &["clients", "requests", "p50 ms", "p99 ms", "rows/s", "mean batch"],
+    );
+    table.row(&[
+        format!("{clients}"),
+        format!("{}", clients * per_client),
+        format!("{p50_ms:.2}"),
+        format!("{p99_ms:.2}"),
+        format!("{rows_s:.0}"),
+        format!("{:.1}", storm_stats.serve.mean_batch),
+    ]);
+    table.print();
+    println!(
+        "\nhot swap under load: {swaps_done} swaps, {swap_errs} dropped requests, \
+         {mixed} mixed replies ({} batch requests)",
+        clients * swap_per_client
+    );
+
+    let report = Value::obj(vec![
+        ("schema", Value::str("falkon/bench_serve/v1")),
+        ("smoke", Value::Bool(smoke)),
+        ("n", Value::num(n as f64)),
+        ("d", Value::num(d as f64)),
+        ("m", Value::num(m as f64)),
+        ("clients", Value::num(clients as f64)),
+        ("requests_per_client", Value::num(per_client as f64)),
+        ("max_batch", Value::num(max_batch as f64)),
+        ("p50_ms", Value::num(p50_ms)),
+        ("p99_ms", Value::num(p99_ms)),
+        ("rows_s", Value::num(rows_s)),
+        ("storm_wall_s", Value::num(storm_wall)),
+        ("mean_batch", Value::num(storm_stats.serve.mean_batch)),
+        ("batches", Value::num(final_stats.serve.batches as f64)),
+        ("requests_total", Value::num(final_stats.serve.requests as f64)),
+        ("rejected", Value::num(final_stats.serve.rejected as f64)),
+        ("engine_fallbacks", Value::num(final_stats.serve.engine_fallbacks as f64)),
+        ("swaps_under_load", Value::num(swaps_done as f64)),
+        ("swap_request_errors", Value::num(swap_errs as f64)),
+        ("swap_mixed_replies", Value::num(mixed as f64)),
+        ("swap_under_load_ok", Value::Bool(swap_ok)),
+    ]);
+    write_json(&json_path, &report)?;
+    println!("wrote {json_path}");
+    Ok(())
+}

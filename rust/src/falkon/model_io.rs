@@ -1,12 +1,21 @@
 //! Fitted-model persistence (JSON): the launcher's `train --out` writes a
 //! model file; `predict` / `serve` load it. Self-contained — centers and
-//! coefficients are embedded so serving needs no training data.
+//! coefficients are embedded so serving needs no training data. Both
+//! model kinds round-trip: regression ([`FalkonModel`], format
+//! `"falkon-model"`) and one-vs-all multiclass ([`FalkonMulticlass`],
+//! format `"falkon-multiclass"`); the serving registry
+//! ([`crate::serve::registry::load_served`]) dispatches on the tag.
 
-use super::estimator::{FalkonConfig, FalkonModel};
+use super::estimator::{FalkonConfig, FalkonModel, FalkonMulticlass};
 use crate::kernels::Kernel;
 use crate::linalg::mat::Mat;
 use crate::util::json::{self, Value};
 use anyhow::{anyhow, Result};
+
+/// `format` tag of regression model files.
+pub const FORMAT_REGRESSION: &str = "falkon-model";
+/// `format` tag of one-vs-all multiclass model files.
+pub const FORMAT_MULTICLASS: &str = "falkon-multiclass";
 
 fn vec_to_json(v: &[f64]) -> Value {
     Value::Arr(v.iter().map(|&x| Value::Num(x)).collect())
@@ -22,7 +31,7 @@ fn vec_from_json(v: &Value, what: &str) -> Result<Vec<f64>> {
 
 pub fn model_to_json(m: &FalkonModel) -> Value {
     Value::obj(vec![
-        ("format", Value::str("falkon-model")),
+        ("format", Value::str(FORMAT_REGRESSION)),
         ("version", Value::num(1.0)),
         ("kernel", Value::str(m.config.kernel.name())),
         ("sigma", Value::num(m.config.sigma)),
@@ -36,7 +45,7 @@ pub fn model_to_json(m: &FalkonModel) -> Value {
 }
 
 pub fn model_from_json(v: &Value) -> Result<FalkonModel> {
-    if v.get("format").as_str() != Some("falkon-model") {
+    if v.get("format").as_str() != Some(FORMAT_REGRESSION) {
         return Err(anyhow!("not a falkon model file"));
     }
     let kern = v
@@ -69,6 +78,66 @@ pub fn model_from_json(v: &Value) -> Result<FalkonModel> {
     })
 }
 
+pub fn multiclass_to_json(m: &FalkonMulticlass) -> Value {
+    Value::obj(vec![
+        ("format", Value::str(FORMAT_MULTICLASS)),
+        ("version", Value::num(1.0)),
+        ("kernel", Value::str(m.config.kernel.name())),
+        ("sigma", Value::num(m.config.sigma)),
+        ("lam", Value::num(m.config.lam)),
+        ("m", Value::num(m.centers.rows as f64)),
+        ("d", Value::num(m.centers.cols as f64)),
+        ("k", Value::num(m.alphas.len() as f64)),
+        ("centers", vec_to_json(&m.centers.data)),
+        (
+            "alphas",
+            Value::Arr(m.alphas.iter().map(|a| vec_to_json(a)).collect()),
+        ),
+    ])
+}
+
+pub fn multiclass_from_json(v: &Value) -> Result<FalkonMulticlass> {
+    if v.get("format").as_str() != Some(FORMAT_MULTICLASS) {
+        return Err(anyhow!("not a falkon multiclass model file"));
+    }
+    let kern = v
+        .get("kernel")
+        .as_str()
+        .and_then(Kernel::parse)
+        .ok_or_else(|| anyhow!("bad kernel"))?;
+    let m = v.get("m").as_usize().ok_or_else(|| anyhow!("bad m"))?;
+    let d = v.get("d").as_usize().ok_or_else(|| anyhow!("bad d"))?;
+    let k = v.get("k").as_usize().ok_or_else(|| anyhow!("bad k"))?;
+    let centers = Mat::from_vec(m, d, vec_from_json(v.get("centers"), "centers")?);
+    let alphas: Vec<Vec<f64>> = v
+        .get("alphas")
+        .as_arr()
+        .ok_or_else(|| anyhow!("alphas: expected array"))?
+        .iter()
+        .map(|a| vec_from_json(a, "alphas"))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(alphas.len() == k, "alphas/k mismatch");
+    for a in &alphas {
+        anyhow::ensure!(a.len() == m, "alpha/centers mismatch");
+    }
+    let config = FalkonConfig {
+        kernel: kern,
+        sigma: v.get("sigma").as_f64().unwrap_or(1.0),
+        lam: v.get("lam").as_f64().unwrap_or(0.0),
+        m,
+        ..Default::default()
+    };
+    Ok(FalkonMulticlass {
+        config,
+        centers,
+        alphas,
+        phases: Default::default(),
+        cg_iters: Vec::new(),
+        cg_stops: Vec::new(),
+        report: Default::default(),
+    })
+}
+
 pub fn save(m: &FalkonModel, path: &str) -> Result<()> {
     std::fs::write(path, model_to_json(m).to_string_pretty())?;
     Ok(())
@@ -78,6 +147,17 @@ pub fn load(path: &str) -> Result<FalkonModel> {
     let text = std::fs::read_to_string(path)?;
     let v = json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
     model_from_json(&v)
+}
+
+pub fn save_multiclass(m: &FalkonMulticlass, path: &str) -> Result<()> {
+    std::fs::write(path, multiclass_to_json(m).to_string_pretty())?;
+    Ok(())
+}
+
+pub fn load_multiclass(path: &str) -> Result<FalkonMulticlass> {
+    let text = std::fs::read_to_string(path)?;
+    let v = json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+    multiclass_from_json(&v)
 }
 
 #[cfg(test)]
@@ -113,5 +193,33 @@ mod tests {
     fn rejects_wrong_format() {
         let v = json::parse(r#"{"format": "other"}"#).unwrap();
         assert!(model_from_json(&v).is_err());
+        assert!(multiclass_from_json(&v).is_err());
+    }
+
+    #[test]
+    fn multiclass_roundtrip_preserves_predictions() {
+        let mut rng = Rng::new(9);
+        let data = synth::blobs(&mut rng, 300, 4, 3);
+        let eng = Engine::rust();
+        let cfg = FalkonConfig {
+            sigma: 4.0,
+            lam: 1e-5,
+            m: 32,
+            t: 8,
+            seed: 3,
+            ..Default::default()
+        };
+        let model = crate::falkon::fit_multiclass(&eng, &data, &cfg).unwrap();
+        let path = std::env::temp_dir().join("falkon_mc_model_test.json");
+        let path = path.to_str().unwrap();
+        save_multiclass(&model, path).unwrap();
+        let back = load_multiclass(path).unwrap();
+        let p1 = model.predict_class(&eng, &data.x).unwrap();
+        let p2 = back.predict_class(&eng, &data.x).unwrap();
+        assert_eq!(p1, p2);
+        let s1 = model.scores_mat(&eng, &data.x).unwrap();
+        let s2 = back.scores_mat(&eng, &data.x).unwrap();
+        assert_eq!(s1.data, s2.data);
+        let _ = std::fs::remove_file(path);
     }
 }

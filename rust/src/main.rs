@@ -4,7 +4,7 @@
 //!             --stream trains out-of-core from a chunked source
 //!   predict   evaluate a saved model on a dataset (.shard inputs stream)
 //!   convert   convert a dataset to the chunked binary shard format
-//!   serve     run the batched prediction server against a request storm
+//!   serve     prediction server: TCP front door (--addr) or request storm
 //!   lscores   estimate approximate leverage scores and print a summary
 //!   info      show the artifact registry / engine status
 //!
@@ -69,7 +69,7 @@ fn top_usage() -> String {
        train     fit FALKON on a dataset (--stream = out-of-core)\n\
        predict   evaluate a saved model (.shard inputs stream)\n\
        convert   convert a dataset to the binary shard format\n\
-       serve     batched prediction server demo\n\
+       serve     prediction server (TCP with --addr, demo without)\n\
        lscores   approximate leverage scores summary\n\
        tune      grid-search sigma/lambda on a holdout\n\
        info      artifact registry / engine status\n"
@@ -130,7 +130,7 @@ fn train_spec() -> Command {
         .opt("lam", "1e-6", "ridge λ")
         .opt("t", "20", "CG iterations")
         .opt("kernel", "gaussian", "gaussian | laplacian | linear")
-        .opt("engine", "xla", "xla | xla-jnp | rust")
+        .opt("engine", Engine::default_name(), "xla | xla-jnp | rust")
         .opt("centers", "uniform", "uniform | leverage")
         .opt("sketch", "0", "leverage-score sketch size (0 = M)")
         .opt("seed", "0", "rng seed")
@@ -387,7 +387,7 @@ fn cmd_predict(args: &[String]) -> Result<()> {
         .req("model", "model JSON from `train --out`")
         .opt("dataset", "susy", "dataset name or file path")
         .opt("n", "20000", "rows for synthetic datasets")
-        .opt("engine", "xla", "xla | xla-jnp | rust")
+        .opt("engine", Engine::default_name(), "xla | xla-jnp | rust")
         .opt("workers", "1", "rust-engine worker threads")
         .opt("chunk-rows", "8192", "rows per resident chunk for .shard inputs")
         .switch("no-normalize", "skip z-score normalization")
@@ -557,26 +557,37 @@ fn cmd_convert(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
-    let spec = Command::new("serve", "batched prediction server demo")
-        .req("model", "model JSON from `train --out`")
-        .opt("requests", "2000", "number of synthetic requests")
-        .opt("clients", "8", "concurrent client threads")
-        .opt("max-batch", "64", "dynamic batch cap")
+    let spec = Command::new("serve", "prediction server: network front door or request-storm demo")
+        .req(
+            "model",
+            "model JSON from `train --out`; with --addr, a comma list of name=path pairs \
+             registers several models (a bare path serves as \"default\")",
+        )
+        .opt(
+            "addr",
+            "",
+            "listen address (e.g. 127.0.0.1:7878; port 0 = ephemeral). \
+             Empty = in-process request-storm demo",
+        )
+        .opt("requests", "2000", "demo mode: number of synthetic requests")
+        .opt("clients", "8", "demo mode: concurrent client threads")
+        .opt("max-batch", "64", "admission budget in rows per batch")
         .opt("max-wait-ms", "2", "batch linger")
-        .opt("engine", "xla", "xla | xla-jnp | rust")
+        .opt("engine", Engine::default_name(), "xla | xla-jnp | rust")
         .opt("workers", "1", "rust-engine worker threads");
     let p = spec.parse(args)?;
+    let cfg = falkon::serve::ServeConfig {
+        max_batch: p.usize("max-batch")?,
+        max_wait: std::time::Duration::from_millis(p.u64("max-wait-ms")?),
+        engine: p.str("engine").to_string(),
+        workers: p.usize("workers")?,
+    };
+    if !p.str("addr").is_empty() {
+        return serve_net(p.str("model"), p.str("addr"), cfg);
+    }
     let model = model_io::load(p.str("model"))?;
     let d = model.centers.cols;
-    let server = falkon::serve::Server::start(
-        model,
-        falkon::serve::ServeConfig {
-            max_batch: p.usize("max-batch")?,
-            max_wait: std::time::Duration::from_millis(p.u64("max-wait-ms")?),
-            engine: p.str("engine").to_string(),
-            workers: p.usize("workers")?,
-        },
-    )?;
+    let server = falkon::serve::Server::start(model, cfg)?;
     let total = p.usize("requests")?;
     let clients = p.usize("clients")?.max(1);
     let timer = Timer::start();
@@ -618,6 +629,48 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         pct(0.9),
         pct(0.99)
     );
+    Ok(())
+}
+
+/// Network serving mode: register the named models, bind the TCP front
+/// door, and serve until stdin closes or a line is entered (so it runs
+/// interactively and under a supervisor alike).
+fn serve_net(models: &str, addr: &str, cfg: falkon::serve::ServeConfig) -> Result<()> {
+    let registry = std::sync::Arc::new(falkon::serve::registry::ModelRegistry::new());
+    for entry in models.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (name, path) = match entry.split_once('=') {
+            Some((n, p)) => (n.trim(), p.trim()),
+            None => ("default", entry),
+        };
+        registry.load_file(name, path)?;
+        println!("registered {name:?} from {path}");
+    }
+    let server = falkon::serve::net::NetServer::start(registry, cfg, addr)?;
+    // the bound address on its own line so scripts using port 0 can
+    // scrape the ephemeral port
+    println!("listening on {}", server.addr());
+    println!(
+        "serving {:?}; close stdin or press Enter to stop",
+        server.registry().names()
+    );
+    let mut line = String::new();
+    match std::io::stdin().read_line(&mut line) {
+        // EOF (daemonized with stdin at /dev/null): serve until killed
+        Ok(0) => loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        },
+        Ok(_) | Err(_) => {}
+    }
+    for (name, stats) in server.stop() {
+        println!(
+            "{name}: {} requests ({} rejected) in {} batches, mean_batch={:.1}",
+            stats.requests, stats.rejected, stats.batches, stats.mean_batch
+        );
+    }
     Ok(())
 }
 
@@ -668,7 +721,7 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         .opt("lam-lo", "1e-8", "λ grid low end")
         .opt("lam-hi", "1e-2", "λ grid high end")
         .opt("lam-count", "4", "λ grid points (log-spaced)")
-        .opt("engine", "xla", "xla | xla-jnp | rust")
+        .opt("engine", Engine::default_name(), "xla | xla-jnp | rust")
         .opt("seed", "0", "rng seed");
     let p = spec.parse(args)?;
     let engine = Engine::by_name(p.str("engine"), 1)?;

@@ -186,6 +186,19 @@ impl Engine {
         Engine::Rust { opts, pool, isa }
     }
 
+    /// Name of the engine compiled into this binary: `"xla"` when the
+    /// `xla` feature (PJRT runtime) is built in, `"rust"` otherwise.
+    /// This is the default for CLI `--engine` flags and
+    /// [`crate::serve::ServeConfig`], so defaults never select an engine
+    /// the binary cannot construct.
+    pub fn default_name() -> &'static str {
+        if cfg!(feature = "xla") {
+            "xla"
+        } else {
+            "rust"
+        }
+    }
+
     /// Parse "xla", "xla-jnp", "rust" (CLI `--engine`).
     pub fn by_name(name: &str, workers: usize) -> Result<Engine> {
         Engine::by_name_dtype(name, workers, Dtype::F64, SimdMode::Auto)

@@ -1,0 +1,313 @@
+//! The shared admission batcher behind every serving front end.
+//!
+//! Extracted from the original `serve_loop` so the in-process channel
+//! servers ([`super::Server`], [`super::MulticlassServer`]) and the
+//! network front door ([`super::net::NetServer`]) run the **same**
+//! batching logic: gather one request (polling the stop channel at
+//! [`IDLE_POLL`] cadence while idle), linger up to `max_wait` for
+//! stragglers until `max_batch` *rows* are admitted, stack every
+//! admitted row into one row-block, and run a single blocked predict —
+//! the `MulticlassServer` panel-amortization trick (DESIGN.md §Perf
+//! "Multi-RHS path"), applied across requests and across connections.
+//!
+//! Requests are weighted by row count, so a 32-row batch request fills
+//! the admission budget as fast as 32 single-row requests and the sweep
+//! size stays panel-shaped regardless of how clients chop their load.
+//!
+//! The worker reads its model from a [`ModelSlot`] snapshot taken once
+//! per executed batch, which is what makes registry hot-swap atomic
+//! from the client's point of view: answers within one batch (and hence
+//! within one request) always come from a single model generation.
+
+use super::registry::{ModelSlot, ServedModel};
+use super::{panic_msg, ClassPrediction, ServeConfig, ServeEvent, ServeStats};
+use crate::linalg::mat::Mat;
+use crate::runtime::{Engine, EngineOptions};
+use crate::util::fault::FaultError;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Idle poll granularity: while the request queue is empty the serve
+/// loop re-checks its stop channel at this cadence, bounding how long
+/// `stop()` can block when live client handles keep the queue open.
+pub(crate) const IDLE_POLL: Duration = Duration::from_millis(20);
+
+/// One queued prediction request: `rows` feature rows, row-major.
+/// Single-row clients ([`super::Handle`]) send `rows == 1`; the network
+/// batch ops send many rows per request.
+pub(crate) struct RowsRequest {
+    pub x: Vec<f64>,
+    pub rows: usize,
+    pub reply: Sender<Result<RowsReply>>,
+}
+
+/// Per-request answer, one entry per request row.
+pub(crate) enum RowsReply {
+    /// regression predictions
+    Scalars(Vec<f64>),
+    /// multiclass argmax + per-class scores
+    Classes(Vec<ClassPrediction>),
+}
+
+/// Outcome of one admission-gather attempt.
+pub(crate) enum Gathered<R> {
+    Batch(Vec<R>),
+    /// queue empty for one idle poll — re-check stop and try again
+    Idle,
+    /// every producer handle dropped — first-class shutdown path
+    Disconnected,
+    /// explicit stop signal received
+    Stopped,
+}
+
+/// Admission batching policy (from [`ServeConfig`]): collect up to
+/// `max_batch` rows, waiting at most `max_wait` for stragglers after
+/// the first request of a batch arrives.
+pub(crate) struct Batcher {
+    max_batch: usize,
+    max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(cfg: &ServeConfig) -> Batcher {
+        Batcher {
+            max_batch: cfg.max_batch.max(1),
+            max_wait: cfg.max_wait,
+        }
+    }
+
+    /// Gather one batch. `weight` is the row-count contribution of a
+    /// request (1 for single-row front ends); a single request heavier
+    /// than `max_batch` is still admitted whole, as its own sweep.
+    pub fn gather<R>(
+        &self,
+        rx: &Receiver<R>,
+        stop: &Receiver<()>,
+        weight: impl Fn(&R) -> usize,
+    ) -> Gathered<R> {
+        if stop.try_recv().is_ok() {
+            return Gathered::Stopped;
+        }
+        // block for the first request of the batch
+        let first = match rx.recv_timeout(IDLE_POLL) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => return Gathered::Idle,
+            Err(RecvTimeoutError::Disconnected) => return Gathered::Disconnected,
+        };
+        let mut rows = weight(&first);
+        let mut batch = vec![first];
+        // then linger for stragglers up to max_batch rows / max_wait
+        let deadline = Instant::now() + self.max_wait;
+        while rows < self.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => {
+                    rows += weight(&r);
+                    batch.push(r);
+                }
+                Err(_) => break,
+            }
+        }
+        Gathered::Batch(batch)
+    }
+}
+
+/// Live serving counters shared between a model worker and the stats
+/// front ends (the channel servers snapshot at `stop()`; the network
+/// stats op snapshots while serving).
+#[derive(Default)]
+pub(crate) struct StatsCell {
+    pub requests: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub rows: AtomicU64,
+    pub engine_fallbacks: AtomicU64,
+}
+
+impl StatsCell {
+    pub fn snapshot(&self) -> ServeStats {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let rows = self.rows.load(Ordering::Relaxed);
+        ServeStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches,
+            rows,
+            mean_batch: if batches > 0 {
+                rows as f64 / batches as f64
+            } else {
+                0.0
+            },
+            engine_fallbacks: self.engine_fallbacks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Build the configured engine, or degrade to the always-available rust
+/// engine as a **logged, typed event** (counted in
+/// [`ServeStats::engine_fallbacks`]) — a misconfigured engine name must
+/// not take the serving path down, but it must not be silent either.
+pub(crate) fn engine_or_fallback(name: &str, workers: usize, stats: &StatsCell) -> Engine {
+    match Engine::by_name(name, workers) {
+        Ok(e) => e,
+        Err(err) => {
+            stats.engine_fallbacks.fetch_add(1, Ordering::Relaxed);
+            let event = ServeEvent::EngineFallback {
+                requested: name.to_string(),
+                fallback: "rust".to_string(),
+                error: format!("{err:#}"),
+            };
+            eprintln!("[serve] {event}");
+            Engine::rust_with(EngineOptions {
+                workers,
+                ..Default::default()
+            })
+        }
+    }
+}
+
+/// The unified model-worker loop: one thread per served model, owning
+/// the engine (PJRT handles are per-thread) and draining one request
+/// queue with admission batching. Returns the final stats snapshot.
+pub(crate) fn run_model_worker(
+    slot: Arc<ModelSlot>,
+    cfg: ServeConfig,
+    rx: Receiver<RowsRequest>,
+    stop: Receiver<()>,
+    stats: Arc<StatsCell>,
+) -> ServeStats {
+    let engine = engine_or_fallback(&cfg.engine, cfg.workers, &stats);
+    let batcher = Batcher::new(&cfg);
+    // multiclass coefficient block, stacked once per model generation
+    // (not once per batch) and invalidated by hot swap
+    let mut alphas_cache: Option<(u64, Mat)> = None;
+    loop {
+        let batch = match batcher.gather(&rx, &stop, |r: &RowsRequest| r.rows.max(1)) {
+            Gathered::Batch(b) => b,
+            Gathered::Idle => continue,
+            Gathered::Disconnected | Gathered::Stopped => break,
+        };
+        // snapshot the model once per batch: every answer in this batch
+        // comes from one generation even if a swap lands mid-predict
+        let (model, generation) = slot.current();
+        exec_batch(
+            &model,
+            generation,
+            &engine,
+            batch,
+            &stats,
+            &mut alphas_cache,
+        );
+    }
+    stats.snapshot()
+}
+
+enum BatchOut {
+    Scalars(Vec<f64>),
+    /// rows × K multiclass score block
+    Scores(Mat),
+}
+
+/// Validate, stack, predict once, fan back out.
+fn exec_batch(
+    model: &Arc<ServedModel>,
+    generation: u64,
+    engine: &Engine,
+    batch: Vec<RowsRequest>,
+    stats: &StatsCell,
+    alphas_cache: &mut Option<(u64, Mat)>,
+) {
+    let d = model.d();
+    // every dequeued request is counted, answered or rejected — the
+    // stats must reconcile with what clients observed
+    stats.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    // validate at the queue boundary: client handles already check dims,
+    // but the queue is a public boundary (the network path feeds it
+    // directly) — a malformed request gets a typed error back and fails
+    // alone, never panicking the stacking copy below
+    let mut admitted: Vec<RowsRequest> = Vec::with_capacity(batch.len());
+    let mut rows_total = 0usize;
+    for r in batch {
+        if r.rows == 0 || r.x.len() != r.rows * d {
+            stats.rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = r.reply.send(Err(FaultError::fatal(format!(
+                "request shape ({} floats / {} rows) != model dim {d}",
+                r.x.len(),
+                r.rows
+            ))));
+            continue;
+        }
+        rows_total += r.rows;
+        admitted.push(r);
+    }
+    if admitted.is_empty() {
+        return;
+    }
+    // stack every admitted row into one row-block
+    let mut x = Mat::zeros(rows_total, d);
+    let mut off = 0usize;
+    for r in &admitted {
+        x.data[off * d..(off + r.rows) * d].copy_from_slice(&r.x);
+        off += r.rows;
+    }
+    // one panel-amortized predict for the whole cross-request batch; a
+    // panic inside the predict path fails this batch, not the server
+    let out: Result<BatchOut> =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match &**model {
+            ServedModel::Regression(m) => m.predict(engine, &x).map(BatchOut::Scalars),
+            ServedModel::Multiclass(m) => {
+                if !matches!(alphas_cache, Some((g, _)) if *g == generation) {
+                    *alphas_cache = Some((generation, m.alphas_mat()));
+                }
+                let (_, alphas) =
+                    alphas_cache.get_or_insert_with(|| (generation, m.alphas_mat()));
+                engine
+                    .predict_multi(m.config.kernel, &x, &m.centers, alphas, m.config.sigma)
+                    .map(BatchOut::Scores)
+            }
+        }))
+        .unwrap_or_else(|p| Err(anyhow!("prediction panicked: {}", panic_msg(p.as_ref()))));
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    stats.rows.fetch_add(rows_total as u64, Ordering::Relaxed);
+    match out {
+        Ok(BatchOut::Scalars(p)) => {
+            let mut off = 0usize;
+            for r in admitted {
+                let preds = p[off..off + r.rows].to_vec();
+                off += r.rows;
+                let _ = r.reply.send(Ok(RowsReply::Scalars(preds)));
+            }
+        }
+        Ok(BatchOut::Scores(sm)) => {
+            let mut off = 0usize;
+            for r in admitted {
+                let mut preds = Vec::with_capacity(r.rows);
+                for i in off..off + r.rows {
+                    let row = sm.row(i);
+                    // total_cmp: NaN scores must not panic the worker
+                    let class = (0..row.len())
+                        .max_by(|&a, &b| row[a].total_cmp(&row[b]))
+                        .unwrap_or(0);
+                    preds.push(ClassPrediction {
+                        class,
+                        scores: row.to_vec(),
+                    });
+                }
+                off += r.rows;
+                let _ = r.reply.send(Ok(RowsReply::Classes(preds)));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for r in admitted {
+                let _ = r.reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}

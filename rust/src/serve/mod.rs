@@ -1,28 +1,44 @@
-//! Batched prediction server — the L3 serving path: a dedicated model
-//! thread owns the engine (PJRT handles are per-thread) and drains an
-//! mpsc queue with **dynamic batching**: it collects up to `max_batch`
-//! requests (waiting at most `max_wait` for stragglers), stacks them into
-//! one row-block, runs a single blocked predict, and fans the results
-//! back out. Clients hold a cheap, cloneable, `Send` [`Handle`].
+//! Serving subsystem — the L3 request path.
 //!
-//! [`MulticlassServer`] is the one-vs-all counterpart: a batch of rows is
-//! served by **one** multi-output predict (`Engine::predict_multi`), so
-//! the kernel panels are amortized across the batch rows *and* the K
-//! classes — a K-class request costs one panel sweep, not K
-//! (DESIGN.md §Perf "Multi-RHS path").
+//! Three front ends share one admission batcher (the private `batch`
+//! module):
 //!
-//! [`predict_source`] is the **offline bulk** path: it streams a chunked
-//! [`crate::data::DataSource`] through the model, so scoring a dataset
-//! larger than RAM keeps only one chunk of features resident
-//! (DESIGN.md § "Out-of-core path").
+//! - [`Server`] / [`MulticlassServer`]: in-process channel servers — a
+//!   dedicated model thread owns the engine (PJRT handles are
+//!   per-thread) and drains an mpsc queue with **dynamic batching**:
+//!   up to `max_batch` rows are collected (waiting at most `max_wait`
+//!   for stragglers), stacked into one row-block, and served by a
+//!   single blocked predict. Clients hold a cheap, cloneable, `Send`
+//!   [`Handle`].
+//! - [`net::NetServer`]: the network front door — a TCP server speaking
+//!   a small length-prefixed binary protocol, admission-batching
+//!   requests **across connections** into the same panel-sized sweeps,
+//!   and serving multiple named models from a [`registry::ModelRegistry`]
+//!   with atomic hot swap.
+//! - [`predict_source`]: the **offline bulk** path — streams a chunked
+//!   [`crate::data::DataSource`] through the model, so scoring a
+//!   dataset larger than RAM keeps only one chunk of features resident
+//!   (DESIGN.md § "Out-of-core path").
+//!
+//! Multiclass requests are served by **one** multi-output predict
+//! (`Engine::predict_multi`), so kernel panels are amortized across the
+//! batch rows *and* the K classes — a K-class request costs one panel
+//! sweep, not K (DESIGN.md §Perf "Multi-RHS path").
+
+mod batch;
+pub mod net;
+pub mod registry;
 
 use crate::data::source::DataSource;
 use crate::falkon::{FalkonModel, FalkonMulticlass};
-use crate::linalg::mat::Mat;
-use crate::util::fault::FaultError;
+use crate::runtime::Engine;
 use anyhow::{anyhow, Result};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::time::{Duration, Instant};
+use batch::{run_model_worker, RowsReply, RowsRequest, StatsCell};
+use registry::{ModelSlot, ServedModel};
+use std::fmt;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Result of one offline bulk-scoring sweep over a [`DataSource`].
 #[derive(Debug, Clone)]
@@ -44,7 +60,8 @@ pub struct BulkScore {
 /// scoring each resident chunk with the blocked predict path, so a
 /// dataset larger than RAM is served with O(chunk) feature memory. The
 /// online counterpart is [`Server`] (request batching); this is the bulk
-/// path behind `falkon predict` on `.shard` inputs.
+/// path behind `falkon predict` on `.shard` inputs and the network
+/// server's score-shard op.
 pub fn predict_source(
     model: &FalkonModel,
     engine: &crate::runtime::Engine,
@@ -82,10 +99,15 @@ pub fn predict_source(
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// admission budget in **rows** per executed batch: single-row
+    /// requests count 1, a network batch request counts its row count
     pub max_batch: usize,
+    /// how long to linger for stragglers after a batch's first request
     pub max_wait: Duration,
     /// engine name ("xla", "xla-jnp", "rust") — constructed on the server
-    /// thread because PJRT clients are thread-local
+    /// thread because PJRT clients are thread-local. Defaults to the
+    /// engine compiled into this binary ([`Engine::default_name`]), so a
+    /// default server never pays a doomed engine-init + fallback.
     pub engine: String,
     /// rust-engine worker threads for the blocked predict path. Only
     /// batches larger than one kernel tile (128 rows) fan out, so this
@@ -98,21 +120,64 @@ impl Default for ServeConfig {
         ServeConfig {
             max_batch: 64,
             max_wait: Duration::from_millis(2),
-            engine: "xla".into(),
+            engine: Engine::default_name().into(),
             workers: 1,
         }
     }
 }
 
-struct Request {
-    features: Vec<f64>,
-    reply: Sender<Result<f64>>,
+/// Server statistics snapshot.
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    /// every dequeued request — answered or rejected, nothing uncounted
+    pub requests: u64,
+    /// requests answered with a typed error at the queue boundary
+    /// (malformed shape); they never reach a predict sweep
+    pub rejected: u64,
+    /// executed predict sweeps
+    pub batches: u64,
+    /// total rows through executed sweeps
+    pub rows: u64,
+    /// mean rows per executed batch (`rows / batches`)
+    pub mean_batch: f64,
+    /// times a configured engine failed to init and the worker degraded
+    /// to the rust engine (see [`ServeEvent::EngineFallback`])
+    pub engine_fallbacks: u64,
+}
+
+/// Typed events on the serving path: conditions that must not kill a
+/// server but must not be silent either. Logged as `[serve] {event}`.
+#[derive(Debug, Clone)]
+pub enum ServeEvent {
+    /// the configured engine failed to construct; the worker serves on
+    /// the fallback instead (counted in [`ServeStats::engine_fallbacks`])
+    EngineFallback {
+        requested: String,
+        fallback: String,
+        error: String,
+    },
+    /// a registry slot atomically replaced its model
+    ModelSwapped { model: String, generation: u64 },
+}
+
+impl fmt::Display for ServeEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeEvent::EngineFallback { requested, fallback, error } => write!(
+                f,
+                "engine fallback: {requested:?} unavailable ({error}); serving on {fallback:?}"
+            ),
+            ServeEvent::ModelSwapped { model, generation } => {
+                write!(f, "model {model:?} hot-swapped (generation {generation})")
+            }
+        }
+    }
 }
 
 /// Client handle: send features, block on the prediction.
 #[derive(Clone)]
 pub struct Handle {
-    tx: Sender<Request>,
+    tx: Sender<RowsRequest>,
     d: usize,
 }
 
@@ -127,43 +192,47 @@ impl Handle {
         }
         let (reply_tx, reply_rx) = channel();
         self.tx
-            .send(Request {
-                features,
+            .send(RowsRequest {
+                x: features,
+                rows: 1,
                 reply: reply_tx,
             })
             .map_err(|_| anyhow!("server stopped"))?;
-        reply_rx.recv().map_err(|_| anyhow!("server dropped request"))?
+        match reply_rx.recv().map_err(|_| anyhow!("server dropped request"))?? {
+            RowsReply::Scalars(p) => p
+                .first()
+                .copied()
+                .ok_or_else(|| anyhow!("server returned an empty reply")),
+            RowsReply::Classes(_) => Err(anyhow!("multiclass reply on a regression handle")),
+        }
     }
 }
 
-/// Server statistics snapshot.
-#[derive(Debug, Default, Clone)]
-pub struct ServeStats {
-    pub requests: u64,
-    pub batches: u64,
-    /// mean rows per executed batch
-    pub mean_batch: f64,
-}
-
+/// In-process batched prediction server (regression). The network
+/// counterpart is [`net::NetServer`]; both run the same admission
+/// batcher and model-worker loop.
 pub struct Server {
     handle: Handle,
-    join: Option<std::thread::JoinHandle<ServeStats>>,
+    join: std::thread::JoinHandle<ServeStats>,
     shutdown: Sender<()>,
 }
 
 impl Server {
-    /// Spawn the model thread and return (server, client handle).
+    /// Spawn the model thread and return the server (client handles via
+    /// [`Server::handle`]).
     pub fn start(model: FalkonModel, cfg: ServeConfig) -> Result<Server> {
         let d = model.centers.cols;
-        let (tx, rx) = channel::<Request>();
+        let slot = Arc::new(ModelSlot::new(ServedModel::Regression(model)));
+        let (tx, rx) = channel::<RowsRequest>();
         let (stop_tx, stop_rx) = channel::<()>();
+        let stats = Arc::new(StatsCell::default());
         let join = std::thread::Builder::new()
             .name("falkon-serve".into())
-            .spawn(move || serve_loop(model, cfg, rx, stop_rx))
+            .spawn(move || run_model_worker(slot, cfg, rx, stop_rx, stats))
             .map_err(|e| anyhow!("spawning server: {e}"))?;
         Ok(Server {
             handle: Handle { tx, d },
-            join: Some(join),
+            join,
             shutdown: stop_tx,
         })
     }
@@ -172,122 +241,18 @@ impl Server {
         self.handle.clone()
     }
 
-    /// Stop the server and collect stats.
-    pub fn stop(mut self) -> ServeStats {
-        let _ = self.shutdown.send(());
-        // drop our handle so the queue closes once clients are done
-        match self.join.take() {
-            Some(join) => join.join().unwrap_or_default(),
-            None => ServeStats::default(),
-        }
+    /// Stop the server and collect stats. The server's own queue sender
+    /// is dropped **before** joining, so with no cloned client handles
+    /// outstanding the worker exits immediately on channel disconnect —
+    /// a first-class shutdown path, not a poll race. With live clones
+    /// the explicit stop signal is honored at the next idle poll
+    /// (≤ 20 ms), so `stop()` still returns promptly.
+    pub fn stop(self) -> ServeStats {
+        let Server { handle, join, shutdown } = self;
+        drop(handle);
+        let _ = shutdown.send(());
+        join.join().unwrap_or_default()
     }
-}
-
-/// Best-effort human-readable payload of a caught panic.
-fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = p.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = p.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "unknown panic".into()
-    }
-}
-
-fn serve_loop(
-    model: FalkonModel,
-    cfg: ServeConfig,
-    rx: Receiver<Request>,
-    stop: Receiver<()>,
-) -> ServeStats {
-    // engine lives on this thread (PJRT client is thread-local)
-    let engine = match crate::runtime::Engine::by_name(&cfg.engine, cfg.workers) {
-        Ok(e) => e,
-        Err(err) => {
-            eprintln!("serve: engine init failed ({err}); falling back to rust engine");
-            crate::runtime::Engine::rust_with(crate::runtime::EngineOptions {
-                workers: cfg.workers,
-                ..Default::default()
-            })
-        }
-    };
-    let d = model.centers.cols;
-    let mut stats = ServeStats::default();
-    let mut pending: Vec<Request> = Vec::new();
-
-    loop {
-        if stop.try_recv().is_ok() {
-            break;
-        }
-        // block for the first request of a batch
-        if pending.is_empty() {
-            match rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(r) => pending.push(r),
-                Err(RecvTimeoutError::Timeout) => continue,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        // then gather stragglers up to max_batch / max_wait
-        let deadline = Instant::now() + cfg.max_wait;
-        while pending.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(_) => break,
-            }
-        }
-        // validate per request before stacking: [`Handle::predict`]
-        // already checks dims, but the queue is a public boundary — a
-        // malformed request must get a typed error back, not panic the
-        // copy below and take the whole serve thread with it
-        let mut batch: Vec<Request> = Vec::with_capacity(pending.len());
-        for r in pending.drain(..) {
-            if r.features.len() == d {
-                batch.push(r);
-            } else {
-                let _ = r.reply.send(Err(FaultError::fatal(format!(
-                    "feature dim {} != model dim {d}",
-                    r.features.len()
-                ))));
-            }
-        }
-        if batch.is_empty() {
-            continue;
-        }
-        // run the batch; a panic inside the predict path fails this batch,
-        // not the server
-        let rows = batch.len();
-        let mut x = Mat::zeros(rows, d);
-        for (i, r) in batch.iter().enumerate() {
-            x.row_mut(i).copy_from_slice(&r.features);
-        }
-        let preds = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            model.predict(&engine, &x)
-        }))
-        .unwrap_or_else(|p| Err(anyhow!("prediction panicked: {}", panic_msg(p.as_ref()))));
-        match preds {
-            Ok(p) => {
-                for (i, r) in batch.drain(..).enumerate() {
-                    let _ = r.reply.send(Ok(p[i]));
-                }
-            }
-            Err(e) => {
-                let msg = e.to_string();
-                for r in batch.drain(..) {
-                    let _ = r.reply.send(Err(anyhow!("{msg}")));
-                }
-            }
-        }
-        stats.requests += rows as u64;
-        stats.batches += 1;
-    }
-    if stats.batches > 0 {
-        stats.mean_batch = stats.requests as f64 / stats.batches as f64;
-    }
-    stats
 }
 
 // ---------------------------------------------------------------------
@@ -302,15 +267,10 @@ pub struct ClassPrediction {
     pub scores: Vec<f64>,
 }
 
-struct ClassRequest {
-    features: Vec<f64>,
-    reply: Sender<Result<ClassPrediction>>,
-}
-
 /// Client handle for the multiclass server.
 #[derive(Clone)]
 pub struct MulticlassHandle {
-    tx: Sender<ClassRequest>,
+    tx: Sender<RowsRequest>,
     d: usize,
 }
 
@@ -325,21 +285,28 @@ impl MulticlassHandle {
         }
         let (reply_tx, reply_rx) = channel();
         self.tx
-            .send(ClassRequest {
-                features,
+            .send(RowsRequest {
+                x: features,
+                rows: 1,
                 reply: reply_tx,
             })
             .map_err(|_| anyhow!("server stopped"))?;
-        reply_rx.recv().map_err(|_| anyhow!("server dropped request"))?
+        match reply_rx.recv().map_err(|_| anyhow!("server dropped request"))?? {
+            RowsReply::Classes(p) => p
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("server returned an empty reply")),
+            RowsReply::Scalars(_) => Err(anyhow!("regression reply on a multiclass handle")),
+        }
     }
 }
 
-/// Batched one-vs-all server: same dynamic-batching loop as [`Server`],
-/// but each executed batch runs a single multi-output predict covering
+/// Batched one-vs-all server: same admission batcher as [`Server`], but
+/// each executed batch runs a single multi-output predict covering
 /// every class.
 pub struct MulticlassServer {
     handle: MulticlassHandle,
-    join: Option<std::thread::JoinHandle<ServeStats>>,
+    join: std::thread::JoinHandle<ServeStats>,
     shutdown: Sender<()>,
 }
 
@@ -348,15 +315,17 @@ impl MulticlassServer {
     /// [`MulticlassServer::handle`]).
     pub fn start(model: FalkonMulticlass, cfg: ServeConfig) -> Result<MulticlassServer> {
         let d = model.centers.cols;
-        let (tx, rx) = channel::<ClassRequest>();
+        let slot = Arc::new(ModelSlot::new(ServedModel::Multiclass(model)));
+        let (tx, rx) = channel::<RowsRequest>();
         let (stop_tx, stop_rx) = channel::<()>();
+        let stats = Arc::new(StatsCell::default());
         let join = std::thread::Builder::new()
             .name("falkon-serve-mc".into())
-            .spawn(move || serve_multiclass_loop(model, cfg, rx, stop_rx))
+            .spawn(move || run_model_worker(slot, cfg, rx, stop_rx, stats))
             .map_err(|e| anyhow!("spawning multiclass server: {e}"))?;
         Ok(MulticlassServer {
             handle: MulticlassHandle { tx, d },
-            join: Some(join),
+            join,
             shutdown: stop_tx,
         })
     }
@@ -365,123 +334,25 @@ impl MulticlassServer {
         self.handle.clone()
     }
 
-    /// Stop the server and collect stats (the serve loop notices the stop
-    /// signal on its next idle poll).
-    pub fn stop(mut self) -> ServeStats {
-        let _ = self.shutdown.send(());
-        match self.join.take() {
-            Some(join) => join.join().unwrap_or_default(),
-            None => ServeStats::default(),
-        }
+    /// Stop the server and collect stats (same shutdown contract as
+    /// [`Server::stop`]).
+    pub fn stop(self) -> ServeStats {
+        let MulticlassServer { handle, join, shutdown } = self;
+        drop(handle);
+        let _ = shutdown.send(());
+        join.join().unwrap_or_default()
     }
 }
 
-fn serve_multiclass_loop(
-    model: FalkonMulticlass,
-    cfg: ServeConfig,
-    rx: Receiver<ClassRequest>,
-    stop: Receiver<()>,
-) -> ServeStats {
-    let engine = match crate::runtime::Engine::by_name(&cfg.engine, cfg.workers) {
-        Ok(e) => e,
-        Err(err) => {
-            eprintln!("serve: engine init failed ({err}); falling back to rust engine");
-            crate::runtime::Engine::rust_with(crate::runtime::EngineOptions {
-                workers: cfg.workers,
-                ..Default::default()
-            })
-        }
-    };
-    let d = model.centers.cols;
-    // stacked once: the per-batch predict reads the same M×K block
-    let alphas = model.alphas_mat();
-    let mut stats = ServeStats::default();
-    let mut pending: Vec<ClassRequest> = Vec::new();
-
-    loop {
-        if stop.try_recv().is_ok() {
-            break;
-        }
-        if pending.is_empty() {
-            match rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(r) => pending.push(r),
-                Err(RecvTimeoutError::Timeout) => continue,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        let deadline = Instant::now() + cfg.max_wait;
-        while pending.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(_) => break,
-            }
-        }
-        // same public-boundary validation as the regression loop: typed
-        // error per malformed request, never a panic in the copy below
-        let mut batch: Vec<ClassRequest> = Vec::with_capacity(pending.len());
-        for r in pending.drain(..) {
-            if r.features.len() == d {
-                batch.push(r);
-            } else {
-                let _ = r.reply.send(Err(FaultError::fatal(format!(
-                    "feature dim {} != model dim {d}",
-                    r.features.len()
-                ))));
-            }
-        }
-        if batch.is_empty() {
-            continue;
-        }
-        let rows = batch.len();
-        let mut x = Mat::zeros(rows, d);
-        for (i, r) in batch.iter().enumerate() {
-            x.row_mut(i).copy_from_slice(&r.features);
-        }
-        // one panel-amortized predict for the whole (rows × K) batch; a
-        // panic fails the batch, not the server
-        let scores = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            engine.predict_multi(
-                model.config.kernel,
-                &x,
-                &model.centers,
-                &alphas,
-                model.config.sigma,
-            )
-        }))
-        .unwrap_or_else(|p| Err(anyhow!("prediction panicked: {}", panic_msg(p.as_ref()))));
-        match scores {
-            Ok(sm) => {
-                for (i, r) in batch.drain(..).enumerate() {
-                    let row = sm.row(i);
-                    // total_cmp: a pathological request whose scores go NaN
-                    // must not panic the serve thread for everyone else
-                    let class = (0..row.len())
-                        .max_by(|&a, &b| row[a].total_cmp(&row[b]))
-                        .unwrap_or(0);
-                    let _ = r.reply.send(Ok(ClassPrediction {
-                        class,
-                        scores: row.to_vec(),
-                    }));
-                }
-            }
-            Err(e) => {
-                let msg = e.to_string();
-                for r in batch.drain(..) {
-                    let _ = r.reply.send(Err(anyhow!("{msg}")));
-                }
-            }
-        }
-        stats.requests += rows as u64;
-        stats.batches += 1;
+/// Best-effort human-readable payload of a caught panic.
+pub(crate) fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".into()
     }
-    if stats.batches > 0 {
-        stats.mean_batch = stats.requests as f64 / stats.batches as f64;
-    }
-    stats
 }
 
 #[cfg(test)]
@@ -489,8 +360,9 @@ mod tests {
     use super::*;
     use crate::data::synth;
     use crate::falkon::FalkonConfig;
-    use crate::runtime::Engine;
+    use crate::linalg::mat::Mat;
     use crate::util::rng::Rng;
+    use std::time::Instant;
 
     fn tiny_model() -> (FalkonModel, Mat, Vec<f64>) {
         let mut rng = Rng::new(1);
@@ -505,6 +377,35 @@ mod tests {
         };
         let model = crate::falkon::fit(&eng, &data.x, &data.y, &cfg).unwrap();
         (model, data.x, data.y)
+    }
+
+    #[test]
+    fn default_engine_is_the_compiled_in_one() {
+        // a default server must not pay a doomed engine init: the
+        // default engine name always constructs on this build
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.engine, Engine::default_name());
+        assert!(Engine::by_name(&cfg.engine, 1).is_ok());
+    }
+
+    #[test]
+    fn engine_fallback_is_typed_and_counted() {
+        let (model, x, _) = tiny_model();
+        let eng = Engine::rust();
+        let want = model.predict(&eng, &x.slice_rows(0, 1)).unwrap()[0];
+        let server = Server::start(
+            model,
+            ServeConfig {
+                engine: "no-such-engine".into(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = server.handle();
+        let got = h.predict(x.row(0).to_vec()).unwrap();
+        assert!((got - want).abs() < 1e-12, "fallback engine must serve");
+        let stats = server.stop();
+        assert_eq!(stats.engine_fallbacks, 1);
     }
 
     #[test]
@@ -527,6 +428,8 @@ mod tests {
         }
         let stats = server.stop();
         assert_eq!(stats.requests, 10);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.rows, 10);
     }
 
     #[test]
@@ -559,6 +462,35 @@ mod tests {
         // dynamic batching must have coalesced at least some requests
         assert!(stats.batches < 32, "batches {}", stats.batches);
         assert!(stats.mean_batch > 1.0);
+    }
+
+    #[test]
+    fn stop_returns_promptly_with_live_cloned_handle() {
+        // regression: stop() used to keep its own queue sender alive
+        // through the join, so shutdown leaned on the idle-poll timeout
+        // instead of channel disconnect. With a cloned client handle
+        // still outstanding the stop signal must be honored promptly.
+        let (model, x, _) = tiny_model();
+        let server = Server::start(
+            model,
+            ServeConfig {
+                engine: "rust".into(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = server.handle();
+        let _ = h.predict(x.row(0).to_vec()).unwrap();
+        let t = Instant::now();
+        let stats = server.stop();
+        assert!(
+            t.elapsed() < Duration::from_secs(2),
+            "stop() blocked for {:?} with a live clone outstanding",
+            t.elapsed()
+        );
+        assert_eq!(stats.requests, 1);
+        // the outstanding clone now reports a stopped server
+        assert!(h.predict(x.row(0).to_vec()).is_err());
     }
 
     fn tiny_multiclass() -> (crate::falkon::FalkonMulticlass, Mat, Vec<usize>) {
@@ -672,10 +604,11 @@ mod tests {
     }
 
     #[test]
-    fn serve_loop_survives_malformed_queue_request() {
+    fn serve_loop_survives_malformed_queue_request_and_counts_it() {
         // bypass Handle::predict's client-side dim check and push a
         // malformed request straight into the queue: the serve loop must
-        // reply with a typed error and keep serving everyone else
+        // reply with a typed error, keep serving everyone else, and the
+        // stats must count the rejected request instead of losing it
         let (model, x, _) = tiny_model();
         let eng = Engine::rust();
         let want = model.predict(&eng, &x.slice_rows(0, 1)).unwrap()[0];
@@ -689,20 +622,26 @@ mod tests {
         .unwrap();
         let h = server.handle();
         let (reply_tx, reply_rx) = channel();
-        h.tx.send(Request {
-            features: vec![1.0],
+        h.tx.send(RowsRequest {
+            x: vec![1.0],
+            rows: 1,
             reply: reply_tx,
         })
         .unwrap();
         let err = reply_rx.recv().unwrap().unwrap_err();
-        assert!(format!("{err:#}").contains("feature dim"), "{err:#}");
+        assert!(format!("{err:#}").contains("model dim"), "{err:#}");
         let got = h.predict(x.row(0).to_vec()).unwrap();
         assert!((got - want).abs() < 1e-12, "server must still serve");
-        server.stop();
+        let stats = server.stop();
+        // the rejected request is counted, not silently dropped, and it
+        // never skews the executed-batch row mean
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.rows, 1);
     }
 
     #[test]
-    fn multiclass_serve_loop_survives_malformed_queue_request() {
+    fn multiclass_serve_loop_survives_malformed_queue_request_and_counts_it() {
         let (model, x, _) = tiny_multiclass();
         let server = MulticlassServer::start(
             model,
@@ -714,16 +653,19 @@ mod tests {
         .unwrap();
         let h = server.handle();
         let (reply_tx, reply_rx) = channel();
-        h.tx.send(ClassRequest {
-            features: vec![0.5, 0.5],
+        h.tx.send(RowsRequest {
+            x: vec![0.5, 0.5],
+            rows: 1,
             reply: reply_tx,
         })
         .unwrap();
         let err = reply_rx.recv().unwrap().unwrap_err();
-        assert!(format!("{err:#}").contains("feature dim"), "{err:#}");
+        assert!(format!("{err:#}").contains("model dim"), "{err:#}");
         let got = h.predict(x.row(0).to_vec()).unwrap();
         assert!(got.class < 3, "server must still serve");
-        server.stop();
+        let stats = server.stop();
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.rejected, 1);
     }
 
     #[test]

@@ -1,0 +1,732 @@
+//! Network front door: a std-only TCP server for the serving subsystem.
+//!
+//! Thread-per-connection over [`TcpListener`], speaking a small
+//! length-prefixed binary protocol (see the frame layout below and
+//! DESIGN.md §Serving). Connections do **no** model work themselves:
+//! every predict request is forwarded onto the per-model queue drained
+//! by the shared admission batcher (`serve`'s private `batch` module),
+//! so concurrent
+//! requests from *different sockets* coalesce into the same panel-sized
+//! predict sweeps as in-process callers — the MulticlassServer
+//! amortization trick applied across connections.
+//!
+//! Models are served by name from a [`ModelRegistry`]; the swap op
+//! hot-swaps a name atomically ([`ModelSlot`] RCU) without dropping
+//! in-flight requests. One model-worker thread is spawned per
+//! registered name (engines are thread-local), so differently-named
+//! models batch independently.
+//!
+//! ## Frame layout
+//!
+//! Every message (both directions) is `u32 LE body length` + body,
+//! capped at [`MAX_FRAME`]. Integers are little-endian; f64s travel as
+//! raw IEEE-754 bits ([`crate::util::wire`]), which is what makes
+//! network predictions bitwise-equal to direct `model.predict`.
+//!
+//! Request body: `u8 op` + op-specific fields. Strings are u32
+//! length-prefixed UTF-8.
+//!
+//! | op | fields | ok payload |
+//! |----|--------|------------|
+//! | 1 `predict_one` | name, u32 d, d×f64 | f64 |
+//! | 2 `predict_batch` | name, u32 rows, u32 d, rows·d×f64 | u32 rows, rows×f64 |
+//! | 3 `predict_class` | name, u32 rows, u32 d, rows·d×f64 | u32 rows, u32 k, rows×(u32 class, k×f64) |
+//! | 4 `score_shard` | name, path, u32 chunk_rows | u64 rows, u64 skipped, u64 max_chunk_bytes, f64 mse, f64 rmse |
+//! | 5 `stats` | name | u64 requests, u64 rejected, u64 batches, u64 rows, f64 mean_batch, u64 engine_fallbacks, u64 swaps |
+//! | 6 `swap` | name, path | u64 generation |
+//!
+//! Response body: `u8 status` (0 = ok, 1 = error) + ok payload or a
+//! string error message. A malformed or unserviceable request gets a
+//! typed error frame and fails alone — the connection and the server
+//! keep going.
+
+use super::batch::{engine_or_fallback, RowsReply, RowsRequest, StatsCell, IDLE_POLL};
+use super::registry::{ModelRegistry, ModelSlot, ServedModel};
+use super::{predict_source, ServeConfig, ServeEvent, ServeStats};
+use crate::util::wire::{Reader, Writer};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Hard cap on one frame body — a hostile or corrupt length prefix must
+/// not allocate unbounded memory (64 MiB ≈ an 8M-float batch request).
+pub const MAX_FRAME: usize = 64 << 20;
+
+pub const OP_PREDICT_ONE: u8 = 1;
+pub const OP_PREDICT_BATCH: u8 = 2;
+pub const OP_PREDICT_CLASS: u8 = 3;
+pub const OP_SCORE_SHARD: u8 = 4;
+pub const OP_STATS: u8 = 5;
+pub const OP_SWAP: u8 = 6;
+
+const STATUS_OK: u8 = 0;
+const STATUS_ERR: u8 = 1;
+
+/// How long a connection write may stall before the connection is
+/// dropped (a dead client must not wedge its handler thread forever).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One running model worker behind the network server (owned by
+/// [`NetServer`]; connection threads get per-connection `Sender` clones
+/// plus the `Sync` stats/slot handles).
+struct Worker {
+    tx: Sender<RowsRequest>,
+    stop: Sender<()>,
+    stats: Arc<StatsCell>,
+    join: std::thread::JoinHandle<ServeStats>,
+}
+
+/// The per-model handles a connection needs to route a request.
+struct Route {
+    tx: Sender<RowsRequest>,
+    stats: Arc<StatsCell>,
+    slot: Arc<ModelSlot>,
+}
+
+/// State shared between the accept loop, connection threads and
+/// [`NetServer::stop`]. Senders are deliberately *not* in here (mpsc
+/// senders are cloned per connection at accept time).
+struct Shared {
+    registry: Arc<ModelRegistry>,
+    cfg: ServeConfig,
+    stop: Arc<AtomicBool>,
+}
+
+/// The TCP serving front door. `start` binds, spawns one model worker
+/// per registered name plus the accept thread, and returns immediately;
+/// `stop` shuts everything down in dependency order and returns the
+/// per-model stats.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_join: std::thread::JoinHandle<()>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    workers: BTreeMap<String, Worker>,
+    registry: Arc<ModelRegistry>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// serve every model currently registered. Models registered after
+    /// `start` are not served (workers are spawned here, once).
+    pub fn start(registry: Arc<ModelRegistry>, cfg: ServeConfig, addr: &str) -> Result<NetServer> {
+        anyhow::ensure!(!registry.is_empty(), "no models registered to serve");
+        let listener = TcpListener::bind(addr).map_err(|e| anyhow!("binding {addr}: {e}"))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| anyhow!("resolving bound address: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| anyhow!("nonblocking listener: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // one worker thread per registered name: engines are per-thread,
+        // and per-name queues keep differently-named models batching
+        // independently
+        let mut workers = BTreeMap::new();
+        let mut routes = BTreeMap::new();
+        for name in registry.names() {
+            let slot = match registry.get(&name) {
+                Some(s) => s,
+                None => continue,
+            };
+            let (tx, rx) = channel::<RowsRequest>();
+            let (stop_tx, stop_rx) = channel::<()>();
+            let stats = Arc::new(StatsCell::default());
+            let wcfg = cfg.clone();
+            let wslot = slot.clone();
+            let wstats = stats.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("falkon-net-{name}"))
+                .spawn(move || super::batch::run_model_worker(wslot, wcfg, rx, stop_rx, wstats))
+                .map_err(|e| anyhow!("spawning worker for {name:?}: {e}"))?;
+            routes.insert(
+                name.clone(),
+                Route {
+                    tx: tx.clone(),
+                    stats: stats.clone(),
+                    slot,
+                },
+            );
+            workers.insert(
+                name,
+                Worker {
+                    tx,
+                    stop: stop_tx,
+                    stats,
+                    join,
+                },
+            );
+        }
+
+        let shared = Arc::new(Shared {
+            registry: registry.clone(),
+            cfg: cfg.clone(),
+            stop: stop.clone(),
+        });
+        let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept_conns = conns.clone();
+        let accept_stop = stop.clone();
+        let accept_join = std::thread::Builder::new()
+            .name("falkon-net-accept".into())
+            .spawn(move || {
+                accept_loop(listener, shared, routes, accept_conns, accept_stop);
+            })
+            .map_err(|e| anyhow!("spawning accept thread: {e}"))?;
+
+        Ok(NetServer {
+            addr: local,
+            stop,
+            accept_join,
+            conns,
+            workers,
+            registry,
+        })
+    }
+
+    /// The bound address (useful with `"127.0.0.1:0"`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The registry this server routes from (swaps through it are live).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Live stats snapshot for one served model.
+    pub fn stats(&self, name: &str) -> Option<ServeStats> {
+        self.workers.get(name).map(|w| w.stats.snapshot())
+    }
+
+    /// Shut down in dependency order: stop accepting, join connection
+    /// handlers (workers stay alive so in-flight replies drain — no
+    /// request is dropped), then disconnect + stop the model workers and
+    /// collect their final stats.
+    pub fn stop(self) -> BTreeMap<String, ServeStats> {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.accept_join.join();
+        let handles = {
+            let mut conns = self.conns.lock().unwrap_or_else(|p| p.into_inner());
+            std::mem::take(&mut *conns)
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        let mut out = BTreeMap::new();
+        for (name, w) in self.workers {
+            let Worker { tx, stop, join, stats } = w;
+            // every connection-held clone is gone (handlers joined), so
+            // dropping the master sender disconnects the queue; the stop
+            // signal covers the idle-poll window
+            drop(tx);
+            let _ = stop.send(());
+            let final_stats = join.join().unwrap_or_else(|_| stats.snapshot());
+            out.insert(name, final_stats);
+        }
+        out
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    routes: BTreeMap<String, Route>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // per-connection route table: cloned senders (mpsc
+                // senders are Send, so each handler owns its own) plus
+                // shared atomics/slots
+                let conn_routes: BTreeMap<String, Route> = routes
+                    .iter()
+                    .map(|(k, r)| {
+                        (
+                            k.clone(),
+                            Route {
+                                tx: r.tx.clone(),
+                                stats: r.stats.clone(),
+                                slot: r.slot.clone(),
+                            },
+                        )
+                    })
+                    .collect();
+                let conn_shared = shared.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("falkon-net-conn".into())
+                    .spawn(move || serve_connection(stream, conn_shared, conn_routes));
+                match spawned {
+                    Ok(h) => {
+                        let mut guard = conns.lock().unwrap_or_else(|p| p.into_inner());
+                        guard.push(h);
+                    }
+                    Err(e) => eprintln!("[serve] connection thread spawn failed: {e}"),
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                eprintln!("[serve] accept error: {e}");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+enum FrameRead {
+    Frame(Vec<u8>),
+    /// clean EOF at a frame boundary, or server shutdown
+    Closed,
+}
+
+/// Read exactly `buf.len()` bytes, re-checking the stop flag on every
+/// read timeout. A manual loop rather than `read_exact`: `read_exact`
+/// discards already-read bytes on timeout, which would corrupt framing
+/// for a client that writes a frame slowly.
+fn read_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> Result<FrameRead> {
+    let mut off = 0usize;
+    while off < buf.len() {
+        match stream.read(&mut buf[off..]) {
+            Ok(0) => {
+                if off == 0 {
+                    return Ok(FrameRead::Closed);
+                }
+                return Err(anyhow!("connection closed mid-frame ({off} bytes read)"));
+            }
+            Ok(n) => off += n,
+            Err(e) => {
+                let retriable = matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                );
+                if !retriable {
+                    return Err(anyhow!("socket read: {e}"));
+                }
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(FrameRead::Closed);
+                }
+            }
+        }
+    }
+    Ok(FrameRead::Frame(Vec::new()))
+}
+
+/// Read one length-prefixed frame body.
+fn read_frame(stream: &mut TcpStream, stop: &AtomicBool) -> Result<FrameRead> {
+    let mut len_buf = [0u8; 4];
+    match read_full(stream, &mut len_buf, stop)? {
+        FrameRead::Closed => return Ok(FrameRead::Closed),
+        FrameRead::Frame(_) => {}
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    anyhow::ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds cap {MAX_FRAME}");
+    let mut body = vec![0u8; len];
+    match read_full(stream, &mut body, stop)? {
+        FrameRead::Closed => Ok(FrameRead::Closed),
+        FrameRead::Frame(_) => Ok(FrameRead::Frame(body)),
+    }
+}
+
+fn write_frame(stream: &mut TcpStream, body: &[u8]) -> Result<()> {
+    let len = body.len() as u32;
+    stream
+        .write_all(&len.to_le_bytes())
+        .and_then(|_| stream.write_all(body))
+        .map_err(|e| anyhow!("socket write: {e}"))
+}
+
+fn ok_frame(payload: Writer) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u8(STATUS_OK);
+    let mut body = w.into_bytes();
+    body.extend_from_slice(&payload.into_bytes());
+    body
+}
+
+fn err_frame(msg: &str) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u8(STATUS_ERR).str_u32(msg);
+    w.into_bytes()
+}
+
+fn serve_connection(mut stream: TcpStream, shared: Arc<Shared>, routes: BTreeMap<String, Route>) {
+    if stream.set_read_timeout(Some(IDLE_POLL)).is_err()
+        || stream.set_write_timeout(Some(WRITE_TIMEOUT)).is_err()
+    {
+        return;
+    }
+    // small frames both ways: Nagle + delayed ACK would add ~40ms per
+    // round trip, swamping the admission batcher's max_wait
+    let _ = stream.set_nodelay(true);
+    loop {
+        let body = match read_frame(&mut stream, &shared.stop) {
+            Ok(FrameRead::Frame(b)) => b,
+            Ok(FrameRead::Closed) => return,
+            Err(e) => {
+                // framing is unrecoverable after a bad length/short read:
+                // best-effort error frame, then close
+                let _ = write_frame(&mut stream, &err_frame(&format!("{e:#}")));
+                return;
+            }
+        };
+        let reply = match handle_request(&body, &shared, &routes) {
+            Ok(frame) => frame,
+            Err(e) => err_frame(&format!("{e:#}")),
+        };
+        if write_frame(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// Dispatch one request frame; any `Err` becomes an error frame for
+/// this request only.
+fn handle_request(
+    body: &[u8],
+    shared: &Shared,
+    routes: &BTreeMap<String, Route>,
+) -> Result<Vec<u8>> {
+    let mut r = Reader::new(body);
+    let op = r.u8()?;
+    let name = r.str_u32()?.to_string();
+    let Some(route) = routes.get(&name) else {
+        return Err(anyhow!(
+            "unknown model {name:?} (serving: {:?})",
+            shared.registry.names()
+        ));
+    };
+    match op {
+        OP_PREDICT_ONE => {
+            let d = r.u32()? as usize;
+            let x = r.f64s(d)?;
+            r.done()?;
+            match forward(route, x, 1)? {
+                RowsReply::Scalars(p) => {
+                    let v = p
+                        .first()
+                        .copied()
+                        .ok_or_else(|| anyhow!("empty prediction batch"))?;
+                    let mut w = Writer::new();
+                    w.f64(v);
+                    Ok(ok_frame(w))
+                }
+                RowsReply::Classes(_) => Err(anyhow!(
+                    "model {name:?} is multiclass; use the predict_class op"
+                )),
+            }
+        }
+        OP_PREDICT_BATCH => {
+            let rows = r.u32()? as usize;
+            let d = r.u32()? as usize;
+            let count = rows
+                .checked_mul(d)
+                .ok_or_else(|| anyhow!("rows*d overflow"))?;
+            let x = r.f64s(count)?;
+            r.done()?;
+            match forward(route, x, rows)? {
+                RowsReply::Scalars(p) => {
+                    let mut w = Writer::new();
+                    w.u32(p.len() as u32).f64s(&p);
+                    Ok(ok_frame(w))
+                }
+                RowsReply::Classes(_) => Err(anyhow!(
+                    "model {name:?} is multiclass; use the predict_class op"
+                )),
+            }
+        }
+        OP_PREDICT_CLASS => {
+            let rows = r.u32()? as usize;
+            let d = r.u32()? as usize;
+            let count = rows
+                .checked_mul(d)
+                .ok_or_else(|| anyhow!("rows*d overflow"))?;
+            let x = r.f64s(count)?;
+            r.done()?;
+            match forward(route, x, rows)? {
+                RowsReply::Classes(p) => {
+                    let k = p.first().map(|c| c.scores.len()).unwrap_or(0);
+                    let mut w = Writer::new();
+                    w.u32(p.len() as u32).u32(k as u32);
+                    for c in &p {
+                        w.u32(c.class as u32).f64s(&c.scores);
+                    }
+                    Ok(ok_frame(w))
+                }
+                RowsReply::Scalars(_) => Err(anyhow!(
+                    "model {name:?} is a regression model; use the predict ops"
+                )),
+            }
+        }
+        OP_SCORE_SHARD => {
+            let path = r.str_u32()?.to_string();
+            let chunk_rows = r.u32()? as usize;
+            r.done()?;
+            score_shard(route, shared, &path, chunk_rows)
+        }
+        OP_STATS => {
+            r.done()?;
+            let s = route.stats.snapshot();
+            let mut w = Writer::new();
+            w.u64(s.requests)
+                .u64(s.rejected)
+                .u64(s.batches)
+                .u64(s.rows)
+                .f64(s.mean_batch)
+                .u64(s.engine_fallbacks)
+                .u64(route.slot.swaps());
+            Ok(ok_frame(w))
+        }
+        OP_SWAP => {
+            let path = r.str_u32()?.to_string();
+            r.done()?;
+            let generation = shared.registry.swap_file(&name, &path)?;
+            let event = ServeEvent::ModelSwapped {
+                model: name,
+                generation,
+            };
+            eprintln!("[serve] {event}");
+            let mut w = Writer::new();
+            w.u64(generation);
+            Ok(ok_frame(w))
+        }
+        other => Err(anyhow!("unknown op {other}")),
+    }
+}
+
+/// Enqueue one request onto the model's batching queue and wait for the
+/// fan-out reply. Shape validation happens in the worker, against the
+/// model generation that actually serves the batch.
+fn forward(route: &Route, x: Vec<f64>, rows: usize) -> Result<RowsReply> {
+    let (reply_tx, reply_rx) = channel();
+    route
+        .tx
+        .send(RowsRequest {
+            x,
+            rows,
+            reply: reply_tx,
+        })
+        .map_err(|_| anyhow!("model worker stopped"))?;
+    reply_rx
+        .recv()
+        .map_err(|_| anyhow!("model worker dropped the request"))?
+}
+
+/// Bulk-score a shard file through [`predict_source`] on the connection
+/// thread (its own engine — the batching queue is for latency-sensitive
+/// row requests, not multi-minute scans).
+fn score_shard(route: &Route, shared: &Shared, path: &str, chunk_rows: usize) -> Result<Vec<u8>> {
+    let (model, _gen) = route.slot.current();
+    let m = match &*model {
+        ServedModel::Regression(m) => m,
+        ServedModel::Multiclass(_) => {
+            return Err(anyhow!("score_shard serves regression models only"))
+        }
+    };
+    let engine = engine_or_fallback(&shared.cfg.engine, shared.cfg.workers, &route.stats);
+    let mut src = crate::data::shard::ShardSource::open(path, chunk_rows.max(1))?;
+    let score = predict_source(m, &engine, &mut src)?;
+    let (mse, rmse) = if score.rows > 0 {
+        (
+            crate::metrics::mse(&score.preds, &score.targets),
+            crate::metrics::rmse(&score.preds, &score.targets),
+        )
+    } else {
+        (f64::NAN, f64::NAN)
+    };
+    let mut w = Writer::new();
+    w.u64(score.rows as u64)
+        .u64(score.skipped_rows as u64)
+        .u64(score.max_chunk_bytes as u64)
+        .f64(mse)
+        .f64(rmse);
+    Ok(ok_frame(w))
+}
+
+// ---------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------
+
+/// Stats reply of the stats op.
+#[derive(Debug, Clone, Default)]
+pub struct NetStats {
+    pub serve: ServeStats,
+    /// completed hot swaps on this model's slot
+    pub swaps: u64,
+}
+
+/// Shard-scoring reply of the score_shard op.
+#[derive(Debug, Clone)]
+pub struct ShardScore {
+    pub rows: u64,
+    pub skipped_rows: u64,
+    pub max_chunk_bytes: u64,
+    pub mse: f64,
+    pub rmse: f64,
+}
+
+/// Blocking client for the network protocol — one request in flight per
+/// client; open several clients for concurrency (the server batches
+/// across connections).
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).map_err(|e| anyhow!("connecting {addr}: {e}"))?;
+        stream
+            .set_nodelay(true)
+            .map_err(|e| anyhow!("setting nodelay: {e}"))?;
+        Ok(Client { stream })
+    }
+
+    /// One round trip: send a request body, return the ok payload or the
+    /// server's error message as a typed error.
+    fn call(&mut self, body: &[u8]) -> Result<Vec<u8>> {
+        write_frame(&mut self.stream, body)?;
+        let mut len_buf = [0u8; 4];
+        self.stream
+            .read_exact(&mut len_buf)
+            .map_err(|e| anyhow!("reading reply length: {e}"))?;
+        let len = u32::from_le_bytes(len_buf) as usize;
+        anyhow::ensure!(len <= MAX_FRAME, "reply of {len} bytes exceeds cap");
+        let mut reply = vec![0u8; len];
+        self.stream
+            .read_exact(&mut reply)
+            .map_err(|e| anyhow!("reading reply body: {e}"))?;
+        let mut r = Reader::new(&reply);
+        match r.u8()? {
+            STATUS_OK => Ok(reply[1..].to_vec()),
+            STATUS_ERR => Err(anyhow!("server: {}", r.str_u32()?)),
+            other => Err(anyhow!("bad status byte {other}")),
+        }
+    }
+
+    /// Predict one feature row.
+    pub fn predict_one(&mut self, model: &str, x: &[f64]) -> Result<f64> {
+        let mut w = Writer::new();
+        w.u8(OP_PREDICT_ONE)
+            .str_u32(model)
+            .u32(x.len() as u32)
+            .f64s(x);
+        let reply = self.call(&w.into_bytes())?;
+        let mut r = Reader::new(&reply);
+        let v = r.f64()?;
+        r.done()?;
+        Ok(v)
+    }
+
+    /// Predict `rows` feature rows (row-major, `x.len() == rows * d`) in
+    /// one request — served as one admission unit of `rows` rows.
+    pub fn predict_batch(&mut self, model: &str, rows: usize, x: &[f64]) -> Result<Vec<f64>> {
+        anyhow::ensure!(rows > 0 && x.len() % rows == 0, "x.len() must be rows * d");
+        let d = x.len() / rows;
+        let mut w = Writer::new();
+        w.u8(OP_PREDICT_BATCH)
+            .str_u32(model)
+            .u32(rows as u32)
+            .u32(d as u32)
+            .f64s(x);
+        let reply = self.call(&w.into_bytes())?;
+        let mut r = Reader::new(&reply);
+        let n = r.u32()? as usize;
+        let p = r.f64s(n)?;
+        r.done()?;
+        Ok(p)
+    }
+
+    /// Multiclass: argmax class + per-class scores for each row.
+    pub fn predict_class(
+        &mut self,
+        model: &str,
+        rows: usize,
+        x: &[f64],
+    ) -> Result<Vec<super::ClassPrediction>> {
+        anyhow::ensure!(rows > 0 && x.len() % rows == 0, "x.len() must be rows * d");
+        let d = x.len() / rows;
+        let mut w = Writer::new();
+        w.u8(OP_PREDICT_CLASS)
+            .str_u32(model)
+            .u32(rows as u32)
+            .u32(d as u32)
+            .f64s(x);
+        let reply = self.call(&w.into_bytes())?;
+        let mut r = Reader::new(&reply);
+        let n = r.u32()? as usize;
+        let k = r.u32()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let class = r.u32()? as usize;
+            let scores = r.f64s(k)?;
+            out.push(super::ClassPrediction { class, scores });
+        }
+        r.done()?;
+        Ok(out)
+    }
+
+    /// Bulk-score a shard file that lives on the *server's* filesystem.
+    pub fn score_shard(
+        &mut self,
+        model: &str,
+        path: &str,
+        chunk_rows: usize,
+    ) -> Result<ShardScore> {
+        let mut w = Writer::new();
+        w.u8(OP_SCORE_SHARD)
+            .str_u32(model)
+            .str_u32(path)
+            .u32(chunk_rows as u32);
+        let reply = self.call(&w.into_bytes())?;
+        let mut r = Reader::new(&reply);
+        let score = ShardScore {
+            rows: r.u64()?,
+            skipped_rows: r.u64()?,
+            max_chunk_bytes: r.u64()?,
+            mse: r.f64()?,
+            rmse: r.f64()?,
+        };
+        r.done()?;
+        Ok(score)
+    }
+
+    /// Live serving stats for one model.
+    pub fn stats(&mut self, model: &str) -> Result<NetStats> {
+        let mut w = Writer::new();
+        w.u8(OP_STATS).str_u32(model);
+        let reply = self.call(&w.into_bytes())?;
+        let mut r = Reader::new(&reply);
+        let serve = ServeStats {
+            requests: r.u64()?,
+            rejected: r.u64()?,
+            batches: r.u64()?,
+            rows: r.u64()?,
+            mean_batch: r.f64()?,
+            engine_fallbacks: r.u64()?,
+        };
+        let swaps = r.u64()?;
+        r.done()?;
+        Ok(NetStats { serve, swaps })
+    }
+
+    /// Hot-swap a served model from a file on the *server's* filesystem;
+    /// returns the new generation. In-flight requests finish on the old
+    /// model; every later batch sees the new one.
+    pub fn swap(&mut self, model: &str, path: &str) -> Result<u64> {
+        let mut w = Writer::new();
+        w.u8(OP_SWAP).str_u32(model).str_u32(path);
+        let reply = self.call(&w.into_bytes())?;
+        let mut r = Reader::new(&reply);
+        let generation = r.u64()?;
+        r.done()?;
+        Ok(generation)
+    }
+}

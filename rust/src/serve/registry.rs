@@ -1,0 +1,234 @@
+//! Named-model registry with atomic hot swap — the model-management half
+//! of the network front door (`serve/net.rs`).
+//!
+//! Each served name owns a [`ModelSlot`]: an RCU-style
+//! `Mutex<Arc<ServedModel>>`. The serve loop snapshots the `Arc` **once
+//! per executed batch**, so a [`ModelSlot::swap`] never tears a request:
+//! in-flight batches finish on the model they started with (the old
+//! `Arc` stays alive until the last batch drops it), and the very next
+//! batch sees the new model — zero requests dropped, zero mixed answers.
+//! The lock is held only for the pointer clone, never across a predict.
+//!
+//! Models load through [`crate::falkon::model_io`]; [`load_served`]
+//! sniffs the `format` field so one registry serves regression and
+//! multiclass models side by side.
+
+use crate::falkon::{model_io, FalkonModel, FalkonMulticlass};
+use crate::util::json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// A model the serving layer can answer requests with.
+pub enum ServedModel {
+    Regression(FalkonModel),
+    Multiclass(FalkonMulticlass),
+}
+
+impl ServedModel {
+    /// Feature dimension requests must match.
+    pub fn d(&self) -> usize {
+        match self {
+            ServedModel::Regression(m) => m.centers.cols,
+            ServedModel::Multiclass(m) => m.centers.cols,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServedModel::Regression(_) => "regression",
+            ServedModel::Multiclass(_) => "multiclass",
+        }
+    }
+}
+
+/// One named serving slot: the current model plus a generation counter
+/// bumped on every swap (used to invalidate per-model worker caches and
+/// reported through the stats op).
+pub struct ModelSlot {
+    current: Mutex<Arc<ServedModel>>,
+    generation: AtomicU64,
+}
+
+impl ModelSlot {
+    pub fn new(model: ServedModel) -> ModelSlot {
+        ModelSlot {
+            current: Mutex::new(Arc::new(model)),
+            generation: AtomicU64::new(0),
+        }
+    }
+
+    /// Snapshot the served model. Callers hold the returned `Arc` for
+    /// the duration of one batch; a concurrent swap does not affect it.
+    pub fn current(&self) -> (Arc<ServedModel>, u64) {
+        // a poisoned lock only means a panicking thread held it during
+        // the pointer clone; the Arc inside is still valid — recover
+        // rather than take the serving path down
+        let guard = self.current.lock().unwrap_or_else(|p| p.into_inner());
+        (guard.clone(), self.generation.load(Ordering::Acquire))
+    }
+
+    /// Atomically replace the served model (RCU: readers keep the old
+    /// `Arc` until their batch completes). Returns the new generation.
+    pub fn swap(&self, model: ServedModel) -> u64 {
+        let mut guard = self.current.lock().unwrap_or_else(|p| p.into_inner());
+        *guard = Arc::new(model);
+        // fetch_add while still holding the lock so generation and model
+        // move together (stats may observe them slightly apart, but a
+        // worker snapshotting via `current` sees a consistent pair)
+        self.generation.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    /// Number of completed swaps.
+    pub fn swaps(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+}
+
+/// Registry of named [`ModelSlot`]s behind the network server. Names
+/// are registered before the server starts (one model worker is spawned
+/// per name); [`ModelRegistry::swap`] hot-swaps an existing name.
+#[derive(Default)]
+pub struct ModelRegistry {
+    slots: RwLock<BTreeMap<String, Arc<ModelSlot>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Register (or replace the slot of) a named model.
+    pub fn insert(&self, name: &str, model: ServedModel) {
+        let slot = Arc::new(ModelSlot::new(model));
+        let mut slots = self.slots.write().unwrap_or_else(|p| p.into_inner());
+        slots.insert(name.to_string(), slot);
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ModelSlot>> {
+        let slots = self.slots.read().unwrap_or_else(|p| p.into_inner());
+        slots.get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let slots = self.slots.read().unwrap_or_else(|p| p.into_inner());
+        slots.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        let slots = self.slots.read().unwrap_or_else(|p| p.into_inner());
+        slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hot-swap an existing named model; returns the new generation.
+    /// Unknown names are a typed error — new names need a model worker,
+    /// which only [`super::net::NetServer::start`] spawns.
+    pub fn swap(&self, name: &str, model: ServedModel) -> Result<u64> {
+        let slot = self
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model {name:?} (registered: {:?})", self.names()))?;
+        Ok(slot.swap(model))
+    }
+
+    /// Load a model file into a named slot (registration-time helper).
+    pub fn load_file(&self, name: &str, path: &str) -> Result<()> {
+        self.insert(name, load_served(path)?);
+        Ok(())
+    }
+
+    /// Hot-swap an existing name from a model file.
+    pub fn swap_file(&self, name: &str, path: &str) -> Result<u64> {
+        self.swap(name, load_served(path)?)
+    }
+}
+
+/// Load either model kind from a JSON file written by
+/// [`model_io::save`] / [`model_io::save_multiclass`], dispatching on
+/// the embedded `format` tag.
+pub fn load_served(path: &str) -> Result<ServedModel> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading model file {path}: {e}"))?;
+    let v = json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+    match v.get("format").as_str() {
+        Some(model_io::FORMAT_REGRESSION) => {
+            Ok(ServedModel::Regression(model_io::model_from_json(&v)?))
+        }
+        Some(model_io::FORMAT_MULTICLASS) => {
+            Ok(ServedModel::Multiclass(model_io::multiclass_from_json(&v)?))
+        }
+        other => Err(anyhow!("{path}: not a falkon model file (format {other:?})")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::falkon::FalkonConfig;
+    use crate::runtime::Engine;
+    use crate::util::rng::Rng;
+
+    fn tiny(seed: u64) -> FalkonModel {
+        let mut rng = Rng::new(seed);
+        let data = synth::smooth_regression(&mut rng, 200, 3, 0.05);
+        let eng = Engine::rust();
+        let cfg = FalkonConfig {
+            sigma: 1.5,
+            lam: 1e-4,
+            m: 16,
+            t: 8,
+            ..Default::default()
+        };
+        crate::falkon::fit(&eng, &data.x, &data.y, &cfg).unwrap()
+    }
+
+    #[test]
+    fn swap_bumps_generation_and_keeps_old_arc_alive() {
+        let slot = ModelSlot::new(ServedModel::Regression(tiny(1)));
+        let (before, g0) = slot.current();
+        assert_eq!(g0, 0);
+        let g1 = slot.swap(ServedModel::Regression(tiny(2)));
+        assert_eq!(g1, 1);
+        assert_eq!(slot.swaps(), 1);
+        let (after, g) = slot.current();
+        assert_eq!(g, 1);
+        // RCU: the pre-swap snapshot still serves (in-flight batches)
+        assert!(!Arc::ptr_eq(&before, &after));
+        assert_eq!(before.d(), 3);
+    }
+
+    #[test]
+    fn registry_swap_requires_known_name() {
+        let reg = ModelRegistry::new();
+        reg.insert("a", ServedModel::Regression(tiny(1)));
+        assert!(reg.swap("a", ServedModel::Regression(tiny(2))).is_ok());
+        let err = reg
+            .swap("missing", ServedModel::Regression(tiny(3)))
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown model"), "{err}");
+        assert_eq!(reg.names(), vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn load_served_dispatches_on_format() {
+        let model = tiny(5);
+        let dir = std::env::temp_dir();
+        let path = dir.join("falkon_registry_reg.json");
+        let path = path.to_str().unwrap();
+        model_io::save(&model, path).unwrap();
+        match load_served(path).unwrap() {
+            ServedModel::Regression(m) => assert_eq!(m.centers.rows, model.centers.rows),
+            ServedModel::Multiclass(_) => panic!("wrong kind"),
+        }
+        let bad = dir.join("falkon_registry_bad.json");
+        std::fs::write(&bad, "{\"format\": \"other\"}").unwrap();
+        assert!(load_served(bad.to_str().unwrap()).is_err());
+        let _ = std::fs::remove_file(path);
+        let _ = std::fs::remove_file(bad);
+    }
+}

@@ -1,8 +1,10 @@
 //! Foundation substrates built from scratch for the offline environment
-//! (DESIGN.md §3): PRNG, JSON, timing, property-test harness, worker pool.
+//! (DESIGN.md §3): PRNG, JSON, timing, property-test harness, worker
+//! pool, serving wire format.
 pub mod fault;
 pub mod json;
 pub mod pool;
 pub mod ptest;
 pub mod rng;
 pub mod timer;
+pub mod wire;

@@ -1,0 +1,222 @@
+//! Little-endian wire substrate for the network serving protocol
+//! (`serve/net.rs`): a bounds-checked frame reader and a frame builder.
+//! Std-only (DESIGN.md §3) — the offline counterpart of `byteorder`.
+//! Every read is length-checked and returns a typed error, never a
+//! panic: frames arrive from untrusted sockets and the serving path is
+//! covered by the CI panic audit.
+
+use anyhow::{anyhow, Result};
+
+/// Bounds-checked sequential reader over one received frame body.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                anyhow!(
+                    "truncated frame: wanted {n} bytes at offset {} of {}",
+                    self.pos,
+                    self.buf.len()
+                )
+            })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+
+    /// f64 transported as raw IEEE-754 bits — predictions cross the wire
+    /// bitwise-exactly, which is what lets the serving tests pin
+    /// network answers to `model.predict` with `==`.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// `count` consecutive f64s.
+    pub fn f64s(&mut self, count: usize) -> Result<Vec<f64>> {
+        // length sanity before allocating: a hostile count must not OOM
+        let remaining = self.buf.len() - self.pos;
+        count
+            .checked_mul(8)
+            .filter(|&b| b <= remaining)
+            .ok_or_else(|| anyhow!("frame claims {count} f64s but holds {remaining} bytes"))?;
+        let mut v = Vec::with_capacity(count);
+        for _ in 0..count {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+
+    /// u32 length-prefixed UTF-8 string.
+    pub fn str_u32(&mut self) -> Result<&'a str> {
+        let len = self.u32()? as usize;
+        std::str::from_utf8(self.take(len)?).map_err(|e| anyhow!("non-UTF-8 string field: {e}"))
+    }
+
+    /// Trailing bytes after the last field are a framing error — they
+    /// mean reader and writer disagree about the layout.
+    pub fn done(&self) -> Result<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(anyhow!(
+                "{} trailing bytes after the last frame field",
+                self.buf.len() - self.pos
+            ))
+        }
+    }
+}
+
+/// Builder for one frame body (the length prefix is written by the
+/// transport when the frame is sent, not stored here).
+#[derive(Default)]
+pub struct Writer {
+    bytes: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer::default()
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.bytes.push(v);
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.bytes.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.bytes.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.u64(v.to_bits())
+    }
+
+    pub fn f64s(&mut self, vs: &[f64]) -> &mut Self {
+        for &v in vs {
+            self.f64(v);
+        }
+        self
+    }
+
+    /// u32 length-prefixed UTF-8 string (lengths ≥ 4 GiB are a caller
+    /// bug surfaced as a typed error by the transport's frame cap).
+    pub fn str_u32(&mut self, s: &str) -> &mut Self {
+        self.u32(s.len() as u32);
+        self.bytes.extend_from_slice(s.as_bytes());
+        self
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_field_types() {
+        let mut w = Writer::new();
+        w.u8(7)
+            .u32(0xDEAD_BEEF)
+            .u64(u64::MAX - 1)
+            .f64(-0.0)
+            .f64s(&[1.5, f64::NEG_INFINITY, f64::NAN])
+            .str_u32("café");
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        // bitwise transport: -0.0 and NaN survive exactly
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        let v = r.f64s(3).unwrap();
+        assert_eq!(v[0], 1.5);
+        assert_eq!(v[1], f64::NEG_INFINITY);
+        assert!(v[2].is_nan());
+        assert_eq!(r.str_u32().unwrap(), "café");
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn truncated_reads_error_without_panicking() {
+        let bytes = vec![1u8, 2, 3];
+        let mut r = Reader::new(&bytes);
+        assert!(r.u32().is_err());
+        let mut r = Reader::new(&bytes);
+        assert!(r.f64s(10).is_err());
+        let mut r = Reader::new(&[5, 0, 0, 0, b'a']);
+        assert!(r.str_u32().is_err(), "string length past the buffer");
+    }
+
+    #[test]
+    fn hostile_f64_count_rejected_before_allocating() {
+        let bytes = vec![0u8; 16];
+        let mut r = Reader::new(&bytes);
+        assert!(r.f64s(usize::MAX / 4).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_are_a_framing_error() {
+        let mut w = Writer::new();
+        w.u8(1).u8(2);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        r.u8().unwrap();
+        assert!(r.done().is_err());
+        r.u8().unwrap();
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn invalid_utf8_is_a_typed_error() {
+        let mut w = Writer::new();
+        w.u32(2);
+        let mut bytes = w.into_bytes();
+        bytes.extend_from_slice(&[0xFF, 0xFE]);
+        let mut r = Reader::new(&bytes);
+        assert!(r.str_u32().is_err());
+    }
+}

@@ -1,0 +1,314 @@
+//! Network serving acceptance tests (pure-Rust engine, loopback TCP).
+//!
+//! The contract under test (DESIGN.md §Serving): predictions over the
+//! wire are **bitwise equal** to direct `model.predict` (f64s travel as
+//! raw IEEE-754 bits), concurrent sockets coalesce into shared predict
+//! sweeps, a malformed request gets a typed error and fails *alone*
+//! (its connection and everyone else's requests keep working), and a
+//! hot swap flips the served model atomically — replies come from the
+//! old model or the new one, never a mix.
+
+use anyhow::Result;
+use falkon::data::{shard, synth};
+use falkon::falkon::{fit, fit_multiclass, model_io, FalkonConfig, FalkonModel};
+use falkon::runtime::Engine;
+use falkon::serve::net::{Client, NetServer};
+use falkon::serve::registry::ModelRegistry;
+use falkon::serve::ServeConfig;
+use falkon::util::rng::Rng;
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+const D: usize = 5;
+
+fn tmp(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("falkon_net_{tag}_{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn fit_cfg(seed: u64) -> FalkonConfig {
+    FalkonConfig {
+        sigma: 2.0,
+        lam: 1e-4,
+        m: 48,
+        t: 6,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Train a small regression model, save it, and return the **re-loaded**
+/// copy so oracle predictions match the served file bit for bit.
+fn train_saved(seed: u64, path: &str) -> Result<FalkonModel> {
+    let mut rng = Rng::new(seed);
+    let data = synth::smooth_regression(&mut rng, 400, D, 0.05);
+    let model = fit(&Engine::rust(), &data.x, &data.y, &fit_cfg(seed))?;
+    model_io::save(&model, path)?;
+    model_io::load(path)
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        max_batch: 64,
+        max_wait: Duration::from_millis(4),
+        ..Default::default()
+    }
+}
+
+fn serve_one(path: &str) -> Result<NetServer> {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.load_file("default", path)?;
+    NetServer::start(registry, serve_cfg(), "127.0.0.1:0")
+}
+
+#[test]
+fn net_predictions_bitwise_match_direct_predict() -> Result<()> {
+    let path = tmp("bitwise");
+    let model = train_saved(3, &path)?;
+    let srv = serve_one(&path)?;
+    let addr = srv.addr().to_string();
+
+    let mut rng = Rng::new(77);
+    let probe = synth::smooth_regression(&mut rng, 40, D, 0.05);
+    let oracle = model.predict(&Engine::rust(), &probe.x)?;
+
+    let mut c = Client::connect(&addr)?;
+    for i in 0..8 {
+        let got = c.predict_one("default", probe.x.row(i))?;
+        assert_eq!(got.to_bits(), oracle[i].to_bits(), "row {i} drifted over the wire");
+    }
+    let got = c.predict_batch("default", 40, &probe.x.data)?;
+    assert_eq!(got.len(), 40);
+    for i in 0..40 {
+        assert_eq!(got[i].to_bits(), oracle[i].to_bits(), "batch row {i} drifted");
+    }
+
+    // unknown model and kind-mismatched op are typed errors, and the
+    // connection survives both
+    let err = c.predict_one("nope", probe.x.row(0)).unwrap_err();
+    assert!(err.to_string().contains("unknown model"), "got: {err:#}");
+    let err = c.predict_class("default", 1, probe.x.row(0)).unwrap_err();
+    assert!(err.to_string().contains("regression"), "got: {err:#}");
+    let after = c.predict_one("default", probe.x.row(0))?;
+    assert_eq!(after.to_bits(), oracle[0].to_bits());
+
+    let _ = std::fs::remove_file(&path);
+    srv.stop();
+    Ok(())
+}
+
+#[test]
+fn concurrent_net_clients_coalesce_into_shared_batches() -> Result<()> {
+    let path = tmp("coalesce");
+    let model = train_saved(5, &path)?;
+    let srv = serve_one(&path)?;
+    let addr = srv.addr().to_string();
+
+    let mut rng = Rng::new(78);
+    let probe = synth::smooth_regression(&mut rng, 64, D, 0.05);
+    let oracle = model.predict(&Engine::rust(), &probe.x)?;
+
+    const CLIENTS: usize = 16;
+    const PER_CLIENT: usize = 8;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|ci| {
+                let addr = addr.clone();
+                let probe = &probe;
+                let oracle = &oracle;
+                s.spawn(move || -> Result<()> {
+                    let mut c = Client::connect(&addr)?;
+                    for i in 0..PER_CLIENT {
+                        let row = (ci * PER_CLIENT + i) % probe.x.rows;
+                        let got = c.predict_one("default", probe.x.row(row))?;
+                        anyhow::ensure!(
+                            got.to_bits() == oracle[row].to_bits(),
+                            "client {ci} row {row}: batched reply != serial oracle"
+                        );
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("client thread panicked")?;
+        }
+        anyhow::Ok(())
+    })?;
+
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    let stats = srv.stop().remove("default").expect("stats for served model");
+    assert_eq!(stats.requests, total, "every request must be counted");
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.rows, total);
+    assert!(
+        stats.batches < total,
+        "{} batches for {total} concurrent requests: no cross-connection coalescing",
+        stats.batches
+    );
+    assert!(stats.mean_batch > 1.0, "mean batch {}", stats.mean_batch);
+    let _ = std::fs::remove_file(&path);
+    Ok(())
+}
+
+#[test]
+fn malformed_net_request_fails_alone() -> Result<()> {
+    let path = tmp("malformed");
+    let model = train_saved(7, &path)?;
+    let srv = serve_one(&path)?;
+    let addr = srv.addr().to_string();
+
+    let mut rng = Rng::new(79);
+    let probe = synth::smooth_regression(&mut rng, 4, D, 0.05);
+    let oracle = model.predict(&Engine::rust(), &probe.x)?;
+
+    // wrong feature count: rejected at the queue boundary with a typed
+    // error naming the model dimension; the same connection then serves
+    // a well-formed request
+    let mut c = Client::connect(&addr)?;
+    let err = c.predict_one("default", &[1.0, 2.0]).unwrap_err();
+    assert!(err.to_string().contains("model dim"), "got: {err:#}");
+    let got = c.predict_one("default", probe.x.row(0))?;
+    assert_eq!(got.to_bits(), oracle[0].to_bits());
+
+    let stats = c.stats("default")?;
+    assert_eq!(stats.serve.rejected, 1, "the malformed request must be counted");
+    assert_eq!(stats.serve.requests, 2, "rejected requests still count as requests");
+
+    // protocol-level garbage (unknown op byte) gets an error frame and
+    // the server keeps accepting new connections
+    let mut raw = std::net::TcpStream::connect(&addr)?;
+    let mut body = vec![99u8];
+    body.extend_from_slice(&7u32.to_le_bytes());
+    body.extend_from_slice(b"default");
+    raw.write_all(&(body.len() as u32).to_le_bytes())?;
+    raw.write_all(&body)?;
+    let mut len_buf = [0u8; 4];
+    raw.read_exact(&mut len_buf)?;
+    let mut reply = vec![0u8; u32::from_le_bytes(len_buf) as usize];
+    raw.read_exact(&mut reply)?;
+    assert_eq!(reply[0], 1, "unknown op must produce an error frame");
+    drop(raw);
+
+    let mut c2 = Client::connect(&addr)?;
+    let got = c2.predict_one("default", probe.x.row(1))?;
+    assert_eq!(got.to_bits(), oracle[1].to_bits());
+
+    let _ = std::fs::remove_file(&path);
+    srv.stop();
+    Ok(())
+}
+
+#[test]
+fn hot_swap_over_socket_is_atomic() -> Result<()> {
+    let path_a = tmp("swap_a");
+    let path_b = tmp("swap_b");
+    let model_a = train_saved(11, &path_a)?;
+    let model_b = train_saved(13, &path_b)?;
+    let srv = serve_one(&path_a)?;
+    let addr = srv.addr().to_string();
+
+    let mut rng = Rng::new(80);
+    let probe = synth::smooth_regression(&mut rng, 16, D, 0.05);
+    let eng = Engine::rust();
+    let oracle_a = model_a.predict(&eng, &probe.x)?;
+    let oracle_b = model_b.predict(&eng, &probe.x)?;
+    assert!(
+        oracle_a
+            .iter()
+            .zip(&oracle_b)
+            .any(|(a, b)| a.to_bits() != b.to_bits()),
+        "the two checkpoints must actually disagree for this test to mean anything"
+    );
+
+    let mut c = Client::connect(&addr)?;
+    let before = c.predict_batch("default", 16, &probe.x.data)?;
+    for i in 0..16 {
+        assert_eq!(before[i].to_bits(), oracle_a[i].to_bits());
+    }
+
+    let generation = c.swap("default", &path_b)?;
+    assert_eq!(generation, 1, "first swap must move the slot to generation 1");
+    let after = c.predict_batch("default", 16, &probe.x.data)?;
+    for i in 0..16 {
+        assert_eq!(after[i].to_bits(), oracle_b[i].to_bits(), "row {i} still on old model");
+    }
+    assert_eq!(c.stats("default")?.swaps, 1);
+
+    let _ = std::fs::remove_file(&path_a);
+    let _ = std::fs::remove_file(&path_b);
+    srv.stop();
+    Ok(())
+}
+
+#[test]
+fn multiclass_over_socket_matches_direct() -> Result<()> {
+    let path = tmp("multiclass");
+    let mut rng = Rng::new(17);
+    let data = synth::blobs(&mut rng, 300, D, 3);
+    let eng = Engine::rust();
+    let model = fit_multiclass(&eng, &data, &fit_cfg(17))?;
+    model_io::save_multiclass(&model, &path)?;
+    let model = model_io::load_multiclass(&path)?;
+
+    let srv = serve_one(&path)?;
+    let addr = srv.addr().to_string();
+
+    let probe = synth::blobs(&mut rng, 24, D, 3);
+    let want_class = model.predict_class(&eng, &probe.x)?;
+    let want_scores = model.scores(&eng, &probe.x)?;
+
+    let mut c = Client::connect(&addr)?;
+    let got = c.predict_class("default", 24, &probe.x.data)?;
+    assert_eq!(got.len(), 24);
+    for (i, p) in got.iter().enumerate() {
+        assert_eq!(p.class, want_class[i], "row {i} argmax");
+        assert_eq!(p.scores.len(), 3);
+        for (kc, s) in p.scores.iter().enumerate() {
+            assert_eq!(s.to_bits(), want_scores[kc][i].to_bits(), "row {i} class {kc} score");
+        }
+    }
+
+    // regression ops on a multiclass model are typed errors
+    let err = c.predict_one("default", probe.x.row(0)).unwrap_err();
+    assert!(err.to_string().contains("multiclass"), "got: {err:#}");
+
+    let _ = std::fs::remove_file(&path);
+    srv.stop();
+    Ok(())
+}
+
+#[test]
+fn score_shard_op_scores_a_server_side_file() -> Result<()> {
+    let model_path = tmp("shard_model");
+    let shard_path = tmp("shard_data");
+    let model = train_saved(19, &model_path)?;
+    let srv = serve_one(&model_path)?;
+    let addr = srv.addr().to_string();
+
+    let mut rng = Rng::new(23);
+    let data = synth::smooth_regression(&mut rng, 200, D, 0.05);
+    shard::write_dataset(&shard_path, &data)?;
+    let preds = model.predict(&Engine::rust(), &data.x)?;
+    let want_mse = falkon::metrics::mse(&preds, &data.y);
+
+    let mut c = Client::connect(&addr)?;
+    let score = c.score_shard("default", &shard_path, 64)?;
+    assert_eq!(score.rows, 200);
+    assert_eq!(score.skipped_rows, 0);
+    assert!(score.max_chunk_bytes > 0);
+    assert!(
+        (score.mse - want_mse).abs() <= 1e-8 * want_mse.max(1.0),
+        "chunked shard mse {} vs direct {want_mse}",
+        score.mse
+    );
+    assert!((score.rmse - score.mse.sqrt()).abs() < 1e-12);
+
+    let _ = std::fs::remove_file(&model_path);
+    let _ = std::fs::remove_file(&shard_path);
+    srv.stop();
+    Ok(())
+}
