@@ -217,23 +217,44 @@ pub fn low_effective_dim(rng: &mut Rng, n: usize, d: usize, d_eff: usize) -> Dat
     Dataset::new_regression("low_eff_dim", x, y)
 }
 
+/// How many distant sub-clusters [`rare_cluster`] scatters its rare mass
+/// over. Each sub-cluster needs its own Nyström center, so uniform
+/// sampling must land a draw in every one while leverage-score sampling
+/// is steered there by the scores.
+pub const RARE_SUBCLUSTERS: usize = 5;
+
 /// Imbalanced design for the leverage-scores ablation: a dominant blob
-/// plus a small (`rare_frac`) distant cluster with its own target level.
-/// The rare cluster's points carry high ridge leverage scores, so
-/// leverage-score sampling reliably allocates centers there while uniform
-/// sampling misses it at small M — the regime where Thm. 4-5 predict a
+/// plus a small (`rare_frac`) slice of mass scattered over
+/// [`RARE_SUBCLUSTERS`] distant sub-clusters sharing a target level.
+/// Every rare point is shifted by +8 on coordinate 0 (so the rare mass
+/// is linearly separable from the bulk) and by +8 on one of
+/// `RARE_SUBCLUSTERS` additional coordinates picking its sub-cluster.
+/// The rare points carry high ridge leverage scores, so leverage-score
+/// sampling reliably covers all sub-clusters while uniform sampling
+/// misses some at small M — the regime where Thm. 4-5 predict a
 /// separation.
 pub fn rare_cluster(rng: &mut Rng, n: usize, d: usize, rare_frac: f64) -> Dataset {
+    assert!(d >= 2, "rare_cluster needs d >= 2");
     let mut x = Mat::zeros(n, d);
     let mut y = vec![0.0; n];
     let f = BumpMix::new(rng, 10, d, 2.0);
     for i in 0..n {
         let rare = rng.f64() < rare_frac;
+        let sub = if rare {
+            Some(1 + rng.below(RARE_SUBCLUSTERS) % (d - 1))
+        } else {
+            None
+        };
         let row = x.row_mut(i);
         for (j, v) in row.iter_mut().enumerate() {
-            *v = rng.normal() + if rare && j < 3 { 8.0 } else { 0.0 };
+            let shift = if rare && (j == 0 || Some(j) == sub) {
+                8.0
+            } else {
+                0.0
+            };
+            *v = rng.normal() + shift;
         }
-        y[i] = if rare { 3.0 } else { f.eval(row) } + 0.05 * rng.normal();
+        y[i] = if rare { 4.0 } else { f.eval(row) } + 0.05 * rng.normal();
     }
     Dataset::new_regression("rare_cluster", x, y)
 }
@@ -366,6 +387,12 @@ mod tests {
         let d = rare_cluster(&mut Rng::new(8), 5000, 6, 0.03);
         let rare = (0..d.n()).filter(|&i| d.x[(i, 0)] > 4.0).count();
         assert!((100..260).contains(&rare), "rare count {rare}");
+        // the rare mass is scattered over all sub-clusters (coords 1..=5)
+        let subs: std::collections::HashSet<usize> = (0..d.n())
+            .filter(|&i| d.x[(i, 0)] > 4.0)
+            .filter_map(|i| (1..6).find(|&j| d.x[(i, j)] > 4.0))
+            .collect();
+        assert_eq!(subs.len(), RARE_SUBCLUSTERS, "sub-clusters {subs:?}");
     }
 
     #[test]

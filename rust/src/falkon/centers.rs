@@ -1,11 +1,14 @@
 //! Nyström center selection — Sect. A of the paper: uniform sampling and
 //! approximate-leverage-score sampling with the Def. 2 reweighting matrix D.
 
+use crate::data::source::DataSource;
 use crate::linalg::mat::Mat;
 use crate::linalg::mat32::XBlock;
 use crate::runtime::Engine;
 use crate::util::rng::{CategoricalSampler, Rng};
 use anyhow::Result;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Center-selection strategy.
 #[derive(Debug, Clone)]
@@ -60,6 +63,189 @@ impl Centers {
                     d_weights: Some(d_weights),
                     scores: Some(scores),
                 })
+            }
+        }
+    }
+
+    /// Streamed [`Centers::select`] over a rewindable [`DataSource`] —
+    /// the selection phase of `prepare_source`. Collects the targets
+    /// into `y_out` during the first pass (they are O(n) coordinator
+    /// state either way), and returns the same
+    /// [`SelectedCenters`] contract as the in-memory path.
+    ///
+    /// * `Uniform`, known length: the **same** `rng.choose(n, m)` draw as
+    ///   the in-memory path, gathered by [`CenterGather`] — bit-identical
+    ///   centers at equal seed.
+    /// * `Uniform`, unknown length: Algorithm-R [`Reservoir`].
+    /// * `ApproxLeverage`, known length: the streamed sketch
+    ///   ([`super::lscores::sketch_source`]), scores materialized in a
+    ///   chunked pass (O(n) like the targets), then the same
+    ///   [`sample_by_scores`] draw as in-memory — equal centers, weights
+    ///   and rng stream position at equal seed — and one more gather pass
+    ///   for the center rows.
+    /// * `ApproxLeverage`, unknown length: chunk scores feed a
+    ///   [`WeightedReservoir`], so centers are drawn ∝ l̂_i(λ) without
+    ///   ever holding all n scores.
+    ///
+    /// Every pass runs under the engine's retry policy. The caller owns
+    /// `source.reset()` ordering — this method always rewinds first.
+    #[allow(clippy::too_many_arguments)]
+    pub fn select_source(
+        &self,
+        engine: &Engine,
+        source: &mut dyn DataSource,
+        kern: crate::kernels::Kernel,
+        sigma: f64,
+        lam: f64,
+        m: usize,
+        rng: &mut Rng,
+        y_out: &mut Vec<f64>,
+    ) -> Result<SelectedCenters> {
+        let retry = engine.opts().retry;
+        let d = source.d();
+        anyhow::ensure!(d > 0, "source has no features");
+        match self {
+            Centers::Uniform => {
+                retry.run("center pass: reset", || source.reset())?;
+                let (c, indices) = match source.len_hint() {
+                    Some(n) => {
+                        anyhow::ensure!(n > 0, "source is empty");
+                        // same draw as Centers::Uniform on the in-memory path
+                        let indices = rng.choose(n, m.min(n));
+                        let mut gather = CenterGather::new(&indices, d);
+                        let mut seen = 0usize;
+                        while let Some(chunk) =
+                            retry.run("centers: next_chunk", || source.next_chunk())?
+                        {
+                            anyhow::ensure!(
+                                chunk.start == seen,
+                                "source chunks must be contiguous"
+                            );
+                            seen += chunk.x.rows();
+                            gather.offer_block(chunk.start, &chunk.x);
+                            y_out.extend_from_slice(&chunk.y);
+                        }
+                        anyhow::ensure!(seen == n, "source yielded {seen} rows, len_hint said {n}");
+                        (gather.finish()?, indices)
+                    }
+                    None => {
+                        let mut res = Reservoir::new(m.max(1), d);
+                        let mut seen = 0usize;
+                        let mut row = vec![0.0f64; d];
+                        while let Some(chunk) =
+                            retry.run("centers: next_chunk", || source.next_chunk())?
+                        {
+                            anyhow::ensure!(
+                                chunk.start == seen,
+                                "source chunks must be contiguous"
+                            );
+                            let rows = chunk.x.rows();
+                            seen += rows;
+                            for i in 0..rows {
+                                chunk.x.row_f64_into(i, &mut row);
+                                res.push(&row, rng);
+                            }
+                            y_out.extend_from_slice(&chunk.y);
+                        }
+                        anyhow::ensure!(seen > 0, "source is empty");
+                        res.finish()
+                    }
+                };
+                Ok(SelectedCenters {
+                    c,
+                    indices,
+                    d_weights: None,
+                    scores: None,
+                })
+            }
+            Centers::ApproxLeverage { sketch } => {
+                // passes 0-1: pilot + Gram sketch (collects the targets)
+                let (sk, n) = super::lscores::sketch_source(
+                    engine,
+                    source,
+                    kern,
+                    sigma,
+                    lam,
+                    *sketch,
+                    rng,
+                    Some(y_out),
+                )?;
+                match source.len_hint() {
+                    Some(len) => {
+                        debug_assert_eq!(len, n);
+                        // pass 2: materialize the scores, then the same
+                        // sample_by_scores draw as the in-memory path
+                        retry.run("center scores: reset", || source.reset())?;
+                        let mut scores: Vec<f64> = Vec::with_capacity(n);
+                        while let Some(chunk) =
+                            retry.run("center scores: next_chunk", || source.next_chunk())?
+                        {
+                            anyhow::ensure!(
+                                chunk.start == scores.len(),
+                                "source chunks must be contiguous"
+                            );
+                            scores.extend(sk.score_block(engine, &chunk.x)?);
+                        }
+                        anyhow::ensure!(
+                            scores.len() == n,
+                            "source yielded {} rows in the scoring pass, expected {n}",
+                            scores.len()
+                        );
+                        let (indices, d_weights) = sample_by_scores(&scores, m, n, rng);
+                        // pass 3: gather the drawn center rows
+                        retry.run("center gather: reset", || source.reset())?;
+                        let mut gather = CenterGather::new(&indices, d);
+                        let mut seen = 0usize;
+                        while let Some(chunk) =
+                            retry.run("center gather: next_chunk", || source.next_chunk())?
+                        {
+                            anyhow::ensure!(
+                                chunk.start == seen,
+                                "source chunks must be contiguous"
+                            );
+                            seen += chunk.x.rows();
+                            gather.offer_block(chunk.start, &chunk.x);
+                        }
+                        Ok(SelectedCenters {
+                            c: gather.finish()?,
+                            indices,
+                            d_weights: Some(d_weights),
+                            scores: Some(scores),
+                        })
+                    }
+                    None => {
+                        // pass 2: score each chunk and feed the weighted
+                        // reservoir — no O(n) score vector is ever held
+                        retry.run("center scores: reset", || source.reset())?;
+                        let mut wr = WeightedReservoir::new(m.min(n).max(1), d);
+                        let mut row = vec![0.0f64; d];
+                        while let Some(chunk) =
+                            retry.run("center scores: next_chunk", || source.next_chunk())?
+                        {
+                            anyhow::ensure!(
+                                chunk.start == wr.seen(),
+                                "source chunks must be contiguous"
+                            );
+                            let s = sk.score_block(engine, &chunk.x)?;
+                            for (i, &si) in s.iter().enumerate() {
+                                chunk.x.row_f64_into(i, &mut row);
+                                wr.push(&row, si, rng);
+                            }
+                        }
+                        anyhow::ensure!(
+                            wr.seen() == n,
+                            "source yielded {} rows in the scoring pass, expected {n}",
+                            wr.seen()
+                        );
+                        let (c, indices, d_weights) = wr.finish();
+                        Ok(SelectedCenters {
+                            c,
+                            indices,
+                            d_weights: Some(d_weights),
+                            scores: None,
+                        })
+                    }
+                }
             }
         }
     }
@@ -249,6 +435,152 @@ impl CenterGather {
     }
 }
 
+/// Heap entry of the [`WeightedReservoir`]: the A-Res key of a kept row
+/// and its reservoir slot. Ordered by key (total order via `total_cmp`,
+/// ties broken by slot) so a `Reverse`-wrapped binary heap pops the
+/// smallest key first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct HeapKey {
+    key: u64,
+    slot: usize,
+}
+
+impl HeapKey {
+    fn new(key: f64, slot: usize) -> HeapKey {
+        // map f64 to an order-preserving u64 so the heap entry is Eq/Ord
+        // without float edge cases: flip the sign bit for positives,
+        // all bits for negatives (keys here are ≤ 0, but keep it total)
+        let bits = key.to_bits();
+        let mapped = if bits >> 63 == 0 {
+            bits | (1 << 63)
+        } else {
+            !bits
+        };
+        HeapKey { key: mapped, slot }
+    }
+}
+
+impl Ord for HeapKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key.cmp(&other.key).then(self.slot.cmp(&other.slot))
+    }
+}
+
+impl PartialOrd for HeapKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Weighted reservoir sampler (Efraimidis–Spirakis A-Res) over a row
+/// stream: after pushing every row once with its weight (here the
+/// approximate leverage score), the kept rows are an m-subset drawn
+/// without replacement with inclusion probability increasing in weight —
+/// the streaming counterpart of [`sample_by_scores`] for sources whose
+/// length (and score vector) never fits in memory at once.
+///
+/// Each pushed row draws one key `ln(u)/w` (u uniform, the log-domain
+/// A-Res key) and the m largest keys win, tracked by a min-heap keyed on
+/// the smallest kept key. Exactly one rng draw happens per pushed row
+/// regardless of keep/evict, so the selection is a deterministic
+/// function of (stream order, weights, seed).
+///
+/// [`WeightedReservoir::finish`] also emits the Def. 2 reweighting
+/// D_jj = 1/√(n·p_j) with p_j = w_j / Σw — the same formula
+/// [`sample_by_scores`] uses, with the stream total standing in for the
+/// in-memory score sum.
+pub struct WeightedReservoir {
+    m: usize,
+    rows: Mat,
+    indices: Vec<usize>,
+    scores: Vec<f64>,
+    heap: BinaryHeap<Reverse<HeapKey>>,
+    seen: usize,
+    total: f64,
+}
+
+impl WeightedReservoir {
+    pub fn new(m: usize, d: usize) -> WeightedReservoir {
+        assert!(m > 0, "weighted reservoir needs m > 0");
+        WeightedReservoir {
+            m,
+            rows: Mat::zeros(m, d),
+            indices: Vec::with_capacity(m),
+            scores: Vec::with_capacity(m),
+            heap: BinaryHeap::with_capacity(m),
+            seen: 0,
+            total: 0.0,
+        }
+    }
+
+    /// Offer the next stream row with its sampling weight (global index =
+    /// rows pushed so far). Non-finite or negative weights are clamped to
+    /// zero: such a row only survives if the stream never offers m
+    /// positive-weight rows.
+    pub fn push(&mut self, row: &[f64], score: f64, rng: &mut Rng) {
+        let w = if score.is_finite() { score.max(0.0) } else { 0.0 };
+        self.total += w;
+        // one rng draw per row, keep or not — determinism does not depend
+        // on the heap state
+        let u = rng.f64();
+        let key = if w > 0.0 {
+            // ln(u)/w with u in [0,1): ln(0) = -inf handles u == 0
+            u.ln() / w
+        } else {
+            f64::NEG_INFINITY
+        };
+        if self.indices.len() < self.m {
+            let slot = self.indices.len();
+            self.rows.row_mut(slot).copy_from_slice(row);
+            self.indices.push(self.seen);
+            self.scores.push(w);
+            self.heap.push(Reverse(HeapKey::new(key, slot)));
+        } else if let Some(&Reverse(min)) = self.heap.peek() {
+            if HeapKey::new(key, min.slot) > min {
+                let slot = min.slot;
+                self.heap.pop();
+                self.rows.row_mut(slot).copy_from_slice(row);
+                self.indices[slot] = self.seen;
+                self.scores[slot] = w;
+                self.heap.push(Reverse(HeapKey::new(key, slot)));
+            }
+        }
+        self.seen += 1;
+    }
+
+    /// Rows offered so far.
+    pub fn seen(&self) -> usize {
+        self.seen
+    }
+
+    /// The sampled rows, their global stream indices, and the Def. 2
+    /// weights D_jj = 1/√(n·p_j) (trimmed if the stream had fewer than
+    /// `m` rows).
+    pub fn finish(self) -> (Mat, Vec<usize>, Vec<f64>) {
+        let n = self.seen as f64;
+        let total = self.total;
+        let d_weights: Vec<f64> = self
+            .scores
+            .iter()
+            .map(|&s| {
+                let p = if total > 0.0 {
+                    (s / total).max(1e-300)
+                } else {
+                    1e-300
+                };
+                1.0 / (n * p).sqrt()
+            })
+            .collect();
+        let kept = self.indices.len();
+        let rows = if kept < self.m {
+            self.rows.slice_rows(0, kept)
+        } else {
+            self.rows
+        };
+        (rows, self.indices, d_weights)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -406,5 +738,132 @@ mod tests {
         let mut g = CenterGather::new(&[5, 2], 2);
         g.offer(0, &Mat::zeros(3, 2));
         assert!(g.finish().is_err());
+    }
+
+    #[test]
+    fn weighted_reservoir_exact_m_distinct_and_matches_stream_rows() {
+        let mut rng = Rng::new(21);
+        let n = 400;
+        let x = Mat::from_vec(n, 3, rng.normals(n * 3));
+        let mut wr = WeightedReservoir::new(25, 3);
+        for i in 0..n {
+            wr.push(x.row(i), 1.0 + (i % 7) as f64, &mut rng);
+        }
+        assert_eq!(wr.seen(), n);
+        let (c, idx, w) = wr.finish();
+        assert_eq!(c.rows, 25);
+        assert_eq!(idx.len(), 25);
+        assert_eq!(w.len(), 25);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 25, "indices must be distinct");
+        for (k, &i) in idx.iter().enumerate() {
+            assert_eq!(c.row(k), x.row(i), "kept row {k} != stream row {i}");
+        }
+    }
+
+    #[test]
+    fn weighted_reservoir_def2_weights_agree_with_sample_by_scores() {
+        // the streamed sampler must emit the same D_jj = 1/sqrt(n p_j)
+        // formula sample_by_scores computes from the in-memory score
+        // vector (with the stream total standing in for the score sum)
+        let mut rng = Rng::new(22);
+        let n = 120;
+        let scores: Vec<f64> = (0..n).map(|i| 0.5 + (i % 11) as f64).collect();
+        let total: f64 = scores.iter().sum();
+        let mut wr = WeightedReservoir::new(15, 1);
+        for (i, &s) in scores.iter().enumerate() {
+            wr.push(&[i as f64], s, &mut rng);
+        }
+        let (_, idx, w) = wr.finish();
+        // reference: the exact per-index probs sample_by_scores derives
+        let probs: Vec<f64> = scores.iter().map(|s| (s / total).max(1e-300)).collect();
+        for (k, &i) in idx.iter().enumerate() {
+            let want = 1.0 / (n as f64 * probs[i]).sqrt();
+            assert!(
+                (w[k] - want).abs() < 1e-12,
+                "weight of index {i}: {} vs {}",
+                w[k],
+                want
+            );
+        }
+        // and against sample_by_scores directly on a shared index
+        let (idx2, w2) = sample_by_scores(&scores, 15, n, &mut rng);
+        for (k, &i) in idx.iter().enumerate() {
+            if let Some(k2) = idx2.iter().position(|&j| j == i) {
+                assert!(
+                    (w[k] - w2[k2]).abs() < 1e-12,
+                    "index {i}: streamed {} vs in-memory {}",
+                    w[k],
+                    w2[k2]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_reservoir_prefers_high_scores() {
+        // mirror of score_sampling_prefers_high_scores on the streamed
+        // sampler: 20 high-score rows out of 200 should dominate
+        let mut rng = Rng::new(23);
+        let n = 200;
+        let mut scores = vec![0.01; n];
+        for s in scores.iter_mut().take(20) {
+            *s = 10.0;
+        }
+        let mut hits = 0;
+        for _ in 0..50 {
+            let mut wr = WeightedReservoir::new(10, 1);
+            for (i, &s) in scores.iter().enumerate() {
+                wr.push(&[i as f64], s, &mut rng);
+            }
+            let (_, idx, _) = wr.finish();
+            hits += idx.iter().filter(|&&i| i < 20).count();
+        }
+        assert!(hits > 350, "hits {hits}");
+    }
+
+    #[test]
+    fn weighted_reservoir_short_stream_keeps_everything() {
+        let mut rng = Rng::new(24);
+        let x = Mat::from_vec(6, 2, rng.normals(12));
+        let mut wr = WeightedReservoir::new(20, 2);
+        for i in 0..6 {
+            wr.push(x.row(i), 1.0, &mut rng);
+        }
+        let (c, idx, w) = wr.finish();
+        assert_eq!(c.rows, 6);
+        assert_eq!(idx, (0..6).collect::<Vec<_>>());
+        assert_eq!(w.len(), 6);
+        assert_eq!(c.data, x.data);
+    }
+
+    #[test]
+    fn weighted_reservoir_degenerate_scores_still_fill() {
+        // zero/negative/non-finite weights: rows still fill free slots,
+        // the reservoir keeps exactly m, and the weights stay finite
+        let mut rng = Rng::new(25);
+        let n = 60;
+        let mut wr = WeightedReservoir::new(8, 1);
+        for i in 0..n {
+            let s = match i % 4 {
+                0 => 0.0,
+                1 => -3.0,
+                2 => f64::NAN,
+                _ => 1.0,
+            };
+            wr.push(&[i as f64], s, &mut rng);
+        }
+        let (c, idx, w) = wr.finish();
+        assert_eq!(c.rows, 8);
+        assert_eq!(idx.len(), 8);
+        for &v in &w {
+            assert!(v.is_finite() && v > 0.0, "weight {v}");
+        }
+        // with positive-weight rows available, only those survive
+        for &i in &idx {
+            assert_eq!(i % 4, 3, "kept a zero-weight row {i}");
+        }
     }
 }

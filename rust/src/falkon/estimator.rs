@@ -22,7 +22,7 @@ use crate::util::rng::Rng;
 use crate::util::timer::{Phases, Timer};
 use anyhow::{Context, Result};
 
-use super::centers::{CenterGather, Centers, Reservoir, SelectedCenters};
+use super::centers::{Centers, SelectedCenters};
 use super::cg::{
     block_conjgrad, conjgrad_resumable, BlockCgResult, CgOptions, CgResult, CgState, CgStop,
 };
@@ -440,12 +440,16 @@ pub fn prepare(engine: &Engine, x: &Mat, config: &FalkonConfig) -> Result<FitSta
 /// plan re-streams the source on every CG iteration
 /// (DESIGN.md § "Out-of-core path").
 ///
-/// Center selection: sources that know their length (`len_hint`) draw
-/// the **same uniform indices as the in-memory fit** at equal seed and
-/// gather them during the pass, so a streamed fit reproduces the
-/// in-memory fit bit-for-bit; unknown-length sources fall back to
-/// reservoir sampling ([`Reservoir`]). Leverage-score selection needs
-/// the dense sketch in memory and is rejected.
+/// Center selection runs via [`Centers::select_source`]: sources that
+/// know their length (`len_hint`) make the **same rng draws as the
+/// in-memory fit** at equal seed — uniform indices gathered during the
+/// pass, or leverage scores streamed through the chunked sketch
+/// (`lscores::sketch_source`) and fed to the same `sample_by_scores`
+/// draw — so a streamed fit reproduces the in-memory fit (bit-for-bit
+/// for uniform, ≤1e-8 for leverage where the Gram accumulation order
+/// differs); unknown-length sources fall back to reservoir sampling
+/// ([`super::centers::Reservoir`] uniform,
+/// [`super::centers::WeightedReservoir`] score-proportional).
 ///
 /// Returns the prepared state plus the collected targets.
 pub fn prepare_source(
@@ -453,11 +457,6 @@ pub fn prepare_source(
     mut source: Box<dyn DataSource>,
     config: &FalkonConfig,
 ) -> Result<(FitState, Vec<f64>)> {
-    anyhow::ensure!(
-        matches!(config.centers, Centers::Uniform),
-        "streaming fits support uniform center selection only \
-         (leverage scores need the dense sketch in memory)"
-    );
     anyhow::ensure!(
         source.n_classes() <= 2,
         "streaming fits support regression/binary targets ({}-class source); \
@@ -470,50 +469,18 @@ pub fn prepare_source(
     let d = source.d();
     anyhow::ensure!(d > 0, "source has no features");
 
-    let retry = engine.opts().retry;
     let mut y: Vec<f64> = Vec::new();
     let sel = phases.time("centers", || -> Result<SelectedCenters> {
-        retry.run("center pass: reset", || source.reset())?;
-        let (c, indices) = match source.len_hint() {
-            Some(n) => {
-                anyhow::ensure!(n > 0, "source is empty");
-                // same draw as Centers::Uniform on the in-memory path
-                let indices = rng.choose(n, config.m.min(n));
-                let mut gather = CenterGather::new(&indices, d);
-                let mut seen = 0usize;
-                while let Some(chunk) = retry.run("centers: next_chunk", || source.next_chunk())? {
-                    anyhow::ensure!(chunk.start == seen, "source chunks must be contiguous");
-                    seen += chunk.x.rows();
-                    gather.offer_block(chunk.start, &chunk.x);
-                    y.extend_from_slice(&chunk.y);
-                }
-                anyhow::ensure!(seen == n, "source yielded {seen} rows, len_hint said {n}");
-                (gather.finish()?, indices)
-            }
-            None => {
-                let mut res = Reservoir::new(config.m.max(1), d);
-                let mut seen = 0usize;
-                let mut row = vec![0.0f64; d];
-                while let Some(chunk) = retry.run("centers: next_chunk", || source.next_chunk())? {
-                    anyhow::ensure!(chunk.start == seen, "source chunks must be contiguous");
-                    let rows = chunk.x.rows();
-                    seen += rows;
-                    for i in 0..rows {
-                        chunk.x.row_f64_into(i, &mut row);
-                        res.push(&row, &mut rng);
-                    }
-                    y.extend_from_slice(&chunk.y);
-                }
-                anyhow::ensure!(seen > 0, "source is empty");
-                res.finish()
-            }
-        };
-        Ok(SelectedCenters {
-            c,
-            indices,
-            d_weights: None,
-            scores: None,
-        })
+        config.centers.select_source(
+            engine,
+            source.as_mut(),
+            config.kernel,
+            config.sigma,
+            config.lam,
+            config.m,
+            &mut rng,
+            &mut y,
+        )
     })?;
     let n = y.len();
     let skipped = source.skipped_rows();
@@ -523,7 +490,10 @@ pub fn prepare_source(
 
     let (t_factor, a_factor, q_factor) =
         phases.time("precond", || -> Result<(Mat, Mat, Option<Mat>)> {
-            let kmm = engine.kmm(config.kernel, &sel.c, config.sigma)?;
+            let mut kmm = engine.kmm(config.kernel, &sel.c, config.sigma)?;
+            if let Some(dw) = &sel.d_weights {
+                kmm.scale_sym_diag(dw); // K_MM -> D K_MM D (Def. 3)
+            }
             setup_precond(engine, &kmm, config, &mut report)
         })?;
 
@@ -778,7 +748,10 @@ pub fn fit_with_callback(
 ///
 /// For a source with a known length this is **bit-identical** to the
 /// in-memory [`fit`] on the same data, seed and (serial) engine — the
-/// end-to-end property the out-of-core tests pin.
+/// end-to-end property the out-of-core tests pin. Leverage-score center
+/// selection ([`Centers::ApproxLeverage`]) streams too: the pilot/Gram/
+/// scoring passes run chunked with O(sketch² + chunk) working memory
+/// (see [`crate::falkon::lscores::approx_leverage_scores_source`]).
 ///
 /// ```
 /// use falkon::data::{synth, MemSource};
@@ -1278,15 +1251,57 @@ mod tests {
     }
 
     #[test]
-    fn streaming_fit_rejects_leverage_scores() {
+    fn streaming_fit_leverage_matches_in_memory() {
+        // known-length source + equal seed => same pilot draw, same
+        // sample_by_scores draw => same centers and Def. 2 weights; only
+        // the Gram accumulation order differs across chunkings, so the
+        // models agree to <=1e-8 (bitwise when one chunk covers the set)
         let mut rng = Rng::new(44);
-        let data = synth::smooth_regression(&mut rng, 200, 3, 0.05);
+        let data = synth::smooth_regression(&mut rng, 600, 4, 0.05);
         let eng = Engine::rust();
         let cfg = FalkonConfig {
-            centers: Centers::ApproxLeverage { sketch: 32 },
-            ..small_config(16, 4)
+            centers: Centers::ApproxLeverage { sketch: 96 },
+            ..small_config(32, 10)
         };
-        let src = Box::new(MemSource::new(data, 64));
-        assert!(crate::falkon::fit_source(&eng, src, &cfg).is_err());
+        let mem = fit(&eng, &data.x, &data.y, &cfg).unwrap();
+        for chunk_rows in [128usize, 600, 2048] {
+            let src = Box::new(MemSource::new(data.clone(), chunk_rows));
+            let ooc = crate::falkon::fit_source(&eng, src, &cfg).unwrap();
+            assert_eq!(
+                ooc.centers.data, mem.centers.data,
+                "chunk {chunk_rows}: same draws => same center rows"
+            );
+            let pm = mem.predict(&eng, &data.x).unwrap();
+            let po = ooc.predict(&eng, &data.x).unwrap();
+            let diff = crate::linalg::vec_ops::max_abs_diff(&pm, &po);
+            assert!(diff <= 1e-8, "chunk {chunk_rows}: streamed leverage vs in-memory {diff}");
+        }
+    }
+
+    #[test]
+    fn unknown_length_source_fits_via_weighted_reservoir() {
+        // no len_hint => the scores feed the A-Res weighted reservoir;
+        // the model must still carry Def. 2 weights and learn the task
+        let mut rng = Rng::new(46);
+        let data = synth::smooth_regression(&mut rng, 900, 4, 0.05);
+        let eng = Engine::rust();
+        let cfg = FalkonConfig {
+            centers: Centers::ApproxLeverage { sketch: 64 },
+            ..small_config(48, 12)
+        };
+        let src = Box::new(HiddenLen(MemSource::new(data.clone(), 128)));
+        let (state, y) = prepare_source(&eng, src, &cfg).unwrap();
+        assert_eq!(state.sel.c.rows, 48);
+        assert_eq!(y.len(), 900);
+        let dw = state.sel.d_weights.as_ref().expect("leverage => weights");
+        assert_eq!(dw.len(), 48);
+        assert!(dw.iter().all(|v| v.is_finite() && *v > 0.0));
+        assert!(state.sel.scores.is_none(), "unknown length holds no O(n) scores");
+        let src = Box::new(HiddenLen(MemSource::new(data.clone(), 128)));
+        let model = crate::falkon::fit_source(&eng, src, &cfg).unwrap();
+        let preds = model.predict(&eng, &data.x).unwrap();
+        let err = metrics::mse(&preds, &data.y);
+        let var = crate::linalg::vec_ops::variance(&data.y);
+        assert!(err < 0.35 * var, "mse {err} vs var {var}");
     }
 }

@@ -10,16 +10,155 @@
 //! ```
 //!
 //! This is the [12, 30]-style q-approximation the paper's Thm. 4-5 accept.
-//! Data is touched only through kernel blocks (the engine streams them via
-//! the same `kernel_block` artifacts as prediction), in two passes so the
-//! coordinator never holds more than O(block·j) state.
+//! Data is touched only through kernel blocks, with all per-block math on
+//! matrix panels ([`SketchState`]): K_nJ panels from the engine's pooled
+//! kernel-block path (or the mixed-precision tier for f32 chunks), a
+//! multi-RHS TRSM for Φᵀ, and a pooled SYRK for the Gram accumulation —
+//! so the coordinator never holds more than O(block·j + j²) state and the
+//! same core serves the in-memory matrix and any rewindable
+//! [`DataSource`] ([`approx_leverage_scores_source`]).
 
+use crate::data::source::DataSource;
 use crate::kernels::Kernel;
 use crate::linalg::mat::Mat;
-use crate::linalg::{chol, tri};
+use crate::linalg::mat32::{MatF32, XBlock};
+use crate::linalg::{chol, gemm, tri};
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
+
+use super::centers::{CenterGather, Reservoir};
+
+/// Row-block budget of the in-memory scoring passes (the streamed passes
+/// use the source's own chunk size instead).
+const SCORE_BLOCK: usize = 2048;
+
+/// Resolve the CLI `--sketch` convention: 0 means "as many pilot columns
+/// as centers M" (the cheapest sketch the Thm. 4-5 bounds accept).
+pub fn effective_sketch(sketch: usize, m: usize) -> usize {
+    if sketch == 0 {
+        m
+    } else {
+        sketch
+    }
+}
+
+/// The factored Nyström sketch behind the leverage-score estimate — the
+/// shared per-block core of the in-memory and streamed pipelines.
+///
+/// Built from the pilot rows C_J, it accumulates G = ΦᵀΦ over row blocks
+/// ([`SketchState::accumulate`]), factors G + μI once
+/// ([`SketchState::factor`]), then scores any row block
+/// ([`SketchState::score_block`]). Every pooled stage (kernel panels,
+/// SYRK) sums partials in job order, so pooled results are bitwise equal
+/// to serial; the TRSMs are serial coordinator math. Blocks in f32
+/// storage take the mixed-precision panel tier against a once-rounded
+/// copy of the pilot.
+pub struct SketchState {
+    kern: Kernel,
+    param: f64,
+    /// ridge level μ = λ·n added to G before factoring
+    mu: f64,
+    cj: Mat,
+    /// rounded-once f32 tier of the pilot (f32 chunks only)
+    cj32: MatF32,
+    /// T_JᵀT_J = K_JJ (+ jitter)
+    tj: Mat,
+    g: Mat,
+    /// upper Cholesky factor of G + μI (set by [`SketchState::factor`])
+    gr: Option<Mat>,
+}
+
+impl SketchState {
+    /// Factor the pilot block: K_JJ via the engine's pooled `kmm`, then
+    /// the jittered Cholesky path (`A` unused at λ=1).
+    pub fn new(engine: &Engine, cj: Mat, kern: Kernel, sigma: f64, mu: f64) -> Result<SketchState> {
+        anyhow::ensure!(cj.rows > 0, "lscores: empty pilot sketch");
+        let kjj = engine.kmm(kern, &cj, sigma).context("lscores: K_JJ")?;
+        let (tj, _) = engine
+            .precond(&kjj, 1.0, 1e-9) // reuse the jittered chol path; A unused
+            .context("lscores: chol(K_JJ)")?;
+        let cj32 = MatF32::from_mat(&cj);
+        let j = cj.rows;
+        Ok(SketchState {
+            kern,
+            param: sigma,
+            mu,
+            cj,
+            cj32,
+            tj,
+            g: Mat::zeros(j, j),
+            gr: None,
+        })
+    }
+
+    /// Pilot size j = |J|.
+    pub fn j(&self) -> usize {
+        self.cj.rows
+    }
+
+    /// Φᵀ panel of a row block: column i = φ_i = T_Jᵀ \ k(x_i, C_J).
+    /// The kernel panel takes the dtype-matching tier; each output column
+    /// depends only on its own row, so the panel is invariant to how the
+    /// stream is chunked.
+    fn phi_t(&self, engine: &Engine, x: &XBlock) -> Result<Mat> {
+        let knj = match x {
+            XBlock::F64(xm) => engine.kernel_block(self.kern, xm, &self.cj, self.param)?,
+            XBlock::F32(xm) => {
+                crate::kernels::mixed::kernel_block_f32(self.kern, xm, &self.cj32, self.param)
+                    .to_mat()
+            }
+        };
+        Ok(tri::solve_lower_t_mat(&self.tj, &knj.t()))
+    }
+
+    /// Accumulate one row block into G += ΦᵀΦ (pooled SYRK over the Φᵀ
+    /// panel).
+    pub fn accumulate(&mut self, engine: &Engine, x: &XBlock) -> Result<()> {
+        anyhow::ensure!(self.gr.is_none(), "lscores: accumulate after factor");
+        if x.rows() == 0 {
+            return Ok(());
+        }
+        let phi_t = self.phi_t(engine, x)?;
+        let part = gemm::syrk_t_par(&phi_t, engine.pool());
+        self.g.add(&part);
+        Ok(())
+    }
+
+    /// Factor G + μI after the accumulation pass.
+    pub fn factor(&mut self) -> Result<()> {
+        anyhow::ensure!(self.gr.is_none(), "lscores: factor called twice");
+        self.g.add_diag(self.mu);
+        self.gr = Some(chol::cholesky_upper(&self.g).context("lscores: chol(G)")?);
+        Ok(())
+    }
+
+    /// Score one row block: l̂_i = ‖gr^{-T} φ_i‖², floored at 1e-300 so a
+    /// numerically-zero score still defines a sampling probability.
+    pub fn score_block(&self, engine: &Engine, x: &XBlock) -> Result<Vec<f64>> {
+        let gr = self
+            .gr
+            .as_ref()
+            .context("lscores: score_block before factor")?;
+        let rows = x.rows();
+        if rows == 0 {
+            return Ok(Vec::new());
+        }
+        let phi_t = self.phi_t(engine, x)?;
+        let z = tri::solve_lower_t_mat(gr, &phi_t);
+        // column squared norms accumulated in fixed a = 0..j order
+        let mut scores = vec![0.0f64; rows];
+        for a in 0..z.rows {
+            for (s, &v) in scores.iter_mut().zip(z.row(a)) {
+                *s += v * v;
+            }
+        }
+        for s in &mut scores {
+            *s = s.max(1e-300);
+        }
+        Ok(scores)
+    }
+}
 
 /// Estimate approximate leverage scores at level `lam` using a uniform
 /// pilot sketch of `sketch` points. Returns one score per training row.
@@ -39,51 +178,141 @@ pub fn approx_leverage_scores(
     // pilot subset and its factor
     let jdx = rng.choose(n, j);
     let cj = x.select_rows(&jdx);
-    let kjj = engine.kmm(kern, &cj, sigma).context("lscores: K_JJ")?;
-    let (tj, _) = engine
-        .precond(&kjj, 1.0, 1e-9) // reuse the jittered chol path; A unused
-        .context("lscores: chol(K_JJ)")?;
+    let mut sk = SketchState::new(engine, cj, kern, sigma, mu)?;
 
-    // pass 1: G = ΦᵀΦ + μI accumulated over row blocks
-    let block = 2048usize;
-    let mut g = Mat::zeros(j, j);
+    // pass 1: G = ΦᵀΦ accumulated over row blocks
     let mut start = 0;
     while start < n {
-        let end = (start + block).min(n);
-        let xb = x.slice_rows(start, end);
-        let knj = engine.kernel_block(kern, &xb, &cj, sigma)?;
-        // φ_i = T_Jᵀ \ k_i for each row
-        for i in 0..knj.rows {
-            let phi = tri::solve_lower_t(&tj, knj.row(i));
-            for a in 0..j {
-                if phi[a] == 0.0 {
-                    continue;
-                }
-                let grow = g.row_mut(a);
-                for b in 0..j {
-                    grow[b] += phi[a] * phi[b];
-                }
-            }
-        }
+        let end = (start + SCORE_BLOCK).min(n);
+        sk.accumulate(engine, &XBlock::F64(x.slice_rows(start, end)))?;
         start = end;
     }
-    g.add_diag(mu);
-    let gr = chol::cholesky_upper(&g).context("lscores: chol(G)")?;
+    sk.factor()?;
 
     // pass 2: l̂_i = ‖G^{-1/2} φ_i‖² = ‖gr^{-T} φ_i‖²
-    let mut scores = vec![0.0f64; n];
+    let mut scores = Vec::with_capacity(n);
     let mut start = 0;
     while start < n {
-        let end = (start + block).min(n);
-        let xb = x.slice_rows(start, end);
-        let knj = engine.kernel_block(kern, &xb, &cj, sigma)?;
-        for i in 0..knj.rows {
-            let phi = tri::solve_lower_t(&tj, knj.row(i));
-            let z = tri::solve_lower_t(&gr, &phi);
-            scores[start + i] = crate::linalg::vec_ops::dot(&z, &z).max(1e-300);
-        }
+        let end = (start + SCORE_BLOCK).min(n);
+        scores.extend(sk.score_block(engine, &XBlock::F64(x.slice_rows(start, end)))?);
         start = end;
     }
+    Ok(scores)
+}
+
+/// Pilot + Gram passes over a rewindable source: pass 0 draws the uniform
+/// pilot — `CenterGather` over the *same* `rng.choose(n, j)` draw the
+/// in-memory path makes for a known-length source, [`Reservoir`]
+/// otherwise — and (optionally) collects the targets; pass 1 accumulates
+/// G = ΦᵀΦ chunk by chunk and factors G + μI. Both passes run under the
+/// engine's [`crate::util::fault::RetryPolicy`]. Returns the factored
+/// sketch plus the stream length.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sketch_source(
+    engine: &Engine,
+    source: &mut dyn DataSource,
+    kern: Kernel,
+    sigma: f64,
+    lam: f64,
+    sketch: usize,
+    rng: &mut Rng,
+    mut y_out: Option<&mut Vec<f64>>,
+) -> Result<(SketchState, usize)> {
+    let retry = engine.opts().retry;
+    let d = source.d();
+    anyhow::ensure!(d > 0, "source has no features");
+    anyhow::ensure!(sketch > 0, "lscores: sketch must be > 0");
+
+    // pass 0: uniform pilot (+ target collection)
+    retry.run("lscores pilot: reset", || source.reset())?;
+    let (cj, n) = match source.len_hint() {
+        Some(n) => {
+            anyhow::ensure!(n > 0, "source is empty");
+            // same draw as the in-memory approx_leverage_scores
+            let jdx = rng.choose(n, sketch.min(n));
+            let mut gather = CenterGather::new(&jdx, d);
+            let mut seen = 0usize;
+            while let Some(chunk) =
+                retry.run("lscores pilot: next_chunk", || source.next_chunk())?
+            {
+                anyhow::ensure!(chunk.start == seen, "source chunks must be contiguous");
+                seen += chunk.x.rows();
+                gather.offer_block(chunk.start, &chunk.x);
+                if let Some(y) = y_out.as_deref_mut() {
+                    y.extend_from_slice(&chunk.y);
+                }
+            }
+            anyhow::ensure!(seen == n, "source yielded {seen} rows, len_hint said {n}");
+            (gather.finish()?, n)
+        }
+        None => {
+            let mut res = Reservoir::new(sketch, d);
+            let mut seen = 0usize;
+            let mut row = vec![0.0f64; d];
+            while let Some(chunk) =
+                retry.run("lscores pilot: next_chunk", || source.next_chunk())?
+            {
+                anyhow::ensure!(chunk.start == seen, "source chunks must be contiguous");
+                let rows = chunk.x.rows();
+                seen += rows;
+                for i in 0..rows {
+                    chunk.x.row_f64_into(i, &mut row);
+                    res.push(&row, rng);
+                }
+                if let Some(y) = y_out.as_deref_mut() {
+                    y.extend_from_slice(&chunk.y);
+                }
+            }
+            anyhow::ensure!(seen > 0, "source is empty");
+            let (c, _) = res.finish();
+            (c, seen)
+        }
+    };
+
+    // pass 1: G = ΦᵀΦ
+    let mut sk = SketchState::new(engine, cj, kern, sigma, lam * n as f64)?;
+    retry.run("lscores gram: reset", || source.reset())?;
+    let mut seen = 0usize;
+    while let Some(chunk) = retry.run("lscores gram: next_chunk", || source.next_chunk())? {
+        anyhow::ensure!(chunk.start == seen, "source chunks must be contiguous");
+        seen += chunk.x.rows();
+        sk.accumulate(engine, &chunk.x)?;
+    }
+    anyhow::ensure!(seen == n, "source yielded {seen} rows in the Gram pass, expected {n}");
+    sk.factor()?;
+    Ok((sk, n))
+}
+
+/// Streamed [`approx_leverage_scores`]: the same estimate over any
+/// rewindable [`DataSource`] in three chunked passes (pilot, Gram,
+/// scoring) with O(sketch² + chunk) working memory — the scores
+/// themselves are O(n), the same budget as the targets. For a
+/// known-length source at equal seed this reproduces the in-memory
+/// scores up to chunk-boundary summation (≤1e-8; the property tests pin
+/// it), because the pilot draw consumes the rng identically and every
+/// per-row panel/TRSM column is invariant to the chunking.
+pub fn approx_leverage_scores_source(
+    engine: &Engine,
+    source: &mut dyn DataSource,
+    kern: Kernel,
+    sigma: f64,
+    lam: f64,
+    sketch: usize,
+    rng: &mut Rng,
+) -> Result<Vec<f64>> {
+    let (sk, n) = sketch_source(engine, source, kern, sigma, lam, sketch, rng, None)?;
+    let retry = engine.opts().retry;
+    retry.run("lscores score: reset", || source.reset())?;
+    let mut scores = Vec::with_capacity(n);
+    while let Some(chunk) = retry.run("lscores score: next_chunk", || source.next_chunk())? {
+        anyhow::ensure!(chunk.start == scores.len(), "source chunks must be contiguous");
+        scores.extend(sk.score_block(engine, &chunk.x)?);
+    }
+    anyhow::ensure!(
+        scores.len() == n,
+        "source yielded {} rows in the scoring pass, expected {n}",
+        scores.len()
+    );
     Ok(scores)
 }
 
@@ -107,6 +336,11 @@ pub fn exact_leverage_scores(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::source::MemSource;
+    use crate::data::{synth, Dataset};
+    use crate::linalg::mat32::Dtype;
+    use crate::linalg::vec_ops::max_abs_diff;
+    use crate::runtime::EngineOptions;
 
     /// A design where a few points sit far from the bulk: their leverage
     /// scores must be large relative to bulk points.
@@ -189,5 +423,167 @@ mod tests {
                 exact[i]
             );
         }
+    }
+
+    #[test]
+    fn effective_sketch_defaults_to_m() {
+        assert_eq!(effective_sketch(0, 256), 256);
+        assert_eq!(effective_sketch(128, 256), 128);
+        assert_eq!(effective_sketch(512, 64), 512);
+    }
+
+    /// Shared fixture of the streamed-vs-in-memory property battery.
+    fn battery_data(n: usize) -> Dataset {
+        let mut rng = Rng::new(20);
+        synth::smooth_regression(&mut rng, n, 4, 0.05)
+    }
+
+    #[test]
+    fn streamed_scores_match_in_memory_across_ragged_chunkings() {
+        // the satellite contract: streamed == in-memory to ≤1e-8 at equal
+        // seed, for chunk ≪ n through chunk > n (ragged boundaries)
+        let n = 350;
+        let data = battery_data(n);
+        let (kern, sigma, lam, sketch, seed) = (Kernel::Gaussian, 1.0, 1e-3, 64, 5u64);
+        let eng = Engine::rust();
+        let mem = approx_leverage_scores(
+            &eng,
+            &data.x,
+            kern,
+            sigma,
+            lam,
+            sketch,
+            &mut Rng::new(seed),
+        )
+        .unwrap();
+        assert_eq!(mem.len(), n);
+        for chunk_rows in [17usize, 100, 350, 1000] {
+            let mut src = MemSource::new(data.clone(), chunk_rows);
+            let streamed = approx_leverage_scores_source(
+                &eng,
+                &mut src,
+                kern,
+                sigma,
+                lam,
+                sketch,
+                &mut Rng::new(seed),
+            )
+            .unwrap();
+            assert_eq!(streamed.len(), n);
+            let diff = max_abs_diff(&mem, &streamed);
+            assert!(diff <= 1e-8, "chunk {chunk_rows}: streamed vs in-memory {diff}");
+        }
+    }
+
+    #[test]
+    fn streamed_scores_f32_consistent_across_chunkings_and_track_f64() {
+        // f32 chunks: ragged chunkings must agree with the chunk > n f32
+        // stream to ≤1e-8 (the dtype's own whole-stream oracle) and the
+        // whole f32 estimate must track the f64 scores (storage rounding
+        // + f32 exponential only perturb at the mixed-precision tier)
+        let n = 350;
+        let data = battery_data(n);
+        let (kern, sigma, lam, sketch, seed) = (Kernel::Gaussian, 1.0, 1e-3, 64, 5u64);
+        let eng = Engine::rust();
+        let mem64 = approx_leverage_scores(
+            &eng,
+            &data.x,
+            kern,
+            sigma,
+            lam,
+            sketch,
+            &mut Rng::new(seed),
+        )
+        .unwrap();
+        let mut oracle_src = MemSource::with_dtype(data.clone(), 1000, Dtype::F32);
+        let oracle = approx_leverage_scores_source(
+            &eng,
+            &mut oracle_src,
+            kern,
+            sigma,
+            lam,
+            sketch,
+            &mut Rng::new(seed),
+        )
+        .unwrap();
+        for chunk_rows in [17usize, 100] {
+            let mut src = MemSource::with_dtype(data.clone(), chunk_rows, Dtype::F32);
+            let streamed = approx_leverage_scores_source(
+                &eng,
+                &mut src,
+                kern,
+                sigma,
+                lam,
+                sketch,
+                &mut Rng::new(seed),
+            )
+            .unwrap();
+            let diff = max_abs_diff(&oracle, &streamed);
+            assert!(diff <= 1e-8, "f32 chunk {chunk_rows}: vs whole-stream f32 {diff}");
+        }
+        let drift = max_abs_diff(&oracle, &mem64);
+        assert!(drift <= 1e-3, "f32 vs f64 scores drift {drift}");
+    }
+
+    #[test]
+    fn streamed_scores_pooled_bitwise_equal_serial() {
+        // within a path, pooled == serial bitwise: every pooled stage
+        // (kernel panels, kmm, SYRK, blocked chol) reduces partials in
+        // job order, and the TRSMs are serial coordinator math
+        let n = 350;
+        let data = battery_data(n);
+        let (kern, sigma, lam, sketch, seed) = (Kernel::Gaussian, 1.0, 1e-3, 64, 5u64);
+        let serial = Engine::rust();
+        let pooled = Engine::rust_with(EngineOptions {
+            workers: 4,
+            ..Default::default()
+        });
+        for dtype in [Dtype::F64, Dtype::F32] {
+            let mut src_s = MemSource::with_dtype(data.clone(), 100, dtype);
+            let mut src_p = MemSource::with_dtype(data.clone(), 100, dtype);
+            let s = approx_leverage_scores_source(
+                &serial,
+                &mut src_s,
+                kern,
+                sigma,
+                lam,
+                sketch,
+                &mut Rng::new(seed),
+            )
+            .unwrap();
+            let p = approx_leverage_scores_source(
+                &pooled,
+                &mut src_p,
+                kern,
+                sigma,
+                lam,
+                sketch,
+                &mut Rng::new(seed),
+            )
+            .unwrap();
+            assert_eq!(s, p, "pooled vs serial ({dtype:?}) must be bitwise equal");
+        }
+        // in-memory path too
+        let s = approx_leverage_scores(
+            &serial,
+            &data.x,
+            kern,
+            sigma,
+            lam,
+            sketch,
+            &mut Rng::new(seed),
+        )
+        .unwrap();
+        let p = approx_leverage_scores(
+            &pooled,
+            &data.x,
+            kern,
+            sigma,
+            lam,
+            sketch,
+            &mut Rng::new(seed),
+        )
+        .unwrap();
+        assert_eq!(s, p, "in-memory pooled vs serial must be bitwise equal");
     }
 }

@@ -40,7 +40,7 @@ pub mod model_io;
 pub mod precond;
 pub mod tune;
 
-pub use centers::{CenterGather, Centers, Reservoir, SelectedCenters};
+pub use centers::{CenterGather, Centers, Reservoir, SelectedCenters, WeightedReservoir};
 pub use cg::{
     block_conjgrad, conjgrad, conjgrad_resumable, BlockCgResult, CgOptions, CgResult, CgState,
     CgStop,

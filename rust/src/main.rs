@@ -192,7 +192,7 @@ fn config_from_flags(p: &falkon::cli::Parsed) -> Result<ExperimentConfig> {
             centers: match p.str("centers") {
                 "uniform" => Centers::Uniform,
                 "leverage" => Centers::ApproxLeverage {
-                    sketch: if sketch == 0 { m } else { sketch },
+                    sketch: falkon::falkon::lscores::effective_sketch(sketch, m),
                 },
                 other => bail!("unknown centers {other:?}"),
             },
@@ -680,22 +680,45 @@ fn cmd_lscores(args: &[String]) -> Result<()> {
         .opt("n", "2000", "rows")
         .opt("lam", "1e-3", "level λ")
         .opt("sigma", "1.0", "kernel width")
-        .opt("sketch", "256", "pilot sketch size")
+        .opt("m", "256", "centers M the sketch default derives from")
+        .opt("sketch", "0", "pilot sketch size (0 = M)")
         .opt("engine", "rust", "xla | rust")
-        .opt("seed", "0", "rng seed");
+        .opt("seed", "0", "rng seed")
+        .switch("stream", "chunked DataSource passes instead of an eager load")
+        .opt("chunk-rows", "8192", "rows per chunk with --stream");
     let p = spec.parse(args)?;
-    let data = load_dataset(p.str("dataset"), p.usize("n")?, p.u64("seed")?)?;
+    let sketch = falkon::falkon::lscores::effective_sketch(p.usize("sketch")?, p.usize("m")?);
     let engine = Engine::by_name(p.str("engine"), 1)?;
     let mut rng = Rng::new(p.u64("seed")?);
-    let scores = falkon::falkon::lscores::approx_leverage_scores(
-        &engine,
-        &data.x,
-        Kernel::Gaussian,
-        p.f64("sigma")?,
-        p.f64("lam")?,
-        p.usize("sketch")?,
-        &mut rng,
-    )?;
+    let scores = if p.flag("stream") {
+        // shards bigger than RAM: never materialize the n×d matrix
+        let mut source = open_source(
+            p.str("dataset"),
+            p.usize("n")?,
+            p.u64("seed")?,
+            p.usize("chunk-rows")?,
+        )?;
+        falkon::falkon::lscores::approx_leverage_scores_source(
+            &engine,
+            source.as_mut(),
+            Kernel::Gaussian,
+            p.f64("sigma")?,
+            p.f64("lam")?,
+            sketch,
+            &mut rng,
+        )?
+    } else {
+        let data = load_dataset(p.str("dataset"), p.usize("n")?, p.u64("seed")?)?;
+        falkon::falkon::lscores::approx_leverage_scores(
+            &engine,
+            &data.x,
+            Kernel::Gaussian,
+            p.f64("sigma")?,
+            p.f64("lam")?,
+            sketch,
+            &mut rng,
+        )?
+    };
     let mut sorted = scores.clone();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let q = |f: f64| sorted[((sorted.len() as f64 - 1.0) * f) as usize];

@@ -247,6 +247,18 @@ impl Engine {
         }
     }
 
+    /// The engine's shared worker pool, for callers fanning their own
+    /// panel reductions (e.g. the leverage-score SYRK accumulation).
+    /// `None` on serial engines and on the XLA engine (which keeps its
+    /// parallelism inside the runtime).
+    pub(crate) fn pool(&self) -> Option<&WorkerPool> {
+        match self {
+            Engine::Rust { pool, .. } => pool.as_deref(),
+            #[cfg(feature = "xla")]
+            Engine::Xla { .. } => None,
+        }
+    }
+
     pub fn registry(&self) -> Option<&Registry> {
         match self {
             Engine::Rust { .. } => None,

@@ -9,7 +9,7 @@ use falkon::data::shard::{self, ShardSource};
 use falkon::data::source::{collect, DataSource, MemSource};
 use falkon::data::stream_text::{CsvSource, LibsvmSource};
 use falkon::data::synth;
-use falkon::falkon::{fit, fit_source, prepare_source, solve, FalkonConfig};
+use falkon::falkon::{fit, fit_source, prepare_source, solve, Centers, FalkonConfig};
 use falkon::linalg::vec_ops::{max_abs_diff, mean};
 use falkon::runtime::{Engine, EngineOptions};
 use falkon::util::rng::Rng;
@@ -225,4 +225,68 @@ fn mem_source_fit_equals_dataset_fit() {
     let ooc = fit_source(&eng, Box::new(MemSource::new(data.clone(), 177)), &config).unwrap();
     assert_eq!(ooc.alpha, mem.alpha);
     assert_eq!(ooc.centers.data, mem.centers.data);
+}
+
+#[test]
+fn sharded_leverage_fit_matches_in_memory_fit() {
+    // leverage-score center selection on a sharded source: the
+    // known-length pilot + sampling draws match the in-memory path, so
+    // the models agree within the 1e-8 acceptance budget
+    let mut rng = Rng::new(33);
+    let data = synth::smooth_regression(&mut rng, 1200, 6, 0.05);
+    let eng = Engine::rust();
+    let config = FalkonConfig {
+        centers: Centers::ApproxLeverage { sketch: 96 },
+        ..cfg(48, 12)
+    };
+    let mem_model = fit(&eng, &data.x, &data.y, &config).unwrap();
+
+    let path = tmp("lev", "shard");
+    shard::write_dataset(&path, &data).unwrap();
+    let src = ShardSource::open(&path, 250).unwrap();
+    let ooc_model = fit_source(&eng, Box::new(src), &config).unwrap();
+
+    assert_eq!(ooc_model.centers.data, mem_model.centers.data);
+    let pm = mem_model.predict(&eng, &data.x).unwrap();
+    let po = ooc_model.predict(&eng, &data.x).unwrap();
+    let diff = max_abs_diff(&pm, &po);
+    assert!(diff < 1e-8, "leverage in-memory vs sharded differ by {diff}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn streamed_leverage_beats_streamed_uniform_at_small_m() {
+    // Thm. 4-5 end-to-end on the streaming path: on the rare-cluster
+    // design the rare mass is scattered over sub-clusters that uniform
+    // sampling misses at small M, so leverage-score centers reach a
+    // lower mean test MSE fitting entirely through a chunked source
+    let mut rng = Rng::new(31);
+    let data = synth::rare_cluster(&mut rng, 1500, 8, 0.03);
+    let (train, test) = data.split(0.2, &mut rng);
+    let eng = Engine::rust();
+
+    let mut mses = [Vec::new(), Vec::new()];
+    for seed in 41u64..49 {
+        let arms = [Centers::Uniform, Centers::ApproxLeverage { sketch: 256 }];
+        for (i, centers) in arms.into_iter().enumerate() {
+            let config = FalkonConfig {
+                sigma: 4.0,
+                lam: 1e-4,
+                m: 32,
+                t: 30,
+                centers,
+                seed,
+                ..Default::default()
+            };
+            let src = MemSource::new(train.clone(), 200);
+            let model = fit_source(&eng, Box::new(src), &config).unwrap();
+            let preds = model.predict(&eng, &test.x).unwrap();
+            mses[i].push(falkon::metrics::mse(&preds, &test.y));
+        }
+    }
+    let (uni, lev) = (mean(&mses[0]), mean(&mses[1]));
+    assert!(
+        lev < uni,
+        "streamed leverage MSE {lev} not below streamed uniform {uni} at M=32"
+    );
 }
